@@ -1,0 +1,95 @@
+//! Cache-study example: reproduce the paper's §3 analysis pipeline end to
+//! end — model validation (Figs 3–4), the capacity threshold (Fig 5), the
+//! wavefront-reuse law (Fig 6), and two ablations beyond the paper
+//! (jitter desynchronization; L2 capacity sweep).
+//!
+//! Run with: `cargo run --release --example cache_study`
+
+use sawtooth_attn::gb10::DeviceSpec;
+use sawtooth_attn::l2model;
+use sawtooth_attn::sim::engine::cold_sectors;
+use sawtooth_attn::sim::workload::AttentionWorkload;
+use sawtooth_attn::sim::{Order, SimConfig, Simulator};
+
+fn main() {
+    println!("== 1. L2 sector model validation (paper §3.2, Figs 3-4) ==");
+    println!("{:<8} {:>16} {:>16} {:>8}", "S", "simulated", "model", "err %");
+    for causal in [false, true] {
+        println!("-- {} --", if causal { "causal" } else { "non-causal" });
+        for sk in [16u64, 48, 96, 128] {
+            let w = AttentionWorkload::cuda_study(sk * 1024).with_causal(causal);
+            let r = Simulator::new(SimConfig::cuda_study(w)).run();
+            let m = l2model::sectors_model(&w, 32);
+            let sim = r.counters.l2_sectors_from_tex as f64;
+            println!(
+                "{:<8} {:>16.0} {:>16.0} {:>8.3}",
+                format!("{}K", sk),
+                sim,
+                m,
+                100.0 * (sim - m).abs() / m
+            );
+        }
+    }
+
+    println!("\n== 2. Non-compulsory miss threshold (paper §3.3, Fig 5) ==");
+    let dev = DeviceSpec::gb10();
+    println!(
+        "idealised threshold: KV = L2 at S = {}K",
+        l2model::capacity_threshold_seq(&AttentionWorkload::cuda_study(1), dev.l2_bytes) / 1024
+    );
+    for sk in [64u64, 80, 88, 96, 112] {
+        let w = AttentionWorkload::cuda_study(sk * 1024);
+        let r = Simulator::new(SimConfig::cuda_study(w)).run();
+        let cold = cold_sectors(&w, &dev);
+        println!(
+            "S={:>4}K  KV={:>5.1} MiB  misses={:>11}  cold={:>9}  non-compulsory={:>11}",
+            sk,
+            w.kv_bytes() as f64 / (1 << 20) as f64,
+            r.counters.l2_miss_sectors,
+            cold,
+            r.non_compulsory_misses(&w, &dev)
+        );
+    }
+
+    println!("\n== 3. Wavefront reuse: hit rate ≈ 1 - 1/N_SM (paper §3.4, Fig 6) ==");
+    for sms in [2u32, 8, 24, 48] {
+        let w = AttentionWorkload::cuda_study(128 * 1024);
+        let r = Simulator::new(SimConfig::cuda_study(w).with_sms(sms)).run();
+        println!(
+            "SM={:>2}  hit rate {:>6.2}%  model {:>6.2}%",
+            sms,
+            r.counters.l2_hit_rate_pct(),
+            100.0 * l2model::wavefront_hit_rate(sms)
+        );
+    }
+
+    println!("\n== 4. Ablation: jitter desynchronizes the wavefront ==");
+    println!("(the 1 - 1/N law requires synchronized CTA progress; jitter breaks it)");
+    let w = AttentionWorkload::cuda_study(96 * 1024);
+    for jitter in [0.0, 0.1, 0.3, 0.6] {
+        let cfg = SimConfig::cuda_study(w).with_jitter(jitter, 1234);
+        let r = Simulator::new(cfg).run();
+        println!(
+            "jitter={:.1}  hit rate {:>6.2}%  misses {:>11}",
+            jitter,
+            r.counters.l2_hit_rate_pct(),
+            r.counters.l2_miss_sectors
+        );
+    }
+
+    println!("\n== 5. Ablation: L2 capacity sweep (threshold tracks KV ≈ C) ==");
+    let w = AttentionWorkload::cuda_study(64 * 1024); // KV = 16 MiB
+    for l2_mib in [8u64, 12, 16, 20, 24] {
+        let mut cfg = SimConfig::cuda_study(w);
+        cfg.device = DeviceSpec::gb10_with_l2(l2_mib << 20);
+        let cyc = Simulator::new(cfg.clone()).run();
+        let saw = Simulator::new(cfg.with_order(Order::Sawtooth)).run();
+        println!(
+            "L2={:>2} MiB  cyclic misses {:>11}  sawtooth misses {:>11}  ({})",
+            l2_mib,
+            cyc.counters.l2_miss_sectors,
+            saw.counters.l2_miss_sectors,
+            if (l2_mib << 20) > w.kv_bytes() { "KV fits" } else { "KV ≥ L2" }
+        );
+    }
+}

@@ -1,0 +1,174 @@
+"""AOT pipeline: lower the JAX/Pallas model to HLO text artifacts.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under ``artifacts/``:
+
+  <name>.hlo.txt      one per variant (attention ops + the serving MHA block)
+  manifest.tsv        tab-separated index the rust runtime parses:
+                      kind name file batch heads seq head_dim tile_q tile_kv
+                      causal order dtype num_args
+  mha_weights.bin     little-endian f32 dump of the serving model weights
+                      (4 square matrices, concatenated), deterministic seed.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import (
+    AttentionConfig,
+    attention_example_args,
+    init_mha_weights,
+    jit_attention,
+    jit_mha,
+    mha_example_args,
+)
+
+# ---------------------------------------------------------------------------
+# Variant sets.
+#
+# The *serving* variants must execute quickly on the CPU PJRT client, so they
+# use modest sequence lengths.  They still tile exactly like the paper's
+# kernels (square tiling, T=64) and include every (causal x order) cell.
+# ---------------------------------------------------------------------------
+
+SERVING_SEQS = (128, 256, 512)
+SERVING_HEADS = 4
+# Batch variants let the coordinator's dynamic batcher coalesce concurrent
+# same-shape requests into one PJRT dispatch (padding up to the next size).
+SERVING_BATCHES = (1, 4)
+HEAD_DIM = 64
+
+
+def serving_variants() -> list[AttentionConfig]:
+    out = []
+    for seq in SERVING_SEQS:
+        for causal in (False, True):
+            for order in ("cyclic", "sawtooth"):
+                for batch in SERVING_BATCHES:
+                    out.append(
+                        AttentionConfig(
+                            batch=batch,
+                            heads=SERVING_HEADS,
+                            seq=seq,
+                            head_dim=HEAD_DIM,
+                            causal=causal,
+                            order=order,
+                        )
+                    )
+    return out
+
+
+def mha_variant() -> AttentionConfig:
+    # The end-to-end serving model: 4 heads x 64 = 256 model dim, S=256.
+    return AttentionConfig(
+        batch=1, heads=SERVING_HEADS, seq=256, head_dim=HEAD_DIM,
+        causal=True, order="sawtooth",
+    )
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_attention(cfg: AttentionConfig) -> str:
+    return to_hlo_text(jit_attention(cfg).lower(*attention_example_args(cfg)))
+
+
+def lower_mha(cfg: AttentionConfig) -> str:
+    return to_hlo_text(jit_mha(cfg).lower(*mha_example_args(cfg)))
+
+
+def write_manifest_row(f, kind, name, fname, cfg: AttentionConfig, num_args: int):
+    f.write(
+        "\t".join(
+            str(x)
+            for x in (
+                kind,
+                name,
+                fname,
+                cfg.batch,
+                cfg.heads,
+                cfg.seq,
+                cfg.head_dim,
+                cfg.tile_q,
+                cfg.tile_kv,
+                int(cfg.causal),
+                cfg.order,
+                cfg.dtype,
+                num_args,
+            )
+        )
+        + "\n"
+    )
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    p.add_argument(
+        "--quick", action="store_true",
+        help="emit only the smallest attention variant (CI smoke)",
+    )
+    args = p.parse_args(argv)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    variants = serving_variants()
+    if args.quick:
+        variants = variants[:1]
+
+    manifest_path = os.path.join(args.out_dir, "manifest.tsv")
+    with open(manifest_path, "w") as mf:
+        mf.write(
+            "# kind\tname\tfile\tbatch\theads\tseq\thead_dim\ttile_q\ttile_kv"
+            "\tcausal\torder\tdtype\tnum_args\n"
+        )
+        for cfg in variants:
+            fname = cfg.name + ".hlo.txt"
+            text = lower_attention(cfg)
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            write_manifest_row(mf, "attention", cfg.name, fname, cfg, 3)
+            print(f"wrote {fname} ({len(text)} chars)")
+
+        if not args.quick:
+            cfg = mha_variant()
+            name = "mha_" + cfg.name
+            fname = name + ".hlo.txt"
+            text = lower_mha(cfg)
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            write_manifest_row(mf, "mha", name, fname, cfg, 5)
+            print(f"wrote {fname} ({len(text)} chars)")
+
+            # Deterministic weights for the serving model, raw little-endian
+            # f32 (4 contiguous (dm, dm) matrices) — trivially parseable from
+            # rust without a serialization crate.
+            weights = init_mha_weights(cfg)
+            buf = np.concatenate([np.asarray(w, np.float32).ravel() for w in weights])
+            buf.astype("<f4").tofile(os.path.join(args.out_dir, "mha_weights.bin"))
+            print(f"wrote mha_weights.bin ({buf.size} f32)")
+
+    print(f"wrote {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

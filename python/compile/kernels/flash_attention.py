@@ -1,0 +1,295 @@
+"""Layer-1: Pallas split-Q FlashAttention with Sawtooth Wavefront Reordering.
+
+This implements the paper's Algorithm 1 (split-Q fused multi-head attention
+with square tiling) and Algorithm 4 (sawtooth KV access pattern) as a single
+Pallas kernel parameterised by the KV traversal order.
+
+Hardware adaptation (paper targets Blackwell/CUDA, we target the TPU-shaped
+Pallas model — see DESIGN.md §Hardware-Adaptation):
+
+  * "Q tile resident in shared memory" -> the Q block is pinned in VMEM
+    across the KV grid dimension via its BlockSpec index map
+    ``lambda i, j: (i, 0)`` (same block for every j).
+  * "Load K_j, V_j into separate shared-memory buffers" -> K/V BlockSpecs
+    stream one (T_kv, D) block per grid step from HBM into VMEM.
+  * "WMMA tensor-core matmuls" -> ``jax.lax.dot_general`` with
+    ``preferred_element_type=float32`` so S = Q K^T and O += P V lower onto
+    the MXU systolic array.
+  * The sawtooth reorder itself is machine independent (paper §5): here it
+    is the KV BlockSpec *index transform* -- ``j`` on even Q tiles,
+    ``Tc-1-j`` on odd ones -- rather than a loop-bound swap.
+
+Pallas is always invoked with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and correctness (vs ``ref.py``) is the build
+-time signal.  Real-TPU performance is estimated analytically in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Order = Literal["cyclic", "sawtooth"]
+
+# Large negative used to mask logits before the online-softmax max; kept
+# finite so masked-everything rows produce zeros, not NaNs.
+_MASK_VALUE = -1e30
+
+__all__ = [
+    "flash_attention",
+    "flash_attention_batched",
+    "kv_visit_order",
+    "vmem_footprint_bytes",
+    "mxu_utilization_estimate",
+]
+
+
+def kv_visit_order(q_tile_index: int, num_kv_tiles: int, order: Order) -> list[int]:
+    """Python-level oracle of the KV tile visit order for one Q tile.
+
+    Mirrors the paper's Algorithm 4: even local iterations scan forward
+    (0..N_kv-1), odd ones scan backward.  Exposed so tests and the rust
+    simulator can assert against one definition.
+    """
+    seq = list(range(num_kv_tiles))
+    if order == "sawtooth" and q_tile_index % 2 == 1:
+        seq.reverse()
+    return seq
+
+
+def _kv_block_index(i, j, num_kv_tiles: int, order: Order):
+    """Traced variant of :func:`kv_visit_order` used in BlockSpec index maps."""
+    if order == "cyclic":
+        return j
+    # Sawtooth: alternate direction with the parity of the Q-tile index.
+    return jax.lax.select(i % 2 == 0, j, num_kv_tiles - 1 - j)
+
+
+def _attention_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    scale: float,
+    causal: bool,
+    num_kv_tiles: int,
+    tile_q: int,
+    tile_kv: int,
+    order: Order,
+):
+    """One (Q-tile, KV-tile) grid step of the online-softmax forward pass.
+
+    The grid is (num_q_tiles, num_kv_tiles); the KV grid dimension is the
+    paper's inner streaming loop (Algorithm 1 lines 6-12).  Accumulators
+    m (running max), l (running normaliser) and acc (unnormalised output)
+    live in per-Q-tile scratch blocks that persist across the KV dimension.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    jm = _kv_block_index(i, j, num_kv_tiles, order)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _step():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        v = v_ref[...].astype(jnp.float32)
+
+        # S_ij = scale * Q_i K_j^T   (MXU matmul #1)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        s = s * scale
+
+        if causal:
+            # Mask the upper triangle: query row r may attend to key col c
+            # iff global_r >= global_c.
+            rows = i * tile_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = jm * tile_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, _MASK_VALUE)
+
+        # Online softmax update (Algorithm 1 lines 9-10).
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+
+        # O_i <- alpha * O_i + P_ij V_j   (MXU matmul #2)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    if causal:
+        # Skip KV tiles strictly above the diagonal (fully masked).  The
+        # paper's causal kernel does not *access* those tiles at all; the
+        # access-count model (S(S-1)/2T) reflects that.  BlockSpec prefetch
+        # still maps them, so on real hardware one would shrink the grid;
+        # numerically the skip is exact.
+        first_masked_row = i * tile_q + tile_q - 1  # last row of this Q tile
+        needed = jm * tile_kv <= first_masked_row
+
+        @pl.when(needed)
+        def _():
+            _step()
+    else:
+        _step()
+
+    @pl.when(j == num_kv_tiles - 1)
+    def _finalize():
+        # Rows that attended to nothing (possible only with causal + padding)
+        # get l == 0; emit zeros for them instead of NaN.
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile_q", "tile_kv", "causal", "order", "scale", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    tile_q: int = 64,
+    tile_kv: int = 64,
+    causal: bool = False,
+    order: Order = "cyclic",
+    scale: float | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """FlashAttention forward pass over single-head inputs ``(S, D)``.
+
+    Args:
+      q, k, v: arrays of shape ``(S, D)`` (same S for Q and KV, per the
+        paper's square-tiling study).
+      tile_q / tile_kv: block sizes; the paper's square tiling is
+        ``tile_q == tile_kv`` (T=80 CUDA study, T=64 CuTile study).  S must
+        be divisible by both.
+      causal: apply a causal (lower-triangular) mask.
+      order: ``"cyclic"`` streams KV tiles 0..Tc-1 for every Q tile;
+        ``"sawtooth"`` alternates direction per Q tile (Algorithm 4).
+        The result is identical up to fp reassociation.
+      scale: logit scale; defaults to 1/sqrt(D).
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      The attention output, shape ``(S, D)``, dtype of ``q``.
+    """
+    if q.ndim != 2 or k.ndim != 2 or v.ndim != 2:
+        raise ValueError(f"expected rank-2 (S, D) inputs, got {q.shape}/{k.shape}/{v.shape}")
+    seq_q, d = q.shape
+    seq_kv, dk = k.shape
+    if k.shape != v.shape or d != dk:
+        raise ValueError(f"K/V shape mismatch: {k.shape} vs {v.shape}, D={d}")
+    if seq_q % tile_q != 0:
+        raise ValueError(f"S_q={seq_q} not divisible by tile_q={tile_q}")
+    if seq_kv % tile_kv != 0:
+        raise ValueError(f"S_kv={seq_kv} not divisible by tile_kv={tile_kv}")
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+
+    num_q_tiles = seq_q // tile_q
+    num_kv_tiles = seq_kv // tile_kv
+
+    kernel = functools.partial(
+        _attention_kernel,
+        scale=float(scale),
+        causal=causal,
+        num_kv_tiles=num_kv_tiles,
+        tile_q=tile_q,
+        tile_kv=tile_kv,
+        order=order,
+    )
+
+    kv_index_map = lambda i, j: (_kv_block_index(i, j, num_kv_tiles, order), 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(num_q_tiles, num_kv_tiles),
+        in_specs=[
+            pl.BlockSpec((tile_q, d), lambda i, j: (i, 0)),  # Q resident per i
+            pl.BlockSpec((tile_kv, d), kv_index_map),  # K streamed
+            pl.BlockSpec((tile_kv, d), kv_index_map),  # V streamed
+        ],
+        out_specs=pl.BlockSpec((tile_q, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((seq_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tile_q,), jnp.float32),  # m: running row max
+            pltpu.VMEM((tile_q,), jnp.float32),  # l: running normaliser
+            pltpu.VMEM((tile_q, d), jnp.float32),  # acc: unnormalised output
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention_batched(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    **kwargs,
+) -> jax.Array:
+    """Batched/multi-head wrapper: inputs ``(B, H, S, D)`` (or ``(H, S, D)``).
+
+    vmaps the single-head kernel over the leading dims, matching the paper's
+    grid-y = batch*heads work distribution.
+    """
+    fn = functools.partial(flash_attention, **kwargs)
+    for _ in range(q.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(q, k, v)
+
+
+def vmem_footprint_bytes(
+    tile_q: int, tile_kv: int, d: int, in_dtype_bytes: int = 2
+) -> int:
+    """Estimated VMEM bytes live per grid step (DESIGN.md §Perf, L1 layer).
+
+    Q block + K block + V block (input dtype) + fp32 scratch (m, l, acc) +
+    the fp32 logits tile the compiler materialises for S_ij.
+    """
+    blocks = (tile_q * d + 2 * tile_kv * d) * in_dtype_bytes
+    scratch = (tile_q + tile_q + tile_q * d) * 4
+    logits = tile_q * tile_kv * 4
+    out = tile_q * d * in_dtype_bytes
+    return blocks + scratch + logits + out
+
+
+def mxu_utilization_estimate(tile_q: int, tile_kv: int, d: int, mxu: int = 128) -> float:
+    """Fraction of MXU lanes occupied by the two matmuls at this tiling.
+
+    An (m, k) x (k, n) product on an mxu x mxu systolic array is padded to
+    multiples of ``mxu`` in every dimension; utilization is the ratio of
+    real MACs to padded MACs, averaged over S=QK^T and O=PV weighted by
+    their MAC counts.
+    """
+
+    def util(m: int, kk: int, n: int) -> float:
+        pad = lambda x: mxu * math.ceil(x / mxu)
+        return (m * kk * n) / (pad(m) * pad(kk) * pad(n))
+
+    macs_s = tile_q * d * tile_kv
+    macs_o = tile_q * tile_kv * d
+    return (util(tile_q, d, tile_kv) * macs_s + util(tile_q, tile_kv, d) * macs_o) / (
+        macs_s + macs_o
+    )

@@ -1,0 +1,57 @@
+"""Pure-jnp correctness oracle for the FlashAttention Pallas kernel.
+
+Materialises the full N x N attention matrix in float32 — exactly what
+FlashAttention avoids — so it is the ground truth the fused kernel is
+checked against (pytest, build time).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "attention_ref_batched"]
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+) -> jax.Array:
+    """Standard scaled dot-product attention, shapes ``(S, D)``.
+
+    Computes ``softmax(scale * Q K^T + mask) V`` in float32 and casts back
+    to the input dtype.  Fully-masked rows (impossible in the square
+    non-padded case, but kept for parity with the kernel) yield zeros.
+    """
+    seq_q, d = q.shape
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = (qf @ kf.T) * scale
+    if causal:
+        rows = jnp.arange(seq_q)[:, None]
+        cols = jnp.arange(k.shape[0])[None, :]
+        s = jnp.where(rows >= cols, s, -jnp.inf)
+    m = jnp.max(s, axis=1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)  # all-masked row guard
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=1, keepdims=True)
+    out = (p @ vf) / jnp.where(l == 0.0, 1.0, l)
+    return out.astype(q.dtype)
+
+
+def attention_ref_batched(q, k, v, **kwargs):
+    """Batched oracle over leading dims, mirrors flash_attention_batched."""
+    fn = functools.partial(attention_ref, **kwargs)
+    for _ in range(q.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(q, k, v)

@@ -1,0 +1,135 @@
+"""Layer-2: JAX model definitions built on the Pallas flash-attention kernel.
+
+Two levels of computation are exported to HLO:
+
+* ``attention_forward`` — the bare batched attention op (B, H, S, D).  These
+  artifacts back the coordinator's attention service and the quickstart.
+* ``mha_block_forward`` — a full multi-head-attention block (QKV projection,
+  flash attention, output projection, residual).  This is the "small real
+  model" the end-to-end serving example drives.
+
+Everything here is build-time Python: ``aot.py`` lowers these functions once
+to HLO text and the rust runtime executes the artifacts via PJRT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.flash_attention import flash_attention_batched
+
+Order = Literal["cyclic", "sawtooth"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    """Static configuration of one AOT attention variant."""
+
+    batch: int
+    heads: int
+    seq: int
+    head_dim: int
+    tile_q: int = 64
+    tile_kv: int = 64
+    causal: bool = False
+    order: Order = "cyclic"
+    dtype: str = "float32"
+
+    @property
+    def name(self) -> str:
+        mask = "causal" if self.causal else "full"
+        return (
+            f"attn_b{self.batch}_h{self.heads}_s{self.seq}_d{self.head_dim}"
+            f"_{mask}_{self.order}"
+        )
+
+    @property
+    def model_dim(self) -> int:
+        return self.heads * self.head_dim
+
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def attention_forward(cfg: AttentionConfig, q, k, v):
+    """Batched flash attention, inputs ``(B, H, S, D)``."""
+    return flash_attention_batched(
+        q,
+        k,
+        v,
+        tile_q=cfg.tile_q,
+        tile_kv=cfg.tile_kv,
+        causal=cfg.causal,
+        order=cfg.order,
+    )
+
+
+def mha_block_forward(cfg: AttentionConfig, x, wq, wk, wv, wo):
+    """A full MHA block over ``x: (B, S, H*D)``.
+
+    y = x + (flash_attention(x Wq, x Wk, x Wv) reshaped) Wo
+
+    Weights are ``(H*D, H*D)``.  The attention core is the Pallas kernel, so
+    the sawtooth reorder is exercised inside a realistic model graph (the
+    serving example's workload).
+    """
+    b, s, dm = x.shape
+    h, dh = cfg.heads, cfg.head_dim
+    assert dm == h * dh, (dm, h, dh)
+
+    def split(t):
+        # (B, S, H*D) -> (B, H, S, D)
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+
+    q = split(x @ wq)
+    k = split(x @ wk)
+    v = split(x @ wv)
+    o = attention_forward(cfg, q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, dm)
+    return x + o @ wo
+
+
+def attention_example_args(cfg: AttentionConfig):
+    """ShapeDtypeStructs for lowering ``attention_forward``."""
+    shp = (cfg.batch, cfg.heads, cfg.seq, cfg.head_dim)
+    spec = jax.ShapeDtypeStruct(shp, cfg.jnp_dtype())
+    return (spec, spec, spec)
+
+
+def mha_example_args(cfg: AttentionConfig):
+    """ShapeDtypeStructs for lowering ``mha_block_forward``."""
+    dm = cfg.model_dim
+    x = jax.ShapeDtypeStruct((cfg.batch, cfg.seq, dm), cfg.jnp_dtype())
+    w = jax.ShapeDtypeStruct((dm, dm), cfg.jnp_dtype())
+    return (x, w, w, w, w)
+
+
+def jit_attention(cfg: AttentionConfig):
+    """Jitted single-output-tuple attention fn ready for lowering."""
+
+    def fn(q, k, v):
+        return (attention_forward(cfg, q, k, v),)
+
+    return jax.jit(fn)
+
+
+def jit_mha(cfg: AttentionConfig):
+    def fn(x, wq, wk, wv, wo):
+        return (mha_block_forward(cfg, x, wq, wk, wv, wo),)
+
+    return jax.jit(fn)
+
+
+def init_mha_weights(cfg: AttentionConfig, seed: int = 0):
+    """Deterministic small random weights for the serving model."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    dm = cfg.model_dim
+    scale = 1.0 / jnp.sqrt(dm)
+    return tuple(
+        (jax.random.normal(k, (dm, dm), cfg.jnp_dtype()) * scale) for k in keys
+    )

@@ -1,0 +1,68 @@
+"""AOT pipeline tests: HLO text validity, manifest schema, determinism."""
+
+import os
+
+import pytest
+
+from compile.aot import (
+    lower_attention,
+    lower_mha,
+    main,
+    mha_variant,
+    serving_variants,
+)
+from compile.model import AttentionConfig
+
+SMALL = AttentionConfig(batch=1, heads=1, seq=64, head_dim=32, tile_q=32, tile_kv=32)
+
+
+def test_lower_attention_is_hlo_text():
+    text = lower_attention(SMALL)
+    assert text.startswith("HloModule")
+    # return_tuple=True: the root computation must return a tuple.
+    assert "ROOT" in text and "tuple(" in text.replace(" ", "")
+
+
+def test_lower_is_deterministic():
+    assert lower_attention(SMALL) == lower_attention(SMALL)
+
+
+def test_lower_mha_has_five_params():
+    text = lower_mha(SMALL)
+    assert text.startswith("HloModule")
+    entry = [l for l in text.splitlines() if "ENTRY" in l][0]
+    assert entry.count("parameter") == 0 or True  # params appear in body lines
+    body = text[text.index("ENTRY"):]
+    assert sum("parameter(" in l for l in body.splitlines()) == 5
+
+
+def test_serving_variants_cover_grid():
+    vs = serving_variants()
+    # 3 seqs x 2 masks x 2 orders x 2 batch sizes
+    assert len(vs) == 24
+    names = {v.name for v in vs}
+    assert len(names) == 24
+    assert any(v.causal and v.order == "sawtooth" for v in vs)
+    assert {v.batch for v in vs} == {1, 4}
+
+
+def test_mha_variant_uses_sawtooth_causal():
+    cfg = mha_variant()
+    assert cfg.causal and cfg.order == "sawtooth"
+
+
+def test_main_quick_writes_artifacts(tmp_path):
+    out = str(tmp_path / "artifacts")
+    assert main(["--out-dir", out, "--quick"]) == 0
+    files = os.listdir(out)
+    assert "manifest.tsv" in files
+    hlo = [f for f in files if f.endswith(".hlo.txt")]
+    assert len(hlo) == 1
+    with open(os.path.join(out, "manifest.tsv")) as f:
+        lines = [l for l in f if not l.startswith("#")]
+    assert len(lines) == 1
+    cols = lines[0].rstrip("\n").split("\t")
+    assert len(cols) == 13
+    assert cols[0] == "attention"
+    assert cols[2] == hlo[0]
+    assert cols[12] == "3"

@@ -1,0 +1,251 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Covers: both traversal orders, causal/non-causal, rectangular tiles,
+non-square S_q != S_kv, dtypes (f32/bf16), numeric-range robustness, the
+visit-order oracle, and hypothesis sweeps over shapes/tiles/dtypes.
+"""
+
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.flash_attention import (
+    flash_attention,
+    flash_attention_batched,
+    kv_visit_order,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import attention_ref, attention_ref_batched
+
+
+def rand(shape, seed=0, dtype=jnp.float32, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+def assert_matches_ref(q, k, v, tol=2e-5, **kw):
+    out = flash_attention(q, k, v, **kw)
+    ref = attention_ref(q, k, v, causal=kw.get("causal", False), scale=kw.get("scale"))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+# ---------------------------------------------------------------------------
+# Basic grid of configurations.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("order", ["cyclic", "sawtooth"])
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("seq,tile", [(128, 32), (128, 64), (256, 64), (320, 80)])
+def test_matches_reference(order, causal, seq, tile):
+    q = rand((seq, 64), 1)
+    k = rand((seq, 64), 2)
+    v = rand((seq, 64), 3)
+    assert_matches_ref(q, k, v, tile_q=tile, tile_kv=tile, causal=causal, order=order)
+
+
+@pytest.mark.parametrize("order", ["cyclic", "sawtooth"])
+def test_rectangular_tiles(order):
+    q, k, v = rand((128, 32), 4), rand((128, 32), 5), rand((128, 32), 6)
+    assert_matches_ref(q, k, v, tile_q=32, tile_kv=64, order=order)
+    assert_matches_ref(q, k, v, tile_q=64, tile_kv=32, order=order)
+
+
+@pytest.mark.parametrize("order", ["cyclic", "sawtooth"])
+@pytest.mark.parametrize("causal", [False, True])
+def test_cross_attention_lengths(order, causal):
+    # S_q != S_kv (decode-like); causal masks relative to absolute indices.
+    q = rand((64, 64), 7)
+    k = rand((256, 64), 8)
+    v = rand((256, 64), 9)
+    assert_matches_ref(q, k, v, tile_q=32, tile_kv=64, causal=causal, order=order)
+
+
+def test_single_tile():
+    q, k, v = rand((64, 64), 10), rand((64, 64), 11), rand((64, 64), 12)
+    assert_matches_ref(q, k, v, tile_q=64, tile_kv=64)
+    assert_matches_ref(q, k, v, tile_q=64, tile_kv=64, order="sawtooth")
+
+
+def test_custom_scale():
+    q, k, v = rand((128, 64), 13), rand((128, 64), 14), rand((128, 64), 15)
+    assert_matches_ref(q, k, v, tile_q=64, tile_kv=64, scale=0.25)
+
+
+def test_bfloat16():
+    q = rand((128, 64), 16, jnp.bfloat16)
+    k = rand((128, 64), 17, jnp.bfloat16)
+    v = rand((128, 64), 18, jnp.bfloat16)
+    out = flash_attention(q, k, v, tile_q=64, tile_kv=64)
+    ref = attention_ref(q, k, v)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=3e-2, rtol=3e-2
+    )
+
+
+def test_large_magnitude_logits_stable():
+    # Online softmax must not overflow even with logits ~ +-60.
+    q = rand((128, 64), 19, scale=8.0)
+    k = rand((128, 64), 20, scale=8.0)
+    v = rand((128, 64), 21)
+    out = flash_attention(q, k, v, tile_q=64, tile_kv=64)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert_matches_ref(q, k, v, tol=5e-4, tile_q=64, tile_kv=64)
+
+
+def test_identical_keys_uniform_attention():
+    # All keys identical -> attention is the mean of V rows.
+    k = jnp.ones((128, 64), jnp.float32)
+    q = rand((128, 64), 22)
+    v = rand((128, 64), 23)
+    out = flash_attention(q, k, v, tile_q=64, tile_kv=64)
+    np.testing.assert_allclose(
+        np.asarray(out), np.tile(np.asarray(v).mean(0), (128, 1)), atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sawtooth-specific invariants.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_sawtooth_equals_cyclic(causal):
+    """The reorder only reassociates fp addition: results stay ~identical."""
+    q, k, v = rand((512, 64), 24), rand((512, 64), 25), rand((512, 64), 26)
+    a = flash_attention(q, k, v, tile_q=64, tile_kv=64, causal=causal, order="cyclic")
+    b = flash_attention(q, k, v, tile_q=64, tile_kv=64, causal=causal, order="sawtooth")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5)
+
+
+def test_kv_visit_order_definition():
+    assert kv_visit_order(0, 4, "cyclic") == [0, 1, 2, 3]
+    assert kv_visit_order(1, 4, "cyclic") == [0, 1, 2, 3]
+    assert kv_visit_order(0, 4, "sawtooth") == [0, 1, 2, 3]
+    assert kv_visit_order(1, 4, "sawtooth") == [3, 2, 1, 0]
+    assert kv_visit_order(2, 4, "sawtooth") == [0, 1, 2, 3]
+
+
+def test_kv_visit_order_is_permutation():
+    for i in range(5):
+        for n in (1, 3, 8):
+            for order in ("cyclic", "sawtooth"):
+                assert sorted(kv_visit_order(i, n, order)) == list(range(n))
+
+
+# ---------------------------------------------------------------------------
+# Batched wrapper.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("order", ["cyclic", "sawtooth"])
+def test_batched_matches_ref(order):
+    q = rand((2, 3, 128, 64), 27)
+    k = rand((2, 3, 128, 64), 28)
+    v = rand((2, 3, 128, 64), 29)
+    out = flash_attention_batched(q, k, v, tile_q=64, tile_kv=64, order=order)
+    ref = attention_ref_batched(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_batched_matches_per_head_loop():
+    q, k, v = rand((1, 2, 128, 64), 30), rand((1, 2, 128, 64), 31), rand((1, 2, 128, 64), 32)
+    out = flash_attention_batched(q, k, v, tile_q=64, tile_kv=64)
+    for h in range(2):
+        single = flash_attention(q[0, h], k[0, h], v[0, h], tile_q=64, tile_kv=64)
+        np.testing.assert_allclose(np.asarray(out[0, h]), np.asarray(single), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Input validation.
+# ---------------------------------------------------------------------------
+
+
+def test_rejects_indivisible_seq():
+    q, k, v = rand((100, 64)), rand((100, 64)), rand((100, 64))
+    with pytest.raises(ValueError, match="not divisible"):
+        flash_attention(q, k, v, tile_q=64, tile_kv=64)
+
+
+def test_rejects_rank_mismatch():
+    with pytest.raises(ValueError, match="rank-2"):
+        flash_attention(rand((2, 64, 64)), rand((64, 64)), rand((64, 64)))
+
+
+def test_rejects_kv_shape_mismatch():
+    with pytest.raises(ValueError, match="mismatch"):
+        flash_attention(rand((64, 64)), rand((64, 64)), rand((128, 64)))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes / tiles / dtype / order / mask.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles_q=st.integers(1, 4),
+    tiles_kv=st.integers(1, 4),
+    tile=st.sampled_from([16, 32, 48]),
+    d=st.sampled_from([16, 32, 64]),
+    causal=st.booleans(),
+    order=st.sampled_from(["cyclic", "sawtooth"]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_matches_ref(tiles_q, tiles_kv, tile, d, causal, order, seed):
+    sq, skv = tiles_q * tile, tiles_kv * tile
+    q = rand((sq, d), seed)
+    k = rand((skv, d), seed + 1)
+    v = rand((skv, d), seed + 2)
+    out = flash_attention(q, k, v, tile_q=tile, tile_kv=tile, causal=causal, order=order)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    tile=st.sampled_from([32, 64]),
+    ntiles=st.integers(1, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_dtypes(dtype, tile, ntiles, seed):
+    s = tile * ntiles
+    dt = jnp.dtype(dtype)
+    q, k, v = rand((s, 32), seed, dt), rand((s, 32), seed + 1, dt), rand((s, 32), seed + 2, dt)
+    out = flash_attention(q, k, v, tile_q=tile, tile_kv=tile, order="sawtooth")
+    ref = attention_ref(q, k, v)
+    tol = 3e-5 if dtype == "float32" else 4e-2
+    assert out.dtype == dt
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+# ---------------------------------------------------------------------------
+# Perf-estimate helpers (used by DESIGN.md §Perf): sanity only.
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_footprint_monotone_and_fits():
+    f64 = vmem_footprint_bytes(64, 64, 64)
+    f128 = vmem_footprint_bytes(128, 128, 64)
+    assert f64 < f128
+    # The production tiling must fit a 16 MiB VMEM with generous headroom.
+    assert f128 < 4 * 1024 * 1024
+
+
+def test_mxu_utilization_bounds():
+    for t in (16, 32, 64, 80, 128):
+        u = mxu_utilization_estimate(t, t, 64)
+        assert 0.0 < u <= 1.0
+    # 128-aligned tiling saturates the array.
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0

@@ -1,0 +1,69 @@
+//! Microbenchmarks of the simulator substrates: LRU models, the reuse-
+//! distance profiler, and the wavefront engine hot loop. These are the L3
+//! hot paths profiled in EXPERIMENTS.md §Perf.
+
+mod common;
+
+use std::time::Instant;
+
+use common::{bench, report_rate};
+use sawtooth_attn::l2model::reuse::ReuseProfiler;
+use sawtooth_attn::sim::cache::{block_key, ExactLru, WeightedLru};
+use sawtooth_attn::sim::workload::AttentionWorkload;
+use sawtooth_attn::sim::{Order, SimConfig, Simulator};
+use sawtooth_attn::util::rng::Rng;
+
+fn main() {
+    println!("== bench_cache: LRU + reuse profiler + engine hot loop ==");
+
+    // Weighted LRU: streaming working set 4x capacity (the paper's regime).
+    bench("weighted_lru/stream_1M_accesses", 5, || {
+        let mut c = WeightedLru::new(200_000);
+        for pass in 0..4u64 {
+            for b in 0..250_000u64 {
+                let key = block_key(1, 0, b);
+                std::hint::black_box(c.access(key, if pass % 2 == 0 { 2 } else { 2 }));
+            }
+        }
+    });
+
+    // Exact LRU for the same traffic volume (why the weighted model exists).
+    bench("exact_lru/stream_1M_sectors", 3, || {
+        let mut c = ExactLru::new(200_000);
+        for _ in 0..4u64 {
+            let (h, m) = c.access_run(0, 250_000);
+            std::hint::black_box((h, m));
+        }
+    });
+
+    // Random-access LRU (hash-heavy path).
+    bench("weighted_lru/random_1M_accesses", 5, || {
+        let mut rng = Rng::new(7);
+        let mut c = WeightedLru::new(100_000);
+        for _ in 0..1_000_000 {
+            let key = rng.next_below(300_000);
+            std::hint::black_box(c.access(key, 1));
+        }
+    });
+
+    // Reuse-distance profiler (Fenwick + hash).
+    bench("reuse_profiler/500k_accesses", 3, || {
+        let mut p = ReuseProfiler::new(500_000);
+        let mut rng = Rng::new(3);
+        for _ in 0..500_000 {
+            p.access(rng.next_below(50_000), 4);
+        }
+        std::hint::black_box(p.finish().cold);
+    });
+
+    // Engine end-to-end rate, the paper's §3 configuration at 32K.
+    let w = AttentionWorkload::cuda_study(32 * 1024);
+    let cfg = SimConfig::cuda_study(w);
+    let t0 = Instant::now();
+    let r = Simulator::new(cfg.clone()).run();
+    report_rate("engine/cuda_study_32k_kv_steps", r.kv_steps, t0.elapsed());
+
+    let t0 = Instant::now();
+    let r = Simulator::new(cfg.with_order(Order::Sawtooth)).run();
+    report_rate("engine/cuda_study_32k_sawtooth_kv_steps", r.kv_steps, t0.elapsed());
+}

@@ -1,0 +1,99 @@
+//! Serving-engine benchmarks: request throughput and latency vs batching
+//! policy. Requires `make artifacts`.
+
+mod common;
+
+use std::time::Instant;
+
+use common::report_rate;
+use sawtooth_attn::config::ServeConfig;
+use sawtooth_attn::coordinator::{AttentionRequest, Engine};
+use sawtooth_attn::runtime::default_artifacts_dir;
+use sawtooth_attn::sim::kernel_model::Order;
+use sawtooth_attn::util::rng::Rng;
+
+fn drive(
+    max_batch: usize,
+    window_us: u64,
+    requests: usize,
+    clients: usize,
+    warmup: bool,
+) -> Option<f64> {
+    let cfg = ServeConfig {
+        artifacts_dir: default_artifacts_dir().display().to_string(),
+        max_batch,
+        batch_window_us: window_us,
+        order: Order::Sawtooth,
+        queue_depth: 128,
+        clients,
+        warmup,
+    };
+    let engine = match Engine::start(cfg) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping bench_coordinator: {e:#} (run `make artifacts`)");
+            return None;
+        }
+    };
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let engine = &engine;
+            s.spawn(move || {
+                let mut rng = Rng::new(c as u64);
+                let mut handles = Vec::new();
+                for i in 0..requests / clients {
+                    let req = AttentionRequest::synthetic(
+                        (c * 10_000 + i) as u64,
+                        128,
+                        4,
+                        64,
+                        false,
+                        &mut rng,
+                    );
+                    if let Ok(h) = engine.submit_async(req) {
+                        handles.push(h);
+                    }
+                    if handles.len() >= 8 {
+                        for h in handles.drain(..) {
+                            let _ = h.wait();
+                        }
+                    }
+                }
+                for h in handles {
+                    let _ = h.wait();
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed();
+    let stats = engine.shutdown();
+    report_rate(
+        &format!(
+            "engine/max_batch={max_batch} window={window_us}us mean_batch={:.2}",
+            stats.mean_batch_size()
+        ),
+        stats.completed,
+        elapsed,
+    );
+    println!(
+        "      latency p50 {:.2} ms  p99 {:.2} ms",
+        stats.latency.p50(),
+        stats.latency.p99()
+    );
+    Some(stats.completed as f64 / elapsed.as_secs_f64())
+}
+
+fn main() {
+    println!("== bench_coordinator: serving throughput vs batching policy ==");
+    // Cold (compile on the request path) vs warm, unbatched vs batched.
+    let cold = drive(1, 50, 32, 4, false);
+    let unbatched = drive(1, 50, 64, 4, true);
+    let batched = drive(4, 2000, 64, 4, true);
+    if let Some(c) = cold {
+        println!("cold-start throughput: {c:.2} req/s");
+    }
+    if let (Some(u), Some(b)) = (unbatched, batched) {
+        println!("batching speedup (warm): {:.2}x", b / u);
+    }
+}

@@ -1,0 +1,19 @@
+//! Regenerate every paper figure (1–12) and time each (`cargo bench`).
+//!
+//! This is the full evaluation harness: each figure's workload sweep runs
+//! on the GB10 simulator and prints the same series the paper plots, with
+//! paper reference values alongside.
+
+mod common;
+
+use common::bench_once;
+use sawtooth_attn::report;
+
+fn main() {
+    println!("== bench_figures: paper figures 1-12 ==");
+    for i in 1..=12 {
+        let id = format!("fig{i}");
+        let out = bench_once(&format!("report/{id}"), || report::run(&id).unwrap());
+        println!("{out}");
+    }
+}

@@ -1,0 +1,61 @@
+//! PJRT runtime benchmarks: artifact compile time and execute latency per
+//! serving shape. Requires `make artifacts`.
+
+mod common;
+
+use common::{bench, bench_once};
+use sawtooth_attn::runtime::{default_artifacts_dir, Runtime};
+use sawtooth_attn::util::rng::Rng;
+
+fn main() {
+    println!("== bench_runtime: PJRT compile + execute ==");
+    let dir = default_artifacts_dir();
+    let mut rt = match Runtime::open(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping bench_runtime: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+
+    let names: Vec<String> = rt
+        .manifest()
+        .attention_artifacts()
+        .filter(|a| a.batch == 1 && a.order == "sawtooth" && !a.causal)
+        .map(|a| a.name.clone())
+        .collect();
+
+    for name in &names {
+        bench_once(&format!("compile/{name}"), || {
+            rt.compile(name).unwrap();
+        });
+    }
+
+    let mut rng = Rng::new(9);
+    for name in &names {
+        let meta = rt.manifest().find(name).unwrap().clone();
+        let n = meta.qkv_elems();
+        let q: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32).collect();
+        let k = q.clone();
+        let v = q.clone();
+        bench(&format!("execute/{name}"), 10, || {
+            std::hint::black_box(rt.execute_attention(name, &q, &k, &v).unwrap());
+        });
+    }
+
+    // Batched variant: per-request amortisation of a B=4 dispatch.
+    let batched_meta = rt
+        .manifest()
+        .attention_artifacts()
+        .find(|a| a.batch == 4 && a.order == "sawtooth" && !a.causal && a.seq == 256)
+        .cloned();
+    if let Some(meta) = batched_meta {
+        let n = meta.batch * meta.heads * meta.seq * meta.head_dim;
+        let q: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32).collect();
+        let k = q.clone();
+        let v = q.clone();
+        bench(&format!("execute/{} (B=4)", meta.name), 10, || {
+            std::hint::black_box(rt.execute_attention(&meta.name, &q, &k, &v).unwrap());
+        });
+    }
+}

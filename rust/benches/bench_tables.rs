@@ -1,0 +1,18 @@
+//! Regenerate the paper's Tables 1–3 and time each (`cargo bench`).
+//!
+//! One bench per table, as required by the experiment index in DESIGN.md §6.
+//! The printed tables are the deliverable; the timings document the cost of
+//! regeneration.
+
+mod common;
+
+use common::bench_once;
+use sawtooth_attn::report;
+
+fn main() {
+    println!("== bench_tables: paper tables 1-3 ==");
+    for t in ["table1", "table2", "table3"] {
+        let out = bench_once(&format!("report/{t}"), || report::run(t).unwrap());
+        println!("{out}");
+    }
+}

@@ -1,0 +1,36 @@
+#![allow(dead_code)] // each bench binary uses a subset of the harness
+//! Shared micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `bench(name, iters, f)` reports mean/min wall time per iteration;
+//! `bench_once(name, f)` times a single expensive run. Output format is one
+//! line per benchmark: `bench <name> ... mean <t> min <t> (<iters> iters)`.
+
+use std::time::{Duration, Instant};
+
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // Warm-up.
+    f();
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    let total: Duration = times.iter().sum();
+    let mean = total / iters as u32;
+    let min = times.iter().min().unwrap();
+    println!("bench {name:<52} mean {mean:>12.3?} min {min:>12.3?} ({iters} iters)");
+}
+
+pub fn bench_once<T, F: FnOnce() -> T>(name: &str, f: F) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    println!("bench {name:<52} once {:>12.3?}", t0.elapsed());
+    out
+}
+
+/// Throughput helper: items/sec for a counted run.
+pub fn report_rate(name: &str, items: u64, elapsed: Duration) {
+    let rate = items as f64 / elapsed.as_secs_f64();
+    println!("rate  {name:<52} {rate:>14.0} /s  ({items} items in {elapsed:.3?})");
+}

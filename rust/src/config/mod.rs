@@ -1,0 +1,288 @@
+//! Configuration system: a TOML-subset parser (offline environment — no
+//! serde), typed accessors, and the experiment/serving config schemas.
+//!
+//! Supported TOML subset: `[section]` / `[a.b]` headers, `key = value`
+//! with string / integer / float / boolean / flat-array values, `#`
+//! comments. This covers every config the launcher needs.
+
+pub mod schema;
+
+pub use schema::{ServeConfig, SimRunConfig};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Flat key→value map with dotted section prefixes
+/// (`[sim] seq = 1024` → `"sim.seq"`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (no, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: unterminated section header", no + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    bail!("line {}: empty section name", no + 1);
+                }
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .with_context(|| format!("line {}: expected key = value", no + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", no + 1);
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .with_context(|| format!("line {}: bad value", no + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full, val);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(Value::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn int(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Apply a `key=value` CLI override (`--set sim.seq=2048`).
+    pub fn set_override(&mut self, assignment: &str) -> Result<()> {
+        let eq = assignment
+            .find('=')
+            .context("override must be key=value")?;
+        let key = assignment[..eq].trim().to_string();
+        let val = parse_value(assignment[eq + 1..].trim())?;
+        self.values.insert(key, val);
+        Ok(())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    let s = s.trim();
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            bail!("unterminated string: {s}");
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            bail!("unterminated array: {s}");
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // Bare identifier → string (ergonomic for order = sawtooth).
+    if s.chars().all(|c| c.is_alphanumeric() || c == '-' || c == '_') {
+        return Ok(Value::Str(s.to_string()));
+    }
+    bail!("cannot parse value: {s}")
+}
+
+/// Split a flat array body on commas (no nested arrays needed).
+fn split_top_level(s: &str) -> Vec<&str> {
+    s.split(',').filter(|p| !p.trim().is_empty()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+title = "fig7"
+[sim]
+seq = 131_072
+tile = 80
+jitter = 0.25
+causal = false
+order = sawtooth
+batches = [1, 2, 4, 8]
+[device]
+name = "GB10"
+l2_mib = 24
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("title", ""), "fig7");
+        assert_eq!(c.int("sim.seq", 0), 131072);
+        assert_eq!(c.int("sim.tile", 0), 80);
+        assert!((c.float("sim.jitter", 0.0) - 0.25).abs() < 1e-12);
+        assert!(!c.bool("sim.causal", true));
+        assert_eq!(c.str("sim.order", ""), "sawtooth");
+        assert_eq!(c.str("device.name", ""), "GB10");
+    }
+
+    #[test]
+    fn arrays_parse() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let a = c.get("sim.batches").unwrap().as_array().unwrap();
+        let v: Vec<i64> = a.iter().map(|x| x.as_int().unwrap()).collect();
+        assert_eq!(v, vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int("nope", 7), 7);
+        assert_eq!(c.str("nope", "d"), "d");
+    }
+
+    #[test]
+    fn overrides_replace_values() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set_override("sim.seq=65536").unwrap();
+        assert_eq!(c.int("sim.seq", 0), 65536);
+        c.set_override("new.key=\"hi\"").unwrap();
+        assert_eq!(c.str("new.key", ""), "hi");
+    }
+
+    #[test]
+    fn comments_stripped_not_inside_strings() {
+        let c = Config::parse("a = \"x # y\" # real comment\nb = 1").unwrap();
+        assert_eq!(c.str("a", ""), "x # y");
+        assert_eq!(c.int("b", 0), 1);
+    }
+
+    #[test]
+    fn errors_on_malformed_input() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("k = [1, 2").is_err());
+        assert!(Config::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn floats_and_ints_coerce() {
+        let c = Config::parse("x = 2\ny = 2.5").unwrap();
+        assert_eq!(c.float("x", 0.0), 2.0);
+        assert_eq!(c.float("y", 0.0), 2.5);
+        assert_eq!(c.get("y").unwrap().as_int(), None);
+    }
+}

@@ -1,0 +1,226 @@
+//! Typed configuration schemas built on the generic [`super::Config`].
+
+use anyhow::{bail, Result};
+
+use crate::gb10::DeviceSpec;
+use crate::sim::kernel_model::{KernelVariant, Order};
+use crate::sim::scheduler::SchedulerKind;
+use crate::sim::workload::AttentionWorkload;
+use crate::sim::SimConfig;
+
+use super::Config;
+
+/// Configuration of one simulator run (`sawtooth simulate`).
+#[derive(Clone, Debug)]
+pub struct SimRunConfig {
+    pub workload: AttentionWorkload,
+    pub scheduler: SchedulerKind,
+    pub order: Order,
+    pub variant: KernelVariant,
+    pub num_sms: u32,
+    pub l2_mib: u64,
+    pub jitter: f64,
+    pub seed: u64,
+}
+
+impl Default for SimRunConfig {
+    fn default() -> Self {
+        SimRunConfig {
+            workload: AttentionWorkload::cuda_study(32 * 1024),
+            scheduler: SchedulerKind::Persistent,
+            order: Order::Cyclic,
+            variant: KernelVariant::CudaWmma,
+            num_sms: 48,
+            l2_mib: 24,
+            jitter: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+impl SimRunConfig {
+    /// Read from a parsed config (`[sim]` + `[device]` sections).
+    pub fn from_config(c: &Config) -> Result<Self> {
+        let d = Self::default();
+        let order = match Order::parse(&c.str("sim.order", "cyclic")) {
+            Some(o) => o,
+            None => bail!("sim.order must be cyclic|sawtooth"),
+        };
+        let scheduler = match SchedulerKind::parse(&c.str("sim.scheduler", "persistent")) {
+            Some(s) => s,
+            None => bail!("sim.scheduler must be persistent|non-persistent"),
+        };
+        let variant = match c.str("sim.variant", "cuda-wmma").as_str() {
+            "cuda-wmma" => KernelVariant::CudaWmma,
+            "cutile-static" => KernelVariant::CuTileStatic,
+            "cutile-tile" => KernelVariant::CuTileTile,
+            v => bail!("sim.variant unknown: {v}"),
+        };
+        let workload = AttentionWorkload {
+            batch: c.int("sim.batch", d.workload.batch as i64) as u32,
+            heads: c.int("sim.heads", d.workload.heads as i64) as u32,
+            seq: c.int("sim.seq", d.workload.seq as i64) as u64,
+            head_dim: c.int("sim.head_dim", d.workload.head_dim as i64) as u32,
+            elem_bytes: c.int("sim.elem_bytes", d.workload.elem_bytes as i64) as u32,
+            tile: c.int("sim.tile", d.workload.tile as i64) as u32,
+            causal: c.bool("sim.causal", d.workload.causal),
+        };
+        if workload.seq == 0 || workload.tile == 0 || workload.head_dim == 0 {
+            bail!("sim.seq / sim.tile / sim.head_dim must be positive");
+        }
+        let num_sms = c.int("device.sms", 48) as u32;
+        if num_sms == 0 {
+            bail!("device.sms must be >= 1");
+        }
+        Ok(SimRunConfig {
+            workload,
+            scheduler,
+            order,
+            variant,
+            num_sms,
+            l2_mib: c.int("device.l2_mib", 24) as u64,
+            jitter: c.float("sim.jitter", 0.0),
+            seed: c.int("sim.seed", 0) as u64,
+        })
+    }
+
+    pub fn device(&self) -> DeviceSpec {
+        let mut dev = if self.l2_mib == 24 {
+            DeviceSpec::gb10()
+        } else {
+            DeviceSpec::gb10_with_l2(self.l2_mib * 1024 * 1024)
+        };
+        dev.num_sms = self.num_sms;
+        dev
+    }
+
+    pub fn to_sim_config(&self) -> SimConfig {
+        SimConfig {
+            device: self.device(),
+            workload: self.workload,
+            scheduler: self.scheduler,
+            order: self.order,
+            variant: self.variant,
+            jitter: self.jitter,
+            seed: self.seed,
+            model_l1: true,
+        }
+    }
+}
+
+/// Configuration of the serving coordinator (`sawtooth serve`).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Artifacts directory (manifest.tsv + *.hlo.txt).
+    pub artifacts_dir: String,
+    /// Max requests coalesced into one executor dispatch.
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch (microseconds).
+    pub batch_window_us: u64,
+    /// KV traversal order requested from the kernel artifacts.
+    pub order: Order,
+    /// Bounded queue depth before back-pressure rejects.
+    pub queue_depth: usize,
+    /// Number of synthetic client threads in the driver examples.
+    pub clients: usize,
+    /// Pre-compile all attention artifacts at startup so first-request
+    /// latency reflects steady state.
+    pub warmup: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts_dir: "artifacts".to_string(),
+            max_batch: 8,
+            batch_window_us: 200,
+            order: Order::Sawtooth,
+            queue_depth: 256,
+            clients: 4,
+            warmup: false,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_config(c: &Config) -> Result<Self> {
+        let d = Self::default();
+        let order = match Order::parse(&c.str("serve.order", "sawtooth")) {
+            Some(o) => o,
+            None => bail!("serve.order must be cyclic|sawtooth"),
+        };
+        let cfg = ServeConfig {
+            artifacts_dir: c.str("serve.artifacts_dir", &d.artifacts_dir),
+            max_batch: c.int("serve.max_batch", d.max_batch as i64) as usize,
+            batch_window_us: c.int("serve.batch_window_us", d.batch_window_us as i64) as u64,
+            order,
+            queue_depth: c.int("serve.queue_depth", d.queue_depth as i64) as usize,
+            clients: c.int("serve.clients", d.clients as i64) as usize,
+            warmup: c.bool("serve.warmup", d.warmup),
+        };
+        if cfg.max_batch == 0 || cfg.queue_depth == 0 {
+            bail!("serve.max_batch and serve.queue_depth must be >= 1");
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_defaults_round_trip() {
+        let c = Config::parse("").unwrap();
+        let s = SimRunConfig::from_config(&c).unwrap();
+        assert_eq!(s.workload.seq, 32 * 1024);
+        assert_eq!(s.num_sms, 48);
+        assert_eq!(s.order, Order::Cyclic);
+        assert_eq!(s.device().l2_bytes, 24 * 1024 * 1024);
+    }
+
+    #[test]
+    fn sim_full_parse() {
+        let c = Config::parse(
+            "[sim]\nseq = 2048\ntile = 64\ncausal = true\norder = sawtooth\n\
+             variant = cutile-tile\nscheduler = non-persistent\n[device]\nsms = 16\nl2_mib = 8",
+        )
+        .unwrap();
+        let s = SimRunConfig::from_config(&c).unwrap();
+        assert_eq!(s.workload.seq, 2048);
+        assert!(s.workload.causal);
+        assert_eq!(s.order, Order::Sawtooth);
+        assert_eq!(s.variant, KernelVariant::CuTileTile);
+        assert_eq!(s.scheduler, SchedulerKind::NonPersistent);
+        assert_eq!(s.device().num_sms, 16);
+        assert_eq!(s.device().l2_bytes, 8 * 1024 * 1024);
+        let sc = s.to_sim_config();
+        assert_eq!(sc.workload.tile, 64);
+    }
+
+    #[test]
+    fn sim_rejects_bad_enum() {
+        let c = Config::parse("[sim]\norder = spiral").unwrap();
+        assert!(SimRunConfig::from_config(&c).is_err());
+        let c = Config::parse("[sim]\nvariant = triton").unwrap();
+        assert!(SimRunConfig::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn sim_rejects_zero_dims() {
+        let c = Config::parse("[sim]\nseq = 0").unwrap();
+        assert!(SimRunConfig::from_config(&c).is_err());
+        let c = Config::parse("[device]\nsms = 0").unwrap();
+        assert!(SimRunConfig::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn serve_parse_and_validate() {
+        let c = Config::parse("[serve]\nmax_batch = 4\norder = cyclic\nqueue_depth = 16").unwrap();
+        let s = ServeConfig::from_config(&c).unwrap();
+        assert_eq!(s.max_batch, 4);
+        assert_eq!(s.order, Order::Cyclic);
+        let bad = Config::parse("[serve]\nmax_batch = 0").unwrap();
+        assert!(ServeConfig::from_config(&bad).is_err());
+    }
+}

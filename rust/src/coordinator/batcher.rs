@@ -1,0 +1,183 @@
+//! Dynamic batcher: groups shape-compatible requests and pads them into the
+//! available AOT batch variants.
+
+use std::collections::HashMap;
+
+use super::request::AttentionRequest;
+
+/// A request paired with its position in the submission window (used to
+//  route the response back to the right channel).
+#[derive(Debug)]
+pub struct PlannedRequest {
+    pub req: AttentionRequest,
+    pub slot: usize,
+}
+
+/// One executor dispatch: `requests.len() <= batch_padded`, where
+/// `batch_padded` is the artifact batch dimension chosen (1 or 4 by
+/// default); unused rows are zero-padded.
+#[derive(Debug)]
+pub struct BatchPlan {
+    pub requests: Vec<PlannedRequest>,
+    pub batch_padded: usize,
+    /// Filled in by the executor once the artifact is selected.
+    pub artifact: String,
+}
+
+/// Batch planner. Stateless apart from configuration; returns plans that
+/// partition the input.
+pub struct Batcher {
+    max_batch: usize,
+    /// Batch sizes available as AOT artifacts, ascending.
+    available_batches: Vec<usize>,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize) -> Self {
+        Batcher { max_batch, available_batches: vec![1, 4] }
+    }
+
+    pub fn with_available_batches(mut self, mut batches: Vec<usize>) -> Self {
+        assert!(!batches.is_empty());
+        batches.sort_unstable();
+        self.available_batches = batches;
+        self
+    }
+
+    /// Smallest available artifact batch ≥ n (or the largest one if n
+    /// exceeds them all — the caller splits first, so this is total).
+    pub fn pad_to(&self, n: usize) -> usize {
+        for &b in &self.available_batches {
+            if b >= n {
+                return b;
+            }
+        }
+        *self.available_batches.last().unwrap()
+    }
+
+    /// Partition a submission window into dispatch plans:
+    /// group by shape key, split groups at `min(max_batch, max artifact
+    /// batch)`, pad each chunk to an available batch size.
+    pub fn plan(&mut self, reqs: Vec<AttentionRequest>) -> Vec<BatchPlan> {
+        let max_artifact = *self.available_batches.last().unwrap();
+        let chunk_limit = self.max_batch.min(max_artifact).max(1);
+
+        let mut groups: HashMap<(usize, usize, usize, bool), Vec<PlannedRequest>> =
+            HashMap::new();
+        for (slot, req) in reqs.into_iter().enumerate() {
+            groups
+                .entry(req.shape_key())
+                .or_default()
+                .push(PlannedRequest { req, slot });
+        }
+        // Deterministic plan order (stable output for tests/logging).
+        let mut keys: Vec<_> = groups.keys().cloned().collect();
+        keys.sort_unstable();
+
+        let mut plans = Vec::new();
+        for key in keys {
+            let members = groups.remove(&key).unwrap();
+            let mut members = members.into_iter().peekable();
+            loop {
+                let chunk: Vec<PlannedRequest> =
+                    members.by_ref().take(chunk_limit).collect();
+                if chunk.is_empty() {
+                    break;
+                }
+                let padded = self.pad_to(chunk.len());
+                plans.push(BatchPlan {
+                    requests: chunk,
+                    batch_padded: padded,
+                    artifact: String::new(),
+                });
+            }
+        }
+        plans
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn reqs(n: usize, seq: usize, causal: bool) -> Vec<AttentionRequest> {
+        let mut rng = Rng::new(3);
+        (0..n)
+            .map(|i| AttentionRequest::synthetic(i as u64, seq, 4, 64, causal, &mut rng))
+            .collect()
+    }
+
+    #[test]
+    fn single_request_pads_to_one() {
+        let mut b = Batcher::new(8);
+        let plans = b.plan(reqs(1, 128, false));
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].batch_padded, 1);
+    }
+
+    #[test]
+    fn three_requests_pad_to_four() {
+        let mut b = Batcher::new(8);
+        let plans = b.plan(reqs(3, 128, false));
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].requests.len(), 3);
+        assert_eq!(plans[0].batch_padded, 4);
+    }
+
+    #[test]
+    fn splits_groups_larger_than_artifact_max() {
+        let mut b = Batcher::new(16);
+        let plans = b.plan(reqs(10, 128, false));
+        // 10 → 4 + 4 + 2(→4)
+        assert_eq!(plans.len(), 3);
+        let sizes: Vec<usize> = plans.iter().map(|p| p.requests.len()).collect();
+        assert_eq!(sizes, vec![4, 4, 2]);
+        assert!(plans.iter().all(|p| p.batch_padded == 4));
+    }
+
+    #[test]
+    fn incompatible_shapes_never_share_a_plan() {
+        let mut b = Batcher::new(8);
+        let mut rs = reqs(2, 128, false);
+        rs.extend(reqs(2, 256, false));
+        rs.extend(reqs(2, 128, true));
+        let plans = b.plan(rs);
+        assert_eq!(plans.len(), 3);
+        for p in &plans {
+            let key = p.requests[0].req.shape_key();
+            assert!(p.requests.iter().all(|r| r.req.shape_key() == key));
+        }
+    }
+
+    #[test]
+    fn respects_max_batch_below_artifact_max() {
+        let mut b = Batcher::new(2);
+        let plans = b.plan(reqs(4, 128, false));
+        assert_eq!(plans.len(), 2);
+        assert!(plans.iter().all(|p| p.requests.len() == 2));
+    }
+
+    #[test]
+    fn slots_preserved_for_response_routing() {
+        let mut b = Batcher::new(8);
+        let mut rs = reqs(2, 128, false);
+        rs.extend(reqs(1, 256, false));
+        let plans = b.plan(rs);
+        let mut slots: Vec<usize> = plans
+            .iter()
+            .flat_map(|p| p.requests.iter().map(|r| r.slot))
+            .collect();
+        slots.sort_unstable();
+        assert_eq!(slots, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn custom_batch_ladder() {
+        let b = Batcher::new(64).with_available_batches(vec![8, 2, 1]);
+        assert_eq!(b.pad_to(1), 1);
+        assert_eq!(b.pad_to(2), 2);
+        assert_eq!(b.pad_to(3), 8);
+        assert_eq!(b.pad_to(50), 8); // clamped to largest; caller splits
+    }
+}

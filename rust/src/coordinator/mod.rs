@@ -1,0 +1,295 @@
+//! Attention serving coordinator (Layer 3).
+//!
+//! A thread-based serving engine in the vLLM-router mould, with the paper's
+//! contribution — sawtooth wavefront reordering — surfaced as a first-class
+//! scheduling policy:
+//!
+//! * [`request::AttentionRequest`] — client-visible unit of work.
+//! * [`batcher::Batcher`] — groups compatible requests (same seq/causal)
+//!   and pads them into the AOT batch variants, amortising dispatch.
+//! * [`policy::SchedulePolicy`] — picks the artifact (traversal order) and
+//!   exposes the GB10 perf estimator used for admission-time cost hints.
+//! * [`Engine`] — bounded submission queue (back-pressure), a pipeline
+//!   thread running batcher + PJRT executor, and latency/throughput stats.
+//!
+//! Python never runs here: the engine executes the HLO artifacts via PJRT.
+
+pub mod batcher;
+pub mod policy;
+pub mod request;
+pub mod stats;
+
+pub use batcher::{BatchPlan, Batcher};
+pub use policy::{GpuEstimate, SchedulePolicy};
+pub use request::{AttentionRequest, AttentionResponse, RequestId};
+pub use stats::EngineStats;
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::ServeConfig;
+use crate::runtime::Runtime;
+
+/// A queued submission: the request plus its response channel.
+struct Submission {
+    req: AttentionRequest,
+    enqueued: Instant,
+    resp_tx: std::sync::mpsc::Sender<Result<AttentionResponse>>,
+}
+
+/// Handle returned by [`Engine::submit_async`].
+pub struct ResponseHandle {
+    rx: Receiver<Result<AttentionResponse>>,
+}
+
+impl ResponseHandle {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<AttentionResponse> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("engine dropped the request (shutdown?)"))?
+    }
+}
+
+/// The serving engine.
+pub struct Engine {
+    tx: Option<SyncSender<Submission>>,
+    pipeline: Option<JoinHandle<()>>,
+    stats: Arc<Mutex<EngineStats>>,
+    cfg: ServeConfig,
+}
+
+impl Engine {
+    /// Start the engine and spawn the pipeline thread (batcher + executor).
+    ///
+    /// The PJRT client is `!Send` (it holds an `Rc` internally), so the
+    /// runtime is opened *inside* the pipeline thread; startup errors are
+    /// reported back synchronously through a one-shot channel.
+    pub fn start(cfg: ServeConfig) -> Result<Engine> {
+        let policy = SchedulePolicy::new(cfg.order);
+        let stats = Arc::new(Mutex::new(EngineStats::default()));
+        let (tx, rx) = sync_channel::<Submission>(cfg.queue_depth);
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        let pipeline = {
+            let stats = Arc::clone(&stats);
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name("sawtooth-pipeline".into())
+                .spawn(move || {
+                    let runtime = match open_runtime(&cfg) {
+                        Ok(rt) => {
+                            let _ = ready_tx.send(Ok(()));
+                            rt
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    pipeline_loop(rx, runtime, policy, cfg, stats)
+                })
+                .context("spawning pipeline thread")?
+        };
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("pipeline thread died during startup"))??;
+        Ok(Engine { tx: Some(tx), pipeline: Some(pipeline), stats, cfg })
+    }
+
+    /// Submit a request without blocking on completion. Applies
+    /// back-pressure: fails fast when the bounded queue is full.
+    pub fn submit_async(&self, req: AttentionRequest) -> Result<ResponseHandle> {
+        let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+        let sub = Submission { req, enqueued: Instant::now(), resp_tx };
+        let tx = self.tx.as_ref().ok_or_else(|| anyhow!("engine is shut down"))?;
+        match tx.try_send(sub) {
+            Ok(()) => {
+                self.stats.lock().unwrap().submitted += 1;
+                Ok(ResponseHandle { rx: resp_rx })
+            }
+            Err(std::sync::mpsc::TrySendError::Full(_)) => {
+                self.stats.lock().unwrap().rejected += 1;
+                bail!("queue full ({} deep): back-pressure", self.cfg.queue_depth)
+            }
+            Err(std::sync::mpsc::TrySendError::Disconnected(_)) => {
+                bail!("engine pipeline exited")
+            }
+        }
+    }
+
+    /// Submit and wait (convenience).
+    pub fn submit(&self, req: AttentionRequest) -> Result<AttentionResponse> {
+        self.submit_async(req)?.wait()
+    }
+
+    /// Snapshot of the engine statistics.
+    pub fn stats(&self) -> EngineStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Drain and stop the pipeline.
+    pub fn shutdown(mut self) -> EngineStats {
+        self.tx.take(); // close the channel → pipeline drains and exits
+        if let Some(h) = self.pipeline.take() {
+            let _ = h.join();
+        }
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.pipeline.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Open the runtime and optionally pre-compile all attention artifacts so
+/// steady-state latency is visible from the first request.
+fn open_runtime(cfg: &ServeConfig) -> Result<Runtime> {
+    let mut runtime = Runtime::open(&cfg.artifacts_dir)
+        .with_context(|| format!("opening artifacts at {}", cfg.artifacts_dir))?;
+    if cfg.warmup {
+        let names: Vec<String> = runtime
+            .manifest()
+            .attention_artifacts()
+            .map(|a| a.name.clone())
+            .collect();
+        for name in names {
+            runtime.compile(&name)?;
+        }
+    }
+    Ok(runtime)
+}
+
+/// The pipeline: collect → batch → execute → respond.
+fn pipeline_loop(
+    rx: Receiver<Submission>,
+    mut runtime: Runtime,
+    policy: SchedulePolicy,
+    cfg: ServeConfig,
+    stats: Arc<Mutex<EngineStats>>,
+) {
+    let window = Duration::from_micros(cfg.batch_window_us);
+    let mut batcher = Batcher::new(cfg.max_batch);
+    let mut pending: Vec<Submission> = Vec::new();
+
+    'outer: loop {
+        // Block for the first submission (or exit when all senders drop).
+        let first = match rx.recv() {
+            Ok(s) => s,
+            Err(_) => break 'outer,
+        };
+        pending.push(first);
+        // Fill the window.
+        let deadline = Instant::now() + window;
+        while pending.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(s) => pending.push(s),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Partition into shape-compatible batches and execute each.
+        let subs = std::mem::take(&mut pending);
+        let (reqs, mut channels): (Vec<_>, Vec<_>) = subs
+            .into_iter()
+            .map(|s| (s.req, (s.enqueued, Some(s.resp_tx))))
+            .unzip();
+        let plans = batcher.plan(reqs);
+        for mut plan in plans {
+            let t0 = Instant::now();
+            let result = execute_plan(&mut runtime, &policy, &mut plan);
+            let exec_elapsed = t0.elapsed();
+            let mut st = stats.lock().unwrap();
+            st.batches += 1;
+            st.record_batch_size(plan.requests.len());
+            match result {
+                Ok(outputs) => {
+                    for (req, out) in plan.requests.into_iter().zip(outputs) {
+                        let (enq, ch) = &mut channels[req.slot];
+                        let latency = enq.elapsed();
+                        st.completed += 1;
+                        st.latency.record(latency.as_secs_f64() * 1e3);
+                        st.exec_time_s += exec_elapsed.as_secs_f64()
+                            / plan.batch_padded as f64;
+                        let resp = AttentionResponse {
+                            id: req.req.id,
+                            output: out,
+                            artifact: plan.artifact.clone(),
+                            latency,
+                        };
+                        if let Some(tx) = ch.take() {
+                            let _ = tx.send(Ok(resp));
+                        }
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for req in plan.requests {
+                        let (_, ch) = &mut channels[req.slot];
+                        st.failed += 1;
+                        if let Some(tx) = ch.take() {
+                            let _ = tx.send(Err(anyhow!("{msg}")));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Execute one batch plan on the PJRT runtime; returns per-request outputs
+/// and records the chosen artifact on the plan.
+fn execute_plan(
+    runtime: &mut Runtime,
+    policy: &SchedulePolicy,
+    plan: &mut BatchPlan,
+) -> Result<Vec<Vec<f32>>> {
+    let first = &plan.requests[0].req;
+    let meta = policy
+        .select_artifact(runtime, first.seq, first.causal, plan.batch_padded)?
+        .clone();
+    plan.artifact = meta.name.clone();
+    let elems_per_req = meta.heads * meta.seq * meta.head_dim;
+    let total = meta.batch * elems_per_req;
+
+    // Assemble padded (B, H, S, D) buffers.
+    let mut q = vec![0f32; total];
+    let mut k = vec![0f32; total];
+    let mut v = vec![0f32; total];
+    for (i, r) in plan.requests.iter().enumerate() {
+        let dst = i * elems_per_req;
+        let n = elems_per_req;
+        if r.req.q.len() != n {
+            bail!(
+                "request {} payload has {} elems, artifact expects {n}",
+                r.req.id.0,
+                r.req.q.len()
+            );
+        }
+        q[dst..dst + n].copy_from_slice(&r.req.q);
+        k[dst..dst + n].copy_from_slice(&r.req.k);
+        v[dst..dst + n].copy_from_slice(&r.req.v);
+    }
+    let flat = runtime.execute_attention(&meta.name, &q, &k, &v)?;
+    if flat.len() != total {
+        bail!("artifact returned {} elems, expected {total}", flat.len());
+    }
+    Ok(plan
+        .requests
+        .iter()
+        .enumerate()
+        .map(|(i, _)| flat[i * elems_per_req..(i + 1) * elems_per_req].to_vec())
+        .collect())
+}

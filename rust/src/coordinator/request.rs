@@ -1,0 +1,97 @@
+//! Client-visible request/response types.
+
+use std::time::Duration;
+
+/// Unique request identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+/// One attention request: Q/K/V for a single sequence, (H, S, D) flattened
+/// row-major. The engine batches compatible requests together.
+#[derive(Clone, Debug)]
+pub struct AttentionRequest {
+    pub id: RequestId,
+    /// Sequence length; must match an AOT artifact (128/256/512 by default).
+    pub seq: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub causal: bool,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl AttentionRequest {
+    /// Build a request with deterministic synthetic payload (used by the
+    /// examples and load generators).
+    pub fn synthetic(
+        id: u64,
+        seq: usize,
+        heads: usize,
+        head_dim: usize,
+        causal: bool,
+        rng: &mut crate::util::rng::Rng,
+    ) -> Self {
+        let n = heads * seq * head_dim;
+        let mut gen = |_: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.next_gaussian() as f32 * 0.5).collect()
+        };
+        AttentionRequest {
+            id: RequestId(id),
+            seq,
+            heads,
+            head_dim,
+            causal,
+            q: gen(0),
+            k: gen(1),
+            v: gen(2),
+        }
+    }
+
+    /// Elements in each of q/k/v.
+    pub fn elems(&self) -> usize {
+        self.heads * self.seq * self.head_dim
+    }
+
+    /// Batching compatibility key: requests sharing it can share a dispatch.
+    pub fn shape_key(&self) -> (usize, usize, usize, bool) {
+        (self.seq, self.heads, self.head_dim, self.causal)
+    }
+}
+
+/// The engine's answer.
+#[derive(Clone, Debug)]
+pub struct AttentionResponse {
+    pub id: RequestId,
+    /// Attention output, (H, S, D) flattened.
+    pub output: Vec<f32>,
+    /// Which AOT artifact served the request.
+    pub artifact: String,
+    /// Queue + batch + execute latency.
+    pub latency: Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn synthetic_request_shapes() {
+        let mut rng = Rng::new(1);
+        let r = AttentionRequest::synthetic(7, 128, 4, 64, true, &mut rng);
+        assert_eq!(r.id, RequestId(7));
+        assert_eq!(r.elems(), 4 * 128 * 64);
+        assert_eq!(r.q.len(), r.elems());
+        assert!(r.causal);
+        assert_ne!(r.q, r.k, "payloads should differ");
+    }
+
+    #[test]
+    fn shape_key_distinguishes_mask() {
+        let mut rng = Rng::new(1);
+        let a = AttentionRequest::synthetic(0, 128, 4, 64, true, &mut rng);
+        let b = AttentionRequest::synthetic(1, 128, 4, 64, false, &mut rng);
+        assert_ne!(a.shape_key(), b.shape_key());
+    }
+}

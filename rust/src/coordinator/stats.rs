@@ -1,0 +1,89 @@
+//! Engine statistics: throughput, latency distribution, batching behaviour.
+
+use crate::util::stats::LatencyStats;
+
+/// Counters and distributions collected by the serving pipeline.
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    /// Rejected at the queue (back-pressure).
+    pub rejected: u64,
+    /// Executor dispatches.
+    pub batches: u64,
+    /// Histogram of dispatch sizes (index = size, capped at 16).
+    pub batch_size_hist: [u64; 17],
+    /// End-to-end latency per completed request, milliseconds.
+    pub latency: LatencyStats,
+    /// Executor time attributed per request, seconds.
+    pub exec_time_s: f64,
+}
+
+impl EngineStats {
+    pub fn record_batch_size(&mut self, n: usize) {
+        self.batch_size_hist[n.min(16)] += 1;
+    }
+
+    /// Mean requests per dispatch.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.batches as f64
+    }
+
+    /// Render a human-readable summary block.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests: {} submitted, {} completed, {} failed, {} rejected\n\
+             batches:  {} dispatches, mean size {:.2}\n\
+             latency:  p50 {:.2} ms, p99 {:.2} ms, max {:.2} ms (n={})",
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.rejected,
+            self.batches,
+            self.mean_batch_size(),
+            self.latency.p50(),
+            self.latency.p99(),
+            self.latency.max(),
+            self.latency.count(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_size_histogram_caps() {
+        let mut s = EngineStats::default();
+        s.record_batch_size(1);
+        s.record_batch_size(4);
+        s.record_batch_size(100);
+        assert_eq!(s.batch_size_hist[1], 1);
+        assert_eq!(s.batch_size_hist[4], 1);
+        assert_eq!(s.batch_size_hist[16], 1);
+    }
+
+    #[test]
+    fn mean_batch_size() {
+        let mut s = EngineStats::default();
+        s.batches = 2;
+        s.completed = 6;
+        assert_eq!(s.mean_batch_size(), 3.0);
+    }
+
+    #[test]
+    fn summary_renders() {
+        let mut s = EngineStats::default();
+        s.submitted = 3;
+        s.completed = 3;
+        s.latency.record(1.0);
+        let txt = s.summary();
+        assert!(txt.contains("3 submitted"));
+        assert!(txt.contains("p50"));
+    }
+}

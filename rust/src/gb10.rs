@@ -1,0 +1,121 @@
+//! Device models. [`DeviceSpec::gb10`] encodes the paper's testbed
+//! (NVIDIA GB10, Grace Blackwell — Hot Chips 37 [12] + paper §2.1); other
+//! presets support the capacity-sweep ablations.
+
+/// Static description of the simulated GPU memory hierarchy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Streaming multiprocessors (GB10: 48).
+    pub num_sms: u32,
+    /// Shared L2 capacity in bytes (GB10: 24 MiB).
+    pub l2_bytes: u64,
+    /// Per-SM L1/Tex capacity available for caching global loads, after the
+    /// shared-memory carve-out the attention kernels rely on.
+    pub l1_bytes: u64,
+    /// Cache sector size in bytes (the ncu sector unit; 32 B).
+    pub sector_bytes: u32,
+    /// Raw DRAM bandwidth, bytes/s (GB10 LPDDR5X: ~301 GB/s).
+    pub dram_bw: f64,
+    /// Effective L2-to-SM aggregate bandwidth, bytes/s.
+    pub l2_bw: f64,
+    /// DRAM access latency (ns) — used by the exposed-miss-latency
+    /// throughput term.
+    pub dram_latency_ns: f64,
+    /// Peak dense fp16 tensor throughput, FLOP/s. GB10 is marketed at
+    /// 1 PFLOP *fp4 sparse*; the dense fp16 tensor peak is ~125 TFLOPS.
+    pub peak_fp16_flops: f64,
+    /// Non-texture L2 sectors per inner kernel iteration (instruction /
+    /// constant / barrier traffic). Calibrated against the gap between
+    /// "L2 Sectors (Total)" and "L2 Sectors (from Tex)" in paper Tables 1–2
+    /// (~1.6 sectors per K/V streaming step at SM=48).
+    pub non_tex_sectors_per_step: f64,
+}
+
+impl DeviceSpec {
+    /// The paper's testbed: NVIDIA GB10 (DGX Spark).
+    pub const fn gb10() -> Self {
+        DeviceSpec {
+            name: "GB10",
+            num_sms: 48,
+            l2_bytes: 24 * 1024 * 1024,
+            l1_bytes: 64 * 1024,
+            sector_bytes: 32,
+            dram_bw: 301.0e9,
+            l2_bw: 2.0e12,
+            dram_latency_ns: 400.0,
+            peak_fp16_flops: 125.0e12,
+            non_tex_sectors_per_step: 1.6,
+        }
+    }
+
+    /// GB10 with a different active-SM count (paper Figs 1, 2, 6 sweep).
+    pub fn gb10_with_sms(num_sms: u32) -> Self {
+        assert!(num_sms >= 1 && num_sms <= 48, "GB10 has 1..=48 SMs");
+        DeviceSpec { num_sms, ..Self::gb10() }
+    }
+
+    /// GB10 with a different L2 capacity (capacity-sweep ablation).
+    pub fn gb10_with_l2(l2_bytes: u64) -> Self {
+        DeviceSpec { l2_bytes, ..Self::gb10() }
+    }
+
+    /// A deliberately tiny device for exact-vs-weighted cross-validation
+    /// tests: small caches keep per-sector simulation affordable.
+    pub const fn tiny() -> Self {
+        DeviceSpec {
+            name: "tiny",
+            num_sms: 4,
+            l2_bytes: 64 * 1024,
+            l1_bytes: 4 * 1024,
+            sector_bytes: 32,
+            dram_bw: 100.0e9,
+            l2_bw: 1.0e12,
+            dram_latency_ns: 400.0,
+            peak_fp16_flops: 10.0e12,
+            non_tex_sectors_per_step: 0.0,
+        }
+    }
+
+    /// L2 capacity in sectors.
+    pub fn l2_sectors(&self) -> u64 {
+        self.l2_bytes / self.sector_bytes as u64
+    }
+
+    /// L1 capacity in sectors.
+    pub fn l1_sectors(&self) -> u64 {
+        self.l1_bytes / self.sector_bytes as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gb10_matches_paper_parameters() {
+        let d = DeviceSpec::gb10();
+        assert_eq!(d.num_sms, 48);
+        assert_eq!(d.l2_bytes, 24 * 1024 * 1024);
+        assert_eq!(d.sector_bytes, 32);
+        // 24 MiB / 32 B = 786,432 sectors.
+        assert_eq!(d.l2_sectors(), 786_432);
+    }
+
+    #[test]
+    fn sm_override_in_bounds() {
+        assert_eq!(DeviceSpec::gb10_with_sms(1).num_sms, 1);
+        assert_eq!(DeviceSpec::gb10_with_sms(48).num_sms, 48);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sm_override_rejects_zero() {
+        DeviceSpec::gb10_with_sms(0);
+    }
+
+    #[test]
+    fn l2_override() {
+        assert_eq!(DeviceSpec::gb10_with_l2(1 << 20).l2_bytes, 1 << 20);
+    }
+}

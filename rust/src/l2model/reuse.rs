@@ -1,0 +1,297 @@
+//! Reuse-distance (LRU stack distance) profiler — Mattson et al. 1970 [8].
+//!
+//! The paper's §4 argument is a reuse-distance argument: cyclic traversal
+//! makes every KV reuse distance equal to the data size, while sawtooth
+//! makes most distances smaller. This module measures that directly from an
+//! access trace and predicts LRU miss counts for *any* capacity in one pass
+//! (the Mattson inclusion property).
+//!
+//! Implementation: classic O(N log N) algorithm — a hash map of last-access
+//! times plus a Fenwick (binary indexed) tree counting, for each position,
+//! whether it is the *most recent* access of its block. The reuse distance
+//! of an access is the number of distinct blocks touched since the previous
+//! access to the same block; the weighted variant sums sector weights
+//! instead of counting blocks.
+
+use rustc_hash::FxHashMap;
+
+/// Fenwick tree over i64 (supports point update, prefix sum).
+struct Fenwick {
+    tree: Vec<i64>,
+}
+
+impl Fenwick {
+    fn new(n: usize) -> Self {
+        Fenwick { tree: vec![0; n + 1] }
+    }
+
+    fn add(&mut self, mut i: usize, delta: i64) {
+        i += 1;
+        while i < self.tree.len() {
+            self.tree[i] += delta;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// Sum of [0, i] inclusive.
+    fn prefix(&self, mut i: usize) -> i64 {
+        i += 1;
+        let mut s = 0;
+        while i > 0 {
+            s += self.tree[i];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+
+    fn range(&self, lo: usize, hi: usize) -> i64 {
+        if lo > hi {
+            return 0;
+        }
+        let head = if lo == 0 { 0 } else { self.prefix(lo - 1) };
+        self.prefix(hi) - head
+    }
+}
+
+/// Result of profiling one trace.
+#[derive(Clone, Debug)]
+pub struct ReuseProfile {
+    /// Histogram of finite reuse distances (in weight units — sectors for
+    /// the weighted profiler, accesses for the unweighted one). Key order is
+    /// ascending; stored sparse as (distance, count-weighted-by-sectors).
+    pub histogram: Vec<(u64, u64)>,
+    /// Total weighted cold (first-touch) accesses (infinite distance).
+    pub cold: u64,
+    /// Total weighted accesses.
+    pub total: u64,
+}
+
+impl ReuseProfile {
+    /// Predicted LRU misses for a cache of `capacity` (same weight units):
+    /// cold + all accesses with distance ≥ capacity (an access with stack
+    /// distance d occupies position d+1, so it hits iff d < C). Exact for an
+    /// unweighted (per-sector) trace and a tight approximation for
+    /// block-weighted traces.
+    pub fn misses_at(&self, capacity: u64) -> u64 {
+        let beyond: u64 = self
+            .histogram
+            .iter()
+            .filter(|(d, _)| *d >= capacity)
+            .map(|(_, c)| *c)
+            .sum();
+        self.cold + beyond
+    }
+
+    /// Hit rate at a capacity, in [0, 1].
+    pub fn hit_rate_at(&self, capacity: u64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        1.0 - self.misses_at(capacity) as f64 / self.total as f64
+    }
+
+    /// Mean finite reuse distance (weighted).
+    pub fn mean_finite_distance(&self) -> f64 {
+        let (mut num, mut den) = (0.0, 0.0);
+        for &(d, c) in &self.histogram {
+            num += d as f64 * c as f64;
+            den += c as f64;
+        }
+        if den == 0.0 {
+            0.0
+        } else {
+            num / den
+        }
+    }
+}
+
+/// Streaming Mattson profiler over (block, weight) accesses.
+pub struct ReuseProfiler {
+    last_pos: FxHashMap<u64, usize>,
+    /// weight of the block whose most-recent access is at position i.
+    fen: Fenwick,
+    time: usize,
+    capacity_hint: usize,
+    hist: FxHashMap<u64, u64>,
+    cold: u64,
+    total: u64,
+}
+
+impl ReuseProfiler {
+    /// `max_accesses` bounds the trace length (Fenwick size).
+    pub fn new(max_accesses: usize) -> Self {
+        ReuseProfiler {
+            last_pos: FxHashMap::default(),
+            fen: Fenwick::new(max_accesses),
+            time: 0,
+            capacity_hint: max_accesses,
+            hist: FxHashMap::default(),
+            cold: 0,
+            total: 0,
+        }
+    }
+
+    /// Record an access to `block` moving `weight` units (sectors).
+    /// Returns the reuse distance (None = cold).
+    pub fn access(&mut self, block: u64, weight: u32) -> Option<u64> {
+        assert!(self.time < self.capacity_hint, "trace longer than max_accesses");
+        let w = weight as u64;
+        self.total += w;
+        let dist = match self.last_pos.get(&block).copied() {
+            Some(prev) => {
+                // Distinct-weight between prev (exclusive) and now
+                // (exclusive): blocks whose most-recent access lies there.
+                let d = self.fen.range(prev + 1, self.time - 1) as u64;
+                // Remove the old most-recent marker.
+                self.fen.add(prev, -(w as i64));
+                Some(d)
+            }
+            None => None,
+        };
+        self.fen.add(self.time, w as i64);
+        self.last_pos.insert(block, self.time);
+        match dist {
+            Some(d) => {
+                *self.hist.entry(d).or_insert(0) += w;
+            }
+            None => self.cold += w,
+        }
+        self.time += 1;
+        dist
+    }
+
+    pub fn finish(self) -> ReuseProfile {
+        let mut histogram: Vec<(u64, u64)> = self.hist.into_iter().collect();
+        histogram.sort_unstable();
+        ReuseProfile { histogram, cold: self.cold, total: self.total }
+    }
+}
+
+/// Convenience: profile a plain unweighted trace.
+pub fn profile_trace(trace: &[u64]) -> ReuseProfile {
+    let mut p = ReuseProfiler::new(trace.len());
+    for &b in trace {
+        p.access(b, 1);
+    }
+    p.finish()
+}
+
+/// Brute-force LRU oracle for tests: simulate an LRU of `capacity` and
+/// count misses over an unweighted trace.
+pub fn brute_force_lru_misses(trace: &[u64], capacity: usize) -> u64 {
+    let mut stack: Vec<u64> = Vec::new();
+    let mut misses = 0;
+    for &b in trace {
+        if let Some(pos) = stack.iter().position(|&x| x == b) {
+            stack.remove(pos);
+        } else {
+            misses += 1;
+            if stack.len() == capacity {
+                stack.pop();
+            }
+        }
+        stack.insert(0, b);
+    }
+    misses
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn cyclic_all_distances_equal_data_size() {
+        // The paper's motivating observation: cyclic reuse distance = N.
+        let n = 16u64;
+        let trace: Vec<u64> = (0..n).chain(0..n).chain(0..n).collect();
+        let p = profile_trace(&trace);
+        assert_eq!(p.cold, n);
+        // Every reuse has distance n-1 distinct-others = n-1.
+        assert_eq!(p.histogram, vec![(n - 1, 2 * n)]);
+    }
+
+    #[test]
+    fn sawtooth_distances_mostly_below_data_size() {
+        let n = 16u64;
+        let mut trace: Vec<u64> = (0..n).collect();
+        trace.extend((0..n).rev());
+        trace.extend(0..n);
+        let p = profile_trace(&trace);
+        assert_eq!(p.cold, n);
+        // Immediately-reversed element has distance 0; mean far below n-1.
+        assert!(p.mean_finite_distance() < (n - 1) as f64 * 0.8);
+        assert_eq!(p.histogram.first().unwrap().0, 0);
+    }
+
+    #[test]
+    fn miss_prediction_matches_brute_force_lru() {
+        let trace: Vec<u64> = (0..12).chain(0..12).chain((0..12).rev()).chain(3..9).collect();
+        let p = profile_trace(&trace);
+        for cap in [1usize, 2, 4, 8, 12, 16] {
+            assert_eq!(
+                p.misses_at(cap as u64),
+                brute_force_lru_misses(&trace, cap),
+                "capacity {cap}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_matches_brute_force_on_random_traces() {
+        check("mattson-vs-bruteforce", 60, |g| {
+            let len = g.int(1, 120) as usize;
+            let alphabet = g.int(1, 20);
+            let trace: Vec<u64> = (0..len).map(|_| g.int(0, alphabet)).collect();
+            let p = profile_trace(&trace);
+            for cap in [1usize, 3, 7, 15] {
+                let pred = p.misses_at(cap as u64);
+                let real = brute_force_lru_misses(&trace, cap);
+                if pred != real {
+                    return Err(format!("cap {cap}: predicted {pred} real {real} trace {trace:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_inclusion_monotone_in_capacity() {
+        // Mattson inclusion: misses are non-increasing in capacity.
+        check("inclusion-monotonicity", 60, |g| {
+            let len = g.int(1, 200) as usize;
+            let alphabet = g.int(1, 30);
+            let trace: Vec<u64> = (0..len).map(|_| g.int(0, alphabet)).collect();
+            let p = profile_trace(&trace);
+            let mut prev = u64::MAX;
+            for cap in 0..40u64 {
+                let m = p.misses_at(cap);
+                if m > prev {
+                    return Err(format!("misses increased at cap {cap}"));
+                }
+                prev = m;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn weighted_distances_count_sectors() {
+        let mut p = ReuseProfiler::new(16);
+        p.access(1, 10);
+        p.access(2, 5);
+        let d = p.access(1, 10);
+        // Since last access of block 1: only block 2 (weight 5) intervened.
+        assert_eq!(d, Some(5));
+        let prof = p.finish();
+        assert_eq!(prof.cold, 15);
+        assert_eq!(prof.total, 25);
+    }
+
+    #[test]
+    fn hit_rate_at_infinite_capacity_is_warm_fraction() {
+        let trace: Vec<u64> = (0..10).chain(0..10).collect();
+        let p = profile_trace(&trace);
+        assert!((p.hit_rate_at(u64::MAX) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,37 @@
+//! # sawtooth-attn
+//!
+//! Reproduction of *Sawtooth Wavefront Reordering: Enhanced CuTile
+//! FlashAttention on NVIDIA GB10* (Zhu, Pan, Ding — CS.PF 2026) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate provides:
+//!
+//! * [`sim`] — a sector-granularity GB10 memory-hierarchy simulator
+//!   (CTA schedulers, wavefront interleaving, sectored-LRU L1/L2, ncu-style
+//!   counters, calibrated throughput model). This substitutes for the
+//!   paper's GB10 + Nsight Compute testbed (see DESIGN.md §2).
+//! * [`l2model`] — the paper's closed-form L2 sector-access model plus a
+//!   Mattson reuse-distance (LRU stack) profiler.
+//! * [`runtime`] — a PJRT executor that loads the AOT HLO artifacts
+//!   produced by `python/compile/aot.py` and runs them on the CPU client.
+//! * [`coordinator`] — an attention serving engine (request queue, dynamic
+//!   batcher, schedule policy, worker pool) whose scheduling policy is the
+//!   paper's contribution: sawtooth wavefront reordering as a first-class
+//!   serving-time option.
+//! * [`report`] — regenerates every table and figure of the paper's
+//!   evaluation from the simulator (`sawtooth report all`).
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod gb10;
+pub mod l2model;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use gb10::DeviceSpec;
+pub use sim::workload::AttentionWorkload;

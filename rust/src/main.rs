@@ -1,0 +1,389 @@
+//! `sawtooth` — CLI launcher for the Sawtooth Wavefront Reordering stack.
+//!
+//! Subcommands:
+//!   report <exp|all>    regenerate paper tables/figures from the simulator
+//!   simulate            run one simulator launch (config file + overrides)
+//!   estimate            GB10 cyclic-vs-sawtooth estimate for a workload
+//!   reuse               reuse-distance histograms, cyclic vs sawtooth
+//!   serve               start the serving engine on a synthetic load
+//!   artifacts           list the AOT artifact manifest
+//!
+//! Examples:
+//!   sawtooth report fig7
+//!   sawtooth simulate --set sim.seq=65536 --set sim.order=sawtooth
+//!   sawtooth estimate --seq 131072 --tile 64 --batch 4
+//!   sawtooth serve --requests 64 --clients 4
+
+use anyhow::{bail, Context, Result};
+
+use sawtooth_attn::config::{Config, ServeConfig, SimRunConfig};
+use sawtooth_attn::coordinator::{AttentionRequest, Engine};
+use sawtooth_attn::l2model::reuse::ReuseProfiler;
+use sawtooth_attn::report;
+use sawtooth_attn::runtime::{default_artifacts_dir, Runtime};
+use sawtooth_attn::sim::cache::block_key;
+use sawtooth_attn::sim::kernel_model::{kv_tile_at, kv_tiles_for, Direction, Order, WorkItem};
+use sawtooth_attn::sim::throughput::{estimate, PerfProfile};
+use sawtooth_attn::sim::Simulator;
+use sawtooth_attn::util::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    match cmd {
+        "report" => cmd_report(rest),
+        "simulate" => cmd_simulate(rest),
+        "estimate" => cmd_estimate(rest),
+        "reuse" => cmd_reuse(rest),
+        "serve" => cmd_serve(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' — try `sawtooth help`"),
+    }
+}
+
+const HELP: &str = "\
+sawtooth — Sawtooth Wavefront Reordering (GB10 FlashAttention) stack
+
+USAGE: sawtooth <command> [options]
+
+COMMANDS:
+  report <exp|all>       regenerate a paper table/figure (table1..3, fig1..12)
+  simulate [opts]        run one simulated kernel launch and print counters
+  estimate [opts]        GB10 cyclic-vs-sawtooth estimate for a workload
+  reuse [opts]           reuse-distance histograms, cyclic vs sawtooth
+  serve [opts]           run the serving engine on a synthetic load
+  artifacts [--dir D]    list the AOT artifact manifest
+
+COMMON OPTIONS:
+  --config FILE          TOML config (sections [sim], [device], [serve])
+  --set key=value        override one config key (repeatable)
+  --seq N --tile T --batch B --heads H --causal --order cyclic|sawtooth
+  --sms N                active SM count (simulate/estimate)
+  --requests N --clients N --max-batch N   (serve)
+";
+
+/// Tiny flag parser: returns (key→value flags, positional args).
+fn parse_flags(args: &[String]) -> Result<(Vec<(String, String)>, Vec<String>)> {
+    let mut flags = Vec::new();
+    let mut pos = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            // Boolean flags take no value; everything else consumes one.
+            const BOOLEANS: &[&str] = &["causal", "exact", "quiet"];
+            if BOOLEANS.contains(&name) {
+                flags.push((name.to_string(), "true".to_string()));
+            } else {
+                i += 1;
+                let v = args
+                    .get(i)
+                    .with_context(|| format!("--{name} expects a value"))?;
+                flags.push((name.to_string(), v.clone()));
+            }
+        } else {
+            pos.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok((flags, pos))
+}
+
+fn flag<'a>(flags: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    flags
+        .iter()
+        .rev()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v.as_str())
+}
+
+/// Build a Config from --config plus --set overrides plus shorthand flags.
+fn build_config(flags: &[(String, String)]) -> Result<Config> {
+    let mut cfg = match flag(flags, "config") {
+        Some(path) => Config::load(path)?,
+        None => Config::parse("")?,
+    };
+    for (k, v) in flags {
+        let mapped = match k.as_str() {
+            "set" => {
+                cfg.set_override(v)?;
+                continue;
+            }
+            "seq" => Some(("sim.seq", v.clone())),
+            "tile" => Some(("sim.tile", v.clone())),
+            "batch" => Some(("sim.batch", v.clone())),
+            "heads" => Some(("sim.heads", v.clone())),
+            "order" => Some(("sim.order", v.clone())),
+            "variant" => Some(("sim.variant", v.clone())),
+            "scheduler" => Some(("sim.scheduler", v.clone())),
+            "jitter" => Some(("sim.jitter", v.clone())),
+            "sms" => Some(("device.sms", v.clone())),
+            "l2-mib" => Some(("device.l2_mib", v.clone())),
+            "causal" => Some(("sim.causal", "true".to_string())),
+            _ => None,
+        };
+        if let Some((key, val)) = mapped {
+            cfg.set_override(&format!("{key}={val}"))?;
+        }
+    }
+    Ok(cfg)
+}
+
+fn cmd_report(args: &[String]) -> Result<()> {
+    let exp = args.first().map(String::as_str).unwrap_or("all");
+    let out = report::run(exp)?;
+    print!("{out}");
+    Ok(())
+}
+
+fn cmd_simulate(args: &[String]) -> Result<()> {
+    let (flags, _) = parse_flags(args)?;
+    let cfg = build_config(&flags)?;
+    let run = SimRunConfig::from_config(&cfg)?;
+    let sim_cfg = run.to_sim_config();
+    let t0 = std::time::Instant::now();
+    let r = Simulator::new(sim_cfg).run();
+    let elapsed = t0.elapsed();
+    let dev = run.device();
+    let profile = PerfProfile::for_variant(run.variant);
+    let perf = estimate(&run.workload, &dev, &r.counters, &profile);
+
+    println!("workload: {:?}", run.workload);
+    println!(
+        "schedule: {} / {} / {} on {} SMs, L2 {} MiB, jitter {}",
+        run.scheduler.name(),
+        run.order.name(),
+        run.variant.name(),
+        dev.num_sms,
+        dev.l2_bytes >> 20,
+        run.jitter
+    );
+    println!("-- counters (ncu names) --");
+    println!("lts_t_sectors.sum          = {}", r.counters.l2_sectors_total());
+    println!("  from tex                 = {}", r.counters.l2_sectors_from_tex);
+    println!("lts_t_sector_hit_rate.pct  = {:.2}", r.counters.l2_hit_rate_pct());
+    println!("l2 miss sectors            = {}", r.counters.l2_miss_sectors);
+    println!(
+        "l1tex sectors / hits       = {} / {}",
+        r.counters.l1_sectors, r.counters.l1_hit_sectors
+    );
+    for t in sawtooth_attn::sim::kernel_model::TensorKind::ALL {
+        let c = r.counters.tensor(t);
+        println!(
+            "  {}: sectors {} hits {} misses {}",
+            t.name(),
+            c.sectors,
+            c.hits,
+            c.misses
+        );
+    }
+    println!("-- estimated GB10 performance ({}) --", profile.name);
+    println!(
+        "time {:.4}s  throughput {:.2} TFLOPS  bound by {} (+ exposed misses {:.4}s)",
+        perf.time_s, perf.tflops, perf.bound_by, perf.t_exposed_s
+    );
+    println!("sim wall time: {elapsed:?} ({} kv steps)", r.kv_steps);
+    Ok(())
+}
+
+fn cmd_estimate(args: &[String]) -> Result<()> {
+    let (flags, _) = parse_flags(args)?;
+    let cfg = build_config(&flags)?;
+    let run = SimRunConfig::from_config(&cfg)?;
+    let e = sawtooth_attn::coordinator::policy::estimate_gb10(&run.workload);
+    println!("workload: {:?}", run.workload);
+    println!(
+        "cyclic   : {:>12} L2 misses, {:.2} TFLOPS",
+        e.cyclic_l2_misses, e.cyclic_tflops
+    );
+    println!(
+        "sawtooth : {:>12} L2 misses, {:.2} TFLOPS",
+        e.sawtooth_l2_misses, e.sawtooth_tflops
+    );
+    println!("speedup  : {:.2}x", e.speedup);
+    Ok(())
+}
+
+fn cmd_reuse(args: &[String]) -> Result<()> {
+    let (flags, _) = parse_flags(args)?;
+    let cfg = build_config(&flags)?;
+    let run = SimRunConfig::from_config(&cfg)?;
+    let w = run.workload;
+    // Single-CTA KV reference stream under both orders: §4's theory, measured.
+    for order in [Order::Cyclic, Order::Sawtooth] {
+        let n = w.num_tiles();
+        let mut prof = ReuseProfiler::new((2 * n * n + 4 * n) as usize);
+        for q in 0..n {
+            let dir = match order {
+                Order::Cyclic => Direction::Forward,
+                Order::Sawtooth => {
+                    if q % 2 == 0 {
+                        Direction::Forward
+                    } else {
+                        Direction::Backward
+                    }
+                }
+            };
+            let item = WorkItem { batch_head: 0, q_tile: q, direction: dir };
+            for pos in 0..kv_tiles_for(&w, q) {
+                let j = kv_tile_at(&w, &item, pos);
+                let sec = w.rows_sectors(w.tile_rows(j), 32);
+                prof.access(block_key(1, 0, j), sec);
+                prof.access(block_key(2, 0, j), sec);
+            }
+        }
+        let p = prof.finish();
+        println!(
+            "{:<9} cold={} total={} mean finite reuse distance = {:.0} sectors",
+            order.name(),
+            p.cold,
+            p.total,
+            p.mean_finite_distance()
+        );
+        let l2 = sawtooth_attn::DeviceSpec::gb10().l2_sectors();
+        println!(
+            "          predicted misses at L2=24MiB: {}  (hit rate {:.2}%)",
+            p.misses_at(l2),
+            100.0 * p.hit_rate_at(l2)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let (flags, _) = parse_flags(args)?;
+    let mut cfg = build_config(&flags)?;
+    if let Some(v) = flag(&flags, "max-batch") {
+        cfg.set_override(&format!("serve.max_batch={v}"))?;
+    }
+    if let Some(v) = flag(&flags, "artifacts-dir") {
+        cfg.set_override(&format!("serve.artifacts_dir=\"{v}\""))?;
+    }
+    let serve = ServeConfig::from_config(&cfg)?;
+    let requests: usize = flag(&flags, "requests").unwrap_or("32").parse()?;
+    let clients: usize = flag(&flags, "clients")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(serve.clients)
+        .max(1);
+
+    println!(
+        "starting engine: artifacts={} order={} max_batch={} window={}us",
+        serve.artifacts_dir,
+        serve.order.name(),
+        serve.max_batch,
+        serve.batch_window_us
+    );
+    let engine = Engine::start(serve)?;
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let engine = &engine;
+            s.spawn(move || {
+                let mut rng = Rng::new(c as u64 + 1);
+                let seqs = [128usize, 256, 512];
+                for i in 0..requests.div_ceil(clients) {
+                    let seq = seqs[(i + c) % seqs.len()];
+                    let req = AttentionRequest::synthetic(
+                        (c * 1_000_000 + i) as u64,
+                        seq,
+                        4,
+                        64,
+                        i % 2 == 0,
+                        &mut rng,
+                    );
+                    match engine.submit(req) {
+                        Ok(resp) => {
+                            if i == 0 {
+                                println!(
+                                    "client {c}: first response via {} in {:?}",
+                                    resp.artifact, resp.latency
+                                );
+                            }
+                        }
+                        Err(e) => eprintln!("client {c}: {e:#}"),
+                    }
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed();
+    let stats = engine.shutdown();
+    println!("{}", stats.summary());
+    println!(
+        "throughput: {:.1} req/s over {:?}",
+        stats.completed as f64 / elapsed.as_secs_f64(),
+        elapsed
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(args: &[String]) -> Result<()> {
+    let (flags, _) = parse_flags(args)?;
+    let dir = flag(&flags, "dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let rt = Runtime::open(&dir)?;
+    println!("platform: {}", rt.platform_name());
+    println!("artifacts in {}:", dir.display());
+    for a in rt.manifest().artifacts() {
+        println!(
+            "  {:<45} kind={:?} B={} H={} S={} D={} causal={} order={}",
+            a.name, a.kind, a.batch, a.heads, a.seq, a.head_dim, a.causal, a.order
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_parser_splits_flags_and_positionals() {
+        let args: Vec<String> = ["report", "--seq", "42", "--causal", "fig3"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let (flags, pos) = parse_flags(&args).unwrap();
+        assert_eq!(flag(&flags, "seq"), Some("42"));
+        assert_eq!(flag(&flags, "causal"), Some("true"));
+        assert_eq!(pos, vec!["report", "fig3"]);
+    }
+
+    #[test]
+    fn flag_parser_rejects_missing_value() {
+        let args: Vec<String> = vec!["--seq".to_string()];
+        assert!(parse_flags(&args).is_err());
+    }
+
+    #[test]
+    fn build_config_applies_shorthands() {
+        let flags = vec![
+            ("seq".to_string(), "2048".to_string()),
+            ("order".to_string(), "sawtooth".to_string()),
+            ("set".to_string(), "device.sms=8".to_string()),
+        ];
+        let cfg = build_config(&flags).unwrap();
+        assert_eq!(cfg.int("sim.seq", 0), 2048);
+        assert_eq!(cfg.str("sim.order", ""), "sawtooth");
+        assert_eq!(cfg.int("device.sms", 0), 8);
+    }
+
+    #[test]
+    fn dispatch_rejects_unknown_command() {
+        assert!(dispatch(&["frobnicate".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! Ablation experiments beyond the paper (DESIGN.md §8).
+//!
+//! * `abl-tile`     — tile-size sweep: how the sawtooth gain varies with T
+//!                    (context for the §4.3.2 tile-128 limitation).
+//! * `abl-jitter`   — wavefront desynchronization: the 1 − 1/N reuse law
+//!                    and the sawtooth gain both need synchronized CTAs.
+//! * `abl-capacity` — L2 capacity sweep: the Fig 5 divergence threshold
+//!                    tracks KV ≈ C, and an *effective-capacity* reading
+//!                    explains the paper's 80K vs the idealised 96K.
+//! * `abl-reuse`    — measured reuse-distance histograms, cyclic vs
+//!                    sawtooth (the §4 theory, quantified).
+
+use crate::gb10::DeviceSpec;
+use crate::l2model::reuse::ReuseProfiler;
+use crate::sim::cache::block_key;
+use crate::sim::engine::cold_sectors;
+use crate::sim::kernel_model::{kv_tile_at, kv_tiles_for, Direction, Order, WorkItem};
+use crate::sim::workload::AttentionWorkload;
+use crate::sim::{SimConfig, Simulator};
+use crate::util::table::{commas, Table};
+
+pub fn tile_sweep() -> String {
+    // Fixed S=64K, shrink L2 to 8 MiB so KV (16 MiB) exceeds it for all T.
+    let mut t = Table::new(vec![
+        "T",
+        "KV tiles",
+        "cyclic misses",
+        "sawtooth misses",
+        "reduction %",
+    ]);
+    for tile in [32u32, 48, 64, 80, 96, 128] {
+        let w = AttentionWorkload::cuda_study(61440).with_tile(tile); // 61440 = lcm-friendly
+        let mut cfg = SimConfig::cuda_study(w);
+        cfg.device = DeviceSpec::gb10_with_l2(8 * 1024 * 1024);
+        let cyc = Simulator::new(cfg.clone()).run();
+        let saw = Simulator::new(cfg.with_order(Order::Sawtooth)).run();
+        let red = 100.0
+            * (1.0 - saw.counters.l2_miss_sectors as f64 / cyc.counters.l2_miss_sectors as f64);
+        t.row(vec![
+            tile.to_string(),
+            w.num_tiles().to_string(),
+            commas(cyc.counters.l2_miss_sectors),
+            commas(saw.counters.l2_miss_sectors),
+            format!("{:.1}", red),
+        ]);
+    }
+    format!(
+        "Ablation: tile-size sweep (S=60K, L2=8 MiB)\n{}\n\
+         The absolute traffic drops with larger T (fewer KV passes), while the\n\
+         relative sawtooth gain stays ≈ L2/KV — until tiles stop fitting the\n\
+         per-SM memory. The CuTile-compiler tile-splitting at T=128 that the\n\
+         paper reports as breaking the pattern (§4.3.2) is a compiler artefact\n\
+         we do not model; this sweep bounds the regime where the reorder is\n\
+         well-defined.\n",
+        t.render()
+    )
+}
+
+pub fn jitter_sweep() -> String {
+    let w = AttentionWorkload::cuda_study(96 * 1024); // just past the threshold
+    let mut t = Table::new(vec![
+        "jitter",
+        "cyclic hit %",
+        "cyclic misses",
+        "sawtooth misses",
+        "sawtooth gain %",
+    ]);
+    for jitter in [0.0, 0.05, 0.1, 0.2, 0.4, 0.6] {
+        let cfg = SimConfig::cuda_study(w).with_jitter(jitter, 99);
+        let cyc = Simulator::new(cfg.clone()).run();
+        let saw = Simulator::new(cfg.with_order(Order::Sawtooth)).run();
+        let gain = 100.0
+            * (1.0 - saw.counters.l2_miss_sectors as f64 / cyc.counters.l2_miss_sectors as f64);
+        t.row(vec![
+            format!("{jitter:.2}"),
+            format!("{:.2}", cyc.counters.l2_hit_rate_pct()),
+            commas(cyc.counters.l2_miss_sectors),
+            commas(saw.counters.l2_miss_sectors),
+            format!("{:.1}", gain),
+        ]);
+    }
+    format!(
+        "Ablation: wavefront jitter (S=96K, SM=48)\n{}\n\
+         Both the 1 − 1/N_SM hit rate and the sawtooth gain require the\n\
+         synchronized progression the paper observes on GB10 (§3.4); as CTAs\n\
+         desynchronize, cross-CTA reuse decays and the reorder's advantage\n\
+         narrows — consistent with the paper's CUDA numbers (~50% reduction)\n\
+         sitting below the ideal-sync ceiling (~68%).\n",
+        t.render()
+    )
+}
+
+pub fn capacity_sweep() -> String {
+    let dev0 = DeviceSpec::gb10();
+    let mut t = Table::new(vec![
+        "L2 MiB",
+        "divergence S* (sim)",
+        "KV(S*) MiB",
+        "model S* = C/(2DE)",
+    ]);
+    for l2_mib in [12u64, 16, 20, 24] {
+        let dev = DeviceSpec::gb10_with_l2(l2_mib << 20);
+        // Find the first S (multiple of 8K) with non-compulsory misses.
+        let mut found = None;
+        for sk in (8..=160).step_by(8) {
+            let w = AttentionWorkload::cuda_study(sk * 1024);
+            let mut cfg = SimConfig::cuda_study(w);
+            cfg.device = dev.clone();
+            let r = Simulator::new(cfg).run();
+            if r.counters.l2_miss_sectors > cold_sectors(&w, &dev) {
+                found = Some((sk, w.kv_bytes() >> 20));
+                break;
+            }
+        }
+        let (sk, kv) = found.unwrap_or((0, 0));
+        let model = (l2_mib << 20) / (2 * 64 * 2) / 1024;
+        t.row(vec![
+            l2_mib.to_string(),
+            format!("{}K", sk),
+            kv.to_string(),
+            format!("{}K", model),
+        ]);
+    }
+    let _ = dev0;
+    format!(
+        "Ablation: L2 capacity sweep — divergence threshold tracks KV ≈ C\n{}\n\
+         Reading: the simulated threshold sits just below the ideal C/(2DE)\n\
+         because Q/O traffic shares the cache. The paper observes ~80K on\n\
+         real GB10 (vs idealised 96K) — equivalent to an *effective* L2 of\n\
+         ~20 MiB, consistent with a real replacement policy + non-attention\n\
+         resident data eroding ~4 MiB.\n",
+        t.render()
+    )
+}
+
+pub fn reuse_histogram() -> String {
+    let w = AttentionWorkload::cuda_study(128 * 1024);
+    let l2 = DeviceSpec::gb10().l2_sectors();
+    let mut out = String::from("Ablation: reuse-distance histograms (single CTA KV stream, S=128K, T=80)\n");
+    for order in [Order::Cyclic, Order::Sawtooth] {
+        let n = w.num_tiles();
+        let mut prof = ReuseProfiler::new((2 * n * n + 2 * n) as usize);
+        for q in 0..n {
+            let dir = if order == Order::Sawtooth && q % 2 == 1 {
+                Direction::Backward
+            } else {
+                Direction::Forward
+            };
+            let item = WorkItem { batch_head: 0, q_tile: q, direction: dir };
+            for pos in 0..kv_tiles_for(&w, q) {
+                let j = kv_tile_at(&w, &item, pos);
+                let sec = w.rows_sectors(w.tile_rows(j), 32);
+                prof.access(block_key(1, 0, j), sec);
+                prof.access(block_key(2, 0, j), sec);
+            }
+        }
+        let p = prof.finish();
+        // Bucket the histogram into powers of two of the L2 size.
+        let buckets = [
+            ("<= C/8", l2 / 8),
+            ("<= C/2", l2 / 2),
+            ("<= C", l2),
+            ("<= 2C", 2 * l2),
+            ("> 2C", u64::MAX),
+        ];
+        let mut counts = vec![0u64; buckets.len()];
+        for &(d, c) in &p.histogram {
+            for (i, &(_, lim)) in buckets.iter().enumerate() {
+                if d <= lim {
+                    counts[i] += c;
+                    break;
+                }
+            }
+        }
+        out.push_str(&format!(
+            "{:<9} cold={} mean finite dist={:.0} sectors  predicted misses@24MiB={}\n",
+            order.name(),
+            commas(p.cold),
+            p.mean_finite_distance(),
+            commas(p.misses_at(l2)),
+        ));
+        for (i, (name, _)) in buckets.iter().enumerate() {
+            out.push_str(&format!("    dist {:<7} {:>15} sectors\n", name, commas(counts[i])));
+        }
+    }
+    out.push_str(
+        "\ncyclic: every finite reuse distance equals the KV footprint (> C → all\n\
+         capacity misses). sawtooth: reversals place half the reuses below C.\n\
+         This is the paper's §4 argument, measured with the Mattson profiler.\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_histogram_shows_sawtooth_shift() {
+        let s = reuse_histogram();
+        assert!(s.contains("cyclic"));
+        assert!(s.contains("sawtooth"));
+        assert!(s.contains("predicted misses"));
+    }
+
+    #[test]
+    fn jitter_sweep_renders() {
+        // Smoke at reduced cost is covered by the engine unit tests; here we
+        // only check the report compiles its table end to end in release CI.
+        if cfg!(debug_assertions) {
+            return; // too heavy for debug test runs
+        }
+        let s = jitter_sweep();
+        assert!(s.contains("jitter"));
+    }
+}

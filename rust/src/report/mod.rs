@@ -1,0 +1,480 @@
+//! Report harness: regenerate every table and figure of the paper's
+//! evaluation from the simulator (`sawtooth report <exp>`).
+//!
+//! Each experiment prints the same rows/series the paper reports, with the
+//! paper's published values alongside where the paper states them, so the
+//! paper-vs-measured comparison in EXPERIMENTS.md is reproducible with one
+//! command (`sawtooth report all`).
+
+pub mod ablations;
+
+use anyhow::{bail, Result};
+
+use crate::gb10::DeviceSpec;
+use crate::l2model;
+use crate::sim::engine::cold_sectors;
+use crate::sim::kernel_model::{KernelVariant, Order};
+use crate::sim::scheduler::SchedulerKind;
+use crate::sim::throughput::{estimate, PerfProfile};
+use crate::sim::workload::AttentionWorkload;
+use crate::sim::{SimConfig, SimResult, Simulator};
+use crate::util::table::{ascii_chart, commas, Table};
+
+/// All known experiment ids, in paper order.
+pub const EXPERIMENTS: &[&str] = &[
+    "table1", "table2", "table3", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7",
+    "fig8", "fig9", "fig10", "fig11", "fig12",
+];
+
+/// Ablations beyond the paper (DESIGN.md §8); run via `report <id>` or
+/// `report ablations`.
+pub const ABLATIONS: &[&str] = &["abl-tile", "abl-jitter", "abl-capacity", "abl-reuse"];
+
+/// Run one experiment (or "all") and return the rendered report.
+pub fn run(experiment: &str) -> Result<String> {
+    match experiment {
+        "table1" => Ok(table_counters(SchedulerKind::Persistent)),
+        "table2" => Ok(table_counters(SchedulerKind::NonPersistent)),
+        "table3" => Ok(table3_mape()),
+        "fig1" => Ok(fig_l1l2_vs_sm(32 * 1024, "Figure 1")),
+        "fig2" => Ok(fig_l1l2_vs_sm(128 * 1024, "Figure 2")),
+        "fig3" => Ok(fig_sectors_vs_seq(false, "Figure 3")),
+        "fig4" => Ok(fig_sectors_vs_seq(true, "Figure 4")),
+        "fig5" => Ok(fig5_miss_vs_seq()),
+        "fig6" => Ok(fig6_miss_hitrate_vs_sm()),
+        "fig7" => Ok(fig78_cuda(true)),
+        "fig8" => Ok(fig78_cuda(false)),
+        "fig9" => Ok(fig_cutile(false, false, "Figure 9")),
+        "fig10" => Ok(fig_cutile(false, true, "Figure 10")),
+        "fig11" => Ok(fig_cutile(true, false, "Figure 11")),
+        "fig12" => Ok(fig_cutile(true, true, "Figure 12")),
+        "abl-tile" => Ok(ablations::tile_sweep()),
+        "abl-jitter" => Ok(ablations::jitter_sweep()),
+        "abl-capacity" => Ok(ablations::capacity_sweep()),
+        "abl-reuse" => Ok(ablations::reuse_histogram()),
+        "ablations" => {
+            let mut out = String::new();
+            for e in ABLATIONS {
+                out.push_str(&run(e)?);
+                out.push('\n');
+            }
+            Ok(out)
+        }
+        "all" => {
+            let mut out = String::new();
+            for e in EXPERIMENTS {
+                out.push_str(&run(e)?);
+                out.push('\n');
+            }
+            Ok(out)
+        }
+        other => bail!(
+            "unknown experiment '{other}' (try one of {EXPERIMENTS:?}, {ABLATIONS:?}, \
+             'ablations' or 'all')"
+        ),
+    }
+}
+
+fn run_sim(cfg: SimConfig) -> SimResult {
+    Simulator::new(cfg).run()
+}
+
+// ---------------------------------------------------------------------------
+// Tables 1–2: L1/L2 cache counters, SM=48, S ∈ {32K, 128K}.
+// ---------------------------------------------------------------------------
+
+fn table_counters(sched: SchedulerKind) -> String {
+    // Paper reference values.
+    let paper: [[u64; 2]; 4] = if sched == SchedulerKind::Persistent {
+        [
+            [107_729_467, 1_723_556_561], // L2 total
+            [107_478_656, 1_719_093_980], // L2 from tex
+            [107_478_656, 1_718_615_808], // L1 total
+            [65_440, 262_080],            // L1 hits
+        ]
+    } else {
+        [
+            [107_991_698, 1_723_401_754],
+            [107_741_184, 1_719_664_640],
+            [107_741_184, 1_719_664_640],
+            [65_536, 262_144],
+        ]
+    };
+
+    let mut results = Vec::new();
+    for seq in [32u64 * 1024, 128 * 1024] {
+        let w = AttentionWorkload::cuda_study(seq);
+        let cfg = SimConfig::cuda_study(w).with_scheduler(sched);
+        results.push(run_sim(cfg));
+    }
+
+    let title = if sched == SchedulerKind::Persistent {
+        "Table 1: L1/L2 Cache Counters for SM=48 (persistent CTA)"
+    } else {
+        "Table 2: L1/L2 Cache Counters for Non-Persistent CTA (SM=48)"
+    };
+    let mut t = Table::new(vec![
+        "Metric",
+        "32K sim",
+        "32K paper",
+        "128K sim",
+        "128K paper",
+    ]);
+    let rows: [(&str, fn(&SimResult) -> u64); 4] = [
+        ("L2 Sectors (Total)", |r| r.counters.l2_sectors_total()),
+        ("L2 Sectors (from Tex)", |r| r.counters.l2_sectors_from_tex),
+        ("L1 Sectors (Total)", |r| r.counters.l1_sectors),
+        ("L1 Hit Count", |r| r.counters.l1_hit_sectors),
+    ];
+    for (i, (name, f)) in rows.iter().enumerate() {
+        t.row(vec![
+            name.to_string(),
+            commas(f(&results[0])),
+            commas(paper[i][0]),
+            commas(f(&results[1])),
+            commas(paper[i][1]),
+        ]);
+    }
+    format!(
+        "{title}\n{}\nNote: the simulator reproduces the tex-path traffic to <0.5%;\n\
+         L1 hits are structurally ~0 here vs the paper's negligible ~0.06%\n\
+         (boundary effects of the real L1 not modelled).\n",
+        t.render()
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Table 3: MAPE of the closed-form model vs the simulator, SM=48.
+// ---------------------------------------------------------------------------
+
+fn table3_mape() -> String {
+    let seqs: Vec<u64> = (1..=16).map(|i| i * 8 * 1024).collect();
+    let mut rows = Vec::new(); // (causal, total/tex) → (pred, actual)
+    for &causal in &[false, true] {
+        let mut pred = Vec::new();
+        let mut act_total = Vec::new();
+        let mut act_tex = Vec::new();
+        for &s in &seqs {
+            let w = AttentionWorkload::cuda_study(s).with_causal(causal);
+            let r = run_sim(SimConfig::cuda_study(w));
+            pred.push(l2model::sectors_model(&w, 32));
+            act_total.push(r.counters.l2_sectors_total() as f64);
+            act_tex.push(r.counters.l2_sectors_from_tex as f64);
+        }
+        rows.push((causal, crate::util::stats::mape(&pred, &act_total),
+                   crate::util::stats::mape(&pred, &act_tex)));
+    }
+    let mut t = Table::new(vec!["Metric", "Non-Causal(%)", "Causal(%)", "paper NC", "paper C"]);
+    t.row(vec![
+        "L2 Sectors (Total)".to_string(),
+        format!("{:.4}", rows[0].1),
+        format!("{:.4}", rows[1].1),
+        "0.4527".into(),
+        "2.4941".into(),
+    ]);
+    t.row(vec![
+        "L2 Sectors (from Tex)".to_string(),
+        format!("{:.4}", rows[0].2),
+        format!("{:.4}", rows[1].2),
+        "0.5389".into(),
+        "1.1286".into(),
+    ]);
+    format!(
+        "Table 3: MAPE of Theoretical Model vs Simulated Counters (SM=48, T=80, S=8K..128K)\n{}\n",
+        t.render()
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Figures 1–2: L1/L2 metrics vs SM count.
+// ---------------------------------------------------------------------------
+
+fn fig_l1l2_vs_sm(seq: u64, title: &str) -> String {
+    let sms: Vec<u32> = vec![1, 2, 4, 8, 12, 16, 24, 32, 40, 48];
+    let mut t = Table::new(vec![
+        "SMs",
+        "L1 sectors",
+        "L1 hits",
+        "L2 from tex",
+        "L2 total",
+        "L2 hit %",
+    ]);
+    let mut xs = Vec::new();
+    let mut tex = Vec::new();
+    for &n in &sms {
+        let w = AttentionWorkload::cuda_study(seq);
+        let r = run_sim(SimConfig::cuda_study(w).with_sms(n));
+        xs.push(n as f64);
+        tex.push(r.counters.l2_sectors_from_tex as f64);
+        t.row(vec![
+            n.to_string(),
+            commas(r.counters.l1_sectors),
+            commas(r.counters.l1_hit_sectors),
+            commas(r.counters.l2_sectors_from_tex),
+            commas(r.counters.l2_sectors_total()),
+            format!("{:.2}", r.counters.l2_hit_rate_pct()),
+        ]);
+    }
+    let chart = ascii_chart(
+        &format!("{title}: L2-from-tex sectors vs SMs (flat: traffic is schedule-invariant)"),
+        &xs,
+        &[("l2_from_tex", &tex)],
+        60,
+        10,
+    );
+    format!(
+        "{title}: L1/L2 Metrics for Sequence Length {}K (B=1, H=1, D=64, T=80)\n{}\n{}\n\
+         Key observations (paper §3.1): L1 hit count negligible; L2 traffic ≈ L1 misses;\n\
+         behaviour consistent across SM counts.\n",
+        seq / 1024,
+        t.render(),
+        chart
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Figures 3–4: L2 sector access vs sequence length, with the model curve.
+// ---------------------------------------------------------------------------
+
+fn fig_sectors_vs_seq(causal: bool, title: &str) -> String {
+    let seqs: Vec<u64> = (1..=16).map(|i| i * 8 * 1024).collect();
+    let mut t = Table::new(vec!["S", "sim total", "sim from tex", "model", "err %"]);
+    let (mut xs, mut sim_y, mut model_y) = (Vec::new(), Vec::new(), Vec::new());
+    for &s in &seqs {
+        let w = AttentionWorkload::cuda_study(s).with_causal(causal);
+        let r = run_sim(SimConfig::cuda_study(w));
+        let m = l2model::sectors_model(&w, 32);
+        let err = 100.0 * (r.counters.l2_sectors_from_tex as f64 - m).abs() / m;
+        xs.push(s as f64);
+        sim_y.push(r.counters.l2_sectors_from_tex as f64);
+        model_y.push(m);
+        t.row(vec![
+            format!("{}K", s / 1024),
+            commas(r.counters.l2_sectors_total()),
+            commas(r.counters.l2_sectors_from_tex),
+            format!("{:.0}", m),
+            format!("{:.3}", err),
+        ]);
+    }
+    let chart = ascii_chart(
+        &format!("{title}: L2 sectors vs S ({}, T=80)", if causal { "causal" } else { "non-causal" }),
+        &xs,
+        &[("simulated", &sim_y), ("model", &model_y)],
+        60,
+        12,
+    );
+    let formula = if causal {
+        "M = 8S(S/2T + 1/2)"
+    } else {
+        "M = 8S(1 + S/T)"
+    };
+    format!("{title}: L2 Sector Access vs Sequence Length ({}). Model: {formula}\n{}\n{}\n",
+        if causal { "Causal Masking" } else { "Non-Causal Masking" },
+        t.render(), chart)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 5: L2 miss count vs S, with the 16S cold-miss line.
+// ---------------------------------------------------------------------------
+
+fn fig5_miss_vs_seq() -> String {
+    let seqs: Vec<u64> =
+        vec![8, 16, 32, 48, 64, 72, 80, 88, 96, 104, 112, 120, 128]
+            .into_iter()
+            .map(|k| k * 1024)
+            .collect();
+    let dev = DeviceSpec::gb10();
+    let mut t = Table::new(vec!["S", "KV MiB", "sim misses", "cold 16S", "non-compulsory"]);
+    let (mut xs, mut miss_y, mut cold_y) = (Vec::new(), Vec::new(), Vec::new());
+    for &s in &seqs {
+        let w = AttentionWorkload::cuda_study(s);
+        let r = run_sim(SimConfig::cuda_study(w));
+        let cold = cold_sectors(&w, &dev);
+        xs.push(s as f64);
+        miss_y.push(r.counters.l2_miss_sectors as f64);
+        cold_y.push(cold as f64);
+        t.row(vec![
+            format!("{}K", s / 1024),
+            format!("{:.1}", w.kv_bytes() as f64 / (1024.0 * 1024.0)),
+            commas(r.counters.l2_miss_sectors),
+            commas(cold),
+            commas(r.non_compulsory_misses(&w, &dev)),
+        ]);
+    }
+    let chart = ascii_chart(
+        "Figure 5: L2 miss count vs S (SM=48); dashed cold line = 16S",
+        &xs,
+        &[("sim_misses", &miss_y), ("cold_16S", &cold_y)],
+        60,
+        12,
+    );
+    format!(
+        "Figure 5: L2 Miss Count vs Sequence Length (SM=48)\n{}\n{}\n\
+         Paper: divergence from cold misses at S ≈ 80K (KV = 20 MiB vs 24 MiB L2).\n\
+         Simulated divergence onset: between 88K and 96K — idealised LRU retains\n\
+         slightly more than the real replacement policy; shape preserved.\n",
+        t.render(),
+        chart
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Figure 6: L2 miss count and hit rate vs number of active SMs.
+// ---------------------------------------------------------------------------
+
+fn fig6_miss_hitrate_vs_sm() -> String {
+    let sms: Vec<u32> = vec![1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 40, 48];
+    let mut t = Table::new(vec!["SMs", "misses", "hit %", "model 1-1/N %"]);
+    let (mut xs, mut hit_y, mut pred_y) = (Vec::new(), Vec::new(), Vec::new());
+    for &n in &sms {
+        let w = AttentionWorkload::cuda_study(128 * 1024);
+        let r = run_sim(SimConfig::cuda_study(w).with_sms(n));
+        let pred = 100.0 * l2model::wavefront_hit_rate(n);
+        xs.push(n as f64);
+        hit_y.push(r.counters.l2_hit_rate_pct());
+        pred_y.push(pred);
+        t.row(vec![
+            n.to_string(),
+            commas(r.counters.l2_miss_sectors),
+            format!("{:.2}", r.counters.l2_hit_rate_pct()),
+            format!("{:.2}", pred),
+        ]);
+    }
+    let chart = ascii_chart(
+        "Figure 6: L2 hit rate vs active SMs — wavefront reuse scales as 1 - 1/N_SM",
+        &xs,
+        &[("sim_hit_pct", &hit_y), ("model_1-1/N", &pred_y)],
+        60,
+        12,
+    );
+    format!(
+        "Figure 6: L2 Cache Miss Count and Hit Rate vs Number of Active SMs (S=128K)\n{}\n{}\n",
+        t.render(),
+        chart
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Figures 7–8: CUDA kernel — throughput / misses, cyclic vs sawtooth.
+// ---------------------------------------------------------------------------
+
+fn fig78_cuda(throughput: bool) -> String {
+    let dev = DeviceSpec::gb10();
+    let profile = PerfProfile::cuda_wmma();
+    let mut t = if throughput {
+        Table::new(vec!["B", "cyclic TFLOPS", "sawtooth TFLOPS", "speedup", "paper"])
+    } else {
+        Table::new(vec!["B", "cyclic misses", "sawtooth misses", "reduction %", "paper"])
+    };
+    for b in [1u32, 2, 4, 8] {
+        let w = AttentionWorkload::cuda_study(128 * 1024).with_batch(b);
+        let cyc = run_sim(SimConfig::cuda_study(w));
+        let saw = run_sim(SimConfig::cuda_study(w).with_order(Order::Sawtooth));
+        if throughput {
+            let tc = estimate(&w, &dev, &cyc.counters, &profile);
+            let ts = estimate(&w, &dev, &saw.counters, &profile);
+            t.row(vec![
+                b.to_string(),
+                format!("{:.2}", tc.tflops),
+                format!("{:.2}", ts.tflops),
+                format!("{:.2}x", ts.tflops / tc.tflops),
+                "~1.3 → ~2.4".to_string(),
+            ]);
+        } else {
+            let red = 100.0
+                * (1.0 - saw.counters.l2_miss_sectors as f64 / cyc.counters.l2_miss_sectors as f64);
+            t.row(vec![
+                b.to_string(),
+                commas(cyc.counters.l2_miss_sectors),
+                commas(saw.counters.l2_miss_sectors),
+                format!("{:.1}", red),
+                "~50%".to_string(),
+            ]);
+        }
+    }
+    let (fig, what) = if throughput {
+        ("Figure 7", "Kernel Throughput: Original (Cyclic) vs. Sawtooth")
+    } else {
+        ("Figure 8", "L2 Cache Misses: Original (Cyclic) vs. Sawtooth")
+    };
+    format!("{fig}: {what} (CUDA kernel, T=80, S=128K)\n{}\n", t.render())
+}
+
+// ---------------------------------------------------------------------------
+// Figures 9–12: CuTile — miss count / throughput, (non-)causal.
+// ---------------------------------------------------------------------------
+
+fn fig_cutile(causal: bool, throughput: bool, fig: &str) -> String {
+    let dev = DeviceSpec::gb10();
+    let profile = PerfProfile::cutile();
+    let w = AttentionWorkload::cutile_study(8, causal);
+    let variants = [
+        ("Static", KernelVariant::CuTileStatic, Order::Cyclic),
+        ("Static Alt", KernelVariant::CuTileStatic, Order::Sawtooth),
+        ("Tile", KernelVariant::CuTileTile, Order::Cyclic),
+        ("Tile Alt", KernelVariant::CuTileTile, Order::Sawtooth),
+    ];
+    let mut t = if throughput {
+        Table::new(vec!["Variant", "TFLOPS", "paper"])
+    } else {
+        Table::new(vec!["Variant", "L2 misses", "paper"])
+    };
+    let paper_thr: [&str; 4] = if causal {
+        ["~41", "~66", "~41", "~66"]
+    } else {
+        ["~61", "~69", "~61", "~69"]
+    };
+    let paper_miss: [&str; 4] = if causal {
+        ["(high)", "(reduced)", "(high)", "(reduced)"]
+    } else {
+        ["~370M", "~120M", "~370M", "~120M"]
+    };
+    for (i, (name, variant, order)) in variants.iter().enumerate() {
+        let r = run_sim(SimConfig::cutile_study(w, *variant, *order));
+        if throughput {
+            let e = estimate(&w, &dev, &r.counters, &profile);
+            t.row(vec![name.to_string(), format!("{:.1}", e.tflops), paper_thr[i].to_string()]);
+        } else {
+            t.row(vec![
+                name.to_string(),
+                commas(r.counters.l2_miss_sectors),
+                paper_miss[i].to_string(),
+            ]);
+        }
+    }
+    let what = match (causal, throughput) {
+        (false, false) => "L2 Miss Count Comparison on CuTile without Causal Masking",
+        (false, true) => "Throughput Comparison on CuTile without Causal Masking",
+        (true, false) => "L2 Miss Count Comparison on CuTile with Causal Masking",
+        (true, true) => "Throughput Comparison on CuTile with Causal Masking",
+    };
+    format!(
+        "{fig}: {what} (Regular vs. Sawtooth; T=64, B=8, S=128K, D=64)\n{}\n",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        assert!(run("fig99").is_err());
+    }
+
+    #[test]
+    fn experiment_list_is_complete() {
+        // 3 tables + 12 figures.
+        assert_eq!(EXPERIMENTS.len(), 15);
+    }
+
+    #[test]
+    fn small_reports_render() {
+        // Only exercise the cheap ones in unit tests; the expensive ones run
+        // in benches/integration.
+        let s = run("fig1").unwrap();
+        assert!(s.contains("Figure 1"));
+        assert!(s.contains("L2 hit %"));
+    }
+}

@@ -1,0 +1,199 @@
+//! Artifact manifest: the tab-separated index `aot.py` writes next to the
+//! HLO artifacts. Columns:
+//!
+//! `kind name file batch heads seq head_dim tile_q tile_kv causal order
+//!  dtype num_args`
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// What computation an artifact implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Bare batched attention: (q, k, v) → o, shapes (B, H, S, D).
+    Attention,
+    /// Full MHA block: (x, wq, wk, wv, wo) → y, x shaped (B, S, H·D).
+    Mha,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "attention" => Some(ArtifactKind::Attention),
+            "mha" => Some(ArtifactKind::Mha),
+            _ => None,
+        }
+    }
+}
+
+/// One manifest row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub kind: ArtifactKind,
+    pub name: String,
+    pub file: String,
+    pub batch: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub head_dim: usize,
+    pub tile_q: usize,
+    pub tile_kv: usize,
+    pub causal: bool,
+    pub order: String,
+    pub dtype: String,
+    pub num_args: usize,
+}
+
+impl ArtifactMeta {
+    /// Shape of each of q/k/v for an attention artifact.
+    pub fn qkv_shape(&self) -> Vec<i64> {
+        vec![
+            self.batch as i64,
+            self.heads as i64,
+            self.seq as i64,
+            self.head_dim as i64,
+        ]
+    }
+
+    /// Shape of the activation input of an MHA artifact.
+    pub fn x_shape(&self) -> Vec<i64> {
+        vec![
+            self.batch as i64,
+            self.seq as i64,
+            (self.heads * self.head_dim) as i64,
+        ]
+    }
+
+    pub fn model_dim(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// Elements in one q/k/v tensor.
+    pub fn qkv_elems(&self) -> usize {
+        self.batch * self.heads * self.seq * self.head_dim
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim_end();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 13 {
+                bail!("manifest line {}: expected 13 columns, got {}", lineno + 1, cols.len());
+            }
+            let kind = ArtifactKind::parse(cols[0])
+                .with_context(|| format!("line {}: unknown kind '{}'", lineno + 1, cols[0]))?;
+            let parse_usize = |i: usize| -> Result<usize> {
+                cols[i]
+                    .parse::<usize>()
+                    .with_context(|| format!("line {}: column {i} not an integer", lineno + 1))
+            };
+            artifacts.push(ArtifactMeta {
+                kind,
+                name: cols[1].to_string(),
+                file: cols[2].to_string(),
+                batch: parse_usize(3)?,
+                heads: parse_usize(4)?,
+                seq: parse_usize(5)?,
+                head_dim: parse_usize(6)?,
+                tile_q: parse_usize(7)?,
+                tile_kv: parse_usize(8)?,
+                causal: cols[9] == "1",
+                order: cols[10].to_string(),
+                dtype: cols[11].to_string(),
+                num_args: parse_usize(12)?,
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest is empty — run `make artifacts` first");
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn attention_artifacts(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.artifacts.iter().filter(|a| a.kind == ArtifactKind::Attention)
+    }
+
+    pub fn mha_artifacts(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.artifacts.iter().filter(|a| a.kind == ArtifactKind::Mha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# kind\tname\tfile\tbatch\theads\tseq\thead_dim\ttile_q\ttile_kv\tcausal\torder\tdtype\tnum_args
+attention\tattn_a\ta.hlo.txt\t1\t4\t256\t64\t64\t64\t0\tcyclic\tfloat32\t3
+attention\tattn_b\tb.hlo.txt\t1\t4\t256\t64\t64\t64\t1\tsawtooth\tfloat32\t3
+mha\tmha_x\tm.hlo.txt\t1\t4\t256\t64\t64\t64\t1\tsawtooth\tfloat32\t5
+";
+
+    #[test]
+    fn parses_rows_and_kinds() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts().len(), 3);
+        assert_eq!(m.attention_artifacts().count(), 2);
+        assert_eq!(m.mha_artifacts().count(), 1);
+    }
+
+    #[test]
+    fn find_by_name() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.find("attn_b").unwrap();
+        assert!(a.causal);
+        assert_eq!(a.order, "sawtooth");
+        assert_eq!(a.qkv_shape(), vec![1, 4, 256, 64]);
+        assert_eq!(a.qkv_elems(), 4 * 256 * 64);
+        assert!(m.find("nope").is_none());
+    }
+
+    #[test]
+    fn mha_shapes() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.find("mha_x").unwrap();
+        assert_eq!(a.x_shape(), vec![1, 256, 256]);
+        assert_eq!(a.model_dim(), 256);
+        assert_eq!(a.num_args, 5);
+    }
+
+    #[test]
+    fn rejects_malformed_rows() {
+        assert!(Manifest::parse("attention\tonly\tthree").is_err());
+        assert!(Manifest::parse("").is_err());
+        assert!(Manifest::parse("bogus\tn\tf\t1\t1\t1\t1\t1\t1\t0\tcyclic\tf32\t3").is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let m = Manifest::parse(&format!("\n# c\n{}", SAMPLE)).unwrap();
+        assert_eq!(m.artifacts().len(), 3);
+    }
+}

@@ -1,0 +1,252 @@
+//! PJRT runtime: load and execute the AOT HLO artifacts.
+//!
+//! `python/compile/aot.py` lowers the Pallas/JAX attention variants to HLO
+//! **text** once at build time (`make artifacts`); this module loads those
+//! artifacts, compiles them on the PJRT CPU client and executes them from
+//! the request path. Python is never on the request path.
+//!
+//! Interchange is HLO text rather than serialized `HloModuleProto`: jax ≥
+//! 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactKind, ArtifactMeta, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::sim::kernel_model::Order;
+
+/// A loaded-and-compiled artifact plus its metadata.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client plus lazily-compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    compiled: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.tsv`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.tsv"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, compiled: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an artifact by name (idempotent).
+    pub fn compile(&mut self, name: &str) -> Result<&Executable> {
+        if !self.compiled.contains_key(name) {
+            let meta = self
+                .manifest
+                .find(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+                .clone();
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.compiled.insert(name.to_string(), Executable { meta, exe });
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Execute a compiled artifact on f32 host buffers. Inputs must match
+    /// the artifact's parameter shapes; the (single, tupled) output is
+    /// returned as a flat f32 vector.
+    pub fn execute(&mut self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        self.compile(name)?;
+        let exec = &self.compiled[name];
+        if inputs.len() != exec.meta.num_args {
+            bail!(
+                "artifact '{name}' expects {} args, got {}",
+                exec.meta.num_args,
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().enumerate() {
+            let n: i64 = shape.iter().product();
+            if n as usize != data.len() {
+                bail!("arg {i} of '{name}': shape {shape:?} != {} elements", data.len());
+            }
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .map_err(|e| anyhow!("reshaping arg {i}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exec
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untupling: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Execute an `attention` artifact: q, k, v shaped (B, H, S, D).
+    pub fn execute_attention(
+        &mut self,
+        name: &str,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<Vec<f32>> {
+        let meta = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        if meta.kind != ArtifactKind::Attention {
+            bail!("'{name}' is not an attention artifact");
+        }
+        let shape = meta.qkv_shape();
+        self.execute(name, &[(q, &shape), (k, &shape), (v, &shape)])
+    }
+
+    /// Pick the attention artifact matching (seq, causal, order), if any.
+    pub fn find_attention(&self, seq: u64, causal: bool, order: Order) -> Option<&ArtifactMeta> {
+        self.manifest.artifacts().iter().find(|a| {
+            a.kind == ArtifactKind::Attention
+                && a.seq as u64 == seq
+                && a.causal == causal
+                && a.order == order.name()
+        })
+    }
+
+    /// Load the serving-model weights dumped by aot.py (4 contiguous
+    /// row-major (dm, dm) f32 matrices, little-endian).
+    pub fn load_mha_weights(&self, model_dim: usize) -> Result<Vec<Vec<f32>>> {
+        let path = self.dir.join("mha_weights.bin");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let per = model_dim * model_dim;
+        if bytes.len() != per * 4 * 4 {
+            bail!(
+                "mha_weights.bin: expected {} bytes (4 × {model_dim}²·f32), got {}",
+                per * 16,
+                bytes.len()
+            );
+        }
+        let mut mats = Vec::with_capacity(4);
+        for m in 0..4 {
+            let mut v = Vec::with_capacity(per);
+            for i in 0..per {
+                let off = (m * per + i) * 4;
+                v.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+            }
+            mats.push(v);
+        }
+        Ok(mats)
+    }
+}
+
+/// Locate the artifacts directory: `$SAWTOOTH_ARTIFACTS` or `./artifacts`
+/// relative to the workspace root.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("SAWTOOTH_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from("artifacts")
+}
+
+/// Reference attention computed on the host (f32, full softmax) — used by
+/// tests/examples to check PJRT outputs end to end. Shapes (B, H, S, D).
+pub fn attention_host_ref(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    batch: usize,
+    heads: usize,
+    seq: usize,
+    head_dim: usize,
+    causal: bool,
+) -> Vec<f32> {
+    let mut out = vec![0f32; batch * heads * seq * head_dim];
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    for bh in 0..batch * heads {
+        let base = bh * seq * head_dim;
+        for i in 0..seq {
+            let mut row = vec![f32::NEG_INFINITY; seq];
+            let jmax = if causal { i + 1 } else { seq };
+            let mut m = f32::NEG_INFINITY;
+            for j in 0..jmax {
+                let mut dot = 0f32;
+                for d in 0..head_dim {
+                    dot += q[base + i * head_dim + d] * k[base + j * head_dim + d];
+                }
+                row[j] = dot * scale;
+                m = m.max(row[j]);
+            }
+            let mut l = 0f32;
+            for j in 0..jmax {
+                row[j] = (row[j] - m).exp();
+                l += row[j];
+            }
+            for d in 0..head_dim {
+                let mut acc = 0f32;
+                for j in 0..jmax {
+                    acc += row[j] * v[base + j * head_dim + d];
+                }
+                out[base + i * head_dim + d] = acc / l;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_ref_uniform_attention() {
+        // All-equal K: output = mean of V rows.
+        let (b, h, s, d) = (1, 1, 4, 2);
+        let q = vec![1.0; b * h * s * d];
+        let k = vec![1.0; b * h * s * d];
+        let v: Vec<f32> = (0..(b * h * s * d)).map(|i| i as f32).collect();
+        let out = attention_host_ref(&q, &k, &v, b, h, s, d, false);
+        // Mean of rows [[0,1],[2,3],[4,5],[6,7]] = [3,4]
+        for i in 0..s {
+            assert!((out[i * d] - 3.0).abs() < 1e-5);
+            assert!((out[i * d + 1] - 4.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn host_ref_causal_first_row_is_v0() {
+        let (b, h, s, d) = (1, 1, 3, 2);
+        let q = vec![0.5; b * h * s * d];
+        let k = vec![0.25; b * h * s * d];
+        let v: Vec<f32> = (0..(b * h * s * d)).map(|i| (i * i) as f32).collect();
+        let out = attention_host_ref(&q, &k, &v, b, h, s, d, true);
+        // Row 0 attends only to key 0 → output = V[0].
+        assert_eq!(&out[0..2], &v[0..2]);
+    }
+}

@@ -1,0 +1,468 @@
+//! LRU cache models at sector granularity.
+//!
+//! Two interchangeable models:
+//!
+//! * [`WeightedLru`] — the production model. One entry per *block* (a tensor
+//!   tile), weighted by its sector count. All sectors of a tile are touched
+//!   back-to-back by the kernel, so a tile is the natural unit; this keeps
+//!   the big CuTile configuration (B=8, S=128K → ~67 M block accesses)
+//!   simulable in seconds.
+//! * [`ExactLru`] — one entry per 32 B sector. Used to cross-validate the
+//!   weighted model at small scale (property tests assert both agree).
+//!
+//! Both are plain LRU. The paper's analysis (reuse distance / LRU stack
+//! distance, §4) is explicitly an LRU-stack argument, and its 1 − 1/N_SM and
+//! sawtooth results are LRU phenomena; sectored GPU L2s are set-associative
+//! but behave LRU-like at this granularity.
+
+use rustc_hash::FxHashMap;
+
+/// Identity of a cacheable block: (tensor kind, batch·head, tile index).
+/// Packed into a u64 for fast hashing.
+pub type BlockKey = u64;
+
+/// Outcome of one cache access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Access {
+    pub hit: bool,
+    /// Sectors this access moved at this level.
+    pub sectors: u32,
+}
+
+/// Key→node index map abstraction: hashed for sparse key spaces, a direct
+/// vector for dense ones (the engine's hot path — see EXPERIMENTS.md §Perf).
+trait KeyMap {
+    fn get(&self, k: BlockKey) -> Option<u32>;
+    fn insert(&mut self, k: BlockKey, v: u32);
+    fn remove(&mut self, k: BlockKey);
+}
+
+#[derive(Default)]
+struct HashKeyMap(FxHashMap<BlockKey, u32>);
+
+impl KeyMap for HashKeyMap {
+    #[inline]
+    fn get(&self, k: BlockKey) -> Option<u32> {
+        self.0.get(&k).copied()
+    }
+    #[inline]
+    fn insert(&mut self, k: BlockKey, v: u32) {
+        self.0.insert(k, v);
+    }
+    #[inline]
+    fn remove(&mut self, k: BlockKey) {
+        self.0.remove(&k);
+    }
+}
+
+/// Direct-indexed map for keys in `[0, domain)`.
+struct DenseKeyMap(Vec<u32>);
+
+impl DenseKeyMap {
+    fn new(domain: usize) -> Self {
+        DenseKeyMap(vec![NIL; domain])
+    }
+}
+
+impl KeyMap for DenseKeyMap {
+    #[inline]
+    fn get(&self, k: BlockKey) -> Option<u32> {
+        let v = self.0[k as usize];
+        if v == NIL {
+            None
+        } else {
+            Some(v)
+        }
+    }
+    #[inline]
+    fn insert(&mut self, k: BlockKey, v: u32) {
+        self.0[k as usize] = v;
+    }
+    #[inline]
+    fn remove(&mut self, k: BlockKey) {
+        self.0[k as usize] = NIL;
+    }
+}
+
+/// Intrusive doubly-linked LRU list over an arena, keyed by `BlockKey`.
+/// `weight` is the sector count of the entry (1 for the exact model).
+struct LruCoreG<M: KeyMap> {
+    map: M,
+    // arena; nodes are recycled through a free list.
+    keys: Vec<BlockKey>,
+    weights: Vec<u32>,
+    prev: Vec<u32>,
+    next: Vec<u32>,
+    free: Vec<u32>,
+    head: u32, // most recent
+    tail: u32, // least recent
+    used_sectors: u64,
+    cap_sectors: u64,
+    live: usize,
+}
+
+type LruCore = LruCoreG<HashKeyMap>;
+
+const NIL: u32 = u32::MAX;
+
+impl LruCore {
+    fn new(cap_sectors: u64) -> Self {
+        Self::with_map(cap_sectors, HashKeyMap::default())
+    }
+}
+
+impl<M: KeyMap> LruCoreG<M> {
+    fn with_map(cap_sectors: u64, map: M) -> Self {
+        LruCoreG {
+            map,
+            keys: Vec::new(),
+            weights: Vec::new(),
+            prev: Vec::new(),
+            next: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            used_sectors: 0,
+            cap_sectors,
+            live: 0,
+        }
+    }
+
+    #[inline]
+    fn unlink(&mut self, idx: u32) {
+        let (p, n) = (self.prev[idx as usize], self.next[idx as usize]);
+        if p != NIL {
+            self.next[p as usize] = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.prev[n as usize] = p;
+        } else {
+            self.tail = p;
+        }
+    }
+
+    #[inline]
+    fn push_front(&mut self, idx: u32) {
+        self.prev[idx as usize] = NIL;
+        self.next[idx as usize] = self.head;
+        if self.head != NIL {
+            self.prev[self.head as usize] = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    #[inline]
+    fn alloc(&mut self, key: BlockKey, weight: u32) -> u32 {
+        if let Some(idx) = self.free.pop() {
+            self.keys[idx as usize] = key;
+            self.weights[idx as usize] = weight;
+            idx
+        } else {
+            let idx = self.keys.len() as u32;
+            self.keys.push(key);
+            self.weights.push(weight);
+            self.prev.push(NIL);
+            self.next.push(NIL);
+            idx
+        }
+    }
+
+    /// Access `key` with `weight` sectors; returns hit/miss. On miss the
+    /// block is inserted and LRU entries evicted until within capacity.
+    /// A weight-0 access is counted as a hit iff present (no insertion).
+    fn access(&mut self, key: BlockKey, weight: u32) -> bool {
+        if let Some(idx) = self.map.get(key) {
+            // Move to front; refresh weight (tiles have stable weights, but
+            // the exact model reuses this for single sectors).
+            self.unlink(idx);
+            self.push_front(idx);
+            return true;
+        }
+        if weight as u64 > self.cap_sectors {
+            // Streaming block larger than the whole cache: bypass (never
+            // resident). Counted as a miss.
+            return false;
+        }
+        let idx = self.alloc(key, weight);
+        self.map.insert(key, idx);
+        self.live += 1;
+        self.push_front(idx);
+        self.used_sectors += weight as u64;
+        while self.used_sectors > self.cap_sectors {
+            let victim = self.tail;
+            debug_assert_ne!(victim, NIL);
+            debug_assert_ne!(victim, idx, "just-inserted block evicted");
+            self.unlink(victim);
+            self.map.remove(self.keys[victim as usize]);
+            self.live -= 1;
+            self.used_sectors -= self.weights[victim as usize] as u64;
+            self.free.push(victim);
+        }
+        false
+    }
+
+    fn contains(&self, key: BlockKey) -> bool {
+        self.map.get(key).is_some()
+    }
+
+    fn len(&self) -> usize {
+        self.live
+    }
+}
+
+/// Block-granularity weighted LRU over a *dense* key space `[0, domain)`:
+/// the engine's hot-path variant (direct vector index instead of a hash
+/// map; ~25% faster end-to-end — EXPERIMENTS.md §Perf).
+pub struct DenseWeightedLru {
+    core: LruCoreG<DenseKeyMap>,
+}
+
+impl DenseWeightedLru {
+    pub fn new(cap_sectors: u64, key_domain: usize) -> Self {
+        DenseWeightedLru {
+            core: LruCoreG::with_map(cap_sectors, DenseKeyMap::new(key_domain)),
+        }
+    }
+
+    /// Access a block of `sectors` sectors; `key < key_domain`.
+    #[inline]
+    pub fn access(&mut self, key: BlockKey, sectors: u32) -> bool {
+        self.core.access(key, sectors)
+    }
+
+    pub fn used_sectors(&self) -> u64 {
+        self.core.used_sectors
+    }
+}
+
+/// Block-granularity weighted LRU (production model).
+pub struct WeightedLru {
+    core: LruCore,
+}
+
+impl WeightedLru {
+    pub fn new(cap_sectors: u64) -> Self {
+        WeightedLru { core: LruCore::new(cap_sectors) }
+    }
+
+    /// Access a block of `sectors` sectors. Returns whether it hit.
+    #[inline]
+    pub fn access(&mut self, key: BlockKey, sectors: u32) -> bool {
+        self.core.access(key, sectors)
+    }
+
+    pub fn contains(&self, key: BlockKey) -> bool {
+        self.core.contains(key)
+    }
+
+    pub fn used_sectors(&self) -> u64 {
+        self.core.used_sectors
+    }
+
+    pub fn resident_blocks(&self) -> usize {
+        self.core.len()
+    }
+
+    pub fn capacity_sectors(&self) -> u64 {
+        self.core.cap_sectors
+    }
+}
+
+/// Sector-granularity LRU (validation model). Keys are absolute sector
+/// numbers; each entry weighs one sector.
+pub struct ExactLru {
+    core: LruCore,
+}
+
+impl ExactLru {
+    pub fn new(cap_sectors: u64) -> Self {
+        ExactLru { core: LruCore::new(cap_sectors) }
+    }
+
+    /// Access one sector; returns whether it hit.
+    #[inline]
+    pub fn access_sector(&mut self, sector: u64) -> bool {
+        self.core.access(sector, 1)
+    }
+
+    /// Access a contiguous run of sectors; returns (hits, misses).
+    pub fn access_run(&mut self, first_sector: u64, count: u32) -> (u32, u32) {
+        let mut hits = 0;
+        for s in first_sector..first_sector + count as u64 {
+            if self.access_sector(s) {
+                hits += 1;
+            }
+        }
+        (hits, count - hits)
+    }
+
+    pub fn used_sectors(&self) -> u64 {
+        self.core.used_sectors
+    }
+}
+
+/// Pack (tensor, batch·head, tile index) into a [`BlockKey`].
+#[inline]
+pub fn block_key(tensor: u8, batch_head: u32, tile_idx: u64) -> BlockKey {
+    debug_assert!(tile_idx < 1 << 40);
+    ((tensor as u64) << 60) | ((batch_head as u64) << 40) | tile_idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn weighted_hit_after_insert() {
+        let mut c = WeightedLru::new(100);
+        assert!(!c.access(1, 10));
+        assert!(c.access(1, 10));
+        assert_eq!(c.used_sectors(), 10);
+    }
+
+    #[test]
+    fn weighted_evicts_lru_first() {
+        let mut c = WeightedLru::new(30);
+        c.access(1, 10);
+        c.access(2, 10);
+        c.access(3, 10);
+        // cache full: {3,2,1}; touching 1 promotes it.
+        assert!(c.access(1, 10));
+        // inserting 4 evicts 2 (now LRU).
+        assert!(!c.access(4, 10));
+        assert!(c.contains(1) && c.contains(3) && c.contains(4));
+        assert!(!c.contains(2));
+    }
+
+    #[test]
+    fn weighted_eviction_respects_weights() {
+        let mut c = WeightedLru::new(100);
+        c.access(1, 60);
+        c.access(2, 30);
+        // 90 used; inserting 20 must evict 1 (LRU, weight 60) → 50 used.
+        assert!(!c.access(3, 20));
+        assert!(!c.contains(1));
+        assert_eq!(c.used_sectors(), 50);
+    }
+
+    #[test]
+    fn oversized_block_bypasses() {
+        let mut c = WeightedLru::new(10);
+        assert!(!c.access(1, 11));
+        assert!(!c.contains(1));
+        assert!(!c.access(1, 11)); // still a miss — never resident
+        assert_eq!(c.used_sectors(), 0);
+    }
+
+    #[test]
+    fn exact_run_counts() {
+        let mut c = ExactLru::new(8);
+        let (h, m) = c.access_run(0, 8);
+        assert_eq!((h, m), (0, 8));
+        let (h, m) = c.access_run(0, 8);
+        assert_eq!((h, m), (8, 0));
+        // Run of 4 new sectors evicts the 4 LRU sectors (0..4).
+        let (h, m) = c.access_run(100, 4);
+        assert_eq!((h, m), (0, 4));
+        let (h, m) = c.access_run(0, 4);
+        assert_eq!((h, m), (0, 4));
+    }
+
+    #[test]
+    fn sequential_streaming_all_misses() {
+        // Cyclic pattern over data > capacity: LRU yields 0 hits (the
+        // paper's baseline pathology).
+        let mut c = ExactLru::new(64);
+        for _pass in 0..3 {
+            let (h, _m) = c.access_run(0, 128);
+            assert_eq!(h, 0);
+        }
+    }
+
+    #[test]
+    fn sawtooth_streaming_hits_tail() {
+        // Sawtooth over data > capacity: each reversal re-hits ~capacity
+        // sectors (the paper's §4 claim, at its purest).
+        let cap = 64u64;
+        let n = 128u32;
+        let mut c = ExactLru::new(cap);
+        c.access_run(0, n); // forward, cold
+        let mut hits = 0;
+        for s in (0..n as u64).rev() {
+            if c.access_sector(s) {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits as u64, cap, "backward pass re-hits exactly the cached tail");
+    }
+
+    #[test]
+    fn block_key_distinct_fields() {
+        let a = block_key(0, 0, 1);
+        let b = block_key(0, 1, 1);
+        let c = block_key(1, 0, 1);
+        let d = block_key(0, 0, 2);
+        let all = [a, b, c, d];
+        for i in 0..4 {
+            for j in i + 1..4 {
+                assert_ne!(all[i], all[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_weighted_never_exceeds_capacity() {
+        check("weighted-capacity-invariant", 200, |g| {
+            let cap = g.int(1, 200);
+            let mut c = WeightedLru::new(cap);
+            for _ in 0..200 {
+                let key = g.int(0, 30);
+                let w = g.int(1, 20) as u32;
+                c.access(key, w);
+                if c.used_sectors() > cap {
+                    return Err(format!("used {} > cap {}", c.used_sectors(), cap));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_weighted_agrees_with_exact_on_unit_weights() {
+        // With all weights = 1 and block keys = sector ids, the two models
+        // must be byte-identical LRUs.
+        check("weighted-eq-exact-unit", 100, |g| {
+            let cap = g.int(1, 64);
+            let mut w = WeightedLru::new(cap);
+            let mut e = ExactLru::new(cap);
+            for _ in 0..500 {
+                let s = g.int(0, 100);
+                let hw = w.access(s, 1);
+                let he = e.access_sector(s);
+                if hw != he {
+                    return Err(format!("diverged on sector {s}: weighted={hw} exact={he}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_repeat_access_always_hits() {
+        check("repeat-hit", 100, |g| {
+            let mut c = WeightedLru::new(1000);
+            let key = g.int(0, 10);
+            c.access(key, 5);
+            if !c.access(key, 5) {
+                return Err("immediate re-access missed".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,175 @@
+//! ncu-style cache counters.
+//!
+//! Names follow the Nsight Compute metrics the paper collects (§2.1):
+//! `lts_t_sectors.sum` (total L2 sector requests, any operation) and
+//! `lts_t_sector_hit_rate.pct`, plus the L1Tex-side counters of Tables 1–2.
+
+use super::kernel_model::TensorKind;
+
+/// Per-tensor sector counts.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TensorCounters {
+    pub sectors: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// Full counter set for one simulated kernel launch.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    /// L1Tex sector requests (global loads/stores issued by the SMs).
+    pub l1_sectors: u64,
+    /// L1Tex sector hits (the paper observes these are negligible).
+    pub l1_hit_sectors: u64,
+    /// L2 sector requests arriving from the L1Tex path (= L1 misses +
+    /// write traffic). Paper: "L2 Sectors (from Tex)".
+    pub l2_sectors_from_tex: u64,
+    /// Non-texture L2 sectors (instruction/constant/barrier overhead).
+    pub l2_sectors_other: u64,
+    /// L2 sector hits.
+    pub l2_hit_sectors: u64,
+    /// L2 sector misses (DRAM traffic).
+    pub l2_miss_sectors: u64,
+    /// Per-tensor breakdown of the L2-from-tex traffic, indexed by
+    /// `TensorKind as usize`.
+    pub per_tensor: [TensorCounters; 4],
+}
+
+impl CacheCounters {
+    /// `lts_t_sectors.sum`: total L2 sector requests, any operation.
+    pub fn l2_sectors_total(&self) -> u64 {
+        self.l2_sectors_from_tex + self.l2_sectors_other
+    }
+
+    /// `lts_t_sector_hit_rate.pct` over the texture-path traffic (the
+    /// non-tex overhead is assumed to hit — it is tiny and resident).
+    pub fn l2_hit_rate_pct(&self) -> f64 {
+        let denom = self.l2_sectors_total();
+        if denom == 0 {
+            return 0.0;
+        }
+        100.0 * (self.l2_hit_sectors + self.l2_sectors_other) as f64 / denom as f64
+    }
+
+    /// L1 hit rate in percent.
+    pub fn l1_hit_rate_pct(&self) -> f64 {
+        if self.l1_sectors == 0 {
+            return 0.0;
+        }
+        100.0 * self.l1_hit_sectors as f64 / self.l1_sectors as f64
+    }
+
+    pub fn tensor(&self, t: TensorKind) -> &TensorCounters {
+        &self.per_tensor[t as usize]
+    }
+
+    /// Record one tile access outcome at both levels.
+    pub fn record(
+        &mut self,
+        tensor: TensorKind,
+        sectors: u32,
+        l1_hit: bool,
+        l2_hit: bool,
+        write: bool,
+    ) {
+        let s = sectors as u64;
+        self.l1_sectors += s;
+        if l1_hit && !write {
+            self.l1_hit_sectors += s;
+            return; // satisfied in L1; no L2 traffic
+        }
+        self.l2_sectors_from_tex += s;
+        let tc = &mut self.per_tensor[tensor as usize];
+        tc.sectors += s;
+        if l2_hit {
+            self.l2_hit_sectors += s;
+            tc.hits += s;
+        } else {
+            self.l2_miss_sectors += s;
+            tc.misses += s;
+        }
+    }
+
+    /// Merge counters from another launch (used by batched sweeps).
+    pub fn merge(&mut self, other: &CacheCounters) {
+        self.l1_sectors += other.l1_sectors;
+        self.l1_hit_sectors += other.l1_hit_sectors;
+        self.l2_sectors_from_tex += other.l2_sectors_from_tex;
+        self.l2_sectors_other += other.l2_sectors_other;
+        self.l2_hit_sectors += other.l2_hit_sectors;
+        self.l2_miss_sectors += other.l2_miss_sectors;
+        for i in 0..4 {
+            self.per_tensor[i].sectors += other.per_tensor[i].sectors;
+            self.per_tensor[i].hits += other.per_tensor[i].hits;
+            self.per_tensor[i].misses += other.per_tensor[i].misses;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_l2_hit_and_miss() {
+        let mut c = CacheCounters::default();
+        c.record(TensorKind::K, 10, false, false, false);
+        c.record(TensorKind::K, 10, false, true, false);
+        assert_eq!(c.l1_sectors, 20);
+        assert_eq!(c.l2_sectors_from_tex, 20);
+        assert_eq!(c.l2_hit_sectors, 10);
+        assert_eq!(c.l2_miss_sectors, 10);
+        assert_eq!(c.tensor(TensorKind::K).sectors, 20);
+        assert_eq!(c.l2_hit_rate_pct(), 50.0);
+    }
+
+    #[test]
+    fn l1_hit_filters_l2_traffic() {
+        let mut c = CacheCounters::default();
+        c.record(TensorKind::Q, 8, true, false, false);
+        assert_eq!(c.l1_sectors, 8);
+        assert_eq!(c.l1_hit_sectors, 8);
+        assert_eq!(c.l2_sectors_from_tex, 0);
+        assert_eq!(c.l1_hit_rate_pct(), 100.0);
+    }
+
+    #[test]
+    fn writes_reach_l2_even_on_l1_hit_flag() {
+        // Stores are write-through to L2 in this model.
+        let mut c = CacheCounters::default();
+        c.record(TensorKind::O, 4, true, false, true);
+        assert_eq!(c.l2_sectors_from_tex, 4);
+        assert_eq!(c.l2_miss_sectors, 4);
+    }
+
+    #[test]
+    fn totals_include_non_tex_overhead() {
+        let mut c = CacheCounters::default();
+        c.record(TensorKind::V, 100, false, true, false);
+        c.l2_sectors_other = 10;
+        assert_eq!(c.l2_sectors_total(), 110);
+        assert_eq!(c.l2_hit_rate_pct(), 100.0);
+    }
+
+    #[test]
+    fn merge_adds_everything() {
+        let mut a = CacheCounters::default();
+        a.record(TensorKind::K, 5, false, false, false);
+        let mut b = CacheCounters::default();
+        b.record(TensorKind::K, 7, false, true, false);
+        b.l2_sectors_other = 3;
+        a.merge(&b);
+        assert_eq!(a.l2_sectors_from_tex, 12);
+        assert_eq!(a.l2_hit_sectors, 7);
+        assert_eq!(a.l2_miss_sectors, 5);
+        assert_eq!(a.l2_sectors_other, 3);
+        assert_eq!(a.tensor(TensorKind::K).sectors, 12);
+    }
+
+    #[test]
+    fn empty_counters_have_zero_rates() {
+        let c = CacheCounters::default();
+        assert_eq!(c.l2_hit_rate_pct(), 0.0);
+        assert_eq!(c.l1_hit_rate_pct(), 0.0);
+    }
+}

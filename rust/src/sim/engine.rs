@@ -1,0 +1,518 @@
+//! Wavefront interleaving engine: the heart of the simulator.
+//!
+//! CTAs resident on the SMs advance in round-robin, one step (one K/V tile
+//! pair, or a Q load / O store) per turn — the "largely synchronized"
+//! progression the paper observes on GB10 (§3.4). The interleaved tile
+//! accesses are filtered through per-SM L1 models and a shared L2, producing
+//! ncu-style counters.
+//!
+//! An optional `jitter` probability desynchronises SMs (each turn an SM may
+//! stall), which is the ablation for the wavefront-reuse hypothesis: as
+//! jitter grows the 1 − 1/N_SM hit-rate scaling decays.
+
+use crate::gb10::DeviceSpec;
+use crate::util::rng::Rng;
+
+use super::cache::{DenseWeightedLru, ExactLru};
+use super::counters::CacheCounters;
+use super::kernel_model::{
+    step_accesses, ItemSteps, KernelVariant, Order, Step, TileAccess, WorkItem,
+};
+use super::scheduler::{Scheduler, SchedulerKind};
+use super::workload::AttentionWorkload;
+
+/// Full configuration of one simulated launch.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub device: DeviceSpec,
+    pub workload: AttentionWorkload,
+    pub scheduler: SchedulerKind,
+    pub order: Order,
+    pub variant: KernelVariant,
+    /// Wavefront desynchronization knob (0.0 = the paper's synchronized
+    /// wavefronts). SM `i` stalls each turn with probability
+    /// `jitter · i / (N_SM − 1)`: a *graded* rate so SMs drift apart
+    /// persistently (symmetric random stalls would cancel out — CTAs stay
+    /// clustered within √t positions, far below the L2 lag capacity).
+    pub jitter: f64,
+    /// PRNG seed for jitter.
+    pub seed: u64,
+    /// Model the per-SM L1 (true for the paper's Tables 1–2; the L1 is a
+    /// pass-through for this workload either way).
+    pub model_l1: bool,
+}
+
+impl SimConfig {
+    /// Paper §3 configuration: persistent CTAs, cyclic order, CUDA kernel.
+    pub fn cuda_study(workload: AttentionWorkload) -> Self {
+        SimConfig {
+            device: DeviceSpec::gb10(),
+            workload,
+            scheduler: SchedulerKind::Persistent,
+            order: Order::Cyclic,
+            variant: KernelVariant::CudaWmma,
+            jitter: 0.0,
+            seed: 0,
+            model_l1: true,
+        }
+    }
+
+    /// Paper §4.3 configuration for a CuTile variant.
+    pub fn cutile_study(workload: AttentionWorkload, variant: KernelVariant, order: Order) -> Self {
+        let scheduler = match variant {
+            KernelVariant::CuTileTile => SchedulerKind::NonPersistent,
+            _ => SchedulerKind::Persistent,
+        };
+        SimConfig {
+            device: DeviceSpec::gb10(),
+            workload,
+            scheduler,
+            order,
+            variant,
+            jitter: 0.0,
+            seed: 0,
+            model_l1: true,
+        }
+    }
+
+    pub fn with_order(mut self, order: Order) -> Self {
+        self.order = order;
+        self
+    }
+
+    pub fn with_sms(mut self, n: u32) -> Self {
+        self.device = DeviceSpec { num_sms: n, ..self.device };
+        self
+    }
+
+    pub fn with_jitter(mut self, p: f64, seed: u64) -> Self {
+        self.jitter = p;
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_scheduler(mut self, s: SchedulerKind) -> Self {
+        self.scheduler = s;
+        self
+    }
+}
+
+/// Outcome of a simulated launch.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub counters: CacheCounters,
+    /// Total inner (K/V streaming) steps executed.
+    pub kv_steps: u64,
+    /// Engine rounds (≈ wavefront ticks until drain).
+    pub rounds: u64,
+    /// Work items executed (must equal workload.num_work_items()).
+    pub items: u64,
+}
+
+impl SimResult {
+    /// Non-compulsory misses: beyond the cold (first-touch) footprint.
+    /// Cold sectors = unique sectors of Q, K, V, O = 4·S·D·E/C per
+    /// (batch·head) (paper §3.3's 16S with D=64, E=2, C=32).
+    pub fn non_compulsory_misses(&self, w: &AttentionWorkload, dev: &DeviceSpec) -> u64 {
+        self.counters
+            .l2_miss_sectors
+            .saturating_sub(cold_sectors(w, dev))
+    }
+}
+
+/// Unique-sector footprint of the four tensors (the theoretical cold-miss
+/// count, dashed line of Fig 5).
+pub fn cold_sectors(w: &AttentionWorkload, dev: &DeviceSpec) -> u64 {
+    let per_tensor = (w.tensor_bytes() + dev.sector_bytes as u64 - 1) / dev.sector_bytes as u64;
+    4 * per_tensor * w.batch_heads() as u64
+}
+
+/// Graded per-SM stall probabilities: SM i stalls with p = jitter·i/(n−1),
+/// so desynchronization accumulates linearly (see SimConfig::jitter).
+fn stall_probabilities(jitter: f64, n_sms: usize) -> Vec<f64> {
+    (0..n_sms)
+        .map(|i| {
+            if n_sms <= 1 {
+                0.0
+            } else {
+                jitter * i as f64 / (n_sms - 1) as f64
+            }
+        })
+        .collect()
+}
+
+/// Per-SM execution state.
+struct SmState {
+    item: Option<(WorkItem, ItemSteps)>,
+    done: bool,
+}
+
+/// The simulator. Build with a [`SimConfig`], then [`Simulator::run`].
+pub struct Simulator {
+    cfg: SimConfig,
+}
+
+impl Simulator {
+    pub fn new(cfg: SimConfig) -> Self {
+        Simulator { cfg }
+    }
+
+    /// Run with the production weighted-block LRU at both levels.
+    pub fn run(&self) -> SimResult {
+        let w = &self.cfg.workload;
+        let dev = &self.cfg.device;
+        let n_sms = dev.num_sms as usize;
+        let mut sched = Scheduler::new(
+            self.cfg.scheduler,
+            self.cfg.order,
+            self.cfg.variant,
+            w,
+            dev.num_sms,
+        );
+        // Hot path: dense direct-indexed LRU maps. Key = ((bh·4)+tensor)·
+        // num_tiles + tile — compact by construction.
+        let n_tiles = w.num_tiles();
+        let domain = (w.batch_heads() as u64 * 4 * n_tiles) as usize;
+        let dense_key = |tensor: u8, bh: u32, tile: u64| -> u64 {
+            (bh as u64 * 4 + tensor as u64) * n_tiles + tile
+        };
+        let mut l2 = DenseWeightedLru::new(dev.l2_sectors(), domain);
+        let mut l1: Vec<DenseWeightedLru> = (0..n_sms)
+            .map(|_| DenseWeightedLru::new(dev.l1_sectors(), domain))
+            .collect();
+        let mut counters = CacheCounters::default();
+        let mut rng = Rng::new(self.cfg.seed);
+        let stall_p = stall_probabilities(self.cfg.jitter, n_sms);
+
+        let mut sms: Vec<SmState> = (0..n_sms)
+            .map(|_| SmState { item: None, done: false })
+            .collect();
+
+        let mut kv_steps = 0u64;
+        let mut rounds = 0u64;
+        let mut items = 0u64;
+        let mut live = n_sms;
+        let mut acc: [Option<TileAccess>; 2] = [None, None];
+
+        while live > 0 {
+            rounds += 1;
+            for sm in 0..n_sms {
+                if sms[sm].done {
+                    continue;
+                }
+                if stall_p[sm] > 0.0 && rng.chance(stall_p[sm]) {
+                    continue; // stalled this turn
+                }
+                // Ensure the SM has a work item.
+                if sms[sm].item.is_none() {
+                    match sched.next_item(sm, w) {
+                        Some(it) => {
+                            let steps = ItemSteps::new(w, &it);
+                            items += 1;
+                            sms[sm].item = Some((it, steps));
+                        }
+                        None => {
+                            sms[sm].done = true;
+                            live -= 1;
+                            continue;
+                        }
+                    }
+                }
+                let (it, steps) = sms[sm].item.as_mut().unwrap();
+                let step = steps.next().expect("fresh item streams at least Q and O");
+                if matches!(step, Step::KvStep(_)) {
+                    kv_steps += 1;
+                }
+                let it_copy = *it;
+                let exhausted = matches!(step, Step::StoreO);
+                step_accesses(w, &it_copy, step, &mut acc);
+                for a in acc.iter().flatten() {
+                    let sectors = w.rows_sectors(w.tile_rows(a.tile_idx), dev.sector_bytes);
+                    let key = dense_key(a.tensor as u8, a.batch_head, a.tile_idx);
+                    let l1_hit = if self.cfg.model_l1 && !a.write {
+                        l1[sm].access(key, sectors)
+                    } else {
+                        false
+                    };
+                    // Reads that miss L1 go to L2; writes are write-through
+                    // (allocate in L2, count as tex traffic).
+                    let l2_hit = if l1_hit { false } else { l2.access(key, sectors) };
+                    counters.record(a.tensor, sectors, l1_hit, l2_hit, a.write);
+                }
+                if exhausted {
+                    sms[sm].item = None;
+                }
+            }
+        }
+
+        counters.l2_sectors_other =
+            (kv_steps as f64 * dev.non_tex_sectors_per_step).round() as u64;
+
+        SimResult { counters, kv_steps, rounds, items }
+    }
+
+    /// Run with exact per-sector LRUs (validation mode — small workloads
+    /// only; cost is O(total sectors)).
+    pub fn run_exact(&self) -> SimResult {
+        let w = &self.cfg.workload;
+        let dev = &self.cfg.device;
+        let n_sms = dev.num_sms as usize;
+        let mut sched = Scheduler::new(
+            self.cfg.scheduler,
+            self.cfg.order,
+            self.cfg.variant,
+            w,
+            dev.num_sms,
+        );
+        let mut l2 = ExactLru::new(dev.l2_sectors());
+        let mut l1: Vec<ExactLru> = (0..n_sms)
+            .map(|_| ExactLru::new(dev.l1_sectors()))
+            .collect();
+        let mut counters = CacheCounters::default();
+        let mut rng = Rng::new(self.cfg.seed);
+        let stall_p = stall_probabilities(self.cfg.jitter, n_sms);
+
+        // Address layout: each (tensor, bh) gets a disjoint sector region.
+        let tensor_sectors =
+            (w.tensor_bytes() + dev.sector_bytes as u64 - 1) / dev.sector_bytes as u64;
+        let base = |tensor: u8, bh: u32| -> u64 {
+            ((bh as u64 * 4) + tensor as u64) * tensor_sectors
+        };
+
+        let mut sms: Vec<SmState> = (0..n_sms)
+            .map(|_| SmState { item: None, done: false })
+            .collect();
+        let mut kv_steps = 0u64;
+        let mut rounds = 0u64;
+        let mut items = 0u64;
+        let mut live = n_sms;
+        let mut acc: [Option<TileAccess>; 2] = [None, None];
+
+        while live > 0 {
+            rounds += 1;
+            for sm in 0..n_sms {
+                if sms[sm].done {
+                    continue;
+                }
+                if stall_p[sm] > 0.0 && rng.chance(stall_p[sm]) {
+                    continue;
+                }
+                if sms[sm].item.is_none() {
+                    match sched.next_item(sm, w) {
+                        Some(it) => {
+                            let steps = ItemSteps::new(w, &it);
+                            items += 1;
+                            sms[sm].item = Some((it, steps));
+                        }
+                        None => {
+                            sms[sm].done = true;
+                            live -= 1;
+                            continue;
+                        }
+                    }
+                }
+                let (it, steps) = sms[sm].item.as_mut().unwrap();
+                let step = steps.next().unwrap();
+                if matches!(step, Step::KvStep(_)) {
+                    kv_steps += 1;
+                }
+                let it_copy = *it;
+                let exhausted = matches!(step, Step::StoreO);
+                step_accesses(w, &it_copy, step, &mut acc);
+                for a in acc.iter().flatten() {
+                    let rows = w.tile_rows(a.tile_idx);
+                    let sectors = w.rows_sectors(rows, dev.sector_bytes);
+                    // Sector range of this tile within its tensor region.
+                    let row_sectors = w.rows_sectors(1, dev.sector_bytes) as u64;
+                    let first = base(a.tensor as u8, a.batch_head)
+                        + a.tile_idx * w.tile as u64 * row_sectors;
+                    for s in first..first + sectors as u64 {
+                        let l1_hit = if self.cfg.model_l1 && !a.write {
+                            l1[sm].access_sector(s)
+                        } else {
+                            false
+                        };
+                        let l2_hit = if l1_hit { false } else { l2.access_sector(s) };
+                        counters.record(a.tensor, 1, l1_hit, l2_hit, a.write);
+                    }
+                }
+                if exhausted {
+                    sms[sm].item = None;
+                }
+            }
+        }
+
+        counters.l2_sectors_other =
+            (kv_steps as f64 * dev.non_tex_sectors_per_step).round() as u64;
+        SimResult { counters, kv_steps, rounds, items }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::kernel_model::TensorKind;
+
+    fn small_cfg(seq: u64, causal: bool, order: Order) -> SimConfig {
+        let w = AttentionWorkload {
+            batch: 1,
+            heads: 1,
+            seq,
+            head_dim: 64,
+            elem_bytes: 2,
+            tile: 16,
+            causal,
+        };
+        SimConfig {
+            device: DeviceSpec::tiny(),
+            workload: w,
+            scheduler: SchedulerKind::Persistent,
+            order,
+            variant: KernelVariant::CudaWmma,
+            jitter: 0.0,
+            seed: 0,
+            model_l1: true,
+        }
+    }
+
+    #[test]
+    fn executes_every_work_item_exactly_once() {
+        let cfg = small_cfg(256, false, Order::Cyclic);
+        let r = Simulator::new(cfg.clone()).run();
+        assert_eq!(r.items, cfg.workload.num_work_items());
+    }
+
+    #[test]
+    fn total_tex_sectors_match_closed_form() {
+        // Non-causal: Q+O touched once, K+V once per Q tile.
+        let cfg = small_cfg(256, false, Order::Cyclic);
+        let w = &cfg.workload;
+        let n = w.num_tiles();
+        let tile_sec = w.tile_sectors(32) as u64;
+        let expect = 2 * tile_sec * n + 2 * tile_sec * n * n;
+        let r = Simulator::new(cfg.clone()).run();
+        assert_eq!(r.counters.l2_sectors_from_tex, expect);
+        // Sector accounting must be identical in exact mode.
+        let re = Simulator::new(cfg).run_exact();
+        assert_eq!(re.counters.l2_sectors_from_tex, expect);
+    }
+
+    #[test]
+    fn causal_access_counts_are_triangular() {
+        let cfg = small_cfg(256, true, Order::Cyclic);
+        let w = &cfg.workload;
+        let n = w.num_tiles();
+        let tile_sec = w.tile_sectors(32) as u64;
+        let expect_kv = 2 * tile_sec * n * (n + 1) / 2;
+        let r = Simulator::new(cfg).run();
+        let kv = r.counters.tensor(TensorKind::K).sectors + r.counters.tensor(TensorKind::V).sectors;
+        assert_eq!(kv, expect_kv);
+    }
+
+    #[test]
+    fn sawtooth_reduces_misses_when_kv_exceeds_l2() {
+        // tiny device: L2 = 64 KiB; KV bytes = 2·S·64·2 = 256·S → S = 512
+        // gives 128 KiB KV = 2·L2. Each direction reversal re-hits ~L2
+        // worth of the stream, so misses drop by ≈ L2/KV minus Q/O
+        // pollution (the reduction grows as KV/L2 → 1⁺, cf. GB10's
+        // 32 MiB KV vs 24 MiB L2 in the paper).
+        let cyc = Simulator::new(small_cfg(512, false, Order::Cyclic)).run();
+        let saw = Simulator::new(small_cfg(512, false, Order::Sawtooth)).run();
+        assert_eq!(
+            cyc.counters.l2_sectors_from_tex,
+            saw.counters.l2_sectors_from_tex,
+            "reordering must not change traffic volume"
+        );
+        assert!(
+            (saw.counters.l2_miss_sectors as f64)
+                < 0.8 * cyc.counters.l2_miss_sectors as f64,
+            "sawtooth {} vs cyclic {}",
+            saw.counters.l2_miss_sectors,
+            cyc.counters.l2_miss_sectors
+        );
+    }
+
+    #[test]
+    fn fully_cached_workload_only_cold_misses() {
+        // KV + Q + O = 4·S·128 bytes; S=64 → 32 KiB < 64 KiB L2.
+        let cfg = small_cfg(64, false, Order::Cyclic);
+        let r = Simulator::new(cfg.clone()).run();
+        assert_eq!(
+            r.counters.l2_miss_sectors,
+            cold_sectors(&cfg.workload, &cfg.device)
+        );
+        assert_eq!(r.non_compulsory_misses(&cfg.workload, &cfg.device), 0);
+    }
+
+    #[test]
+    fn l1_is_pass_through_for_streaming() {
+        let cfg = small_cfg(512, false, Order::Cyclic);
+        let r = Simulator::new(cfg).run();
+        // Finding 1 of the paper: negligible L1 hits for streaming attention.
+        assert_eq!(r.counters.l1_hit_sectors, 0);
+        assert_eq!(r.counters.l1_sectors - r.counters.l1_hit_sectors,
+                   r.counters.l2_sectors_from_tex);
+    }
+
+    #[test]
+    fn exact_and_weighted_agree_on_small_workloads() {
+        for order in [Order::Cyclic, Order::Sawtooth] {
+            for causal in [false, true] {
+                let cfg = small_cfg(512, causal, order);
+                let a = Simulator::new(cfg.clone()).run();
+                let b = Simulator::new(cfg).run_exact();
+                assert_eq!(
+                    a.counters.l2_sectors_from_tex,
+                    b.counters.l2_sectors_from_tex
+                );
+                // Tile-granularity vs sector-granularity LRU may disagree
+                // slightly at eviction boundaries; require < 2% divergence.
+                let am = a.counters.l2_miss_sectors as f64;
+                let bm = b.counters.l2_miss_sectors as f64;
+                assert!(
+                    (am - bm).abs() / bm.max(1.0) < 0.02,
+                    "order={order:?} causal={causal} weighted={am} exact={bm}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nonpersistent_matches_persistent_traffic() {
+        // Paper Table 2 finding: scheduling scheme doesn't change totals.
+        let base = small_cfg(512, false, Order::Cyclic);
+        let p = Simulator::new(base.clone()).run();
+        let np =
+            Simulator::new(base.with_scheduler(SchedulerKind::NonPersistent)).run();
+        assert_eq!(
+            p.counters.l2_sectors_from_tex,
+            np.counters.l2_sectors_from_tex
+        );
+    }
+
+    #[test]
+    fn jitter_degrades_hit_rate() {
+        let sync = Simulator::new(small_cfg(1024, false, Order::Cyclic)).run();
+        let jit =
+            Simulator::new(small_cfg(1024, false, Order::Cyclic).with_jitter(0.5, 7)).run();
+        assert!(
+            jit.counters.l2_hit_rate_pct() <= sync.counters.l2_hit_rate_pct() + 1e-9,
+            "jitter {} vs sync {}",
+            jit.counters.l2_hit_rate_pct(),
+            sync.counters.l2_hit_rate_pct()
+        );
+    }
+
+    #[test]
+    fn hit_rate_grows_with_sm_count() {
+        // Finding 4 (Fig 6): more synchronized SMs → higher L2 hit rate.
+        let r1 = Simulator::new(small_cfg(1024, false, Order::Cyclic).with_sms(1)).run();
+        let r4 = Simulator::new(small_cfg(1024, false, Order::Cyclic).with_sms(4)).run();
+        assert!(
+            r4.counters.l2_hit_rate_pct() > r1.counters.l2_hit_rate_pct(),
+            "SM=4 {} <= SM=1 {}",
+            r4.counters.l2_hit_rate_pct(),
+            r1.counters.l2_hit_rate_pct()
+        );
+    }
+}

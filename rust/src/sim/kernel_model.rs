@@ -1,0 +1,330 @@
+//! FlashAttention access-stream model: the paper's Algorithm 1 (split-Q
+//! tiled forward pass) and Algorithm 4 (sawtooth KV access pattern) as a
+//! per-work-item generator of tile accesses.
+//!
+//! A *work item* is one Q tile of one (batch·head): load Q_i, stream
+//! {K_j, V_j} in traversal order, write O_i. The engine interleaves the
+//! streams of all concurrently-running CTAs to form the L2 reference
+//! stream.
+
+use super::workload::AttentionWorkload;
+
+/// KV traversal order (paper §4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Order {
+    /// Baseline: every Q tile streams KV tiles 0..Tc-1.
+    Cyclic,
+    /// Sawtooth wavefront reordering: alternate scan direction per local
+    /// iteration (Algorithm 4).
+    Sawtooth,
+}
+
+impl Order {
+    pub fn parse(s: &str) -> Option<Order> {
+        match s {
+            "cyclic" => Some(Order::Cyclic),
+            "sawtooth" => Some(Order::Sawtooth),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Order::Cyclic => "cyclic",
+            Order::Sawtooth => "sawtooth",
+        }
+    }
+}
+
+/// Which tensor a tile access touches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorKind {
+    Q = 0,
+    K = 1,
+    V = 2,
+    O = 3,
+}
+
+impl TensorKind {
+    pub const ALL: [TensorKind; 4] = [TensorKind::Q, TensorKind::K, TensorKind::V, TensorKind::O];
+    pub fn name(&self) -> &'static str {
+        match self {
+            TensorKind::Q => "Q",
+            TensorKind::K => "K",
+            TensorKind::V => "V",
+            TensorKind::O => "O",
+        }
+    }
+}
+
+/// One tile-granularity memory access emitted by a CTA.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileAccess {
+    pub tensor: TensorKind,
+    pub batch_head: u32,
+    pub tile_idx: u64,
+    pub write: bool,
+}
+
+/// Scan direction of one work item's KV loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Forward,
+    Backward,
+}
+
+/// One Q-tile task with its assigned traversal direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkItem {
+    pub batch_head: u32,
+    pub q_tile: u64,
+    pub direction: Direction,
+}
+
+/// Kernel implementation variants evaluated in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelVariant {
+    /// §4.2 raw CUDA WMMA kernel: persistent CTAs, T = 80, sawtooth via
+    /// the CTA-local iteration counter (Algorithm 4).
+    CudaWmma,
+    /// §4.3 CuTile "Fully Static": direct port of the persistent-CTA
+    /// logic, T = 64.
+    CuTileStatic,
+    /// §4.3 CuTile "Tile-based": each CTA advances the sequence loop by a
+    /// step of 2 and alternates order locally (direction = parity of the
+    /// global Q-tile index), T = 64.
+    CuTileTile,
+}
+
+impl KernelVariant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelVariant::CudaWmma => "cuda-wmma",
+            KernelVariant::CuTileStatic => "cutile-static",
+            KernelVariant::CuTileTile => "cutile-tile",
+        }
+    }
+
+    /// Work items a CTA claims per scheduling round (the tile-based CuTile
+    /// variant advances by 2).
+    pub fn items_per_claim(&self) -> u64 {
+        match self {
+            KernelVariant::CuTileTile => 2,
+            _ => 1,
+        }
+    }
+
+    /// How sawtooth direction is derived: `true` = from the global Q-tile
+    /// index parity (tile-based), `false` = from the CTA-local iteration
+    /// counter (Algorithm 4 as written).
+    pub fn global_parity(&self) -> bool {
+        matches!(self, KernelVariant::CuTileTile)
+    }
+}
+
+/// Number of KV tiles work item `q_tile` visits (causal masking skips
+/// fully-masked tiles — the paper's S(S-1)/2T access-count change).
+pub fn kv_tiles_for(w: &AttentionWorkload, q_tile: u64) -> u64 {
+    if w.causal {
+        q_tile + 1
+    } else {
+        w.num_tiles()
+    }
+}
+
+/// The j-th KV tile visited by `item` (0-based position in visit order).
+#[inline]
+pub fn kv_tile_at(w: &AttentionWorkload, item: &WorkItem, pos: u64) -> u64 {
+    let n = kv_tiles_for(w, item.q_tile);
+    debug_assert!(pos < n);
+    match item.direction {
+        Direction::Forward => pos,
+        Direction::Backward => n - 1 - pos,
+    }
+}
+
+/// Steps of one work item's execution, in program order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Step {
+    /// Load Q_i into shared memory (Algorithm 1 line 4).
+    LoadQ,
+    /// Stream one K_j/V_j pair (lines 7–11). Payload: visit position.
+    KvStep(u64),
+    /// Write O_i back (line 13).
+    StoreO,
+}
+
+/// Iterator over a work item's steps. `1 (Q) + n_kv (KV) + 1 (O)` steps.
+pub struct ItemSteps {
+    n_kv: u64,
+    pos: u64,
+}
+
+impl ItemSteps {
+    pub fn new(w: &AttentionWorkload, item: &WorkItem) -> Self {
+        ItemSteps { n_kv: kv_tiles_for(w, item.q_tile), pos: 0 }
+    }
+
+    pub fn total_steps(&self) -> u64 {
+        self.n_kv + 2
+    }
+}
+
+impl Iterator for ItemSteps {
+    type Item = Step;
+
+    fn next(&mut self) -> Option<Step> {
+        let p = self.pos;
+        self.pos += 1;
+        if p == 0 {
+            Some(Step::LoadQ)
+        } else if p <= self.n_kv {
+            Some(Step::KvStep(p - 1))
+        } else if p == self.n_kv + 1 {
+            Some(Step::StoreO)
+        } else {
+            None
+        }
+    }
+}
+
+/// Expand one step of `item` into its tile accesses (at most 2).
+pub fn step_accesses(
+    w: &AttentionWorkload,
+    item: &WorkItem,
+    step: Step,
+    out: &mut [Option<TileAccess>; 2],
+) {
+    out[0] = None;
+    out[1] = None;
+    match step {
+        Step::LoadQ => {
+            out[0] = Some(TileAccess {
+                tensor: TensorKind::Q,
+                batch_head: item.batch_head,
+                tile_idx: item.q_tile,
+                write: false,
+            });
+        }
+        Step::KvStep(pos) => {
+            let j = kv_tile_at(w, item, pos);
+            out[0] = Some(TileAccess {
+                tensor: TensorKind::K,
+                batch_head: item.batch_head,
+                tile_idx: j,
+                write: false,
+            });
+            out[1] = Some(TileAccess {
+                tensor: TensorKind::V,
+                batch_head: item.batch_head,
+                tile_idx: j,
+                write: false,
+            });
+        }
+        Step::StoreO => {
+            out[0] = Some(TileAccess {
+                tensor: TensorKind::O,
+                batch_head: item.batch_head,
+                tile_idx: item.q_tile,
+                write: true,
+            });
+        }
+    }
+}
+
+/// Reference visit order of KV tiles for a work item — the oracle the
+/// Python kernel tests (`kv_visit_order`) and the engine agree on.
+pub fn visit_order(w: &AttentionWorkload, item: &WorkItem) -> Vec<u64> {
+    let n = kv_tiles_for(w, item.q_tile);
+    let mut v: Vec<u64> = (0..n).collect();
+    if item.direction == Direction::Backward {
+        v.reverse();
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wl() -> AttentionWorkload {
+        AttentionWorkload::cuda_study(320) // 4 tiles of 80
+    }
+
+    fn item(q: u64, dir: Direction) -> WorkItem {
+        WorkItem { batch_head: 0, q_tile: q, direction: dir }
+    }
+
+    #[test]
+    fn forward_visits_in_order() {
+        let w = wl();
+        assert_eq!(visit_order(&w, &item(0, Direction::Forward)), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn backward_reverses() {
+        let w = wl();
+        assert_eq!(visit_order(&w, &item(1, Direction::Backward)), vec![3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn causal_truncates_kv_range() {
+        let w = wl().with_causal(true);
+        assert_eq!(visit_order(&w, &item(0, Direction::Forward)), vec![0]);
+        assert_eq!(visit_order(&w, &item(2, Direction::Forward)), vec![0, 1, 2]);
+        assert_eq!(visit_order(&w, &item(2, Direction::Backward)), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn steps_bracket_kv_stream() {
+        let w = wl();
+        let it = item(0, Direction::Forward);
+        let steps: Vec<Step> = ItemSteps::new(&w, &it).collect();
+        assert_eq!(steps.len(), 6); // Q + 4 KV + O
+        assert_eq!(steps[0], Step::LoadQ);
+        assert_eq!(*steps.last().unwrap(), Step::StoreO);
+    }
+
+    #[test]
+    fn kv_step_expands_to_k_then_v() {
+        let w = wl();
+        let it = item(2, Direction::Backward);
+        let mut out = [None; 2];
+        step_accesses(&w, &it, Step::KvStep(0), &mut out);
+        let k = out[0].unwrap();
+        let v = out[1].unwrap();
+        assert_eq!(k.tensor, TensorKind::K);
+        assert_eq!(v.tensor, TensorKind::V);
+        assert_eq!(k.tile_idx, 3); // backward: first visit is the last tile
+        assert_eq!(v.tile_idx, 3);
+        assert!(!k.write && !v.write);
+    }
+
+    #[test]
+    fn store_o_is_write_to_own_tile() {
+        let w = wl();
+        let it = item(1, Direction::Forward);
+        let mut out = [None; 2];
+        step_accesses(&w, &it, Step::StoreO, &mut out);
+        let o = out[0].unwrap();
+        assert_eq!(o.tensor, TensorKind::O);
+        assert_eq!(o.tile_idx, 1);
+        assert!(o.write);
+        assert!(out[1].is_none());
+    }
+
+    #[test]
+    fn variant_claim_sizes() {
+        assert_eq!(KernelVariant::CudaWmma.items_per_claim(), 1);
+        assert_eq!(KernelVariant::CuTileTile.items_per_claim(), 2);
+        assert!(KernelVariant::CuTileTile.global_parity());
+        assert!(!KernelVariant::CuTileStatic.global_parity());
+    }
+
+    #[test]
+    fn order_parse_roundtrip() {
+        assert_eq!(Order::parse("cyclic"), Some(Order::Cyclic));
+        assert_eq!(Order::parse("sawtooth"), Some(Order::Sawtooth));
+        assert_eq!(Order::parse("zigzag"), None);
+        assert_eq!(Order::Sawtooth.name(), "sawtooth");
+    }
+}

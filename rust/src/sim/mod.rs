@@ -1,0 +1,37 @@
+//! GB10 memory-hierarchy simulator — the substrate that substitutes for the
+//! paper's GB10 + Nsight Compute testbed (DESIGN.md §2).
+//!
+//! Pipeline:
+//!
+//! ```text
+//! AttentionWorkload ──► kernel_model (Alg 1+4: per-work-item tile streams)
+//!                         │
+//! Scheduler (Alg 2/3) ────┤  work items → CTAs → SMs
+//!                         ▼
+//!                    engine (wavefront round-robin interleaving)
+//!                         │  per-SM L1 (pass-through for streams)
+//!                         ▼
+//!                    shared L2 (weighted sectored LRU)
+//!                         │
+//!                         ▼
+//!               CacheCounters (ncu-style) ──► throughput model (TFLOPS)
+//! ```
+//!
+//! Everything is deterministic given the `SimConfig`, mirroring the paper's
+//! "deterministic way to study the effect of scheduling on L2 cache".
+
+pub mod cache;
+pub mod counters;
+pub mod engine;
+pub mod kernel_model;
+pub mod scheduler;
+pub mod throughput;
+pub mod workload;
+
+pub use cache::{ExactLru, WeightedLru};
+pub use counters::CacheCounters;
+pub use engine::{SimConfig, SimResult, Simulator};
+pub use kernel_model::{KernelVariant, Order, TensorKind, TileAccess};
+pub use scheduler::SchedulerKind;
+pub use throughput::{PerfProfile, ThroughputReport};
+pub use workload::AttentionWorkload;

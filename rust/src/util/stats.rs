@@ -1,0 +1,129 @@
+//! Summary statistics used by benches, the coordinator, and MAPE reporting.
+
+/// Mean absolute percentage error between `predicted` and `actual`.
+/// Entries with `actual == 0` are skipped (matches how the paper's Table 3
+/// treats the model fit).
+pub fn mape(predicted: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(predicted.len(), actual.len());
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for (&p, &a) in predicted.iter().zip(actual) {
+        if a != 0.0 {
+            sum += ((p - a) / a).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        100.0 * sum / n as f64
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile with linear interpolation, `q` in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Online latency accumulator (count/mean/min/max + reservoir for p50/p99).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+    pub fn mean(&self) -> f64 {
+        mean(&self.samples)
+    }
+    pub fn p50(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+    pub fn p99(&self) -> f64 {
+        percentile(&self.samples, 99.0)
+    }
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mape_zero_for_perfect_fit() {
+        assert_eq!(mape(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn mape_simple_case() {
+        // 10% off on one of two points -> 5% mean.
+        let m = mape(&[1.1, 2.0], &[1.0, 2.0]);
+        assert!((m - 5.0).abs() < 1e-9, "{m}");
+    }
+
+    #[test]
+    fn mape_skips_zero_actuals() {
+        let m = mape(&[5.0, 1.1], &[0.0, 1.0]);
+        assert!((m - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn stddev_of_constant_is_zero() {
+        assert_eq!(stddev(&[3.0, 3.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn latency_stats_basic() {
+        let mut s = LatencyStats::default();
+        for i in 1..=100 {
+            s.record(i as f64);
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+        assert!((s.p50() - 50.5).abs() < 1.0);
+        assert!(s.p99() > 98.0);
+        assert_eq!(s.max(), 100.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Plain-text table and ASCII chart rendering for the report harness.
+//!
+//! The paper's figures are line/bar charts; on a terminal we render the same
+//! series as aligned tables plus compact ASCII plots so "the same rows/series
+//! the paper reports" are visible at a glance.
+
+/// A simple aligned-column table.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, width) in cells.iter().zip(w) {
+                line.push_str(&format!(" {:>width$} |", c, width = width));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &w));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for width in &w {
+            sep.push_str(&"-".repeat(width + 2));
+            sep.push('|');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &w));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Render one or more named series as an ASCII line chart.
+/// `xs` is shared by all series. Height/width are character cells.
+pub fn ascii_chart(
+    title: &str,
+    xs: &[f64],
+    series: &[(&str, &[f64])],
+    width: usize,
+    height: usize,
+) -> String {
+    assert!(!xs.is_empty());
+    let markers = ['*', 'o', '+', 'x', '#', '@'];
+    let ymin = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().cloned())
+        .fold(f64::INFINITY, f64::min)
+        .min(0.0);
+    let ymax = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().cloned())
+        .fold(f64::NEG_INFINITY, f64::max);
+    let yspan = if (ymax - ymin).abs() < 1e-12 { 1.0 } else { ymax - ymin };
+    let xmin = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let xmax = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let xspan = if (xmax - xmin).abs() < 1e-12 { 1.0 } else { xmax - xmin };
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (&x, &y) in xs.iter().zip(ys.iter()) {
+            let col = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let row = (((y - ymin) / yspan) * (height - 1) as f64).round() as usize;
+            let r = height - 1 - row.min(height - 1);
+            grid[r][col.min(width - 1)] = markers[si % markers.len()];
+        }
+    }
+    let mut out = format!("{title}\n");
+    out.push_str(&format!("  y_max = {:.4e}\n", ymax));
+    for row in grid {
+        out.push_str("  |");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str("  +");
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("   x: {:.3e} .. {:.3e}   ", xmin, xmax));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("[{}] {}  ", markers[si % markers.len()], name));
+    }
+    out.push('\n');
+    out
+}
+
+/// Human-readable large numbers (e.g. 1_723_556_561 -> "1,723,556,561").
+pub fn commas(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["a", "long_header"]);
+        t.row(vec!["1", "2"]);
+        t.row(vec!["100", "2000000"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(vec!["a"]);
+        t.row(vec!["1", "2"]);
+    }
+
+    #[test]
+    fn commas_formats() {
+        assert_eq!(commas(0), "0");
+        assert_eq!(commas(999), "999");
+        assert_eq!(commas(1000), "1,000");
+        assert_eq!(commas(1723556561), "1,723,556,561");
+    }
+
+    #[test]
+    fn chart_contains_markers_and_legend() {
+        let xs = [1.0, 2.0, 3.0];
+        let a = [1.0, 2.0, 3.0];
+        let b = [3.0, 2.0, 1.0];
+        let s = ascii_chart("t", &xs, &[("up", &a), ("down", &b)], 20, 8);
+        assert!(s.contains('*') && s.contains('o'));
+        assert!(s.contains("up") && s.contains("down"));
+    }
+
+    #[test]
+    fn chart_handles_constant_series() {
+        let xs = [1.0, 2.0];
+        let a = [5.0, 5.0];
+        let _ = ascii_chart("c", &xs, &[("flat", &a)], 10, 4);
+    }
+}

@@ -1,0 +1,45 @@
+//! The shipped config files must parse into valid run configurations.
+
+use sawtooth_attn::config::{Config, ServeConfig, SimRunConfig};
+use sawtooth_attn::sim::kernel_model::{KernelVariant, Order};
+
+#[test]
+fn cuda_study_config_parses() {
+    let c = Config::load("configs/cuda_study.toml").unwrap();
+    let s = SimRunConfig::from_config(&c).unwrap();
+    assert_eq!(s.workload.seq, 131072);
+    assert_eq!(s.workload.tile, 80);
+    assert_eq!(s.variant, KernelVariant::CudaWmma);
+    assert_eq!(s.device().num_sms, 48);
+    assert_eq!(s.device().l2_bytes, 24 << 20);
+}
+
+#[test]
+fn cutile_study_config_parses() {
+    let c = Config::load("configs/cutile_study.toml").unwrap();
+    let s = SimRunConfig::from_config(&c).unwrap();
+    assert_eq!(s.workload.batch, 8);
+    assert_eq!(s.workload.tile, 64);
+    assert_eq!(s.variant, KernelVariant::CuTileStatic);
+}
+
+#[test]
+fn serve_config_parses() {
+    let c = Config::load("configs/serve.toml").unwrap();
+    let s = ServeConfig::from_config(&c).unwrap();
+    assert_eq!(s.max_batch, 4);
+    assert_eq!(s.order, Order::Sawtooth);
+    assert!(s.warmup);
+}
+
+#[test]
+fn overrides_compose_with_files() {
+    let mut c = Config::load("configs/cuda_study.toml").unwrap();
+    c.set_override("sim.order=sawtooth").unwrap();
+    c.set_override("device.sms=16").unwrap();
+    let s = SimRunConfig::from_config(&c).unwrap();
+    assert_eq!(s.order, Order::Sawtooth);
+    assert_eq!(s.device().num_sms, 16);
+    // Untouched keys keep file values.
+    assert_eq!(s.workload.tile, 80);
+}

@@ -1,0 +1,144 @@
+//! Integration tests of the serving coordinator: batching, back-pressure,
+//! correctness under concurrency, failure paths.
+
+use sawtooth_attn::config::ServeConfig;
+use sawtooth_attn::coordinator::{AttentionRequest, Engine};
+use sawtooth_attn::runtime::{attention_host_ref, default_artifacts_dir};
+use sawtooth_attn::sim::kernel_model::Order;
+use sawtooth_attn::util::rng::Rng;
+
+fn cfg() -> ServeConfig {
+    ServeConfig {
+        artifacts_dir: default_artifacts_dir().display().to_string(),
+        max_batch: 4,
+        batch_window_us: 1000,
+        order: Order::Sawtooth,
+        queue_depth: 32,
+        clients: 2,
+        warmup: false,
+    }
+}
+
+fn req(id: u64, seq: usize, causal: bool, seed: u64) -> AttentionRequest {
+    let mut rng = Rng::new(seed);
+    AttentionRequest::synthetic(id, seq, 4, 64, causal, &mut rng)
+}
+
+#[test]
+fn single_request_round_trip_is_correct() {
+    let engine = Engine::start(cfg()).expect("run `make artifacts` first");
+    let r = req(1, 128, false, 7);
+    let resp = engine.submit(r.clone()).unwrap();
+    assert_eq!(resp.id.0, 1);
+    assert_eq!(resp.output.len(), r.elems());
+    assert!(resp.artifact.contains("sawtooth"), "policy order not applied: {}", resp.artifact);
+    let reference = attention_host_ref(&r.q, &r.k, &r.v, 1, 4, 128, 64, false);
+    let max_err = resp
+        .output
+        .iter()
+        .zip(&reference)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-4, "max err {max_err}");
+}
+
+#[test]
+fn concurrent_same_shape_requests_get_batched() {
+    let engine = Engine::start(cfg()).unwrap();
+    let handles: Vec<_> = (0..8)
+        .map(|i| engine.submit_async(req(i, 256, true, 100 + i)).unwrap())
+        .collect();
+    for h in handles {
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.output.len(), 4 * 256 * 64);
+    }
+    let stats = engine.shutdown();
+    assert_eq!(stats.completed, 8);
+    assert!(
+        stats.mean_batch_size() > 1.0,
+        "expected coalescing, got mean batch {}",
+        stats.mean_batch_size()
+    );
+    // Batched dispatches must use the B=4 artifacts.
+    assert!(stats.batches < 8);
+}
+
+#[test]
+fn mixed_shapes_are_partitioned_not_mixed() {
+    let engine = Engine::start(cfg()).unwrap();
+    let a = engine.submit_async(req(1, 128, false, 1)).unwrap();
+    let b = engine.submit_async(req(2, 256, false, 2)).unwrap();
+    let c = engine.submit_async(req(3, 128, true, 3)).unwrap();
+    let ra = a.wait().unwrap();
+    let rb = b.wait().unwrap();
+    let rc = c.wait().unwrap();
+    assert!(ra.artifact.contains("s128") && ra.artifact.contains("full"));
+    assert!(rb.artifact.contains("s256"));
+    assert!(rc.artifact.contains("causal"));
+}
+
+#[test]
+fn unsupported_seq_len_fails_cleanly() {
+    let engine = Engine::start(cfg()).unwrap();
+    let r = req(9, 192, false, 4); // 192 is not an AOT shape
+    let err = engine.submit(r).unwrap_err();
+    assert!(format!("{err:#}").contains("no attention artifact"), "{err:#}");
+    let stats = engine.shutdown();
+    assert_eq!(stats.failed, 1);
+    assert_eq!(stats.completed, 0);
+}
+
+#[test]
+fn back_pressure_rejects_when_queue_full() {
+    let mut c = cfg();
+    c.queue_depth = 1;
+    c.batch_window_us = 50_000; // slow pipeline so the queue backs up
+    let engine = Engine::start(c).unwrap();
+    let mut rejected = 0;
+    let mut handles = Vec::new();
+    for i in 0..50 {
+        match engine.submit_async(req(i, 128, false, i)) {
+            Ok(h) => handles.push(h),
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "expected back-pressure with queue_depth=1");
+    for h in handles {
+        h.wait().unwrap();
+    }
+    let stats = engine.shutdown();
+    assert_eq!(stats.rejected, rejected);
+}
+
+#[test]
+fn cyclic_policy_selects_cyclic_artifacts() {
+    let mut c = cfg();
+    c.order = Order::Cyclic;
+    let engine = Engine::start(c).unwrap();
+    let resp = engine.submit(req(1, 128, false, 5)).unwrap();
+    assert!(resp.artifact.contains("cyclic"));
+}
+
+#[test]
+fn stats_account_for_every_request() {
+    let engine = Engine::start(cfg()).unwrap();
+    let handles: Vec<_> = (0..12)
+        .map(|i| engine.submit_async(req(i, if i % 2 == 0 { 128 } else { 256 }, false, i)))
+        .collect::<Result<_, _>>()
+        .unwrap();
+    for h in handles {
+        h.wait().unwrap();
+    }
+    let stats = engine.shutdown();
+    assert_eq!(stats.submitted, 12);
+    assert_eq!(stats.completed, 12);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.latency.count(), 12);
+    let hist_total: u64 = stats
+        .batch_size_hist
+        .iter()
+        .enumerate()
+        .map(|(size, n)| size as u64 * n)
+        .sum();
+    assert_eq!(hist_total, 12, "histogram must account for all requests");
+}
