@@ -1,0 +1,26 @@
+# Convenience targets. The Rust workspace builds hermetically (vendored
+# deps); the artifacts target needs a Python environment with JAX.
+
+.PHONY: build test bench artifacts report clean
+
+build:
+	cd rust && cargo build --release
+
+# Tier-1 verification.
+test:
+	cd rust && cargo build --release && cargo test -q
+
+bench:
+	cd rust && cargo bench
+
+# Lower the Pallas/JAX attention variants to HLO text + manifest.tsv.
+# Without this, the Rust runtime serves from a synthetic manifest via the
+# host reference executor (see rust/src/runtime/mod.rs).
+artifacts:
+	cd python && PYTHONPATH=. python3 -m compile.aot --out-dir ../rust/artifacts
+
+report:
+	cd rust && cargo run --release --bin sawtooth -- report all
+
+clean:
+	cd rust && cargo clean

@@ -1,7 +1,10 @@
-//! Quickstart: load an AOT attention artifact, run it on the PJRT CPU
-//! client from Rust, and check the numerics against a host reference.
+//! Quickstart: load an AOT attention artifact, execute it through the Rust
+//! runtime, and check the numerics against a host reference. Runs
+//! hermetically (synthetic manifest + host executor) when no artifacts
+//! directory exists.
 //!
-//! Run with: `make artifacts && cargo run --release --example quickstart`
+//! Run with: `cargo run --release --example quickstart`
+//! (optionally `make artifacts` first to serve from real AOT metadata)
 
 use anyhow::Result;
 
@@ -12,7 +15,7 @@ fn main() -> Result<()> {
     let dir = default_artifacts_dir();
     println!("opening artifacts at {}", dir.display());
     let mut rt = Runtime::open(&dir)?;
-    println!("PJRT platform: {}", rt.platform_name());
+    println!("runtime platform: {}", rt.platform_name());
 
     // Pick the smallest sawtooth variant: the paper's optimization, as the
     // serving engine would select it.
@@ -35,12 +38,15 @@ fn main() -> Result<()> {
     let mut gen = || -> Vec<f32> { (0..n).map(|_| rng.next_gaussian() as f32 * 0.5).collect() };
     let (q, k, v) = (gen(), gen(), gen());
 
-    // Execute the Pallas-kernel-backed HLO via PJRT.
+    // Execute the artifact through the runtime's host executor.
     let t0 = std::time::Instant::now();
     let out = rt.execute_attention(&meta.name, &q, &k, &v)?;
     println!("executed in {:?} ({} output elements)", t0.elapsed(), out.len());
 
-    // Validate against the host oracle.
+    // Validate against the host oracle. Note: in hermetic mode the runtime
+    // *executes* with the host oracle, so this only exercises the routing /
+    // batching plumbing, not independent numerics — say so rather than
+    // claiming a vacuous check.
     let reference = attention_host_ref(
         &q, &k, &v, meta.batch, meta.heads, meta.seq, meta.head_dim, meta.causal,
     );
@@ -49,7 +55,14 @@ fn main() -> Result<()> {
         .zip(&reference)
         .map(|(a, b)| (a - b).abs())
         .fold(0f32, f32::max);
-    println!("max |pjrt - host_ref| = {max_err:.2e}");
+    if rt.is_synthetic() {
+        println!(
+            "max |runtime - host_ref| = {max_err:.2e} (hermetic mode: runtime *is* the \
+             host oracle — this checks plumbing, not independent numerics)"
+        );
+    } else {
+        println!("max |runtime - host_ref| = {max_err:.2e}");
+    }
     assert!(max_err < 1e-4, "numerics mismatch: {max_err}");
 
     // And the sawtooth artifact must agree with the cyclic one.
@@ -63,6 +76,10 @@ fn main() -> Result<()> {
     println!("max |sawtooth - cyclic| = {max_diff:.2e} (pure fp reassociation)");
     assert!(max_diff < 1e-4);
 
-    println!("quickstart OK — three-layer stack (Pallas → HLO → PJRT → Rust) verified");
+    if rt.is_synthetic() {
+        println!("quickstart OK — manifest → runtime plumbing verified (hermetic mode)");
+    } else {
+        println!("quickstart OK — artifact manifest → runtime → numerics verified");
+    }
     Ok(())
 }

@@ -1,0 +1,73 @@
+//! Sweep-executor benchmark: sequential vs parallel wall-clock on a
+//! representative report grid, plus the memoized re-run. Emits
+//! `BENCH_sweep.json` (in the crate directory) with the raw timings so the
+//! speedup is recorded machine-readably (EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
+
+use sawtooth_attn::sim::kernel_model::Order;
+use sawtooth_attn::sim::sweep::{SweepExecutor, SweepGrid};
+use sawtooth_attn::sim::workload::AttentionWorkload;
+use sawtooth_attn::sim::SimConfig;
+
+fn grid() -> Vec<SimConfig> {
+    // A report-shaped workload: the §3 CUDA study across seq × order × SMs.
+    // 24 distinct configurations, each heavy enough (≥8K tokens) that the
+    // fan-out dominates thread-pool overhead.
+    let base = SimConfig::cuda_study(AttentionWorkload::cuda_study(8 * 1024));
+    SweepGrid::new(base)
+        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .sms(&[12, 48])
+        .seqs(&[8 * 1024, 16 * 1024, 24 * 1024, 32 * 1024, 40 * 1024, 48 * 1024])
+        .build("bench-grid")
+        .configs
+}
+
+fn time_run(threads: usize, configs: &[SimConfig]) -> (f64, usize) {
+    let exec = SweepExecutor::new(threads);
+    let t0 = Instant::now();
+    let results = exec.run_all(configs);
+    (t0.elapsed().as_secs_f64(), results.len())
+}
+
+fn main() {
+    println!("== bench_sweep: sequential vs parallel sweep execution ==");
+    let configs = grid();
+    let host_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    let (seq_s, n) = time_run(1, &configs);
+    println!("bench sweep/sequential ({n} configs)              {seq_s:>10.3}s");
+
+    let (par_s, _) = time_run(host_threads, &configs);
+    let speedup = seq_s / par_s;
+    println!(
+        "bench sweep/parallel x{host_threads} threads                  {par_s:>10.3}s  (speedup {speedup:.2}x)"
+    );
+
+    // Memoized re-run on a warm executor: the cross-experiment /
+    // policy-probe case.
+    let warm = SweepExecutor::new(host_threads);
+    warm.run_all(&configs);
+    let t0 = Instant::now();
+    warm.run_all(&configs);
+    let memo_s = t0.elapsed().as_secs_f64();
+    println!("bench sweep/memoized re-run                        {memo_s:>10.6}s");
+
+    let json = format!(
+        "{{\n  \"bench\": \"sweep_executor\",\n  \"grid\": \"cuda_study seq(8K..48K) x order x sms(12,48)\",\n  \"configs\": {},\n  \"threads\": {},\n  \"sequential_s\": {:.6},\n  \"parallel_s\": {:.6},\n  \"speedup\": {:.3},\n  \"memoized_rerun_s\": {:.6}\n}}\n",
+        configs.len(),
+        host_threads,
+        seq_s,
+        par_s,
+        speedup,
+        memo_s
+    );
+    let path = "BENCH_sweep.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    print!("{json}");
+}

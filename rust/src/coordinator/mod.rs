@@ -12,7 +12,8 @@
 //! * [`Engine`] — bounded submission queue (back-pressure), a pipeline
 //!   thread running batcher + PJRT executor, and latency/throughput stats.
 //!
-//! Python never runs here: the engine executes the HLO artifacts via PJRT.
+//! Python never runs here: the engine executes artifacts via the runtime's
+//! host backend (see [`crate::runtime`]).
 
 pub mod batcher;
 pub mod policy;
@@ -66,9 +67,9 @@ pub struct Engine {
 impl Engine {
     /// Start the engine and spawn the pipeline thread (batcher + executor).
     ///
-    /// The PJRT client is `!Send` (it holds an `Rc` internally), so the
-    /// runtime is opened *inside* the pipeline thread; startup errors are
-    /// reported back synchronously through a one-shot channel.
+    /// The runtime is opened *inside* the pipeline thread (it is owned by
+    /// the pipeline for its whole life); startup errors are reported back
+    /// synchronously through a one-shot channel.
     pub fn start(cfg: ServeConfig) -> Result<Engine> {
         let policy = SchedulePolicy::new(cfg.order);
         let stats = Arc::new(Mutex::new(EngineStats::default()));
@@ -208,12 +209,38 @@ fn pipeline_loop(
             .unzip();
         let plans = batcher.plan(reqs);
         for mut plan in plans {
+            // Admission-time cost hint: what the paper's GB10 would do for
+            // this dispatch shape under each traversal order. The policy
+            // probe is memoized per shape (sim::sweep), so only the first
+            // dispatch of a shape pays for a simulation — and only
+            // serving-scale shapes are probed at all: a research-scale
+            // sequence would block the pipeline thread for seconds.
+            const COST_HINT_MAX_SEQ: usize = 8192;
+            let hint = {
+                let first = &plan.requests[0].req;
+                if first.seq <= COST_HINT_MAX_SEQ {
+                    Some(policy.cost_hint(&crate::sim::workload::AttentionWorkload {
+                        batch: plan.batch_padded as u32,
+                        heads: first.heads as u32,
+                        seq: first.seq as u64,
+                        head_dim: first.head_dim as u32,
+                        elem_bytes: 2,
+                        tile: 64,
+                        causal: first.causal,
+                    }))
+                } else {
+                    None
+                }
+            };
             let t0 = Instant::now();
             let result = execute_plan(&mut runtime, &policy, &mut plan);
             let exec_elapsed = t0.elapsed();
             let mut st = stats.lock().unwrap();
             st.batches += 1;
             st.record_batch_size(plan.requests.len());
+            if let Some(h) = &hint {
+                st.record_cost_hint(h.speedup);
+            }
             match result {
                 Ok(outputs) => {
                     for (req, out) in plan.requests.into_iter().zip(outputs) {
@@ -249,8 +276,8 @@ fn pipeline_loop(
     }
 }
 
-/// Execute one batch plan on the PJRT runtime; returns per-request outputs
-/// and records the chosen artifact on the plan.
+/// Execute one batch plan on the artifact runtime; returns per-request
+/// outputs and records the chosen artifact on the plan.
 fn execute_plan(
     runtime: &mut Runtime,
     policy: &SchedulePolicy,

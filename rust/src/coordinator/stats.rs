@@ -18,11 +18,24 @@ pub struct EngineStats {
     pub latency: LatencyStats,
     /// Executor time attributed per request, seconds.
     pub exec_time_s: f64,
+    /// Policy cost hints computed (one per dispatched plan; memoized per
+    /// shape by the policy probe, so repeats cost nothing).
+    pub cost_hints: u64,
+    /// Running mean of the estimated sawtooth-over-cyclic speedup across
+    /// dispatched plans.
+    pub mean_est_speedup: f64,
 }
 
 impl EngineStats {
     pub fn record_batch_size(&mut self, n: usize) {
         self.batch_size_hist[n.min(16)] += 1;
+    }
+
+    /// Fold one policy cost hint into the running mean.
+    pub fn record_cost_hint(&mut self, est_speedup: f64) {
+        self.cost_hints += 1;
+        let n = self.cost_hints as f64;
+        self.mean_est_speedup += (est_speedup - self.mean_est_speedup) / n;
     }
 
     /// Mean requests per dispatch.
@@ -35,7 +48,7 @@ impl EngineStats {
 
     /// Render a human-readable summary block.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests: {} submitted, {} completed, {} failed, {} rejected\n\
              batches:  {} dispatches, mean size {:.2}\n\
              latency:  p50 {:.2} ms, p99 {:.2} ms, max {:.2} ms (n={})",
@@ -49,7 +62,14 @@ impl EngineStats {
             self.latency.p99(),
             self.latency.max(),
             self.latency.count(),
-        )
+        );
+        if self.cost_hints > 0 {
+            s.push_str(&format!(
+                "\npolicy:   {} cost hints, mean est. sawtooth speedup {:.2}x",
+                self.cost_hints, self.mean_est_speedup
+            ));
+        }
+        s
     }
 }
 
@@ -74,6 +94,16 @@ mod tests {
         s.batches = 2;
         s.completed = 6;
         assert_eq!(s.mean_batch_size(), 3.0);
+    }
+
+    #[test]
+    fn cost_hint_running_mean() {
+        let mut s = EngineStats::default();
+        s.record_cost_hint(1.0);
+        s.record_cost_hint(2.0);
+        assert_eq!(s.cost_hints, 2);
+        assert!((s.mean_est_speedup - 1.5).abs() < 1e-12);
+        assert!(s.summary().contains("2 cost hints"));
     }
 
     #[test]

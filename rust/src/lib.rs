@@ -12,8 +12,10 @@
 //!   paper's GB10 + Nsight Compute testbed (see DESIGN.md §2).
 //! * [`l2model`] — the paper's closed-form L2 sector-access model plus a
 //!   Mattson reuse-distance (LRU stack) profiler.
-//! * [`runtime`] — a PJRT executor that loads the AOT HLO artifacts
-//!   produced by `python/compile/aot.py` and runs them on the CPU client.
+//! * [`runtime`] — loads the AOT artifact manifest produced by
+//!   `python/compile/aot.py` and executes artifacts through a host
+//!   reference backend (hermetic: synthesizes the serving grid when no
+//!   artifacts exist on disk).
 //! * [`coordinator`] — an attention serving engine (request queue, dynamic
 //!   batcher, schedule policy, worker pool) whose scheduling policy is the
 //!   paper's contribution: sawtooth wavefront reordering as a first-class
@@ -34,4 +36,5 @@ pub mod sim;
 pub mod util;
 
 pub use gb10::DeviceSpec;
+pub use sim::sweep::{SweepExecutor, SweepSpec};
 pub use sim::workload::AttentionWorkload;

@@ -71,6 +71,8 @@ COMMON OPTIONS:
   --set key=value        override one config key (repeatable)
   --seq N --tile T --batch B --heads H --causal --order cyclic|sawtooth
   --sms N                active SM count (simulate/estimate)
+  --threads N            sweep worker threads for report (default: host
+                         cores; output is byte-identical at any N)
   --requests N --clients N --max-batch N   (serve)
 ";
 
@@ -142,8 +144,17 @@ fn build_config(flags: &[(String, String)]) -> Result<Config> {
 }
 
 fn cmd_report(args: &[String]) -> Result<()> {
-    let exp = args.first().map(String::as_str).unwrap_or("all");
-    let out = report::run(exp)?;
+    let (flags, pos) = parse_flags(args)?;
+    let exp = pos.first().map(String::as_str).unwrap_or("all");
+    // Default to the host's core count; output is byte-identical to the
+    // sequential run at any thread count (see sim::sweep).
+    let threads = match flag(&flags, "threads") {
+        Some(v) => v
+            .parse::<usize>()
+            .with_context(|| format!("--threads expects an integer, got '{v}'"))?,
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    };
+    let out = report::run_threaded(exp, threads)?;
     print!("{out}");
     Ok(())
 }

@@ -15,12 +15,24 @@ use crate::l2model::reuse::ReuseProfiler;
 use crate::sim::cache::block_key;
 use crate::sim::engine::cold_sectors;
 use crate::sim::kernel_model::{kv_tile_at, kv_tiles_for, Direction, Order, WorkItem};
+use crate::sim::sweep::SweepExecutor;
 use crate::sim::workload::AttentionWorkload;
-use crate::sim::{SimConfig, Simulator};
+use crate::sim::SimConfig;
 use crate::util::table::{commas, Table};
 
-pub fn tile_sweep() -> String {
+const TILE_SWEEP_TILES: &[u32] = &[32, 48, 64, 80, 96, 128];
+
+pub fn tile_sweep(exec: &SweepExecutor) -> String {
     // Fixed S=64K, shrink L2 to 8 MiB so KV (16 MiB) exceeds it for all T.
+    let mut configs = Vec::new();
+    for &tile in TILE_SWEEP_TILES {
+        let w = AttentionWorkload::cuda_study(61440).with_tile(tile); // 61440 = lcm-friendly
+        let mut cfg = SimConfig::cuda_study(w);
+        cfg.device = DeviceSpec::gb10_with_l2(8 * 1024 * 1024);
+        configs.push(cfg.clone());
+        configs.push(cfg.with_order(Order::Sawtooth));
+    }
+    let results = exec.run_all(&configs);
     let mut t = Table::new(vec![
         "T",
         "KV tiles",
@@ -28,12 +40,10 @@ pub fn tile_sweep() -> String {
         "sawtooth misses",
         "reduction %",
     ]);
-    for tile in [32u32, 48, 64, 80, 96, 128] {
-        let w = AttentionWorkload::cuda_study(61440).with_tile(tile); // 61440 = lcm-friendly
-        let mut cfg = SimConfig::cuda_study(w);
-        cfg.device = DeviceSpec::gb10_with_l2(8 * 1024 * 1024);
-        let cyc = Simulator::new(cfg.clone()).run();
-        let saw = Simulator::new(cfg.with_order(Order::Sawtooth)).run();
+    for (i, &tile) in TILE_SWEEP_TILES.iter().enumerate() {
+        let w = AttentionWorkload::cuda_study(61440).with_tile(tile);
+        let cyc = &results[2 * i];
+        let saw = &results[2 * i + 1];
         let red = 100.0
             * (1.0 - saw.counters.l2_miss_sectors as f64 / cyc.counters.l2_miss_sectors as f64);
         t.row(vec![
@@ -56,8 +66,17 @@ pub fn tile_sweep() -> String {
     )
 }
 
-pub fn jitter_sweep() -> String {
+const JITTER_SWEEP_POINTS: &[f64] = &[0.0, 0.05, 0.1, 0.2, 0.4, 0.6];
+
+pub fn jitter_sweep(exec: &SweepExecutor) -> String {
     let w = AttentionWorkload::cuda_study(96 * 1024); // just past the threshold
+    let mut configs = Vec::new();
+    for &jitter in JITTER_SWEEP_POINTS {
+        let cfg = SimConfig::cuda_study(w).with_jitter(jitter, 99);
+        configs.push(cfg.clone());
+        configs.push(cfg.with_order(Order::Sawtooth));
+    }
+    let results = exec.run_all(&configs);
     let mut t = Table::new(vec![
         "jitter",
         "cyclic hit %",
@@ -65,10 +84,9 @@ pub fn jitter_sweep() -> String {
         "sawtooth misses",
         "sawtooth gain %",
     ]);
-    for jitter in [0.0, 0.05, 0.1, 0.2, 0.4, 0.6] {
-        let cfg = SimConfig::cuda_study(w).with_jitter(jitter, 99);
-        let cyc = Simulator::new(cfg.clone()).run();
-        let saw = Simulator::new(cfg.with_order(Order::Sawtooth)).run();
+    for (i, &jitter) in JITTER_SWEEP_POINTS.iter().enumerate() {
+        let cyc = &results[2 * i];
+        let saw = &results[2 * i + 1];
         let gain = 100.0
             * (1.0 - saw.counters.l2_miss_sectors as f64 / cyc.counters.l2_miss_sectors as f64);
         t.row(vec![
@@ -90,7 +108,7 @@ pub fn jitter_sweep() -> String {
     )
 }
 
-pub fn capacity_sweep() -> String {
+pub fn capacity_sweep(exec: &SweepExecutor) -> String {
     let dev0 = DeviceSpec::gb10();
     let mut t = Table::new(vec![
         "L2 MiB",
@@ -101,12 +119,15 @@ pub fn capacity_sweep() -> String {
     for l2_mib in [12u64, 16, 20, 24] {
         let dev = DeviceSpec::gb10_with_l2(l2_mib << 20);
         // Find the first S (multiple of 8K) with non-compulsory misses.
+        // The search is inherently sequential (stops at the first hit), so
+        // it goes through the executor's memoizer one config at a time —
+        // the l2=24 MiB column shares every simulation with Table 3/Fig 5.
         let mut found = None;
         for sk in (8..=160).step_by(8) {
             let w = AttentionWorkload::cuda_study(sk * 1024);
             let mut cfg = SimConfig::cuda_study(w);
             cfg.device = dev.clone();
-            let r = Simulator::new(cfg).run();
+            let r = exec.run_one(&cfg);
             if r.counters.l2_miss_sectors > cold_sectors(&w, &dev) {
                 found = Some((sk, w.kv_bytes() >> 20));
                 break;
@@ -210,7 +231,7 @@ mod tests {
         if cfg!(debug_assertions) {
             return; // too heavy for debug test runs
         }
-        let s = jitter_sweep();
+        let s = jitter_sweep(&SweepExecutor::host_sized());
         assert!(s.contains("jitter"));
     }
 }

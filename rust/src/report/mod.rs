@@ -5,6 +5,14 @@
 //! paper's published values alongside where the paper states them, so the
 //! paper-vs-measured comparison in EXPERIMENTS.md is reproducible with one
 //! command (`sawtooth report all`).
+//!
+//! Execution goes through the sweep subsystem ([`crate::sim::sweep`]): each
+//! experiment declares its grid of `SimConfig`s and a [`SweepExecutor`]
+//! runs them — in parallel when the caller asks for threads (`--threads N`
+//! on the CLI), memoized so configurations shared between experiments
+//! (Table 3 ⊃ Figs 3–4, Fig 6 ∋ Table 1's SM=48 point, …) are simulated
+//! once per invocation. Results are consumed in declaration order, so the
+//! rendered output is byte-identical at any thread count.
 
 pub mod ablations;
 
@@ -15,9 +23,10 @@ use crate::l2model;
 use crate::sim::engine::cold_sectors;
 use crate::sim::kernel_model::{KernelVariant, Order};
 use crate::sim::scheduler::SchedulerKind;
+use crate::sim::sweep::SweepExecutor;
 use crate::sim::throughput::{estimate, PerfProfile};
 use crate::sim::workload::AttentionWorkload;
-use crate::sim::{SimConfig, SimResult, Simulator};
+use crate::sim::SimConfig;
 use crate::util::table::{ascii_chart, commas, Table};
 
 /// All known experiment ids, in paper order.
@@ -30,40 +39,62 @@ pub const EXPERIMENTS: &[&str] = &[
 /// `report ablations`.
 pub const ABLATIONS: &[&str] = &["abl-tile", "abl-jitter", "abl-capacity", "abl-reuse"];
 
-/// Run one experiment (or "all") and return the rendered report.
+/// Run one experiment (or "all") sequentially and return the rendered
+/// report. Equivalent to [`run_threaded`] with one thread.
 pub fn run(experiment: &str) -> Result<String> {
+    run_with(experiment, &SweepExecutor::new(1))
+}
+
+/// Run one experiment (or "all") on a thread pool of the given width.
+/// Output is byte-identical to [`run`] for every experiment id.
+pub fn run_threaded(experiment: &str, threads: usize) -> Result<String> {
+    run_with(experiment, &SweepExecutor::new(threads))
+}
+
+/// Run one experiment against a caller-provided executor (shared executors
+/// memoize simulations across calls).
+pub fn run_with(experiment: &str, exec: &SweepExecutor) -> Result<String> {
     match experiment {
-        "table1" => Ok(table_counters(SchedulerKind::Persistent)),
-        "table2" => Ok(table_counters(SchedulerKind::NonPersistent)),
-        "table3" => Ok(table3_mape()),
-        "fig1" => Ok(fig_l1l2_vs_sm(32 * 1024, "Figure 1")),
-        "fig2" => Ok(fig_l1l2_vs_sm(128 * 1024, "Figure 2")),
-        "fig3" => Ok(fig_sectors_vs_seq(false, "Figure 3")),
-        "fig4" => Ok(fig_sectors_vs_seq(true, "Figure 4")),
-        "fig5" => Ok(fig5_miss_vs_seq()),
-        "fig6" => Ok(fig6_miss_hitrate_vs_sm()),
-        "fig7" => Ok(fig78_cuda(true)),
-        "fig8" => Ok(fig78_cuda(false)),
-        "fig9" => Ok(fig_cutile(false, false, "Figure 9")),
-        "fig10" => Ok(fig_cutile(false, true, "Figure 10")),
-        "fig11" => Ok(fig_cutile(true, false, "Figure 11")),
-        "fig12" => Ok(fig_cutile(true, true, "Figure 12")),
-        "abl-tile" => Ok(ablations::tile_sweep()),
-        "abl-jitter" => Ok(ablations::jitter_sweep()),
-        "abl-capacity" => Ok(ablations::capacity_sweep()),
+        "table1" => Ok(table_counters(SchedulerKind::Persistent, exec)),
+        "table2" => Ok(table_counters(SchedulerKind::NonPersistent, exec)),
+        "table3" => Ok(table3_mape(exec)),
+        "fig1" => Ok(fig_l1l2_vs_sm(32 * 1024, "Figure 1", exec)),
+        "fig2" => Ok(fig_l1l2_vs_sm(128 * 1024, "Figure 2", exec)),
+        "fig3" => Ok(fig_sectors_vs_seq(false, "Figure 3", exec)),
+        "fig4" => Ok(fig_sectors_vs_seq(true, "Figure 4", exec)),
+        "fig5" => Ok(fig5_miss_vs_seq(exec)),
+        "fig6" => Ok(fig6_miss_hitrate_vs_sm(exec)),
+        "fig7" => Ok(fig78_cuda(true, exec)),
+        "fig8" => Ok(fig78_cuda(false, exec)),
+        "fig9" => Ok(fig_cutile(false, false, "Figure 9", exec)),
+        "fig10" => Ok(fig_cutile(false, true, "Figure 10", exec)),
+        "fig11" => Ok(fig_cutile(true, false, "Figure 11", exec)),
+        "fig12" => Ok(fig_cutile(true, true, "Figure 12", exec)),
+        "abl-tile" => Ok(ablations::tile_sweep(exec)),
+        "abl-jitter" => Ok(ablations::jitter_sweep(exec)),
+        "abl-capacity" => Ok(ablations::capacity_sweep(exec)),
         "abl-reuse" => Ok(ablations::reuse_histogram()),
         "ablations" => {
             let mut out = String::new();
             for e in ABLATIONS {
-                out.push_str(&run(e)?);
+                out.push_str(&run_with(e, exec)?);
                 out.push('\n');
             }
             Ok(out)
         }
         "all" => {
+            // Warm the cache with the union grid of every experiment in one
+            // parallel wave, then render each experiment from cache hits.
+            // This parallelizes across experiment boundaries, not just
+            // within one figure's sweep.
+            let mut union: Vec<SimConfig> = Vec::new();
+            for e in EXPERIMENTS {
+                union.extend(experiment_configs(e));
+            }
+            exec.run_all(&union);
             let mut out = String::new();
             for e in EXPERIMENTS {
-                out.push_str(&run(e)?);
+                out.push_str(&run_with(e, exec)?);
                 out.push('\n');
             }
             Ok(out)
@@ -75,15 +106,40 @@ pub fn run(experiment: &str) -> Result<String> {
     }
 }
 
-fn run_sim(cfg: SimConfig) -> SimResult {
-    Simulator::new(cfg).run()
+/// The declarative grid behind an experiment id (empty for experiments that
+/// run no simulations). Used to prefetch the union grid for `report all`.
+pub fn experiment_configs(experiment: &str) -> Vec<SimConfig> {
+    match experiment {
+        "table1" => table_counters_configs(SchedulerKind::Persistent),
+        "table2" => table_counters_configs(SchedulerKind::NonPersistent),
+        "table3" => table3_configs(),
+        "fig1" => fig_l1l2_vs_sm_configs(32 * 1024),
+        "fig2" => fig_l1l2_vs_sm_configs(128 * 1024),
+        "fig3" => fig_sectors_vs_seq_configs(false),
+        "fig4" => fig_sectors_vs_seq_configs(true),
+        "fig5" => fig5_configs(),
+        "fig6" => fig6_configs(),
+        "fig7" | "fig8" => fig78_configs(),
+        "fig9" | "fig10" => fig_cutile_configs(false),
+        "fig11" | "fig12" => fig_cutile_configs(true),
+        _ => Vec::new(),
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Tables 1–2: L1/L2 cache counters, SM=48, S ∈ {32K, 128K}.
 // ---------------------------------------------------------------------------
 
-fn table_counters(sched: SchedulerKind) -> String {
+fn table_counters_configs(sched: SchedulerKind) -> Vec<SimConfig> {
+    [32u64 * 1024, 128 * 1024]
+        .iter()
+        .map(|&seq| {
+            SimConfig::cuda_study(AttentionWorkload::cuda_study(seq)).with_scheduler(sched)
+        })
+        .collect()
+}
+
+fn table_counters(sched: SchedulerKind, exec: &SweepExecutor) -> String {
     // Paper reference values.
     let paper: [[u64; 2]; 4] = if sched == SchedulerKind::Persistent {
         [
@@ -101,12 +157,7 @@ fn table_counters(sched: SchedulerKind) -> String {
         ]
     };
 
-    let mut results = Vec::new();
-    for seq in [32u64 * 1024, 128 * 1024] {
-        let w = AttentionWorkload::cuda_study(seq);
-        let cfg = SimConfig::cuda_study(w).with_scheduler(sched);
-        results.push(run_sim(cfg));
-    }
+    let results = exec.run_all(&table_counters_configs(sched));
 
     let title = if sched == SchedulerKind::Persistent {
         "Table 1: L1/L2 Cache Counters for SM=48 (persistent CTA)"
@@ -120,7 +171,7 @@ fn table_counters(sched: SchedulerKind) -> String {
         "128K sim",
         "128K paper",
     ]);
-    let rows: [(&str, fn(&SimResult) -> u64); 4] = [
+    let rows: [(&str, fn(&crate::sim::SimResult) -> u64); 4] = [
         ("L2 Sectors (Total)", |r| r.counters.l2_sectors_total()),
         ("L2 Sectors (from Tex)", |r| r.counters.l2_sectors_from_tex),
         ("L1 Sectors (Total)", |r| r.counters.l1_sectors),
@@ -147,16 +198,32 @@ fn table_counters(sched: SchedulerKind) -> String {
 // Table 3: MAPE of the closed-form model vs the simulator, SM=48.
 // ---------------------------------------------------------------------------
 
-fn table3_mape() -> String {
-    let seqs: Vec<u64> = (1..=16).map(|i| i * 8 * 1024).collect();
-    let mut rows = Vec::new(); // (causal, total/tex) → (pred, actual)
+fn table3_seqs() -> Vec<u64> {
+    (1..=16).map(|i| i * 8 * 1024).collect()
+}
+
+fn table3_configs() -> Vec<SimConfig> {
+    let mut configs = Vec::new();
     for &causal in &[false, true] {
+        for &s in &table3_seqs() {
+            let w = AttentionWorkload::cuda_study(s).with_causal(causal);
+            configs.push(SimConfig::cuda_study(w));
+        }
+    }
+    configs
+}
+
+fn table3_mape(exec: &SweepExecutor) -> String {
+    let seqs = table3_seqs();
+    let results = exec.run_all(&table3_configs());
+    let mut rows = Vec::new(); // (causal, total/tex) → (pred, actual)
+    for (ci, &causal) in [false, true].iter().enumerate() {
         let mut pred = Vec::new();
         let mut act_total = Vec::new();
         let mut act_tex = Vec::new();
-        for &s in &seqs {
+        for (si, &s) in seqs.iter().enumerate() {
             let w = AttentionWorkload::cuda_study(s).with_causal(causal);
-            let r = run_sim(SimConfig::cuda_study(w));
+            let r = &results[ci * seqs.len() + si];
             pred.push(l2model::sectors_model(&w, 32));
             act_total.push(r.counters.l2_sectors_total() as f64);
             act_tex.push(r.counters.l2_sectors_from_tex as f64);
@@ -189,8 +256,18 @@ fn table3_mape() -> String {
 // Figures 1–2: L1/L2 metrics vs SM count.
 // ---------------------------------------------------------------------------
 
-fn fig_l1l2_vs_sm(seq: u64, title: &str) -> String {
-    let sms: Vec<u32> = vec![1, 2, 4, 8, 12, 16, 24, 32, 40, 48];
+const FIG12_SMS: &[u32] = &[1, 2, 4, 8, 12, 16, 24, 32, 40, 48];
+
+fn fig_l1l2_vs_sm_configs(seq: u64) -> Vec<SimConfig> {
+    FIG12_SMS
+        .iter()
+        .map(|&n| SimConfig::cuda_study(AttentionWorkload::cuda_study(seq)).with_sms(n))
+        .collect()
+}
+
+fn fig_l1l2_vs_sm(seq: u64, title: &str, exec: &SweepExecutor) -> String {
+    let sms = FIG12_SMS;
+    let results = exec.run_all(&fig_l1l2_vs_sm_configs(seq));
     let mut t = Table::new(vec![
         "SMs",
         "L1 sectors",
@@ -201,9 +278,8 @@ fn fig_l1l2_vs_sm(seq: u64, title: &str) -> String {
     ]);
     let mut xs = Vec::new();
     let mut tex = Vec::new();
-    for &n in &sms {
-        let w = AttentionWorkload::cuda_study(seq);
-        let r = run_sim(SimConfig::cuda_study(w).with_sms(n));
+    for (i, &n) in sms.iter().enumerate() {
+        let r = &results[i];
         xs.push(n as f64);
         tex.push(r.counters.l2_sectors_from_tex as f64);
         t.row(vec![
@@ -236,13 +312,21 @@ fn fig_l1l2_vs_sm(seq: u64, title: &str) -> String {
 // Figures 3–4: L2 sector access vs sequence length, with the model curve.
 // ---------------------------------------------------------------------------
 
-fn fig_sectors_vs_seq(causal: bool, title: &str) -> String {
-    let seqs: Vec<u64> = (1..=16).map(|i| i * 8 * 1024).collect();
+fn fig_sectors_vs_seq_configs(causal: bool) -> Vec<SimConfig> {
+    table3_seqs()
+        .iter()
+        .map(|&s| SimConfig::cuda_study(AttentionWorkload::cuda_study(s).with_causal(causal)))
+        .collect()
+}
+
+fn fig_sectors_vs_seq(causal: bool, title: &str, exec: &SweepExecutor) -> String {
+    let seqs = table3_seqs();
+    let results = exec.run_all(&fig_sectors_vs_seq_configs(causal));
     let mut t = Table::new(vec!["S", "sim total", "sim from tex", "model", "err %"]);
     let (mut xs, mut sim_y, mut model_y) = (Vec::new(), Vec::new(), Vec::new());
-    for &s in &seqs {
+    for (i, &s) in seqs.iter().enumerate() {
         let w = AttentionWorkload::cuda_study(s).with_causal(causal);
-        let r = run_sim(SimConfig::cuda_study(w));
+        let r = &results[i];
         let m = l2model::sectors_model(&w, 32);
         let err = 100.0 * (r.counters.l2_sectors_from_tex as f64 - m).abs() / m;
         xs.push(s as f64);
@@ -277,18 +361,29 @@ fn fig_sectors_vs_seq(causal: bool, title: &str) -> String {
 // Figure 5: L2 miss count vs S, with the 16S cold-miss line.
 // ---------------------------------------------------------------------------
 
-fn fig5_miss_vs_seq() -> String {
-    let seqs: Vec<u64> =
-        vec![8, 16, 32, 48, 64, 72, 80, 88, 96, 104, 112, 120, 128]
-            .into_iter()
-            .map(|k| k * 1024)
-            .collect();
+fn fig5_seqs() -> Vec<u64> {
+    vec![8, 16, 32, 48, 64, 72, 80, 88, 96, 104, 112, 120, 128]
+        .into_iter()
+        .map(|k| k * 1024)
+        .collect()
+}
+
+fn fig5_configs() -> Vec<SimConfig> {
+    fig5_seqs()
+        .iter()
+        .map(|&s| SimConfig::cuda_study(AttentionWorkload::cuda_study(s)))
+        .collect()
+}
+
+fn fig5_miss_vs_seq(exec: &SweepExecutor) -> String {
+    let seqs = fig5_seqs();
+    let results = exec.run_all(&fig5_configs());
     let dev = DeviceSpec::gb10();
     let mut t = Table::new(vec!["S", "KV MiB", "sim misses", "cold 16S", "non-compulsory"]);
     let (mut xs, mut miss_y, mut cold_y) = (Vec::new(), Vec::new(), Vec::new());
-    for &s in &seqs {
+    for (i, &s) in seqs.iter().enumerate() {
         let w = AttentionWorkload::cuda_study(s);
-        let r = run_sim(SimConfig::cuda_study(w));
+        let r = &results[i];
         let cold = cold_sectors(&w, &dev);
         xs.push(s as f64);
         miss_y.push(r.counters.l2_miss_sectors as f64);
@@ -322,13 +417,24 @@ fn fig5_miss_vs_seq() -> String {
 // Figure 6: L2 miss count and hit rate vs number of active SMs.
 // ---------------------------------------------------------------------------
 
-fn fig6_miss_hitrate_vs_sm() -> String {
-    let sms: Vec<u32> = vec![1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 40, 48];
+const FIG6_SMS: &[u32] = &[1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 40, 48];
+
+fn fig6_configs() -> Vec<SimConfig> {
+    FIG6_SMS
+        .iter()
+        .map(|&n| {
+            SimConfig::cuda_study(AttentionWorkload::cuda_study(128 * 1024)).with_sms(n)
+        })
+        .collect()
+}
+
+fn fig6_miss_hitrate_vs_sm(exec: &SweepExecutor) -> String {
+    let sms = FIG6_SMS;
+    let results = exec.run_all(&fig6_configs());
     let mut t = Table::new(vec!["SMs", "misses", "hit %", "model 1-1/N %"]);
     let (mut xs, mut hit_y, mut pred_y) = (Vec::new(), Vec::new(), Vec::new());
-    for &n in &sms {
-        let w = AttentionWorkload::cuda_study(128 * 1024);
-        let r = run_sim(SimConfig::cuda_study(w).with_sms(n));
+    for (i, &n) in sms.iter().enumerate() {
+        let r = &results[i];
         let pred = 100.0 * l2model::wavefront_hit_rate(n);
         xs.push(n as f64);
         hit_y.push(r.counters.l2_hit_rate_pct());
@@ -358,18 +464,31 @@ fn fig6_miss_hitrate_vs_sm() -> String {
 // Figures 7–8: CUDA kernel — throughput / misses, cyclic vs sawtooth.
 // ---------------------------------------------------------------------------
 
-fn fig78_cuda(throughput: bool) -> String {
+const FIG78_BATCHES: &[u32] = &[1, 2, 4, 8];
+
+fn fig78_configs() -> Vec<SimConfig> {
+    let mut configs = Vec::new();
+    for &b in FIG78_BATCHES {
+        let w = AttentionWorkload::cuda_study(128 * 1024).with_batch(b);
+        configs.push(SimConfig::cuda_study(w));
+        configs.push(SimConfig::cuda_study(w).with_order(Order::Sawtooth));
+    }
+    configs
+}
+
+fn fig78_cuda(throughput: bool, exec: &SweepExecutor) -> String {
     let dev = DeviceSpec::gb10();
     let profile = PerfProfile::cuda_wmma();
+    let results = exec.run_all(&fig78_configs());
     let mut t = if throughput {
         Table::new(vec!["B", "cyclic TFLOPS", "sawtooth TFLOPS", "speedup", "paper"])
     } else {
         Table::new(vec!["B", "cyclic misses", "sawtooth misses", "reduction %", "paper"])
     };
-    for b in [1u32, 2, 4, 8] {
+    for (i, &b) in FIG78_BATCHES.iter().enumerate() {
         let w = AttentionWorkload::cuda_study(128 * 1024).with_batch(b);
-        let cyc = run_sim(SimConfig::cuda_study(w));
-        let saw = run_sim(SimConfig::cuda_study(w).with_order(Order::Sawtooth));
+        let cyc = &results[2 * i];
+        let saw = &results[2 * i + 1];
         if throughput {
             let tc = estimate(&w, &dev, &cyc.counters, &profile);
             let ts = estimate(&w, &dev, &saw.counters, &profile);
@@ -404,16 +523,26 @@ fn fig78_cuda(throughput: bool) -> String {
 // Figures 9–12: CuTile — miss count / throughput, (non-)causal.
 // ---------------------------------------------------------------------------
 
-fn fig_cutile(causal: bool, throughput: bool, fig: &str) -> String {
+const CUTILE_VARIANTS: [(&str, KernelVariant, Order); 4] = [
+    ("Static", KernelVariant::CuTileStatic, Order::Cyclic),
+    ("Static Alt", KernelVariant::CuTileStatic, Order::Sawtooth),
+    ("Tile", KernelVariant::CuTileTile, Order::Cyclic),
+    ("Tile Alt", KernelVariant::CuTileTile, Order::Sawtooth),
+];
+
+fn fig_cutile_configs(causal: bool) -> Vec<SimConfig> {
+    let w = AttentionWorkload::cutile_study(8, causal);
+    CUTILE_VARIANTS
+        .iter()
+        .map(|(_, variant, order)| SimConfig::cutile_study(w, *variant, *order))
+        .collect()
+}
+
+fn fig_cutile(causal: bool, throughput: bool, fig: &str, exec: &SweepExecutor) -> String {
     let dev = DeviceSpec::gb10();
     let profile = PerfProfile::cutile();
     let w = AttentionWorkload::cutile_study(8, causal);
-    let variants = [
-        ("Static", KernelVariant::CuTileStatic, Order::Cyclic),
-        ("Static Alt", KernelVariant::CuTileStatic, Order::Sawtooth),
-        ("Tile", KernelVariant::CuTileTile, Order::Cyclic),
-        ("Tile Alt", KernelVariant::CuTileTile, Order::Sawtooth),
-    ];
+    let results = exec.run_all(&fig_cutile_configs(causal));
     let mut t = if throughput {
         Table::new(vec!["Variant", "TFLOPS", "paper"])
     } else {
@@ -429,8 +558,8 @@ fn fig_cutile(causal: bool, throughput: bool, fig: &str) -> String {
     } else {
         ["~370M", "~120M", "~370M", "~120M"]
     };
-    for (i, (name, variant, order)) in variants.iter().enumerate() {
-        let r = run_sim(SimConfig::cutile_study(w, *variant, *order));
+    for (i, (name, _, _)) in CUTILE_VARIANTS.iter().enumerate() {
+        let r = &results[i];
         if throughput {
             let e = estimate(&w, &dev, &r.counters, &profile);
             t.row(vec![name.to_string(), format!("{:.1}", e.tflops), paper_thr[i].to_string()]);
@@ -476,5 +605,16 @@ mod tests {
         let s = run("fig1").unwrap();
         assert!(s.contains("Figure 1"));
         assert!(s.contains("L2 hit %"));
+    }
+
+    #[test]
+    fn every_simulating_experiment_declares_its_grid() {
+        for e in EXPERIMENTS {
+            assert!(
+                !experiment_configs(e).is_empty(),
+                "{e} has no declared sweep grid"
+            );
+        }
+        assert!(experiment_configs("abl-reuse").is_empty());
     }
 }

@@ -128,6 +128,63 @@ impl Manifest {
         Ok(Manifest { artifacts })
     }
 
+    /// The serving grid `aot.py` generates, synthesized in-process: 3 seqs
+    /// × 2 masks × 2 orders × 2 batch sizes of attention artifacts plus the
+    /// MHA model. Used by [`crate::runtime::Runtime`] as a fallback when no
+    /// AOT artifacts directory exists, so the serving stack is exercisable
+    /// hermetically (names/shapes match `python/compile/aot.py` exactly).
+    pub fn synthetic_serving_grid() -> Self {
+        const SEQS: [usize; 3] = [128, 256, 512];
+        const BATCHES: [usize; 2] = [1, 4];
+        const HEADS: usize = 4;
+        const HEAD_DIM: usize = 64;
+        let mut artifacts = Vec::new();
+        for seq in SEQS {
+            for causal in [false, true] {
+                for order in ["cyclic", "sawtooth"] {
+                    for batch in BATCHES {
+                        let mask = if causal { "causal" } else { "full" };
+                        let name =
+                            format!("attn_b{batch}_h{HEADS}_s{seq}_d{HEAD_DIM}_{mask}_{order}");
+                        artifacts.push(ArtifactMeta {
+                            kind: ArtifactKind::Attention,
+                            file: format!("{name}.hlo.txt"),
+                            name,
+                            batch,
+                            heads: HEADS,
+                            seq,
+                            head_dim: HEAD_DIM,
+                            tile_q: 64,
+                            tile_kv: 64,
+                            causal,
+                            order: order.to_string(),
+                            dtype: "float32".to_string(),
+                            num_args: 3,
+                        });
+                    }
+                }
+            }
+        }
+        let mha_name =
+            format!("mha_attn_b1_h{HEADS}_s256_d{HEAD_DIM}_causal_sawtooth");
+        artifacts.push(ArtifactMeta {
+            kind: ArtifactKind::Mha,
+            file: format!("{mha_name}.hlo.txt"),
+            name: mha_name,
+            batch: 1,
+            heads: HEADS,
+            seq: 256,
+            head_dim: HEAD_DIM,
+            tile_q: 64,
+            tile_kv: 64,
+            causal: true,
+            order: "sawtooth".to_string(),
+            dtype: "float32".to_string(),
+            num_args: 5,
+        });
+        Manifest { artifacts }
+    }
+
     pub fn artifacts(&self) -> &[ArtifactMeta] {
         &self.artifacts
     }
@@ -195,5 +252,19 @@ mha\tmha_x\tm.hlo.txt\t1\t4\t256\t64\t64\t64\t1\tsawtooth\tfloat32\t5
     fn skips_comments_and_blank_lines() {
         let m = Manifest::parse(&format!("\n# c\n{}", SAMPLE)).unwrap();
         assert_eq!(m.artifacts().len(), 3);
+    }
+
+    #[test]
+    fn synthetic_grid_matches_aot_layout() {
+        let m = Manifest::synthetic_serving_grid();
+        assert_eq!(m.attention_artifacts().count(), 24);
+        assert_eq!(m.mha_artifacts().count(), 1);
+        let a = m.find("attn_b1_h4_s128_d64_full_sawtooth").unwrap();
+        assert_eq!(a.qkv_shape(), vec![1, 4, 128, 64]);
+        assert!(!a.causal);
+        assert_eq!(a.order, "sawtooth");
+        let mha = m.mha_artifacts().next().unwrap();
+        assert_eq!(mha.model_dim(), 256);
+        assert_eq!(mha.num_args, 5);
     }
 }

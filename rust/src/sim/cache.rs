@@ -177,6 +177,12 @@ impl<M: KeyMap> LruCoreG<M> {
     /// A weight-0 access is counted as a hit iff present (no insertion).
     fn access(&mut self, key: BlockKey, weight: u32) -> bool {
         if let Some(idx) = self.map.get(key) {
+            // Hot-path short-circuit: a hit on the MRU entry needs no list
+            // surgery. Sawtooth reversals re-touch the just-streamed tile,
+            // so this branch is taken often (EXPERIMENTS.md §Perf).
+            if idx == self.head {
+                return true;
+            }
             // Move to front; refresh weight (tiles have stable weights, but
             // the exact model reuses this for single sectors).
             self.unlink(idx);

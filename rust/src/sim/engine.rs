@@ -98,7 +98,7 @@ impl SimConfig {
 }
 
 /// Outcome of a simulated launch.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SimResult {
     pub counters: CacheCounters,
     /// Total inner (K/V streaming) steps executed.
@@ -141,6 +141,150 @@ fn stall_probabilities(jitter: f64, n_sms: usize) -> Vec<f64> {
         .collect()
 }
 
+/// Jitter state, allocated only when `jitter > 0` so the synchronized
+/// (paper-default) configuration pays neither the PRNG nor the per-SM
+/// probability check on the hot loop.
+struct JitterState {
+    rng: Rng,
+    stall_p: Vec<f64>,
+}
+
+impl JitterState {
+    fn new(cfg: &SimConfig, n_sms: usize) -> Option<Self> {
+        if cfg.jitter > 0.0 {
+            Some(JitterState {
+                rng: Rng::new(cfg.seed),
+                stall_p: stall_probabilities(cfg.jitter, n_sms),
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Does SM `sm` stall this turn? Consumes PRNG draws in exactly the
+    /// order the pre-refactor engine did (one draw per non-zero-p SM turn),
+    /// so seeded results are bit-identical across versions.
+    #[inline]
+    fn stalls(&mut self, sm: usize) -> bool {
+        self.stall_p[sm] > 0.0 && self.rng.chance(self.stall_p[sm])
+    }
+}
+
+/// Precomputed per-tile sector counts: `lut[tile_idx]` replaces the
+/// `rows_sectors(tile_rows(idx))` division chain previously evaluated on
+/// every access (EXPERIMENTS.md §Perf).
+fn sector_lut(w: &AttentionWorkload, sector_bytes: u32) -> Vec<u32> {
+    (0..w.num_tiles())
+        .map(|i| w.rows_sectors(w.tile_rows(i), sector_bytes))
+        .collect()
+}
+
+/// Cache-hierarchy backend of the wavefront engine: turns one tile access
+/// into L1/L2 outcomes and records them. The interleaving loop is generic
+/// over this trait — the production weighted-block model and the exact
+/// per-sector validation model share every line of scheduling logic.
+trait CacheBackend {
+    fn access(&mut self, sm: usize, a: &TileAccess, counters: &mut CacheCounters);
+}
+
+/// Production backend: dense direct-indexed weighted-block LRUs.
+/// Key = ((bh·4)+tensor)·num_tiles + tile — compact by construction.
+struct WeightedBackend {
+    l2: DenseWeightedLru,
+    l1: Vec<DenseWeightedLru>,
+    sectors: Vec<u32>,
+    n_tiles: u64,
+    model_l1: bool,
+}
+
+impl WeightedBackend {
+    fn new(cfg: &SimConfig) -> Self {
+        let w = &cfg.workload;
+        let dev = &cfg.device;
+        let n_sms = dev.num_sms as usize;
+        let n_tiles = w.num_tiles();
+        let domain = (w.batch_heads() as u64 * 4 * n_tiles) as usize;
+        WeightedBackend {
+            l2: DenseWeightedLru::new(dev.l2_sectors(), domain),
+            l1: (0..n_sms)
+                .map(|_| DenseWeightedLru::new(dev.l1_sectors(), domain))
+                .collect(),
+            sectors: sector_lut(w, dev.sector_bytes),
+            n_tiles,
+            model_l1: cfg.model_l1,
+        }
+    }
+}
+
+impl CacheBackend for WeightedBackend {
+    #[inline]
+    fn access(&mut self, sm: usize, a: &TileAccess, counters: &mut CacheCounters) {
+        let sectors = self.sectors[a.tile_idx as usize];
+        let key = (a.batch_head as u64 * 4 + a.tensor as u8 as u64) * self.n_tiles
+            + a.tile_idx;
+        let l1_hit = if self.model_l1 && !a.write {
+            self.l1[sm].access(key, sectors)
+        } else {
+            false
+        };
+        // Reads that miss L1 go to L2; writes are write-through (allocate
+        // in L2, count as tex traffic).
+        let l2_hit = if l1_hit { false } else { self.l2.access(key, sectors) };
+        counters.record(a.tensor, sectors, l1_hit, l2_hit, a.write);
+    }
+}
+
+/// Validation backend: exact per-sector LRUs (small workloads only; cost is
+/// O(total sectors)). Address layout: each (tensor, bh) gets a disjoint
+/// sector region.
+struct ExactBackend {
+    l2: ExactLru,
+    l1: Vec<ExactLru>,
+    sectors: Vec<u32>,
+    tensor_sectors: u64,
+    row_sectors: u64,
+    tile: u64,
+    model_l1: bool,
+}
+
+impl ExactBackend {
+    fn new(cfg: &SimConfig) -> Self {
+        let w = &cfg.workload;
+        let dev = &cfg.device;
+        let n_sms = dev.num_sms as usize;
+        let tensor_sectors =
+            (w.tensor_bytes() + dev.sector_bytes as u64 - 1) / dev.sector_bytes as u64;
+        ExactBackend {
+            l2: ExactLru::new(dev.l2_sectors()),
+            l1: (0..n_sms).map(|_| ExactLru::new(dev.l1_sectors())).collect(),
+            sectors: sector_lut(w, dev.sector_bytes),
+            tensor_sectors,
+            row_sectors: w.rows_sectors(1, dev.sector_bytes) as u64,
+            tile: w.tile as u64,
+            model_l1: cfg.model_l1,
+        }
+    }
+}
+
+impl CacheBackend for ExactBackend {
+    #[inline]
+    fn access(&mut self, sm: usize, a: &TileAccess, counters: &mut CacheCounters) {
+        let sectors = self.sectors[a.tile_idx as usize];
+        let base =
+            (a.batch_head as u64 * 4 + a.tensor as u8 as u64) * self.tensor_sectors;
+        let first = base + a.tile_idx * self.tile * self.row_sectors;
+        for s in first..first + sectors as u64 {
+            let l1_hit = if self.model_l1 && !a.write {
+                self.l1[sm].access_sector(s)
+            } else {
+                false
+            };
+            let l2_hit = if l1_hit { false } else { self.l2.access_sector(s) };
+            counters.record(a.tensor, 1, l1_hit, l2_hit, a.write);
+        }
+    }
+}
+
 /// Per-SM execution state.
 struct SmState {
     item: Option<(WorkItem, ItemSteps)>,
@@ -159,6 +303,17 @@ impl Simulator {
 
     /// Run with the production weighted-block LRU at both levels.
     pub fn run(&self) -> SimResult {
+        self.run_backend(WeightedBackend::new(&self.cfg))
+    }
+
+    /// Run with exact per-sector LRUs (validation mode — small workloads
+    /// only; cost is O(total sectors)).
+    pub fn run_exact(&self) -> SimResult {
+        self.run_backend(ExactBackend::new(&self.cfg))
+    }
+
+    /// The wavefront interleaving loop, generic over the cache backend.
+    fn run_backend<B: CacheBackend>(&self, mut backend: B) -> SimResult {
         let w = &self.cfg.workload;
         let dev = &self.cfg.device;
         let n_sms = dev.num_sms as usize;
@@ -169,20 +324,8 @@ impl Simulator {
             w,
             dev.num_sms,
         );
-        // Hot path: dense direct-indexed LRU maps. Key = ((bh·4)+tensor)·
-        // num_tiles + tile — compact by construction.
-        let n_tiles = w.num_tiles();
-        let domain = (w.batch_heads() as u64 * 4 * n_tiles) as usize;
-        let dense_key = |tensor: u8, bh: u32, tile: u64| -> u64 {
-            (bh as u64 * 4 + tensor as u64) * n_tiles + tile
-        };
-        let mut l2 = DenseWeightedLru::new(dev.l2_sectors(), domain);
-        let mut l1: Vec<DenseWeightedLru> = (0..n_sms)
-            .map(|_| DenseWeightedLru::new(dev.l1_sectors(), domain))
-            .collect();
         let mut counters = CacheCounters::default();
-        let mut rng = Rng::new(self.cfg.seed);
-        let stall_p = stall_probabilities(self.cfg.jitter, n_sms);
+        let mut jitter = JitterState::new(&self.cfg, n_sms);
 
         let mut sms: Vec<SmState> = (0..n_sms)
             .map(|_| SmState { item: None, done: false })
@@ -200,8 +343,10 @@ impl Simulator {
                 if sms[sm].done {
                     continue;
                 }
-                if stall_p[sm] > 0.0 && rng.chance(stall_p[sm]) {
-                    continue; // stalled this turn
+                if let Some(j) = jitter.as_mut() {
+                    if j.stalls(sm) {
+                        continue; // stalled this turn
+                    }
                 }
                 // Ensure the SM has a work item.
                 if sms[sm].item.is_none() {
@@ -227,17 +372,7 @@ impl Simulator {
                 let exhausted = matches!(step, Step::StoreO);
                 step_accesses(w, &it_copy, step, &mut acc);
                 for a in acc.iter().flatten() {
-                    let sectors = w.rows_sectors(w.tile_rows(a.tile_idx), dev.sector_bytes);
-                    let key = dense_key(a.tensor as u8, a.batch_head, a.tile_idx);
-                    let l1_hit = if self.cfg.model_l1 && !a.write {
-                        l1[sm].access(key, sectors)
-                    } else {
-                        false
-                    };
-                    // Reads that miss L1 go to L2; writes are write-through
-                    // (allocate in L2, count as tex traffic).
-                    let l2_hit = if l1_hit { false } else { l2.access(key, sectors) };
-                    counters.record(a.tensor, sectors, l1_hit, l2_hit, a.write);
+                    backend.access(sm, a, &mut counters);
                 }
                 if exhausted {
                     sms[sm].item = None;
@@ -248,102 +383,6 @@ impl Simulator {
         counters.l2_sectors_other =
             (kv_steps as f64 * dev.non_tex_sectors_per_step).round() as u64;
 
-        SimResult { counters, kv_steps, rounds, items }
-    }
-
-    /// Run with exact per-sector LRUs (validation mode — small workloads
-    /// only; cost is O(total sectors)).
-    pub fn run_exact(&self) -> SimResult {
-        let w = &self.cfg.workload;
-        let dev = &self.cfg.device;
-        let n_sms = dev.num_sms as usize;
-        let mut sched = Scheduler::new(
-            self.cfg.scheduler,
-            self.cfg.order,
-            self.cfg.variant,
-            w,
-            dev.num_sms,
-        );
-        let mut l2 = ExactLru::new(dev.l2_sectors());
-        let mut l1: Vec<ExactLru> = (0..n_sms)
-            .map(|_| ExactLru::new(dev.l1_sectors()))
-            .collect();
-        let mut counters = CacheCounters::default();
-        let mut rng = Rng::new(self.cfg.seed);
-        let stall_p = stall_probabilities(self.cfg.jitter, n_sms);
-
-        // Address layout: each (tensor, bh) gets a disjoint sector region.
-        let tensor_sectors =
-            (w.tensor_bytes() + dev.sector_bytes as u64 - 1) / dev.sector_bytes as u64;
-        let base = |tensor: u8, bh: u32| -> u64 {
-            ((bh as u64 * 4) + tensor as u64) * tensor_sectors
-        };
-
-        let mut sms: Vec<SmState> = (0..n_sms)
-            .map(|_| SmState { item: None, done: false })
-            .collect();
-        let mut kv_steps = 0u64;
-        let mut rounds = 0u64;
-        let mut items = 0u64;
-        let mut live = n_sms;
-        let mut acc: [Option<TileAccess>; 2] = [None, None];
-
-        while live > 0 {
-            rounds += 1;
-            for sm in 0..n_sms {
-                if sms[sm].done {
-                    continue;
-                }
-                if stall_p[sm] > 0.0 && rng.chance(stall_p[sm]) {
-                    continue;
-                }
-                if sms[sm].item.is_none() {
-                    match sched.next_item(sm, w) {
-                        Some(it) => {
-                            let steps = ItemSteps::new(w, &it);
-                            items += 1;
-                            sms[sm].item = Some((it, steps));
-                        }
-                        None => {
-                            sms[sm].done = true;
-                            live -= 1;
-                            continue;
-                        }
-                    }
-                }
-                let (it, steps) = sms[sm].item.as_mut().unwrap();
-                let step = steps.next().unwrap();
-                if matches!(step, Step::KvStep(_)) {
-                    kv_steps += 1;
-                }
-                let it_copy = *it;
-                let exhausted = matches!(step, Step::StoreO);
-                step_accesses(w, &it_copy, step, &mut acc);
-                for a in acc.iter().flatten() {
-                    let rows = w.tile_rows(a.tile_idx);
-                    let sectors = w.rows_sectors(rows, dev.sector_bytes);
-                    // Sector range of this tile within its tensor region.
-                    let row_sectors = w.rows_sectors(1, dev.sector_bytes) as u64;
-                    let first = base(a.tensor as u8, a.batch_head)
-                        + a.tile_idx * w.tile as u64 * row_sectors;
-                    for s in first..first + sectors as u64 {
-                        let l1_hit = if self.cfg.model_l1 && !a.write {
-                            l1[sm].access_sector(s)
-                        } else {
-                            false
-                        };
-                        let l2_hit = if l1_hit { false } else { l2.access_sector(s) };
-                        counters.record(a.tensor, 1, l1_hit, l2_hit, a.write);
-                    }
-                }
-                if exhausted {
-                    sms[sm].item = None;
-                }
-            }
-        }
-
-        counters.l2_sectors_other =
-            (kv_steps as f64 * dev.non_tex_sectors_per_step).round() as u64;
         SimResult { counters, kv_steps, rounds, items }
     }
 }

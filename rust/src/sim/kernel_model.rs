@@ -10,7 +10,7 @@
 use super::workload::AttentionWorkload;
 
 /// KV traversal order (paper §4).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Order {
     /// Baseline: every Q tile streams KV tiles 0..Tc-1.
     Cyclic,
@@ -81,7 +81,7 @@ pub struct WorkItem {
 }
 
 /// Kernel implementation variants evaluated in the paper.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum KernelVariant {
     /// §4.2 raw CUDA WMMA kernel: persistent CTAs, T = 80, sawtooth via
     /// the CTA-local iteration counter (Algorithm 4).

@@ -25,6 +25,7 @@ pub mod counters;
 pub mod engine;
 pub mod kernel_model;
 pub mod scheduler;
+pub mod sweep;
 pub mod throughput;
 pub mod workload;
 
@@ -33,5 +34,6 @@ pub use counters::CacheCounters;
 pub use engine::{SimConfig, SimResult, Simulator};
 pub use kernel_model::{KernelVariant, Order, TensorKind, TileAccess};
 pub use scheduler::SchedulerKind;
+pub use sweep::{SweepExecutor, SweepGrid, SweepSpec};
 pub use throughput::{PerfProfile, ThroughputReport};
 pub use workload::AttentionWorkload;

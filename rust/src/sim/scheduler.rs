@@ -9,7 +9,7 @@ use super::kernel_model::{Direction, KernelVariant, Order, WorkItem};
 use super::workload::AttentionWorkload;
 
 /// Which CTA scheduling scheme drives the launch.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SchedulerKind {
     /// Algorithm 2: persistent CTAs, grid-stride loop, G = min(N_tiles·BH,
     /// N_SM).

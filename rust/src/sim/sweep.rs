@@ -1,0 +1,423 @@
+//! Sweep subsystem: declarative experiment grids + a parallel, memoizing
+//! executor.
+//!
+//! The paper's evaluation is a grid of `Simulator::run()` calls (Tables
+//! 1–3, Figures 1–12, four ablations). Two structural facts make that grid
+//! much cheaper than its face value:
+//!
+//! 1. **The launches are embarrassingly parallel.** Each `SimConfig` is
+//!    self-contained and deterministic, so a sweep fans out over a scoped
+//!    thread pool (`--threads N` on the CLI) with no synchronization beyond
+//!    work distribution. Result ordering is by input index, so output is
+//!    byte-identical to a sequential run at any thread count.
+//! 2. **Experiments overlap heavily.** Table 3's seq sweep contains all of
+//!    Figures 3–4; Figure 6's SM sweep contains Table 1's SM=48 point;
+//!    Figure 5 shares its 8K-multiples with Table 3; and the coordinator's
+//!    policy probes re-simulate the same serving shapes on every batch.
+//!    [`SweepExecutor`] memoizes on a [`ConfigKey`] so each distinct
+//!    configuration is simulated exactly once per executor (and exactly
+//!    once per process for the policy probe's shared executor).
+//!
+//! A [`SweepSpec`] is just a named, ordered list of configurations — the
+//! declarative form of one experiment. [`SweepGrid`] builds the common
+//! cartesian grids (seq × order × SMs × …) over a base config.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use rustc_hash::FxHashMap;
+
+use super::engine::{SimConfig, SimResult, Simulator};
+use super::kernel_model::{KernelVariant, Order};
+use super::scheduler::SchedulerKind;
+use super::workload::AttentionWorkload;
+
+/// Hashable identity of a [`SimConfig`], restricted to the fields the
+/// simulator actually reads (device fields that only feed the throughput
+/// model — bandwidths, latency, peak FLOPS — are deliberately excluded so
+/// configs differing only in those share one simulation). Floats are
+/// compared by bit pattern.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ConfigKey {
+    workload: AttentionWorkload,
+    scheduler: SchedulerKind,
+    order: Order,
+    variant: KernelVariant,
+    jitter_bits: u64,
+    seed: u64,
+    model_l1: bool,
+    num_sms: u32,
+    l2_bytes: u64,
+    l1_bytes: u64,
+    sector_bytes: u32,
+    non_tex_bits: u64,
+}
+
+impl ConfigKey {
+    pub fn of(cfg: &SimConfig) -> Self {
+        ConfigKey {
+            workload: cfg.workload,
+            scheduler: cfg.scheduler,
+            order: cfg.order,
+            variant: cfg.variant,
+            jitter_bits: cfg.jitter.to_bits(),
+            seed: cfg.seed,
+            model_l1: cfg.model_l1,
+            num_sms: cfg.device.num_sms,
+            l2_bytes: cfg.device.l2_bytes,
+            l1_bytes: cfg.device.l1_bytes,
+            sector_bytes: cfg.device.sector_bytes,
+            non_tex_bits: cfg.device.non_tex_sectors_per_step.to_bits(),
+        }
+    }
+}
+
+/// One named experiment: an ordered list of simulator configurations.
+/// Results come back in the same order (see [`SweepExecutor::run_spec`]).
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub name: String,
+    pub configs: Vec<SimConfig>,
+}
+
+impl SweepSpec {
+    pub fn new(name: impl Into<String>, configs: Vec<SimConfig>) -> Self {
+        SweepSpec { name: name.into(), configs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.configs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.configs.is_empty()
+    }
+}
+
+/// Cartesian-grid builder over the axes the paper's experiments sweep.
+/// Unset axes keep the base config's value. Iteration order (outermost to
+/// innermost): causal, order, tile, L2 bytes, SMs, batch, seq, jitter —
+/// fixed and documented so callers can index results positionally.
+#[derive(Clone, Debug)]
+pub struct SweepGrid {
+    base: SimConfig,
+    causals: Vec<bool>,
+    orders: Vec<Order>,
+    tiles: Vec<u32>,
+    l2_bytes: Vec<u64>,
+    sms: Vec<u32>,
+    batches: Vec<u32>,
+    seqs: Vec<u64>,
+    jitters: Vec<f64>,
+}
+
+impl SweepGrid {
+    pub fn new(base: SimConfig) -> Self {
+        SweepGrid {
+            causals: vec![base.workload.causal],
+            orders: vec![base.order],
+            tiles: vec![base.workload.tile],
+            l2_bytes: vec![base.device.l2_bytes],
+            sms: vec![base.device.num_sms],
+            batches: vec![base.workload.batch],
+            seqs: vec![base.workload.seq],
+            jitters: vec![base.jitter],
+            base,
+        }
+    }
+
+    pub fn causals(mut self, v: &[bool]) -> Self {
+        self.causals = v.to_vec();
+        self
+    }
+
+    pub fn orders(mut self, v: &[Order]) -> Self {
+        self.orders = v.to_vec();
+        self
+    }
+
+    pub fn tiles(mut self, v: &[u32]) -> Self {
+        self.tiles = v.to_vec();
+        self
+    }
+
+    pub fn l2_bytes(mut self, v: &[u64]) -> Self {
+        self.l2_bytes = v.to_vec();
+        self
+    }
+
+    pub fn sms(mut self, v: &[u32]) -> Self {
+        self.sms = v.to_vec();
+        self
+    }
+
+    pub fn batches(mut self, v: &[u32]) -> Self {
+        self.batches = v.to_vec();
+        self
+    }
+
+    pub fn seqs(mut self, v: &[u64]) -> Self {
+        self.seqs = v.to_vec();
+        self
+    }
+
+    pub fn jitters(mut self, v: &[f64]) -> Self {
+        self.jitters = v.to_vec();
+        self
+    }
+
+    /// Expand to the cartesian product in the documented axis order.
+    pub fn build(&self, name: impl Into<String>) -> SweepSpec {
+        let mut configs = Vec::new();
+        for &causal in &self.causals {
+            for &order in &self.orders {
+                for &tile in &self.tiles {
+                    for &l2 in &self.l2_bytes {
+                        for &sms in &self.sms {
+                            for &batch in &self.batches {
+                                for &seq in &self.seqs {
+                                    for &jitter in &self.jitters {
+                                        let mut cfg = self.base.clone();
+                                        cfg.workload.causal = causal;
+                                        cfg.order = order;
+                                        cfg.workload.tile = tile;
+                                        cfg.device.l2_bytes = l2;
+                                        cfg.device.num_sms = sms;
+                                        cfg.workload.batch = batch;
+                                        cfg.workload.seq = seq;
+                                        cfg.jitter = jitter;
+                                        configs.push(cfg);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        SweepSpec::new(name, configs)
+    }
+}
+
+/// Parallel, memoizing sweep executor.
+///
+/// * Results are cached per [`ConfigKey`] for the executor's lifetime; a
+///   config is simulated at most once.
+/// * `run_all` simulates the uncached configurations on up to `threads`
+///   scoped worker threads and returns results **in input order** — output
+///   built from them is byte-identical at any thread count.
+pub struct SweepExecutor {
+    threads: usize,
+    cache: Mutex<FxHashMap<ConfigKey, Arc<SimResult>>>,
+}
+
+impl SweepExecutor {
+    /// `threads` is clamped to at least 1. One means fully sequential
+    /// (no worker threads are spawned).
+    pub fn new(threads: usize) -> Self {
+        SweepExecutor {
+            threads: threads.max(1),
+            cache: Mutex::new(FxHashMap::default()),
+        }
+    }
+
+    /// An executor sized to the host (`std::thread::available_parallelism`).
+    pub fn host_sized() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self::new(n)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Number of distinct configurations simulated so far.
+    pub fn cached_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Run (or recall) a single configuration.
+    pub fn run_one(&self, cfg: &SimConfig) -> Arc<SimResult> {
+        let key = ConfigKey::of(cfg);
+        if let Some(r) = self.cache.lock().unwrap().get(&key) {
+            return Arc::clone(r);
+        }
+        let result = Arc::new(Simulator::new(cfg.clone()).run());
+        self.cache
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| Arc::clone(&result))
+            .clone()
+    }
+
+    /// Run a whole spec; results in `spec.configs` order.
+    pub fn run_spec(&self, spec: &SweepSpec) -> Vec<Arc<SimResult>> {
+        self.run_all(&spec.configs)
+    }
+
+    /// Run every configuration, deduplicating against the cache and each
+    /// other, fanning the misses out over the thread pool, and returning
+    /// results in input order.
+    pub fn run_all(&self, configs: &[SimConfig]) -> Vec<Arc<SimResult>> {
+        let keys: Vec<ConfigKey> = configs.iter().map(ConfigKey::of).collect();
+
+        // Collect the distinct configurations not yet cached, preserving
+        // first-appearance order (determinism of work distribution).
+        let mut missing: Vec<(ConfigKey, SimConfig)> = Vec::new();
+        {
+            let cache = self.cache.lock().unwrap();
+            let mut seen: FxHashMap<ConfigKey, ()> = FxHashMap::default();
+            for (key, cfg) in keys.iter().zip(configs) {
+                if cache.contains_key(key) || seen.contains_key(key) {
+                    continue;
+                }
+                seen.insert(key.clone(), ());
+                missing.push((key.clone(), cfg.clone()));
+            }
+        }
+
+        if !missing.is_empty() {
+            let results: Vec<Mutex<Option<SimResult>>> =
+                missing.iter().map(|_| Mutex::new(None)).collect();
+            let workers = self.threads.min(missing.len());
+            if workers <= 1 {
+                for (i, (_, cfg)) in missing.iter().enumerate() {
+                    *results[i].lock().unwrap() = Some(Simulator::new(cfg.clone()).run());
+                }
+            } else {
+                let next = AtomicUsize::new(0);
+                let missing_ref = &missing;
+                let results_ref = &results;
+                let next_ref = &next;
+                std::thread::scope(|s| {
+                    for _ in 0..workers {
+                        s.spawn(move || loop {
+                            let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                            if i >= missing_ref.len() {
+                                break;
+                            }
+                            let r = Simulator::new(missing_ref[i].1.clone()).run();
+                            *results_ref[i].lock().unwrap() = Some(r);
+                        });
+                    }
+                });
+            }
+            let mut cache = self.cache.lock().unwrap();
+            for ((key, _), slot) in missing.into_iter().zip(results) {
+                let r = slot
+                    .into_inner()
+                    .unwrap()
+                    .expect("sweep worker completed every claimed config");
+                cache.entry(key).or_insert_with(|| Arc::new(r));
+            }
+        }
+
+        let cache = self.cache.lock().unwrap();
+        keys.iter()
+            .map(|k| Arc::clone(cache.get(k).expect("config simulated above")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gb10::DeviceSpec;
+
+    fn small_cfg(seq: u64, order: Order) -> SimConfig {
+        let mut cfg =
+            SimConfig::cuda_study(AttentionWorkload::cuda_study(seq).with_tile(16));
+        cfg.device = DeviceSpec::tiny();
+        cfg.order = order;
+        cfg
+    }
+
+    #[test]
+    fn run_one_memoizes() {
+        let exec = SweepExecutor::new(1);
+        let a = exec.run_one(&small_cfg(256, Order::Cyclic));
+        assert_eq!(exec.cached_len(), 1);
+        let b = exec.run_one(&small_cfg(256, Order::Cyclic));
+        assert!(Arc::ptr_eq(&a, &b), "second run must be a cache hit");
+        let c = exec.run_one(&small_cfg(256, Order::Sawtooth));
+        assert_eq!(exec.cached_len(), 2);
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn run_all_preserves_input_order_and_dedupes() {
+        let exec = SweepExecutor::new(4);
+        let cfgs = vec![
+            small_cfg(256, Order::Cyclic),
+            small_cfg(512, Order::Cyclic),
+            small_cfg(256, Order::Cyclic), // duplicate of [0]
+        ];
+        let rs = exec.run_all(&cfgs);
+        assert_eq!(rs.len(), 3);
+        assert!(Arc::ptr_eq(&rs[0], &rs[2]), "duplicates share one result");
+        assert_eq!(exec.cached_len(), 2);
+        // Order: result i corresponds to config i.
+        assert_eq!(rs[0].items, cfgs[0].workload.num_work_items());
+        assert_eq!(rs[1].items, cfgs[1].workload.num_work_items());
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let grid = SweepGrid::new(small_cfg(256, Order::Cyclic))
+            .seqs(&[128, 256, 512])
+            .orders(&[Order::Cyclic, Order::Sawtooth])
+            .causals(&[false, true])
+            .build("parity");
+        let seq_exec = SweepExecutor::new(1);
+        let par_exec = SweepExecutor::new(4);
+        let a = seq_exec.run_spec(&grid);
+        let b = par_exec.run_spec(&grid);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(**x, **y);
+        }
+    }
+
+    #[test]
+    fn grid_expands_in_documented_order() {
+        let spec = SweepGrid::new(small_cfg(256, Order::Cyclic))
+            .orders(&[Order::Cyclic, Order::Sawtooth])
+            .seqs(&[128, 256])
+            .build("order-check");
+        assert_eq!(spec.len(), 4);
+        // order is outermore than seq.
+        assert_eq!(spec.configs[0].order, Order::Cyclic);
+        assert_eq!(spec.configs[0].workload.seq, 128);
+        assert_eq!(spec.configs[1].workload.seq, 256);
+        assert_eq!(spec.configs[2].order, Order::Sawtooth);
+        assert_eq!(spec.configs[2].workload.seq, 128);
+    }
+
+    #[test]
+    fn config_key_ignores_throughput_only_device_fields() {
+        let a = small_cfg(256, Order::Cyclic);
+        let mut b = a.clone();
+        b.device.dram_bw *= 2.0;
+        b.device.peak_fp16_flops *= 2.0;
+        assert_eq!(ConfigKey::of(&a), ConfigKey::of(&b));
+        let mut c = a.clone();
+        c.device.l2_bytes /= 2;
+        assert_ne!(ConfigKey::of(&a), ConfigKey::of(&c));
+    }
+
+    #[test]
+    fn config_key_distinguishes_sim_fields() {
+        let a = small_cfg(256, Order::Cyclic);
+        for (name, cfg) in [
+            ("order", small_cfg(256, Order::Sawtooth)),
+            ("seq", small_cfg(512, Order::Cyclic)),
+            ("jitter", small_cfg(256, Order::Cyclic).with_jitter(0.5, 0)),
+            ("seed", small_cfg(256, Order::Cyclic).with_jitter(0.0, 9)),
+        ] {
+            assert_ne!(ConfigKey::of(&a), ConfigKey::of(&cfg), "axis {name}");
+        }
+    }
+}

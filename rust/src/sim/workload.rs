@@ -4,7 +4,7 @@
 //! sector size, `E` element size, `T` tile size, `D` head dimension.
 
 /// One fused-multi-head-attention launch (forward pass).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct AttentionWorkload {
     pub batch: u32,
     pub heads: u32,

@@ -1,0 +1,146 @@
+//! Integration tests of the sweep subsystem: parallel execution must be
+//! indistinguishable from sequential execution (determinism is the whole
+//! point of the report harness), and the generic engine loop must keep the
+//! weighted and exact cache backends in agreement.
+
+use std::sync::Arc;
+
+use sawtooth_attn::gb10::DeviceSpec;
+use sawtooth_attn::report;
+use sawtooth_attn::sim::kernel_model::{KernelVariant, Order};
+use sawtooth_attn::sim::scheduler::SchedulerKind;
+use sawtooth_attn::sim::sweep::{SweepExecutor, SweepGrid};
+use sawtooth_attn::sim::workload::AttentionWorkload;
+use sawtooth_attn::sim::{SimConfig, Simulator};
+use sawtooth_attn::util::proptest::check;
+
+fn tiny_cfg(seq: u64, tile: u32) -> SimConfig {
+    let w = AttentionWorkload {
+        batch: 1,
+        heads: 1,
+        seq,
+        head_dim: 64,
+        elem_bytes: 2,
+        tile,
+        causal: false,
+    };
+    SimConfig {
+        device: DeviceSpec::tiny(),
+        workload: w,
+        scheduler: SchedulerKind::Persistent,
+        order: Order::Cyclic,
+        variant: KernelVariant::CudaWmma,
+        jitter: 0.0,
+        seed: 0,
+        model_l1: true,
+    }
+}
+
+/// Property: for random grids (seeds, orders, scheduler kinds, masks,
+/// jitter), the parallel executor returns exactly the sequential results,
+/// in the same order.
+#[test]
+fn prop_parallel_executor_matches_sequential() {
+    check("sweep-parallel-eq-sequential", 12, |g| {
+        let mut configs = Vec::new();
+        let n = g.int(1, 6) as usize + 2;
+        for _ in 0..n {
+            let mut cfg = tiny_cfg(*g.choose(&[256u64, 320, 512, 640]), 16);
+            cfg.order = *g.choose(&[Order::Cyclic, Order::Sawtooth]);
+            cfg.scheduler =
+                *g.choose(&[SchedulerKind::Persistent, SchedulerKind::NonPersistent]);
+            cfg.workload.causal = g.bool();
+            if g.bool() {
+                cfg.jitter = 0.25;
+                cfg.seed = g.int(0, 1000);
+            }
+            configs.push(cfg);
+        }
+        let seq_results = SweepExecutor::new(1).run_all(&configs);
+        let par_results = SweepExecutor::new(4).run_all(&configs);
+        for (i, (a, b)) in seq_results.iter().zip(&par_results).enumerate() {
+            if **a != **b {
+                return Err(format!("config {i} diverged: {a:?} vs {b:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property: the generic engine loop keeps `run()` and `run_exact()` in
+/// agreement — identical issued traffic, near-identical miss counts — for
+/// random orders, schedulers, masks and seeds.
+#[test]
+fn prop_weighted_and_exact_backends_agree() {
+    check("generic-loop-run-vs-run-exact", 10, |g| {
+        let mut cfg = tiny_cfg(*g.choose(&[512u64, 768, 1024]), 16);
+        cfg.order = *g.choose(&[Order::Cyclic, Order::Sawtooth]);
+        cfg.scheduler =
+            *g.choose(&[SchedulerKind::Persistent, SchedulerKind::NonPersistent]);
+        cfg.workload.causal = g.bool();
+        cfg.seed = g.int(0, 100);
+        let a = Simulator::new(cfg.clone()).run();
+        let b = Simulator::new(cfg.clone()).run_exact();
+        if a.counters.l2_sectors_from_tex != b.counters.l2_sectors_from_tex {
+            return Err(format!(
+                "tex traffic diverged: weighted {} exact {} ({cfg:?})",
+                a.counters.l2_sectors_from_tex, b.counters.l2_sectors_from_tex
+            ));
+        }
+        if a.counters.l1_sectors != b.counters.l1_sectors || a.items != b.items {
+            return Err(format!("issued traffic diverged ({cfg:?})"));
+        }
+        let (am, bm) = (a.counters.l2_miss_sectors as f64, b.counters.l2_miss_sectors as f64);
+        if (am - bm).abs() / bm.max(1.0) >= 0.05 {
+            return Err(format!(
+                "miss counts diverged: weighted {am} exact {bm} ({cfg:?})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// A shared executor memoizes across run_all calls: rerunning the same grid
+/// returns the identical Arc'd results and simulates nothing new.
+#[test]
+fn executor_memoizes_across_calls() {
+    let grid = SweepGrid::new(tiny_cfg(256, 16))
+        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .seqs(&[256, 512])
+        .build("memo");
+    let exec = SweepExecutor::new(2);
+    let first = exec.run_spec(&grid);
+    let cached = exec.cached_len();
+    let second = exec.run_spec(&grid);
+    assert_eq!(exec.cached_len(), cached, "rerun must not simulate");
+    for (a, b) in first.iter().zip(&second) {
+        assert!(Arc::ptr_eq(a, b));
+    }
+}
+
+/// Report output is byte-identical at any thread count (the acceptance
+/// criterion behind `sawtooth report all --threads N`).
+#[test]
+#[cfg_attr(debug_assertions, ignore = "heavy: run with cargo test --release")]
+fn report_output_is_thread_count_invariant() {
+    for exp in ["fig1", "table1"] {
+        let sequential = report::run(exp).unwrap();
+        let parallel = report::run_threaded(exp, 8).unwrap();
+        assert_eq!(sequential, parallel, "{exp} diverged across thread counts");
+    }
+}
+
+/// `report all` prefetches a union grid; the rendered output must still be
+/// identical to running each experiment alone and concatenating.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "heavy: run with cargo test --release")]
+fn report_all_matches_per_experiment_concatenation() {
+    let all = report::run_threaded("all", 8).unwrap();
+    let mut concat = String::new();
+    let exec = sawtooth_attn::sim::sweep::SweepExecutor::host_sized();
+    for e in report::EXPERIMENTS {
+        concat.push_str(&report::run_with(e, &exec).unwrap());
+        concat.push('\n');
+    }
+    assert_eq!(all, concat);
+}

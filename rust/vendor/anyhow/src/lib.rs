@@ -1,0 +1,194 @@
+//! Minimal, API-compatible stand-in for the `anyhow` crate.
+//!
+//! The build environment is fully offline (no crates.io), so the subset of
+//! `anyhow` this workspace uses is vendored here: [`Error`], [`Result`],
+//! the [`Context`] extension trait, and the `anyhow!` / `bail!` macros.
+//!
+//! Semantics match upstream where it matters to callers:
+//!
+//! * `{}` (Display) prints the outermost message only;
+//! * `{:#}` (alternate Display) prints the whole context chain joined by
+//!   `": "` — the format the CLI and tests rely on;
+//! * any `std::error::Error + Send + Sync + 'static` converts into [`Error`]
+//!   via `?`;
+//! * `.context(..)` / `.with_context(..)` wrap both `Result` (including
+//!   `anyhow::Result` itself) and `Option`.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-chain error. `chain[0]` is the outermost (most recent) context;
+/// the last element is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate the context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, outermost first.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Like upstream anyhow, Debug shows the chain so `unwrap()` panics
+        // carry the full story.
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+mod private {
+    /// Sealed conversion used by [`super::Context`] so the trait covers both
+    /// foreign `std::error::Error` types and `anyhow::Error` itself.
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> super::Error {
+            super::Error::msg(self)
+        }
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding context to `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: private::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = io_err().into();
+        let e = e.context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "42".parse()?;
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 42);
+        fn bad() -> Result<u32> {
+            let n: u32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(bad().is_err());
+    }
+
+    #[test]
+    fn context_on_option_and_anyhow_result() {
+        let r: Result<u32> = None.context("empty");
+        assert_eq!(format!("{:#}", r.unwrap_err()), "empty");
+        let r: Result<u32> = Err(anyhow!("inner"));
+        let r = r.with_context(|| "outer");
+        assert_eq!(format!("{:#}", r.unwrap_err()), "outer: inner");
+    }
+
+    #[test]
+    fn bail_returns_error() {
+        fn f(flag: bool) -> Result<()> {
+            if flag {
+                bail!("flag was {}", flag);
+            }
+            Ok(())
+        }
+        assert!(f(false).is_ok());
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flag was true");
+    }
+}
