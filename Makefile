@@ -1,7 +1,7 @@
 # Convenience targets. The Rust workspace builds hermetically (vendored
 # deps); the artifacts target needs a Python environment with JAX.
 
-.PHONY: build test bench artifacts report clean
+.PHONY: build test bench bench-perf artifacts report clean
 
 build:
 	cd rust && cargo build --release
@@ -12,6 +12,12 @@ test:
 
 bench:
 	cd rust && cargo bench
+
+# Run the two perf benches and fold their measured numbers into
+# EXPERIMENTS.md (between the BENCH markers).
+bench-perf:
+	cd rust && cargo bench --bench bench_sweep && cargo bench --bench bench_reuse
+	python3 scripts/update_experiments_perf.py
 
 # Lower the Pallas/JAX attention variants to HLO text + manifest.tsv.
 # Without this, the Rust runtime serves from a synthetic manifest via the

@@ -1,0 +1,96 @@
+//! Reuse-distance fast-path benchmark: an 8-capacity L2 ablation sweep
+//! (× 2 traversal orders) executed as (a) one LRU simulation per capacity
+//! — the pre-fast-path baseline, `--no-mattson` — versus (b) one Mattson
+//! profile pass per order fanned out to every capacity. Emits
+//! `BENCH_reuse.json` (in the crate directory) with the raw timings so the
+//! grouped-vs-ungrouped speedup is recorded machine-readably
+//! (EXPERIMENTS.md §Reuse).
+
+use std::time::Instant;
+
+use sawtooth_attn::sim::kernel_model::Order;
+use sawtooth_attn::sim::sweep::{SweepExecutor, SweepGrid};
+use sawtooth_attn::sim::workload::AttentionWorkload;
+use sawtooth_attn::sim::SimConfig;
+
+const CAPACITY_MIBS: [u64; 8] = [4, 6, 8, 10, 12, 16, 20, 24];
+
+fn grid() -> Vec<SimConfig> {
+    // The §3 CUDA study at S=64K (KV = 16 MiB per direction pair, 32 MiB
+    // total): every capacity below sits in the interesting regime, heavy
+    // enough that per-access work dominates, small enough for CI. 8
+    // capacities × 2 orders = 16 configs = 2 profile passes on the fast
+    // path vs 16 simulations without it.
+    let caps: Vec<u64> = CAPACITY_MIBS.iter().map(|m| m << 20).collect();
+    let base = SimConfig::cuda_study(AttentionWorkload::cuda_study(64 * 1024));
+    SweepGrid::new(base)
+        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .l2_bytes(&caps)
+        .build("bench-reuse")
+        .configs
+}
+
+fn main() {
+    println!("== bench_reuse: grouped (Mattson) vs ungrouped capacity sweep ==");
+    let configs = grid();
+
+    // Single-threaded on both sides: this measures the algorithmic win of
+    // one-pass profiling, not thread-pool fan-out (bench_sweep covers that).
+    let t0 = Instant::now();
+    let exact = SweepExecutor::new(1).with_mattson(false);
+    let baseline = exact.run_all(&configs);
+    let ungrouped_s = t0.elapsed().as_secs_f64();
+    println!(
+        "bench reuse/ungrouped ({} sims)                    {ungrouped_s:>10.3}s",
+        configs.len()
+    );
+
+    let t0 = Instant::now();
+    let fast = SweepExecutor::new(1);
+    let grouped = fast.run_all(&configs);
+    let grouped_s = t0.elapsed().as_secs_f64();
+    let speedup = ungrouped_s / grouped_s;
+    println!(
+        "bench reuse/grouped ({} profile passes)             {grouped_s:>10.3}s  (speedup {speedup:.2}x)",
+        fast.profiled_len()
+    );
+
+    let identical = baseline
+        .iter()
+        .zip(&grouped)
+        .all(|(a, b)| **a == **b);
+    println!("results bit-identical across paths: {identical}");
+    assert!(identical, "fast path diverged from per-capacity simulation");
+
+    // Curve re-query cost: answering 64 *new* capacities from the cached
+    // curves (the policy probe's what-if path) — no further trace passes.
+    let t0 = Instant::now();
+    let mut extra = 0u64;
+    for i in 0..64u64 {
+        let mut cfg = configs[0].clone();
+        cfg.device.l2_bytes = (25 + i) << 20;
+        extra += fast.run_at_capacity(&cfg).counters.l2_miss_sectors;
+    }
+    let requery_s = t0.elapsed().as_secs_f64();
+    println!(
+        "bench reuse/64 what-if capacities from cached curve {requery_s:>10.6}s  (checksum {extra})"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"reuse_fast_path\",\n  \"grid\": \"cuda_study S=64K x order(cyclic,sawtooth) x l2({} caps)\",\n  \"configs\": {},\n  \"capacities\": {},\n  \"ungrouped_s\": {:.6},\n  \"grouped_s\": {:.6},\n  \"speedup\": {:.3},\n  \"results_identical\": {},\n  \"whatif_64caps_s\": {:.6}\n}}\n",
+        CAPACITY_MIBS.len(),
+        configs.len(),
+        CAPACITY_MIBS.len(),
+        ungrouped_s,
+        grouped_s,
+        speedup,
+        identical,
+        requery_s
+    );
+    let path = "BENCH_reuse.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    print!("{json}");
+}

@@ -3,6 +3,8 @@
 
 use std::collections::HashMap;
 
+use crate::runtime::Manifest;
+
 use super::request::AttentionRequest;
 
 /// A request paired with its position in the submission window (used to
@@ -33,8 +35,26 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Batcher with the built-in `[1, 4]` ladder — the fallback when no
+    /// artifact manifest is loaded (matches `aot.py`'s default grid).
     pub fn new(max_batch: usize) -> Self {
         Batcher { max_batch, available_batches: vec![1, 4] }
+    }
+
+    /// Derive the batch ladder from the runtime's artifact manifest: the
+    /// distinct batch dimensions its attention artifacts were compiled for,
+    /// ascending. A manifest with no attention artifacts falls back to the
+    /// built-in ladder, so the serving path stays total either way.
+    pub fn from_manifest(max_batch: usize, manifest: &Manifest) -> Self {
+        let mut batches: Vec<usize> =
+            manifest.attention_artifacts().map(|a| a.batch).collect();
+        batches.sort_unstable();
+        batches.dedup();
+        if batches.is_empty() {
+            Batcher::new(max_batch)
+        } else {
+            Batcher::new(max_batch).with_available_batches(batches)
+        }
     }
 
     pub fn with_available_batches(mut self, mut batches: Vec<usize>) -> Self {
@@ -42,6 +62,11 @@ impl Batcher {
         batches.sort_unstable();
         self.available_batches = batches;
         self
+    }
+
+    /// The batch sizes this batcher pads into, ascending.
+    pub fn available_batches(&self) -> &[usize] {
+        &self.available_batches
     }
 
     /// Smallest available artifact batch ≥ n (or the largest one if n
@@ -179,5 +204,41 @@ mod tests {
         assert_eq!(b.pad_to(2), 2);
         assert_eq!(b.pad_to(3), 8);
         assert_eq!(b.pad_to(50), 8); // clamped to largest; caller splits
+    }
+
+    #[test]
+    fn ladder_derived_from_synthetic_manifest() {
+        // The synthetic serving grid compiles batch 1 and 4 attention
+        // artifacts, so the derived ladder equals the built-in fallback.
+        let m = Manifest::synthetic_serving_grid();
+        let b = Batcher::from_manifest(8, &m);
+        assert_eq!(b.available_batches(), &[1, 4]);
+        assert_eq!(b.pad_to(3), 4);
+    }
+
+    #[test]
+    fn ladder_follows_manifest_batches() {
+        let text = "\
+attention\ta2\ta2.hlo.txt\t2\t4\t256\t64\t64\t64\t0\tcyclic\tfloat32\t3
+attention\ta8\ta8.hlo.txt\t8\t4\t256\t64\t64\t64\t0\tcyclic\tfloat32\t3
+attention\ta8s\ta8s.hlo.txt\t8\t4\t256\t64\t64\t64\t0\tsawtooth\tfloat32\t3
+mha\tm\tm.hlo.txt\t1\t4\t256\t64\t64\t64\t1\tsawtooth\tfloat32\t5
+";
+        let m = Manifest::parse(text).unwrap();
+        let b = Batcher::from_manifest(16, &m);
+        // Distinct attention batches {2, 8}; the MHA row contributes none.
+        assert_eq!(b.available_batches(), &[2, 8]);
+        assert_eq!(b.pad_to(1), 2);
+        assert_eq!(b.pad_to(3), 8);
+        assert_eq!(b.pad_to(9), 8);
+    }
+
+    #[test]
+    fn manifest_without_attention_artifacts_falls_back() {
+        let text =
+            "mha\tm\tm.hlo.txt\t1\t4\t256\t64\t64\t64\t1\tsawtooth\tfloat32\t5\n";
+        let m = Manifest::parse(text).unwrap();
+        let b = Batcher::from_manifest(8, &m);
+        assert_eq!(b.available_batches(), &[1, 4]);
     }
 }

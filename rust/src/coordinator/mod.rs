@@ -178,7 +178,9 @@ fn pipeline_loop(
     stats: Arc<Mutex<EngineStats>>,
 ) {
     let window = Duration::from_micros(cfg.batch_window_us);
-    let mut batcher = Batcher::new(cfg.max_batch);
+    // Pad to the batch variants the loaded artifacts were actually compiled
+    // for (hardcoded [1, 4] only when the manifest lists none).
+    let mut batcher = Batcher::from_manifest(cfg.max_batch, runtime.manifest());
     let mut pending: Vec<Submission> = Vec::new();
 
     'outer: loop {

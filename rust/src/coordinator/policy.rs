@@ -3,8 +3,10 @@
 //!
 //! The estimator's policy-probe simulations go through a process-wide
 //! [`SweepExecutor`] memoizer: serving traffic re-submits the same handful
-//! of shapes over and over, so each (shape, order) pair is simulated once
-//! per process and every later probe is a cache hit.
+//! of shapes over and over, so each (shape, order) pair is *profiled* once
+//! per process — into a Mattson capacity curve that answers the cost hint
+//! at GB10's 24 MiB **and any other L2 capacity** ([`estimate_gb10_at`])
+//! — and every later probe is a cache hit.
 
 use std::sync::OnceLock;
 
@@ -36,6 +38,13 @@ impl SchedulePolicy {
     /// [`estimate_gb10`]) so the serving pipeline can call this per batch.
     pub fn cost_hint(&self, w: &AttentionWorkload) -> GpuEstimate {
         estimate_gb10(w)
+    }
+
+    /// What-if cost hint at an arbitrary L2 capacity, answered from the
+    /// shape's cached capacity curve (one profiled pass per shape and
+    /// order, ever — see [`estimate_gb10_at`]).
+    pub fn cost_hint_at(&self, w: &AttentionWorkload, l2_bytes: u64) -> GpuEstimate {
+        estimate_gb10_at(w, l2_bytes)
     }
 
     /// Pick the artifact for (seq, causal) padded to `batch` rows.
@@ -86,7 +95,11 @@ pub struct GpuEstimate {
 }
 
 /// Process-wide memoizing executor behind [`estimate_gb10`]: repeated
-/// `submit()`/probe calls with the same shape never re-simulate.
+/// `submit()`/probe calls with the same shape never re-simulate, and each
+/// probed shape is profiled into a capacity curve (`sim::sweep`'s
+/// reuse-distance fast path), so what-if questions at *other* L2
+/// capacities ([`estimate_gb10_at`]) are answered from the cached curve
+/// without any further trace pass.
 fn probe_executor() -> &'static SweepExecutor {
     static PROBE: OnceLock<SweepExecutor> = OnceLock::new();
     // Probes arrive one shape at a time on the serving path, so a single
@@ -100,12 +113,25 @@ pub fn probe_cache_len() -> usize {
     probe_executor().cached_len()
 }
 
+/// Capacity curves profiled by the policy probe (stats / test hook).
+pub fn probe_profile_len() -> usize {
+    probe_executor().profiled_len()
+}
+
 /// Estimate GB10 performance of an attention workload under both orders.
-/// Runs the full wavefront simulator twice — cheap for serving-scale
-/// sequences, seconds for 128K-token research shapes — with results
-/// memoized per shape for the life of the process.
+/// The first probe of a shape pays one profiled trace pass per order;
+/// every later probe — at this or any other L2 capacity — is a cache hit.
 pub fn estimate_gb10(w: &AttentionWorkload) -> GpuEstimate {
-    let dev = DeviceSpec::gb10();
+    estimate_gb10_at(w, DeviceSpec::gb10().l2_bytes)
+}
+
+/// What-if variant of [`estimate_gb10`]: the same cyclic-vs-sawtooth cost
+/// hint on a GB10 with `l2_bytes` of L2. Shapes already probed at any
+/// capacity answer from their cached [`crate::sim::CapacityProfile`] — no
+/// re-simulation (the Mattson inclusion property predicts every capacity
+/// from one pass).
+pub fn estimate_gb10_at(w: &AttentionWorkload, l2_bytes: u64) -> GpuEstimate {
+    let dev = DeviceSpec::gb10_with_l2(l2_bytes);
     let profile = PerfProfile::cutile();
     let exec = probe_executor();
     let run = |order: Order| {
@@ -119,7 +145,7 @@ pub fn estimate_gb10(w: &AttentionWorkload) -> GpuEstimate {
             seed: 0,
             model_l1: true,
         };
-        exec.run_one(&cfg)
+        exec.run_at_capacity(&cfg)
     };
     let cyc = run(Order::Cyclic);
     let saw = run(Order::Sawtooth);
@@ -169,5 +195,27 @@ mod tests {
         let e = estimate_gb10(&w);
         assert_eq!(e.cyclic_l2_misses, e.sawtooth_l2_misses);
         assert!((e.speedup - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn capacity_what_ifs_reuse_one_profile_per_order() {
+        // A shape unique to this test. The first hint profiles it (one
+        // curve per order); hints at other capacities must not add curves.
+        let w = AttentionWorkload::cuda_study(20 * 1024).with_tile(80);
+        let full = estimate_gb10_at(&w, 24 << 20);
+        assert!(probe_profile_len() >= 2, "both orders should be profiled");
+        let squeezed = estimate_gb10_at(&w, 6 << 20);
+        let tiny = estimate_gb10_at(&w, 4 << 20);
+        // (Profile-reuse across capacities is asserted on a private
+        // executor in sim::sweep's tests; the probe cache is process-global
+        // so an exact count here would race with sibling tests.)
+        let again = estimate_gb10_at(&w, 24 << 20);
+        assert_eq!(full.cyclic_l2_misses, again.cyclic_l2_misses);
+        assert_eq!(full.speedup.to_bits(), again.speedup.to_bits());
+        // Inclusion property: misses are non-increasing in capacity.
+        assert!(squeezed.cyclic_l2_misses >= full.cyclic_l2_misses);
+        assert!(tiny.cyclic_l2_misses >= squeezed.cyclic_l2_misses);
+        // KV = 5 MiB: a 4 MiB L2 cannot hold the stream, 24 MiB can.
+        assert!(tiny.cyclic_l2_misses > full.cyclic_l2_misses);
     }
 }

@@ -167,6 +167,262 @@ impl ReuseProfiler {
     }
 }
 
+/// Channels tracked per access by [`CapacityProfiler`]. The engine indexes
+/// them by `TensorKind as usize` (Q, K, V, O); callers that do not need a
+/// breakdown can put everything on channel 0.
+pub const CURVE_CHANNELS: usize = 4;
+
+/// Predicted LRU miss counts at *every* cache capacity, from one profiled
+/// trace pass (the Mattson inclusion property, per-channel).
+///
+/// The histogram is keyed by **occupancy depth**: the weighted reuse
+/// distance of an access plus its own weight — exactly the stack depth the
+/// block's tail ends at when it is re-touched. An access with occupancy
+/// depth `o` hits a (weighted-block, tail-evicting) LRU of capacity `C` iff
+/// `o <= C`; see `sim::cache` for why that cache's resident set is always
+/// the maximal weighted prefix of the recency stack. For a unit-weight
+/// (per-sector) trace this reduces to the classic `distance < C` rule and
+/// the prediction is exact at every capacity `C >= 1`; for weighted traces
+/// it is exact for every `C >= max_weight` (below that the engine's LRU
+/// bypasses oversized streaming blocks — [`Self::min_supported_capacity`]).
+#[derive(Clone, Debug)]
+pub struct CapacityCurve {
+    /// Sorted (occupancy depth, per-channel weighted counts).
+    depths: Vec<(u64, [u64; CURVE_CHANNELS])>,
+    /// Suffix sums over `depths`: `suffix[i][c] = Σ_{j >= i} depths[j].1[c]`.
+    suffix: Vec<[u64; CURVE_CHANNELS]>,
+    cold: [u64; CURVE_CHANNELS],
+    total: [u64; CURVE_CHANNELS],
+    max_weight: u32,
+}
+
+impl CapacityCurve {
+    /// Per-channel predicted misses for an LRU of `capacity` weight units.
+    pub fn channel_misses_at(&self, capacity: u64) -> [u64; CURVE_CHANNELS] {
+        let i = self.depths.partition_point(|&(d, _)| d <= capacity);
+        let mut out = self.cold;
+        for (o, s) in out.iter_mut().zip(self.suffix[i].iter()) {
+            *o += s;
+        }
+        out
+    }
+
+    /// Total predicted misses for an LRU of `capacity` weight units.
+    pub fn misses_at(&self, capacity: u64) -> u64 {
+        self.channel_misses_at(capacity).iter().sum()
+    }
+
+    /// Per-channel cold (first-touch) weights.
+    pub fn channel_cold(&self) -> [u64; CURVE_CHANNELS] {
+        self.cold
+    }
+
+    /// Per-channel total weights profiled.
+    pub fn channel_total(&self) -> [u64; CURVE_CHANNELS] {
+        self.total
+    }
+
+    /// Total weights profiled across all channels.
+    pub fn total(&self) -> u64 {
+        self.total.iter().sum()
+    }
+
+    /// Hit rate at a capacity, in [0, 1].
+    pub fn hit_rate_at(&self, capacity: u64) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.misses_at(capacity) as f64 / total as f64
+    }
+
+    /// Smallest capacity the prediction is exact for: the largest single
+    /// access weight in the trace (smaller caches trigger the weighted
+    /// LRU's streaming bypass, which a pure stack algorithm cannot model).
+    pub fn min_supported_capacity(&self) -> u64 {
+        self.max_weight as u64
+    }
+}
+
+/// Absent-position sentinel for the dense last-access map.
+const NO_POS: u32 = u32::MAX;
+
+/// block → (position of most recent access, weight at that access).
+/// Hashed for sparse key spaces; a direct vector for dense ones (the
+/// wavefront engine's block keys are compact by construction — same
+/// optimisation as `sim::cache`'s DenseKeyMap, same hot-path rationale).
+enum LastMap {
+    Hash(FxHashMap<u64, (u32, u32)>),
+    Dense(Vec<(u32, u32)>),
+}
+
+impl LastMap {
+    #[inline]
+    fn get(&self, block: u64) -> Option<(u32, u32)> {
+        match self {
+            LastMap::Hash(m) => m.get(&block).copied(),
+            LastMap::Dense(v) => {
+                let e = v[block as usize];
+                if e.0 == NO_POS {
+                    None
+                } else {
+                    Some(e)
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn set(&mut self, block: u64, pos: u32, weight: u32) {
+        match self {
+            LastMap::Hash(m) => {
+                m.insert(block, (pos, weight));
+            }
+            LastMap::Dense(v) => v[block as usize] = (pos, weight),
+        }
+    }
+
+    /// Every (pos, block, weight) marker — one per block ever accessed.
+    fn live_entries(&self) -> Vec<(u32, u64, u32)> {
+        match self {
+            LastMap::Hash(m) => m
+                .iter()
+                .map(|(&block, &(pos, weight))| (pos, block, weight))
+                .collect(),
+            LastMap::Dense(v) => v
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.0 != NO_POS)
+                .map(|(block, e)| (e.0, block as u64, e.1))
+                .collect(),
+        }
+    }
+}
+
+/// Streaming multi-channel Mattson profiler over (block, weight, channel)
+/// accesses — the weighted-sector variant the wavefront engine drives.
+///
+/// Unlike [`ReuseProfiler`], trace length is unbounded: the Fenwick tree is
+/// sized to the *block* population and periodically compacted (only
+/// most-recent-access markers are live, so renumbering positions preserves
+/// every pending range sum). Memory is O(blocks), time O(N log blocks).
+/// A running live-weight total turns each distance query into a single
+/// prefix traversal (`distance = live_weight − prefix(prev)`).
+pub struct CapacityProfiler {
+    last: LastMap,
+    fen: Fenwick,
+    time: usize,
+    /// Fenwick size; compaction triggers when `time` reaches it.
+    limit: usize,
+    /// Sum of all live marker weights (== prefix over every position).
+    live_weight: u64,
+    hist: FxHashMap<u64, [u64; CURVE_CHANNELS]>,
+    cold: [u64; CURVE_CHANNELS],
+    total: [u64; CURVE_CHANNELS],
+    max_weight: u32,
+}
+
+impl CapacityProfiler {
+    /// Profiler over an arbitrary (sparse) block-key space.
+    /// `expected_blocks` sizes the Fenwick tree (it grows if exceeded).
+    pub fn new(expected_blocks: usize) -> Self {
+        Self::with_map(LastMap::Hash(FxHashMap::default()), expected_blocks)
+    }
+
+    /// Profiler over a dense block-key space `[0, domain)` — direct-indexed
+    /// last-access map, no hashing on the hot path.
+    pub fn new_dense(domain: usize) -> Self {
+        Self::with_map(LastMap::Dense(vec![(NO_POS, 0); domain]), domain)
+    }
+
+    fn with_map(last: LastMap, expected_blocks: usize) -> Self {
+        let limit = (2 * expected_blocks).max(64);
+        CapacityProfiler {
+            last,
+            fen: Fenwick::new(limit),
+            time: 0,
+            limit,
+            live_weight: 0,
+            hist: FxHashMap::default(),
+            cold: [0; CURVE_CHANNELS],
+            total: [0; CURVE_CHANNELS],
+            max_weight: 0,
+        }
+    }
+
+    /// Renumber live most-recent markers to positions `0..live`, preserving
+    /// order. Amortized O(log blocks) per access: each compaction frees at
+    /// least half the position space (growing it when it cannot).
+    fn compact(&mut self) {
+        let mut live = self.last.live_entries();
+        live.sort_unstable();
+        if live.len() * 2 >= self.limit {
+            self.limit = (live.len() * 4).max(64);
+        }
+        self.fen = Fenwick::new(self.limit);
+        for (new_pos, &(_, block, weight)) in live.iter().enumerate() {
+            self.fen.add(new_pos, weight as i64);
+            self.last.set(block, new_pos as u32, weight);
+        }
+        self.time = live.len();
+    }
+
+    /// Record an access to `block` moving `weight` units on `channel`.
+    /// Returns the occupancy depth (None = cold).
+    pub fn access(&mut self, block: u64, weight: u32, channel: usize) -> Option<u64> {
+        debug_assert!(channel < CURVE_CHANNELS);
+        debug_assert!(weight > 0, "zero-weight accesses are not modelled");
+        if self.time == self.limit {
+            self.compact();
+        }
+        self.max_weight = self.max_weight.max(weight);
+        let w = weight as u64;
+        self.total[channel] += w;
+        let depth = match self.last.get(block) {
+            Some((prev, prev_w)) => {
+                // Weight of distinct blocks touched after `prev` (the
+                // block's own marker included in neither side), plus the
+                // block's own weight: its stack depth at re-touch.
+                let below = self.fen.prefix(prev as usize) as u64;
+                let d = self.live_weight - below;
+                self.fen.add(prev as usize, -(prev_w as i64));
+                self.live_weight -= prev_w as u64;
+                Some(d + w)
+            }
+            None => None,
+        };
+        self.fen.add(self.time, w as i64);
+        self.live_weight += w;
+        self.last.set(block, self.time as u32, weight);
+        match depth {
+            Some(o) => {
+                self.hist.entry(o).or_insert([0; CURVE_CHANNELS])[channel] += w;
+            }
+            None => self.cold[channel] += w,
+        }
+        self.time += 1;
+        depth
+    }
+
+    pub fn finish(self) -> CapacityCurve {
+        let mut depths: Vec<(u64, [u64; CURVE_CHANNELS])> = self.hist.into_iter().collect();
+        depths.sort_unstable();
+        let mut suffix = vec![[0u64; CURVE_CHANNELS]; depths.len() + 1];
+        for i in (0..depths.len()).rev() {
+            for c in 0..CURVE_CHANNELS {
+                suffix[i][c] = suffix[i + 1][c] + depths[i].1[c];
+            }
+        }
+        CapacityCurve {
+            depths,
+            suffix,
+            cold: self.cold,
+            total: self.total,
+            max_weight: self.max_weight,
+        }
+    }
+}
+
 /// Convenience: profile a plain unweighted trace.
 pub fn profile_trace(trace: &[u64]) -> ReuseProfile {
     let mut p = ReuseProfiler::new(trace.len());
@@ -293,5 +549,117 @@ mod tests {
         let trace: Vec<u64> = (0..10).chain(0..10).collect();
         let p = profile_trace(&trace);
         assert!((p.hit_rate_at(u64::MAX) - 0.5).abs() < 1e-12);
+    }
+
+    fn curve_of(trace: &[u64], expected_blocks: usize) -> CapacityCurve {
+        let mut p = CapacityProfiler::new(expected_blocks);
+        for &b in trace {
+            p.access(b, 1, 0);
+        }
+        p.finish()
+    }
+
+    #[test]
+    fn prop_capacity_curve_matches_brute_force_lru() {
+        check("capacity-curve-vs-bruteforce", 60, |g| {
+            let len = g.int(1, 150) as usize;
+            let alphabet = g.int(1, 24);
+            let trace: Vec<u64> = (0..len).map(|_| g.int(0, alphabet)).collect();
+            let curve = curve_of(&trace, alphabet as usize + 1);
+            for cap in [1usize, 2, 3, 5, 8, 13, 21, 34] {
+                let pred = curve.misses_at(cap as u64);
+                let real = brute_force_lru_misses(&trace, cap);
+                if pred != real {
+                    return Err(format!(
+                        "cap {cap}: predicted {pred} real {real} trace {trace:?}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_weighted_curve_matches_weighted_lru() {
+        // The planner's bit-for-bit claim, mechanically: for capacities at
+        // or above the largest block weight, the curve must reproduce the
+        // engine's weighted-block LRU exactly (sim::cache's resident set is
+        // the maximal weighted prefix of the recency stack).
+        use crate::sim::cache::WeightedLru;
+        check("weighted-curve-vs-weighted-lru", 60, |g| {
+            let len = g.int(1, 200) as usize;
+            let alphabet = g.int(1, 16);
+            let trace: Vec<u64> = (0..len).map(|_| g.int(0, alphabet)).collect();
+            // Weights must be stable per block (as the engine's are).
+            let weight_of = |b: u64| (b % 9 + 1) as u32;
+            let mut prof = CapacityProfiler::new(alphabet as usize + 1);
+            for &b in &trace {
+                prof.access(b, weight_of(b), 0);
+            }
+            let curve = prof.finish();
+            let max_w = curve.min_supported_capacity();
+            for cap in [max_w, max_w + 1, max_w + 5, max_w + 13, max_w + 40, 2 * max_w + 7] {
+                let mut lru = WeightedLru::new(cap);
+                let mut real = 0u64;
+                for &b in &trace {
+                    if !lru.access(b, weight_of(b)) {
+                        real += weight_of(b) as u64;
+                    }
+                }
+                let pred = curve.misses_at(cap);
+                if pred != real {
+                    return Err(format!(
+                        "cap {cap}: predicted {pred} real {real} trace {trace:?}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn compaction_is_transparent() {
+        // A tiny expected-blocks hint forces many compactions; the curve
+        // must be identical to the uncompacted run.
+        let trace: Vec<u64> = (0..40u64)
+            .chain((0..40).rev())
+            .chain(0..40)
+            .chain((5..25).rev())
+            .collect();
+        let small = curve_of(&trace, 1);
+        let big = curve_of(&trace, 10_000);
+        for cap in 0..64u64 {
+            assert_eq!(small.misses_at(cap), big.misses_at(cap), "cap {cap}");
+        }
+        assert_eq!(small.channel_total(), big.channel_total());
+        assert_eq!(small.channel_cold(), big.channel_cold());
+    }
+
+    #[test]
+    fn curve_channels_split_by_tensor() {
+        let mut p = CapacityProfiler::new(8);
+        p.access(1, 4, 0);
+        p.access(2, 6, 1);
+        p.access(1, 4, 0); // depth = 6 (block 2) + 4 (own) = 10
+        let c = p.finish();
+        assert_eq!(c.channel_cold(), [4, 6, 0, 0]);
+        assert_eq!(c.channel_total(), [8, 6, 0, 0]);
+        // Capacity 10 holds both blocks at re-touch; 9 does not.
+        assert_eq!(c.channel_misses_at(10), [4, 6, 0, 0]);
+        assert_eq!(c.channel_misses_at(9), [8, 6, 0, 0]);
+        assert_eq!(c.min_supported_capacity(), 6);
+    }
+
+    #[test]
+    fn curve_miss_counts_are_monotone_in_capacity() {
+        let trace: Vec<u64> = (0..30u64).chain((0..30).rev()).chain(0..30).collect();
+        let c = curve_of(&trace, 32);
+        let mut prev = u64::MAX;
+        for cap in 0..40u64 {
+            let m = c.misses_at(cap);
+            assert!(m <= prev, "misses increased at cap {cap}");
+            prev = m;
+        }
+        assert_eq!(c.misses_at(u64::MAX), 30); // only cold misses remain
     }
 }

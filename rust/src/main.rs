@@ -22,7 +22,8 @@ use sawtooth_attn::l2model::reuse::ReuseProfiler;
 use sawtooth_attn::report;
 use sawtooth_attn::runtime::{default_artifacts_dir, Runtime};
 use sawtooth_attn::sim::cache::block_key;
-use sawtooth_attn::sim::kernel_model::{kv_tile_at, kv_tiles_for, Direction, Order, WorkItem};
+use sawtooth_attn::sim::kernel_model::{for_each_kv_access, single_cta_items, Order};
+use sawtooth_attn::sim::sweep::SweepExecutor;
 use sawtooth_attn::sim::throughput::{estimate, PerfProfile};
 use sawtooth_attn::sim::Simulator;
 use sawtooth_attn::util::rng::Rng;
@@ -73,6 +74,9 @@ COMMON OPTIONS:
   --sms N                active SM count (simulate/estimate)
   --threads N            sweep worker threads for report (default: host
                          cores; output is byte-identical at any N)
+  --no-mattson           disable the reuse-distance fast path: simulate
+                         every cache capacity separately instead of
+                         profiling once (output is byte-identical)
   --requests N --clients N --max-batch N   (serve)
 ";
 
@@ -85,7 +89,7 @@ fn parse_flags(args: &[String]) -> Result<(Vec<(String, String)>, Vec<String>)> 
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
             // Boolean flags take no value; everything else consumes one.
-            const BOOLEANS: &[&str] = &["causal", "exact", "quiet"];
+            const BOOLEANS: &[&str] = &["causal", "exact", "quiet", "no-mattson"];
             if BOOLEANS.contains(&name) {
                 flags.push((name.to_string(), "true".to_string()));
             } else {
@@ -154,7 +158,9 @@ fn cmd_report(args: &[String]) -> Result<()> {
             .with_context(|| format!("--threads expects an integer, got '{v}'"))?,
         None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
     };
-    let out = report::run_threaded(exp, threads)?;
+    let mattson = flag(&flags, "no-mattson").is_none();
+    let exec = SweepExecutor::new(threads).with_mattson(mattson);
+    let out = report::run_with(exp, &exec)?;
     print!("{out}");
     Ok(())
 }
@@ -236,24 +242,11 @@ fn cmd_reuse(args: &[String]) -> Result<()> {
     for order in [Order::Cyclic, Order::Sawtooth] {
         let n = w.num_tiles();
         let mut prof = ReuseProfiler::new((2 * n * n + 4 * n) as usize);
-        for q in 0..n {
-            let dir = match order {
-                Order::Cyclic => Direction::Forward,
-                Order::Sawtooth => {
-                    if q % 2 == 0 {
-                        Direction::Forward
-                    } else {
-                        Direction::Backward
-                    }
-                }
-            };
-            let item = WorkItem { batch_head: 0, q_tile: q, direction: dir };
-            for pos in 0..kv_tiles_for(&w, q) {
-                let j = kv_tile_at(&w, &item, pos);
-                let sec = w.rows_sectors(w.tile_rows(j), 32);
-                prof.access(block_key(1, 0, j), sec);
-                prof.access(block_key(2, 0, j), sec);
-            }
+        for item in single_cta_items(&w, order) {
+            for_each_kv_access(&w, &item, |a| {
+                let sec = w.rows_sectors(w.tile_rows(a.tile_idx), 32);
+                prof.access(block_key(a.tensor as u8, 0, a.tile_idx), sec);
+            });
         }
         let p = prof.finish();
         println!(

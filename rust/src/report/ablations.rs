@@ -14,7 +14,7 @@ use crate::gb10::DeviceSpec;
 use crate::l2model::reuse::ReuseProfiler;
 use crate::sim::cache::block_key;
 use crate::sim::engine::cold_sectors;
-use crate::sim::kernel_model::{kv_tile_at, kv_tiles_for, Direction, Order, WorkItem};
+use crate::sim::kernel_model::{for_each_kv_access, single_cta_items, Order};
 use crate::sim::sweep::SweepExecutor;
 use crate::sim::workload::AttentionWorkload;
 use crate::sim::SimConfig;
@@ -108,32 +108,46 @@ pub fn jitter_sweep(exec: &SweepExecutor) -> String {
     )
 }
 
+const CAPACITY_SWEEP_L2_MIBS: [u64; 4] = [12, 16, 20, 24];
+
 pub fn capacity_sweep(exec: &SweepExecutor) -> String {
-    let dev0 = DeviceSpec::gb10();
+    // Find, for each L2 size, the first S (multiple of 8K) with
+    // non-compulsory misses. Iterating S in the outer loop hands the sweep
+    // planner all four capacities of one workload at once: they differ only
+    // in L2 size, so the executor collapses them into a single Mattson
+    // profile pass per S (sim::sweep's reuse-distance fast path) instead of
+    // four LRU simulations.
+    let mut found: [Option<(u64, u64)>; 4] = [None; 4];
+    for sk in (8u64..=160).step_by(8) {
+        if found.iter().all(Option::is_some) {
+            break;
+        }
+        let w = AttentionWorkload::cuda_study(sk * 1024);
+        let configs: Vec<SimConfig> = CAPACITY_SWEEP_L2_MIBS
+            .iter()
+            .map(|&l2_mib| {
+                let mut cfg = SimConfig::cuda_study(w);
+                cfg.device = DeviceSpec::gb10_with_l2(l2_mib << 20);
+                cfg
+            })
+            .collect();
+        let results = exec.run_all(&configs);
+        for (slot, r) in found.iter_mut().zip(&results) {
+            if slot.is_none()
+                && r.counters.l2_miss_sectors > cold_sectors(&w, &DeviceSpec::gb10())
+            {
+                *slot = Some((sk, w.kv_bytes() >> 20));
+            }
+        }
+    }
     let mut t = Table::new(vec![
         "L2 MiB",
         "divergence S* (sim)",
         "KV(S*) MiB",
         "model S* = C/(2DE)",
     ]);
-    for l2_mib in [12u64, 16, 20, 24] {
-        let dev = DeviceSpec::gb10_with_l2(l2_mib << 20);
-        // Find the first S (multiple of 8K) with non-compulsory misses.
-        // The search is inherently sequential (stops at the first hit), so
-        // it goes through the executor's memoizer one config at a time —
-        // the l2=24 MiB column shares every simulation with Table 3/Fig 5.
-        let mut found = None;
-        for sk in (8..=160).step_by(8) {
-            let w = AttentionWorkload::cuda_study(sk * 1024);
-            let mut cfg = SimConfig::cuda_study(w);
-            cfg.device = dev.clone();
-            let r = exec.run_one(&cfg);
-            if r.counters.l2_miss_sectors > cold_sectors(&w, &dev) {
-                found = Some((sk, w.kv_bytes() >> 20));
-                break;
-            }
-        }
-        let (sk, kv) = found.unwrap_or((0, 0));
+    for (i, &l2_mib) in CAPACITY_SWEEP_L2_MIBS.iter().enumerate() {
+        let (sk, kv) = found[i].unwrap_or((0, 0));
         let model = (l2_mib << 20) / (2 * 64 * 2) / 1024;
         t.row(vec![
             l2_mib.to_string(),
@@ -142,15 +156,42 @@ pub fn capacity_sweep(exec: &SweepExecutor) -> String {
             format!("{}K", model),
         ]);
     }
-    let _ = dev0;
+
+    // Miss count vs L2 capacity at a fixed shape: the canonical output of
+    // the fast path — eight capacity points from ONE profiled trace pass.
+    let w96 = AttentionWorkload::cuda_study(96 * 1024);
+    let curve_caps: [u64; 8] = [4, 6, 8, 10, 12, 16, 20, 24];
+    let curve_configs: Vec<SimConfig> = curve_caps
+        .iter()
+        .map(|&l2_mib| {
+            let mut cfg = SimConfig::cuda_study(w96);
+            cfg.device = DeviceSpec::gb10_with_l2(l2_mib << 20);
+            cfg
+        })
+        .collect();
+    let curve_results = exec.run_all(&curve_configs);
+    let mut ct = Table::new(vec!["L2 MiB", "misses", "non-compulsory", "hit %"]);
+    for (i, r) in curve_results.iter().enumerate() {
+        let dev = DeviceSpec::gb10_with_l2(curve_caps[i] << 20);
+        ct.row(vec![
+            curve_caps[i].to_string(),
+            commas(r.counters.l2_miss_sectors),
+            commas(r.non_compulsory_misses(&w96, &dev)),
+            format!("{:.2}", r.counters.l2_hit_rate_pct()),
+        ]);
+    }
+
     format!(
         "Ablation: L2 capacity sweep — divergence threshold tracks KV ≈ C\n{}\n\
          Reading: the simulated threshold sits just below the ideal C/(2DE)\n\
          because Q/O traffic shares the cache. The paper observes ~80K on\n\
          real GB10 (vs idealised 96K) — equivalent to an *effective* L2 of\n\
          ~20 MiB, consistent with a real replacement policy + non-attention\n\
-         resident data eroding ~4 MiB.\n",
-        t.render()
+         resident data eroding ~4 MiB.\n\n\
+         Miss count vs L2 capacity at S=96K (all 8 points from one Mattson\n\
+         profile pass — the reuse-distance fast path):\n{}\n",
+        t.render(),
+        ct.render()
     )
 }
 
@@ -161,19 +202,11 @@ pub fn reuse_histogram() -> String {
     for order in [Order::Cyclic, Order::Sawtooth] {
         let n = w.num_tiles();
         let mut prof = ReuseProfiler::new((2 * n * n + 2 * n) as usize);
-        for q in 0..n {
-            let dir = if order == Order::Sawtooth && q % 2 == 1 {
-                Direction::Backward
-            } else {
-                Direction::Forward
-            };
-            let item = WorkItem { batch_head: 0, q_tile: q, direction: dir };
-            for pos in 0..kv_tiles_for(&w, q) {
-                let j = kv_tile_at(&w, &item, pos);
-                let sec = w.rows_sectors(w.tile_rows(j), 32);
-                prof.access(block_key(1, 0, j), sec);
-                prof.access(block_key(2, 0, j), sec);
-            }
+        for item in single_cta_items(&w, order) {
+            for_each_kv_access(&w, &item, |a| {
+                let sec = w.rows_sectors(w.tile_rows(a.tile_idx), 32);
+                prof.access(block_key(a.tensor as u8, 0, a.tile_idx), sec);
+            });
         }
         let p = prof.finish();
         // Bucket the histogram into powers of two of the L2 size.

@@ -11,8 +11,12 @@
 //! runs them — in parallel when the caller asks for threads (`--threads N`
 //! on the CLI), memoized so configurations shared between experiments
 //! (Table 3 ⊃ Figs 3–4, Fig 6 ∋ Table 1's SM=48 point, …) are simulated
-//! once per invocation. Results are consumed in declaration order, so the
-//! rendered output is byte-identical at any thread count.
+//! once per invocation, and with capacity ablations collapsed into single
+//! Mattson profile passes (the reuse-distance fast path; `--no-mattson`
+//! forces per-capacity simulation). Results are consumed in declaration
+//! order and the fast path is bit-identical to direct simulation, so the
+//! rendered output is byte-identical at any thread count and on either
+//! path.
 
 pub mod ablations;
 

@@ -11,6 +11,7 @@
 //! jitter grows the 1 − 1/N_SM hit-rate scaling decays.
 
 use crate::gb10::DeviceSpec;
+use crate::l2model::reuse::{CapacityCurve, CapacityProfiler};
 use crate::util::rng::Rng;
 
 use super::cache::{DenseWeightedLru, ExactLru};
@@ -180,9 +181,10 @@ fn sector_lut(w: &AttentionWorkload, sector_bytes: u32) -> Vec<u32> {
 }
 
 /// Cache-hierarchy backend of the wavefront engine: turns one tile access
-/// into L1/L2 outcomes and records them. The interleaving loop is generic
-/// over this trait — the production weighted-block model and the exact
-/// per-sector validation model share every line of scheduling logic.
+/// into L1/L2 outcomes and records them. The streaming access generator
+/// ([`stream_accesses`]) is generic over this trait — the production
+/// weighted-block model, the exact per-sector validation model, and the
+/// Mattson capacity profilers all consume the identical access stream.
 trait CacheBackend {
     fn access(&mut self, sm: usize, a: &TileAccess, counters: &mut CacheCounters);
 }
@@ -285,10 +287,254 @@ impl CacheBackend for ExactBackend {
     }
 }
 
+/// Profiling backend behind [`Simulator::profile`]: identical per-SM L1
+/// models to [`WeightedBackend`], with the shared L2 replaced by a Mattson
+/// stack-distance profiler. One pass yields the L2 miss count at *every*
+/// capacity (the LRU inclusion property), so a K-capacity ablation costs
+/// one trace instead of K simulations.
+struct MattsonWeightedBackend {
+    l1: Vec<DenseWeightedLru>,
+    profiler: CapacityProfiler,
+    sectors: Vec<u32>,
+    n_tiles: u64,
+    model_l1: bool,
+}
+
+impl MattsonWeightedBackend {
+    fn new(cfg: &SimConfig) -> Self {
+        let w = &cfg.workload;
+        let dev = &cfg.device;
+        let n_sms = dev.num_sms as usize;
+        let n_tiles = w.num_tiles();
+        let domain = (w.batch_heads() as u64 * 4 * n_tiles) as usize;
+        MattsonWeightedBackend {
+            l1: (0..n_sms)
+                .map(|_| DenseWeightedLru::new(dev.l1_sectors(), domain))
+                .collect(),
+            profiler: CapacityProfiler::new_dense(domain),
+            sectors: sector_lut(w, dev.sector_bytes),
+            n_tiles,
+            model_l1: cfg.model_l1,
+        }
+    }
+}
+
+impl CacheBackend for MattsonWeightedBackend {
+    #[inline]
+    fn access(&mut self, sm: usize, a: &TileAccess, counters: &mut CacheCounters) {
+        let sectors = self.sectors[a.tile_idx as usize];
+        let key = (a.batch_head as u64 * 4 + a.tensor as u8 as u64) * self.n_tiles
+            + a.tile_idx;
+        let l1_hit = if self.model_l1 && !a.write {
+            self.l1[sm].access(key, sectors)
+        } else {
+            false
+        };
+        if !l1_hit {
+            // The L2 reference stream, exactly as WeightedBackend's L2 sees
+            // it. The hit/miss split is deferred to CapacityProfile.
+            self.profiler.access(key, sectors, a.tensor as usize);
+        }
+        counters.record(a.tensor, sectors, l1_hit, false, a.write);
+    }
+}
+
+/// Per-sector profiling backend behind [`Simulator::profile_exact`]:
+/// mirrors [`ExactBackend`]'s address layout and L1s, L2 replaced by a
+/// unit-weight Mattson profiler. Predictions equal [`Simulator::run_exact`]
+/// bit-for-bit at every capacity >= 1 sector.
+struct MattsonExactBackend {
+    l1: Vec<ExactLru>,
+    profiler: CapacityProfiler,
+    sectors: Vec<u32>,
+    tensor_sectors: u64,
+    row_sectors: u64,
+    tile: u64,
+    model_l1: bool,
+}
+
+impl MattsonExactBackend {
+    fn new(cfg: &SimConfig) -> Self {
+        let w = &cfg.workload;
+        let dev = &cfg.device;
+        let n_sms = dev.num_sms as usize;
+        let tensor_sectors =
+            (w.tensor_bytes() + dev.sector_bytes as u64 - 1) / dev.sector_bytes as u64;
+        MattsonExactBackend {
+            l1: (0..n_sms).map(|_| ExactLru::new(dev.l1_sectors())).collect(),
+            profiler: CapacityProfiler::new_dense(
+                (4 * tensor_sectors * w.batch_heads() as u64) as usize,
+            ),
+            sectors: sector_lut(w, dev.sector_bytes),
+            tensor_sectors,
+            row_sectors: w.rows_sectors(1, dev.sector_bytes) as u64,
+            tile: w.tile as u64,
+            model_l1: cfg.model_l1,
+        }
+    }
+}
+
+impl CacheBackend for MattsonExactBackend {
+    #[inline]
+    fn access(&mut self, sm: usize, a: &TileAccess, counters: &mut CacheCounters) {
+        let sectors = self.sectors[a.tile_idx as usize];
+        let base =
+            (a.batch_head as u64 * 4 + a.tensor as u8 as u64) * self.tensor_sectors;
+        let first = base + a.tile_idx * self.tile * self.row_sectors;
+        for s in first..first + sectors as u64 {
+            let l1_hit = if self.model_l1 && !a.write {
+                self.l1[sm].access_sector(s)
+            } else {
+                false
+            };
+            if !l1_hit {
+                self.profiler.access(s, 1, a.tensor as usize);
+            }
+            counters.record(a.tensor, 1, l1_hit, false, a.write);
+        }
+    }
+}
+
 /// Per-SM execution state.
 struct SmState {
     item: Option<(WorkItem, ItemSteps)>,
     done: bool,
+}
+
+/// Capacity-independent statistics of one streamed trace.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceStats {
+    /// Total inner (K/V streaming) steps executed.
+    pub kv_steps: u64,
+    /// Engine rounds (≈ wavefront ticks until drain).
+    pub rounds: u64,
+    /// Work items executed.
+    pub items: u64,
+}
+
+/// Streaming generator of the interleaved wavefront access trace: the
+/// round-robin CTA progression of the engine, decoupled from any cache
+/// model. Calls `sink(sm, access)` for every tile access, in exactly the
+/// order the cache hierarchy observes them; no trace vector is ever
+/// materialized. Both the LRU simulation backends and the Mattson capacity
+/// profilers consume this one stream, so their inputs are identical by
+/// construction.
+pub fn stream_accesses<F: FnMut(usize, &TileAccess)>(
+    cfg: &SimConfig,
+    mut sink: F,
+) -> TraceStats {
+    let w = &cfg.workload;
+    let dev = &cfg.device;
+    let n_sms = dev.num_sms as usize;
+    let mut sched = Scheduler::new(cfg.scheduler, cfg.order, cfg.variant, w, dev.num_sms);
+    let mut jitter = JitterState::new(cfg, n_sms);
+
+    let mut sms: Vec<SmState> = (0..n_sms)
+        .map(|_| SmState { item: None, done: false })
+        .collect();
+
+    let mut kv_steps = 0u64;
+    let mut rounds = 0u64;
+    let mut items = 0u64;
+    let mut live = n_sms;
+    let mut acc: [Option<TileAccess>; 2] = [None, None];
+
+    while live > 0 {
+        rounds += 1;
+        for sm in 0..n_sms {
+            if sms[sm].done {
+                continue;
+            }
+            if let Some(j) = jitter.as_mut() {
+                if j.stalls(sm) {
+                    continue; // stalled this turn
+                }
+            }
+            // Ensure the SM has a work item.
+            if sms[sm].item.is_none() {
+                match sched.next_item(sm, w) {
+                    Some(it) => {
+                        let steps = ItemSteps::new(w, &it);
+                        items += 1;
+                        sms[sm].item = Some((it, steps));
+                    }
+                    None => {
+                        sms[sm].done = true;
+                        live -= 1;
+                        continue;
+                    }
+                }
+            }
+            let (it, steps) = sms[sm].item.as_mut().unwrap();
+            let step = steps.next().expect("fresh item streams at least Q and O");
+            if matches!(step, Step::KvStep(_)) {
+                kv_steps += 1;
+            }
+            let it_copy = *it;
+            let exhausted = matches!(step, Step::StoreO);
+            step_accesses(w, &it_copy, step, &mut acc);
+            for a in acc.iter().flatten() {
+                sink(sm, a);
+            }
+            if exhausted {
+                sms[sm].item = None;
+            }
+        }
+    }
+
+    TraceStats { kv_steps, rounds, items }
+}
+
+/// Capacity-parametric simulation result: everything [`Simulator::run`]
+/// (or [`Simulator::run_exact`]) produces, with the L2 hit/miss split
+/// deferred to query time via a Mattson [`CapacityCurve`]. One profiled
+/// pass answers `result_at` for *every* L2 capacity in `supports` range —
+/// bit for bit what the corresponding per-capacity simulation returns.
+#[derive(Clone, Debug)]
+pub struct CapacityProfile {
+    curve: CapacityCurve,
+    /// Template result: L1 counters, issued traffic, per-tensor sector
+    /// totals, non-tex overhead, trace stats — all capacity-independent.
+    /// Its hit/miss fields are placeholders overwritten by `result_at`.
+    base: SimResult,
+}
+
+impl CapacityProfile {
+    /// The underlying miss-count-vs-capacity curve (sector units).
+    pub fn curve(&self) -> &CapacityCurve {
+        &self.curve
+    }
+
+    /// Whether `result_at(l2_sectors)` is exact. For weighted profiles the
+    /// bound is the largest tile's sector count (below it the engine's LRU
+    /// bypasses oversized streaming blocks); for per-sector profiles it is
+    /// 1 sector.
+    pub fn supports(&self, l2_sectors: u64) -> bool {
+        l2_sectors >= self.curve.min_supported_capacity()
+    }
+
+    /// The simulation result at an L2 capacity of `l2_sectors` sectors.
+    pub fn result_at(&self, l2_sectors: u64) -> SimResult {
+        assert!(
+            self.supports(l2_sectors),
+            "capacity {l2_sectors} sectors is below the profile's supported \
+             minimum {} (weighted-LRU bypass regime — use Simulator::run)",
+            self.curve.min_supported_capacity()
+        );
+        let mut r = self.base.clone();
+        let misses = self.curve.channel_misses_at(l2_sectors);
+        let mut miss_total = 0u64;
+        for (t, &m) in misses.iter().enumerate() {
+            let tc = &mut r.counters.per_tensor[t];
+            debug_assert!(m <= tc.sectors);
+            tc.misses = m;
+            tc.hits = tc.sectors - m;
+            miss_total += m;
+        }
+        r.counters.l2_miss_sectors = miss_total;
+        r.counters.l2_hit_sectors = r.counters.l2_sectors_from_tex - miss_total;
+        r
+    }
 }
 
 /// The simulator. Build with a [`SimConfig`], then [`Simulator::run`].
@@ -303,87 +549,53 @@ impl Simulator {
 
     /// Run with the production weighted-block LRU at both levels.
     pub fn run(&self) -> SimResult {
-        self.run_backend(WeightedBackend::new(&self.cfg))
+        let mut backend = WeightedBackend::new(&self.cfg);
+        self.run_backend(&mut backend)
     }
 
     /// Run with exact per-sector LRUs (validation mode — small workloads
     /// only; cost is O(total sectors)).
     pub fn run_exact(&self) -> SimResult {
-        self.run_backend(ExactBackend::new(&self.cfg))
+        let mut backend = ExactBackend::new(&self.cfg);
+        self.run_backend(&mut backend)
     }
 
-    /// The wavefront interleaving loop, generic over the cache backend.
-    fn run_backend<B: CacheBackend>(&self, mut backend: B) -> SimResult {
-        let w = &self.cfg.workload;
-        let dev = &self.cfg.device;
-        let n_sms = dev.num_sms as usize;
-        let mut sched = Scheduler::new(
-            self.cfg.scheduler,
-            self.cfg.order,
-            self.cfg.variant,
-            w,
-            dev.num_sms,
-        );
+    /// Profile the launch once and return a capacity-parametric result:
+    /// `profile().result_at(c)` equals `run()` with an L2 of `c` sectors,
+    /// bit for bit, for every `c` the profile `supports` (>= the largest
+    /// tile's sector count). The config's own `device.l2_bytes` is never
+    /// read — one profile serves a whole capacity sweep.
+    pub fn profile(&self) -> CapacityProfile {
+        let mut backend = MattsonWeightedBackend::new(&self.cfg);
+        let base = self.run_backend(&mut backend);
+        CapacityProfile { curve: backend.profiler.finish(), base }
+    }
+
+    /// Per-sector capacity profile: `profile_exact().result_at(c)` equals
+    /// `run_exact()` with an L2 of `c` sectors, bit for bit, for every
+    /// `c >= 1`. Small workloads only (cost is O(total sectors), like
+    /// `run_exact`).
+    pub fn profile_exact(&self) -> CapacityProfile {
+        let mut backend = MattsonExactBackend::new(&self.cfg);
+        let base = self.run_backend(&mut backend);
+        CapacityProfile { curve: backend.profiler.finish(), base }
+    }
+
+    /// Drive one backend over the streamed access trace.
+    fn run_backend<B: CacheBackend>(&self, backend: &mut B) -> SimResult {
         let mut counters = CacheCounters::default();
-        let mut jitter = JitterState::new(&self.cfg, n_sms);
-
-        let mut sms: Vec<SmState> = (0..n_sms)
-            .map(|_| SmState { item: None, done: false })
-            .collect();
-
-        let mut kv_steps = 0u64;
-        let mut rounds = 0u64;
-        let mut items = 0u64;
-        let mut live = n_sms;
-        let mut acc: [Option<TileAccess>; 2] = [None, None];
-
-        while live > 0 {
-            rounds += 1;
-            for sm in 0..n_sms {
-                if sms[sm].done {
-                    continue;
-                }
-                if let Some(j) = jitter.as_mut() {
-                    if j.stalls(sm) {
-                        continue; // stalled this turn
-                    }
-                }
-                // Ensure the SM has a work item.
-                if sms[sm].item.is_none() {
-                    match sched.next_item(sm, w) {
-                        Some(it) => {
-                            let steps = ItemSteps::new(w, &it);
-                            items += 1;
-                            sms[sm].item = Some((it, steps));
-                        }
-                        None => {
-                            sms[sm].done = true;
-                            live -= 1;
-                            continue;
-                        }
-                    }
-                }
-                let (it, steps) = sms[sm].item.as_mut().unwrap();
-                let step = steps.next().expect("fresh item streams at least Q and O");
-                if matches!(step, Step::KvStep(_)) {
-                    kv_steps += 1;
-                }
-                let it_copy = *it;
-                let exhausted = matches!(step, Step::StoreO);
-                step_accesses(w, &it_copy, step, &mut acc);
-                for a in acc.iter().flatten() {
-                    backend.access(sm, a, &mut counters);
-                }
-                if exhausted {
-                    sms[sm].item = None;
-                }
-            }
+        let stats = stream_accesses(&self.cfg, |sm, a| {
+            backend.access(sm, a, &mut counters)
+        });
+        counters.l2_sectors_other = (stats.kv_steps as f64
+            * self.cfg.device.non_tex_sectors_per_step)
+            .round() as u64;
+        SimResult {
+            counters,
+            kv_steps: stats.kv_steps,
+            rounds: stats.rounds,
+            items: stats.items,
         }
-
-        counters.l2_sectors_other =
-            (kv_steps as f64 * dev.non_tex_sectors_per_step).round() as u64;
-
-        SimResult { counters, kv_steps, rounds, items }
     }
 }
 
@@ -540,6 +752,61 @@ mod tests {
             jit.counters.l2_hit_rate_pct(),
             sync.counters.l2_hit_rate_pct()
         );
+    }
+
+    #[test]
+    fn profile_matches_run_at_every_capacity() {
+        // One weighted Mattson pass must reproduce run() bit for bit at
+        // arbitrary capacities (>= one tile = 64 sectors here).
+        for order in [Order::Cyclic, Order::Sawtooth] {
+            let base = small_cfg(512, false, order);
+            let profile = Simulator::new(base.clone()).profile();
+            for l2_kib in [2u64, 4, 16, 64, 256] {
+                let mut cfg = base.clone();
+                cfg.device.l2_bytes = l2_kib * 1024;
+                let direct = Simulator::new(cfg.clone()).run();
+                let derived = profile.result_at(cfg.device.l2_sectors());
+                assert_eq!(derived, direct, "order={order:?} l2={l2_kib}KiB");
+            }
+        }
+    }
+
+    #[test]
+    fn profile_exact_matches_run_exact_at_every_capacity() {
+        for order in [Order::Cyclic, Order::Sawtooth] {
+            let base = small_cfg(512, true, order);
+            let profile = Simulator::new(base.clone()).profile_exact();
+            for l2_kib in [1u64, 2, 8, 32, 64, 128] {
+                let mut cfg = base.clone();
+                cfg.device.l2_bytes = l2_kib * 1024;
+                let direct = Simulator::new(cfg.clone()).run_exact();
+                let derived = profile.result_at(cfg.device.l2_sectors());
+                assert_eq!(derived, direct, "order={order:?} l2={l2_kib}KiB");
+            }
+        }
+    }
+
+    #[test]
+    fn profile_rejects_bypass_regime_capacities() {
+        // Tile = 16 rows × 4 sectors = 64 sectors; anything smaller is in
+        // the weighted LRU's bypass regime.
+        let p = Simulator::new(small_cfg(256, false, Order::Cyclic)).profile();
+        assert_eq!(p.curve().min_supported_capacity(), 64);
+        assert!(p.supports(64) && !p.supports(63));
+    }
+
+    #[test]
+    fn stream_accesses_is_backend_independent() {
+        // The generator must not depend on who consumes it: collecting the
+        // stream twice yields identical traces and stats.
+        let cfg = small_cfg(256, true, Order::Sawtooth);
+        let mut a = Vec::new();
+        let sa = stream_accesses(&cfg, |sm, acc| a.push((sm, *acc)));
+        let mut b = Vec::new();
+        let sb = stream_accesses(&cfg, |sm, acc| b.push((sm, *acc)));
+        assert_eq!(sa, sb);
+        assert_eq!(a, b);
+        assert_eq!(sa.items, cfg.workload.num_work_items());
     }
 
     #[test]

@@ -231,6 +231,45 @@ pub fn step_accesses(
     }
 }
 
+/// Work items of a single-CTA reference stream: one CTA executing every Q
+/// tile of one (batch·head) in order, sawtooth direction derived from the
+/// Q-tile parity. This is the §4 single-stream setting the reuse-distance
+/// theory (and `sawtooth reuse` / the `abl-reuse` ablation) analyses.
+pub fn single_cta_items(w: &AttentionWorkload, order: Order) -> impl Iterator<Item = WorkItem> {
+    let n = w.num_tiles();
+    (0..n).map(move |q| WorkItem {
+        batch_head: 0,
+        q_tile: q,
+        direction: match order {
+            Order::Cyclic => Direction::Forward,
+            Order::Sawtooth => {
+                if q % 2 == 0 {
+                    Direction::Forward
+                } else {
+                    Direction::Backward
+                }
+            }
+        },
+    })
+}
+
+/// Stream the K/V tile accesses of one work item in visit order (K then V
+/// per visited tile) into `f` — the KV portion of the item's access stream,
+/// without materializing a trace vector.
+pub fn for_each_kv_access(
+    w: &AttentionWorkload,
+    item: &WorkItem,
+    mut f: impl FnMut(&TileAccess),
+) {
+    let mut acc: [Option<TileAccess>; 2] = [None, None];
+    for pos in 0..kv_tiles_for(w, item.q_tile) {
+        step_accesses(w, item, Step::KvStep(pos), &mut acc);
+        for a in acc.iter().flatten() {
+            f(a);
+        }
+    }
+}
+
 /// Reference visit order of KV tiles for a work item — the oracle the
 /// Python kernel tests (`kv_visit_order`) and the engine agree on.
 pub fn visit_order(w: &AttentionWorkload, item: &WorkItem) -> Vec<u64> {
@@ -318,6 +357,34 @@ mod tests {
         assert_eq!(KernelVariant::CuTileTile.items_per_claim(), 2);
         assert!(KernelVariant::CuTileTile.global_parity());
         assert!(!KernelVariant::CuTileStatic.global_parity());
+    }
+
+    #[test]
+    fn single_cta_stream_alternates_on_sawtooth() {
+        let w = wl();
+        let items: Vec<WorkItem> = single_cta_items(&w, Order::Sawtooth).collect();
+        assert_eq!(items.len(), 4);
+        let dirs: Vec<Direction> = items.iter().map(|i| i.direction).collect();
+        assert_eq!(
+            dirs,
+            vec![Direction::Forward, Direction::Backward, Direction::Forward, Direction::Backward]
+        );
+        let cyc: Vec<WorkItem> = single_cta_items(&w, Order::Cyclic).collect();
+        assert!(cyc.iter().all(|i| i.direction == Direction::Forward));
+    }
+
+    #[test]
+    fn kv_access_stream_interleaves_k_and_v() {
+        let w = wl();
+        let it = item(2, Direction::Backward);
+        let mut tiles = Vec::new();
+        for_each_kv_access(&w, &it, |a| tiles.push((a.tensor, a.tile_idx)));
+        // Non-causal: 4 tiles backward, K then V each.
+        assert_eq!(tiles.len(), 8);
+        assert_eq!(tiles[0], (TensorKind::K, 3));
+        assert_eq!(tiles[1], (TensorKind::V, 3));
+        assert_eq!(tiles[6], (TensorKind::K, 0));
+        assert_eq!(tiles[7], (TensorKind::V, 0));
     }
 
     #[test]

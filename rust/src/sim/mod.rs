@@ -31,7 +31,7 @@ pub mod workload;
 
 pub use cache::{ExactLru, WeightedLru};
 pub use counters::CacheCounters;
-pub use engine::{SimConfig, SimResult, Simulator};
+pub use engine::{stream_accesses, CapacityProfile, SimConfig, SimResult, Simulator, TraceStats};
 pub use kernel_model::{KernelVariant, Order, TensorKind, TileAccess};
 pub use scheduler::SchedulerKind;
 pub use sweep::{SweepExecutor, SweepGrid, SweepSpec};

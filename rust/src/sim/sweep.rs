@@ -17,6 +17,14 @@
 //!    [`SweepExecutor`] memoizes on a [`ConfigKey`] so each distinct
 //!    configuration is simulated exactly once per executor (and exactly
 //!    once per process for the policy probe's shared executor).
+//! 3. **Capacity sweeps are one pass, not K.** Configurations that differ
+//!    only in L2 capacity see the *identical* access trace, and by the LRU
+//!    inclusion property one Mattson stack-distance profile of that trace
+//!    predicts the miss count at every capacity (`Simulator::profile`).
+//!    The planner groups such configs into a single profile job and fans
+//!    the curve back out — bit-identical to per-capacity simulation, so
+//!    report output is unchanged byte for byte. `with_mattson(false)`
+//!    (CLI: `--no-mattson`) forces the per-capacity exact path.
 //!
 //! A [`SweepSpec`] is just a named, ordered list of configurations — the
 //! declarative form of one experiment. [`SweepGrid`] builds the common
@@ -27,7 +35,7 @@ use std::sync::{Arc, Mutex};
 
 use rustc_hash::FxHashMap;
 
-use super::engine::{SimConfig, SimResult, Simulator};
+use super::engine::{CapacityProfile, SimConfig, SimResult, Simulator};
 use super::kernel_model::{KernelVariant, Order};
 use super::scheduler::SchedulerKind;
 use super::workload::AttentionWorkload;
@@ -70,6 +78,35 @@ impl ConfigKey {
             non_tex_bits: cfg.device.non_tex_sectors_per_step.to_bits(),
         }
     }
+}
+
+/// Capacity-independent identity of a configuration: a [`ConfigKey`] with
+/// the L2 size erased. Configs sharing a `ProfileKey` see the identical
+/// access trace (the L2 capacity only changes hit/miss outcomes, never the
+/// stream), so one Mattson profile answers all of them.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct ProfileKey(ConfigKey);
+
+impl ProfileKey {
+    fn of(cfg: &SimConfig) -> Self {
+        let mut key = ConfigKey::of(cfg);
+        key.l2_bytes = 0;
+        ProfileKey(key)
+    }
+}
+
+/// Static bound of the weighted fast path: the capacity curve reproduces
+/// the weighted LRU exactly for capacities that can hold the largest block
+/// (below that the LRU's streaming bypass kicks in, which a stack
+/// algorithm cannot model). Tile 0 always has the most rows, so its sector
+/// count is the largest weight in the stream.
+fn mattson_supported(cfg: &SimConfig) -> bool {
+    let w = &cfg.workload;
+    if w.seq == 0 {
+        return false;
+    }
+    let max_weight = w.rows_sectors(w.tile_rows(0), cfg.device.sector_bytes) as u64;
+    cfg.device.l2_sectors() >= max_weight
 }
 
 /// One named experiment: an ordered list of simulator configurations.
@@ -199,16 +236,32 @@ impl SweepGrid {
     }
 }
 
-/// Parallel, memoizing sweep executor.
+/// One unit of sweep work: a plain simulation, or a Mattson profile pass
+/// shared by every config in a capacity group (indices into the todo list).
+enum Job {
+    Sim(usize),
+    Profile(Vec<usize>),
+}
+
+/// Parallel, memoizing sweep executor with a reuse-distance fast path.
 ///
 /// * Results are cached per [`ConfigKey`] for the executor's lifetime; a
 ///   config is simulated at most once.
-/// * `run_all` simulates the uncached configurations on up to `threads`
-///   scoped worker threads and returns results **in input order** — output
-///   built from them is byte-identical at any thread count.
+/// * `run_all` groups uncached configurations that differ **only in L2
+///   capacity** into a single Mattson profile job (one trace pass answers
+///   every capacity — `Simulator::profile`), simulates the rest as before,
+///   fans the work out over the thread pool, and returns results **in
+///   input order**. Profile-derived results are bit-identical to direct
+///   simulation, so output built from them is byte-identical at any thread
+///   count *and* with the fast path disabled (`with_mattson(false)`).
+/// * Capacity curves are cached per [`ProfileKey`] alongside the result
+///   cache, so later queries at new capacities of an already-profiled
+///   shape (the coordinator's policy probe) are O(log) lookups.
 pub struct SweepExecutor {
     threads: usize,
+    mattson: bool,
     cache: Mutex<FxHashMap<ConfigKey, Arc<SimResult>>>,
+    profiles: Mutex<FxHashMap<ProfileKey, Arc<CapacityProfile>>>,
 }
 
 impl SweepExecutor {
@@ -217,7 +270,9 @@ impl SweepExecutor {
     pub fn new(threads: usize) -> Self {
         SweepExecutor {
             threads: threads.max(1),
+            mattson: true,
             cache: Mutex::new(FxHashMap::default()),
+            profiles: Mutex::new(FxHashMap::default()),
         }
     }
 
@@ -229,22 +284,43 @@ impl SweepExecutor {
         Self::new(n)
     }
 
+    /// Enable/disable the reuse-distance fast path (`--no-mattson` on the
+    /// CLI). Output is byte-identical either way; disabling forces one LRU
+    /// simulation per capacity (the measurement baseline of bench_reuse).
+    pub fn with_mattson(mut self, enabled: bool) -> Self {
+        self.mattson = enabled;
+        self
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
     }
 
-    /// Number of distinct configurations simulated so far.
+    pub fn mattson_enabled(&self) -> bool {
+        self.mattson
+    }
+
+    /// Number of distinct configurations resolved so far.
     pub fn cached_len(&self) -> usize {
         self.cache.lock().unwrap().len()
     }
 
-    /// Run (or recall) a single configuration.
+    /// Number of capacity curves profiled so far.
+    pub fn profiled_len(&self) -> usize {
+        self.profiles.lock().unwrap().len()
+    }
+
+    /// Run (or recall) a single configuration. Consults the capacity-curve
+    /// cache first: a config whose capacity-independent identity is already
+    /// profiled derives its result without simulating.
     pub fn run_one(&self, cfg: &SimConfig) -> Arc<SimResult> {
         let key = ConfigKey::of(cfg);
         if let Some(r) = self.cache.lock().unwrap().get(&key) {
             return Arc::clone(r);
         }
-        let result = Arc::new(Simulator::new(cfg.clone()).run());
+        let result = self
+            .cached_profile_result(cfg)
+            .unwrap_or_else(|| Arc::new(Simulator::new(cfg.clone()).run()));
         self.cache
             .lock()
             .unwrap()
@@ -253,14 +329,67 @@ impl SweepExecutor {
             .clone()
     }
 
+    /// Profile (or recall) the capacity curve of a configuration's
+    /// capacity-independent identity. One trace pass answers `result_at`
+    /// for every supported L2 capacity.
+    pub fn profile_one(&self, cfg: &SimConfig) -> Arc<CapacityProfile> {
+        let pkey = ProfileKey::of(cfg);
+        if let Some(p) = self.profiles.lock().unwrap().get(&pkey) {
+            return Arc::clone(p);
+        }
+        let profile = Arc::new(Simulator::new(cfg.clone()).profile());
+        self.profiles
+            .lock()
+            .unwrap()
+            .entry(pkey)
+            .or_insert_with(|| Arc::clone(&profile))
+            .clone()
+    }
+
+    /// Run one configuration through the capacity-curve cache: profiles the
+    /// shape on first use, then answers *any* L2 capacity for it without
+    /// re-simulating. Bit-identical to [`Self::run_one`]; preferable when
+    /// the caller expects follow-up queries at other capacities (the
+    /// coordinator's what-if cost hints). Falls back to plain simulation
+    /// when the capacity is below the curve's supported range or the fast
+    /// path is disabled.
+    pub fn run_at_capacity(&self, cfg: &SimConfig) -> Arc<SimResult> {
+        if self.mattson && mattson_supported(cfg) {
+            let key = ConfigKey::of(cfg);
+            if let Some(r) = self.cache.lock().unwrap().get(&key) {
+                return Arc::clone(r);
+            }
+            let profile = self.profile_one(cfg);
+            let result = Arc::new(profile.result_at(cfg.device.l2_sectors()));
+            return self
+                .cache
+                .lock()
+                .unwrap()
+                .entry(key)
+                .or_insert_with(|| Arc::clone(&result))
+                .clone();
+        }
+        self.run_one(cfg)
+    }
+
+    /// Result from an already-cached capacity curve, if one applies.
+    fn cached_profile_result(&self, cfg: &SimConfig) -> Option<Arc<SimResult>> {
+        if !(self.mattson && mattson_supported(cfg)) {
+            return None;
+        }
+        let profile = self.profiles.lock().unwrap().get(&ProfileKey::of(cfg)).cloned()?;
+        Some(Arc::new(profile.result_at(cfg.device.l2_sectors())))
+    }
+
     /// Run a whole spec; results in `spec.configs` order.
     pub fn run_spec(&self, spec: &SweepSpec) -> Vec<Arc<SimResult>> {
         self.run_all(&spec.configs)
     }
 
     /// Run every configuration, deduplicating against the cache and each
-    /// other, fanning the misses out over the thread pool, and returning
-    /// results in input order.
+    /// other, collapsing capacity-only groups into single profile passes,
+    /// fanning the rest out over the thread pool, and returning results in
+    /// input order.
     pub fn run_all(&self, configs: &[SimConfig]) -> Vec<Arc<SimResult>> {
         let keys: Vec<ConfigKey> = configs.iter().map(ConfigKey::of).collect();
 
@@ -279,34 +408,72 @@ impl SweepExecutor {
             }
         }
 
-        if !missing.is_empty() {
+        // Anything answerable from an already-cached capacity curve skips
+        // the work queue entirely.
+        let mut todo: Vec<(ConfigKey, SimConfig)> = Vec::new();
+        {
+            let mut derived: Vec<(ConfigKey, Arc<SimResult>)> = Vec::new();
+            for (key, cfg) in missing {
+                match self.cached_profile_result(&cfg) {
+                    Some(r) => derived.push((key, r)),
+                    None => todo.push((key, cfg)),
+                }
+            }
+            if !derived.is_empty() {
+                let mut cache = self.cache.lock().unwrap();
+                for (key, r) in derived {
+                    cache.entry(key).or_insert(r);
+                }
+            }
+        }
+
+        if !todo.is_empty() {
+            let jobs = self.plan_jobs(&todo);
             let results: Vec<Mutex<Option<SimResult>>> =
-                missing.iter().map(|_| Mutex::new(None)).collect();
-            let workers = self.threads.min(missing.len());
+                todo.iter().map(|_| Mutex::new(None)).collect();
+            let run_job = |job: &Job| match job {
+                Job::Sim(i) => {
+                    let r = Simulator::new(todo[*i].1.clone()).run();
+                    *results[*i].lock().unwrap() = Some(r);
+                }
+                Job::Profile(members) => {
+                    let cfg0 = &todo[members[0]].1;
+                    let profile = Arc::new(Simulator::new(cfg0.clone()).profile());
+                    for &i in members {
+                        let cap = todo[i].1.device.l2_sectors();
+                        *results[i].lock().unwrap() = Some(profile.result_at(cap));
+                    }
+                    self.profiles
+                        .lock()
+                        .unwrap()
+                        .entry(ProfileKey::of(cfg0))
+                        .or_insert(profile);
+                }
+            };
+            let workers = self.threads.min(jobs.len());
             if workers <= 1 {
-                for (i, (_, cfg)) in missing.iter().enumerate() {
-                    *results[i].lock().unwrap() = Some(Simulator::new(cfg.clone()).run());
+                for job in &jobs {
+                    run_job(job);
                 }
             } else {
                 let next = AtomicUsize::new(0);
-                let missing_ref = &missing;
-                let results_ref = &results;
+                let jobs_ref = &jobs;
                 let next_ref = &next;
+                let run_job_ref = &run_job;
                 std::thread::scope(|s| {
                     for _ in 0..workers {
                         s.spawn(move || loop {
                             let i = next_ref.fetch_add(1, Ordering::Relaxed);
-                            if i >= missing_ref.len() {
+                            if i >= jobs_ref.len() {
                                 break;
                             }
-                            let r = Simulator::new(missing_ref[i].1.clone()).run();
-                            *results_ref[i].lock().unwrap() = Some(r);
+                            run_job_ref(&jobs_ref[i]);
                         });
                     }
                 });
             }
             let mut cache = self.cache.lock().unwrap();
-            for ((key, _), slot) in missing.into_iter().zip(results) {
+            for ((key, _), slot) in todo.into_iter().zip(results) {
                 let r = slot
                     .into_inner()
                     .unwrap()
@@ -319,6 +486,46 @@ impl SweepExecutor {
         keys.iter()
             .map(|k| Arc::clone(cache.get(k).expect("config simulated above")))
             .collect()
+    }
+
+    /// Partition the todo list into jobs: configs sharing a capacity-
+    /// independent identity (and inside the fast path's validity bound)
+    /// become one profile job when there are at least two of them — a
+    /// K-capacity ablation collapses from K simulations to one O(N log N)
+    /// pass. Job order follows first appearance, so work distribution (and
+    /// therefore output) is deterministic at any thread count.
+    fn plan_jobs(&self, todo: &[(ConfigKey, SimConfig)]) -> Vec<Job> {
+        let mut group_of: Vec<Option<usize>> = vec![None; todo.len()];
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        if self.mattson {
+            let mut index: FxHashMap<ProfileKey, usize> = FxHashMap::default();
+            for (i, (_, cfg)) in todo.iter().enumerate() {
+                if !mattson_supported(cfg) {
+                    continue;
+                }
+                let next_id = groups.len();
+                let g = *index.entry(ProfileKey::of(cfg)).or_insert(next_id);
+                if g == next_id {
+                    groups.push(Vec::new());
+                }
+                groups[g].push(i);
+                group_of[i] = Some(g);
+            }
+        }
+        let mut jobs = Vec::new();
+        let mut emitted = vec![false; groups.len()];
+        for (i, g) in group_of.iter().enumerate() {
+            match g {
+                Some(g) if groups[*g].len() >= 2 => {
+                    if !emitted[*g] {
+                        emitted[*g] = true;
+                        jobs.push(Job::Profile(groups[*g].clone()));
+                    }
+                }
+                _ => jobs.push(Job::Sim(i)),
+            }
+        }
+        jobs
     }
 }
 
@@ -394,6 +601,83 @@ mod tests {
         assert_eq!(spec.configs[1].workload.seq, 256);
         assert_eq!(spec.configs[2].order, Order::Sawtooth);
         assert_eq!(spec.configs[2].workload.seq, 128);
+    }
+
+    #[test]
+    fn grouped_capacity_sweep_matches_ungrouped_byte_for_byte() {
+        let grid = SweepGrid::new(small_cfg(512, Order::Cyclic))
+            .orders(&[Order::Cyclic, Order::Sawtooth])
+            .l2_bytes(&[16 * 1024, 32 * 1024, 64 * 1024, 128 * 1024])
+            .causals(&[false, true])
+            .build("capacity-grid");
+        let fast = SweepExecutor::new(4);
+        let exact = SweepExecutor::new(4).with_mattson(false);
+        let a = fast.run_spec(&grid);
+        let b = exact.run_spec(&grid);
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(**x, **y, "config {i} diverged between fast and exact paths");
+        }
+        // 2 orders × 2 masks → 4 profile jobs covered all 16 configs.
+        assert_eq!(fast.profiled_len(), 4);
+        assert_eq!(fast.cached_len(), 16);
+    }
+
+    #[test]
+    fn profile_one_memoizes_per_shape() {
+        let exec = SweepExecutor::new(1);
+        let a = exec.profile_one(&small_cfg(256, Order::Cyclic));
+        let mut other_cap = small_cfg(256, Order::Cyclic);
+        other_cap.device.l2_bytes *= 2;
+        let b = exec.profile_one(&other_cap);
+        assert!(Arc::ptr_eq(&a, &b), "capacity must not split the profile cache");
+        assert_eq!(exec.profiled_len(), 1);
+        let c = exec.profile_one(&small_cfg(256, Order::Sawtooth));
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn run_at_capacity_derives_from_cached_curve() {
+        let exec = SweepExecutor::new(1);
+        let base = small_cfg(512, Order::Sawtooth);
+        let r1 = exec.run_at_capacity(&base);
+        assert_eq!(exec.profiled_len(), 1);
+        // A second capacity of the same shape must reuse the curve (still
+        // one profile) and agree with direct simulation bit for bit.
+        let mut half = base.clone();
+        half.device.l2_bytes /= 2;
+        let r2 = exec.run_at_capacity(&half);
+        assert_eq!(exec.profiled_len(), 1);
+        assert_eq!(*r1, Simulator::new(base).run());
+        assert_eq!(*r2, Simulator::new(half).run());
+    }
+
+    #[test]
+    fn run_one_consults_profile_cache() {
+        let exec = SweepExecutor::new(1);
+        let base = small_cfg(256, Order::Cyclic);
+        exec.profile_one(&base);
+        let mut quarter = base.clone();
+        quarter.device.l2_bytes /= 4;
+        let r = exec.run_one(&quarter);
+        assert_eq!(*r, Simulator::new(quarter).run());
+    }
+
+    #[test]
+    fn bypass_regime_capacities_fall_back_to_simulation() {
+        // Tile weight = 64 sectors = 2 KiB; a 1 KiB L2 is in the weighted
+        // LRU's bypass regime, so grouping must not claim it.
+        let mut tiny_l2 = small_cfg(256, Order::Cyclic);
+        tiny_l2.device.l2_bytes = 1024;
+        let mut configs = vec![tiny_l2.clone()];
+        let mut other = tiny_l2.clone();
+        other.device.l2_bytes = 64 * 1024;
+        configs.push(other);
+        let exec = SweepExecutor::new(1);
+        let rs = exec.run_all(&configs);
+        assert_eq!(*rs[0], Simulator::new(configs[0].clone()).run());
+        assert_eq!(*rs[1], Simulator::new(configs[1].clone()).run());
+        assert_eq!(exec.profiled_len(), 0, "singleton groups must not profile");
     }
 
     #[test]

@@ -1,0 +1,158 @@
+//! Cross-validation of the reuse-distance fast path: one Mattson profile
+//! pass must reproduce per-capacity LRU simulation *bit for bit* — the
+//! exact (per-sector) profile against `run_exact`, the weighted profile
+//! against `run`, and the sweep planner's grouped execution against the
+//! ungrouped path.
+
+use sawtooth_attn::gb10::DeviceSpec;
+use sawtooth_attn::sim::kernel_model::{KernelVariant, Order};
+use sawtooth_attn::sim::scheduler::SchedulerKind;
+use sawtooth_attn::sim::sweep::{SweepExecutor, SweepGrid};
+use sawtooth_attn::sim::workload::AttentionWorkload;
+use sawtooth_attn::sim::{SimConfig, Simulator};
+use sawtooth_attn::util::proptest::check;
+
+fn tiny_cfg(seq: u64, order: Order, causal: bool, sched: SchedulerKind) -> SimConfig {
+    let w = AttentionWorkload {
+        batch: 1,
+        heads: 1,
+        seq,
+        head_dim: 64,
+        elem_bytes: 2,
+        tile: 16,
+        causal,
+    };
+    SimConfig {
+        device: DeviceSpec::tiny(),
+        workload: w,
+        scheduler: sched,
+        order,
+        variant: KernelVariant::CudaWmma,
+        jitter: 0.0,
+        seed: 0,
+        model_l1: true,
+    }
+}
+
+/// Satellite acceptance test: Mattson-predicted miss counts equal exact
+/// LRU simulation (`run_exact`) — integer equality on the full counter set
+/// — at 8+ capacities across cyclic/sawtooth × causal/full ×
+/// persistent/non-persistent.
+#[test]
+fn capacity_curve_equals_run_exact_across_the_grid() {
+    // 9 capacities spanning "far below the working set" to "holds it all".
+    let l2_kib: [u64; 9] = [1, 2, 4, 8, 12, 16, 32, 64, 128];
+    for order in [Order::Cyclic, Order::Sawtooth] {
+        for causal in [false, true] {
+            for sched in [SchedulerKind::Persistent, SchedulerKind::NonPersistent] {
+                let base = tiny_cfg(512, order, causal, sched);
+                let profile = Simulator::new(base.clone()).profile_exact();
+                for &kib in &l2_kib {
+                    let mut cfg = base.clone();
+                    cfg.device.l2_bytes = kib * 1024;
+                    let direct = Simulator::new(cfg.clone()).run_exact();
+                    let derived = profile.result_at(cfg.device.l2_sectors());
+                    assert_eq!(
+                        derived, direct,
+                        "order={order:?} causal={causal} sched={sched:?} L2={kib}KiB"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The weighted profile (what the sweep planner fans out) must equal the
+/// production `run()` bit for bit at every supported capacity, including
+/// under jitter and for the CuTile variants.
+#[test]
+fn prop_weighted_profile_equals_run() {
+    check("weighted-profile-eq-run", 10, |g| {
+        let mut cfg = tiny_cfg(
+            *g.choose(&[256u64, 512, 768]),
+            *g.choose(&[Order::Cyclic, Order::Sawtooth]),
+            g.bool(),
+            *g.choose(&[SchedulerKind::Persistent, SchedulerKind::NonPersistent]),
+        );
+        cfg.variant = *g.choose(&[
+            KernelVariant::CudaWmma,
+            KernelVariant::CuTileStatic,
+            KernelVariant::CuTileTile,
+        ]);
+        if g.bool() {
+            cfg.jitter = 0.25;
+            cfg.seed = g.int(0, 1000);
+        }
+        let profile = Simulator::new(cfg.clone()).profile();
+        // Tile = 16 rows × 4 sectors = 64 sectors = 2 KiB minimum.
+        for kib in [2u64, 3, 4, 8, 16, 24, 48, 96, 192] {
+            let mut at = cfg.clone();
+            at.device.l2_bytes = kib * 1024;
+            let direct = Simulator::new(at.clone()).run();
+            let derived = profile.result_at(at.device.l2_sectors());
+            if derived != direct {
+                return Err(format!(
+                    "profile diverged from run() at L2={kib}KiB ({cfg:?})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Satellite acceptance test: grouped sweep output is byte-identical to the
+/// ungrouped (per-capacity simulation) path, at any thread count.
+#[test]
+fn prop_grouped_sweep_equals_ungrouped() {
+    check("grouped-sweep-eq-ungrouped", 6, |g| {
+        let seqs: Vec<u64> = vec![*g.choose(&[256u64, 512])];
+        let caps: Vec<u64> = vec![16 * 1024, 32 * 1024, 48 * 1024, 64 * 1024, 128 * 1024];
+        let grid = SweepGrid::new(tiny_cfg(
+            256,
+            Order::Cyclic,
+            g.bool(),
+            *g.choose(&[SchedulerKind::Persistent, SchedulerKind::NonPersistent]),
+        ))
+        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .l2_bytes(&caps)
+        .seqs(&seqs)
+        .build("grouped-vs-ungrouped");
+        for threads in [1usize, 4] {
+            let fast = SweepExecutor::new(threads);
+            let exact = SweepExecutor::new(threads).with_mattson(false);
+            let a = fast.run_spec(&grid);
+            let b = exact.run_spec(&grid);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                if **x != **y {
+                    return Err(format!(
+                        "config {i} diverged at {threads} threads: {x:?} vs {y:?}"
+                    ));
+                }
+            }
+            if fast.profiled_len() == 0 {
+                return Err("fast path never grouped a capacity sweep".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The curve itself is monotone (Mattson inclusion) and saturates at the
+/// cold-miss floor once the cache holds the whole footprint.
+#[test]
+fn curve_is_monotone_and_saturates_at_cold_misses() {
+    let cfg = tiny_cfg(512, Order::Sawtooth, false, SchedulerKind::Persistent);
+    let profile = Simulator::new(cfg.clone()).profile();
+    let mut prev = u64::MAX;
+    for kib in [2u64, 4, 8, 16, 32, 64, 128, 256, 512] {
+        let m = profile.curve().misses_at(kib * 1024 / 32);
+        assert!(m <= prev, "misses increased at {kib}KiB");
+        prev = m;
+    }
+    let huge = profile.result_at(u64::MAX / 2);
+    assert_eq!(
+        huge.counters.l2_miss_sectors,
+        sawtooth_attn::sim::engine::cold_sectors(&cfg.workload, &cfg.device),
+        "an infinite L2 leaves only compulsory misses"
+    );
+}

@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Fill EXPERIMENTS.md's measured-numbers block from the bench JSON files.
+
+Reads rust/BENCH_sweep.json and rust/BENCH_reuse.json (produced by
+`cargo bench --bench bench_sweep` / `--bench bench_reuse`, or downloaded
+from the CI artifacts) and rewrites the region between the
+`<!-- BENCH:begin -->` / `<!-- BENCH:end -->` markers in EXPERIMENTS.md.
+
+Usage: python3 scripts/update_experiments_perf.py   (from the repo root,
+or anywhere — paths are resolved relative to this file).
+"""
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+EXPERIMENTS = ROOT / "EXPERIMENTS.md"
+BEGIN = "<!-- BENCH:begin -->"
+END = "<!-- BENCH:end -->"
+
+
+def load(name):
+    path = ROOT / "rust" / name
+    if not path.exists():
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def render(sweep, reuse):
+    lines = []
+    if sweep is None and reuse is None:
+        lines.append(
+            "*No measured numbers yet: run `make bench-perf` on a ≥8-core "
+            "host (or download the CI `BENCH_sweep`/`BENCH_reuse` "
+            "artifacts into `rust/`) and re-run "
+            "`python3 scripts/update_experiments_perf.py`.*"
+        )
+        return lines
+    if sweep is not None:
+        lines.append("Sweep executor (`bench_sweep`, %d configs, %d threads):" % (sweep["configs"], sweep["threads"]))
+        lines.append("")
+        lines.append("| path | wall-clock |")
+        lines.append("|---|---|")
+        lines.append("| sequential | %.3f s |" % sweep["sequential_s"])
+        lines.append(
+            "| parallel ×%d | %.3f s (**%.2fx**) |" % (sweep["threads"], sweep["parallel_s"], sweep["speedup"])
+        )
+        lines.append("| memoized re-run | %.6f s |" % sweep["memoized_rerun_s"])
+        lines.append("")
+    if reuse is not None:
+        lines.append(
+            "Reuse-distance fast path (`bench_reuse`, %d configs = %d capacities × 2 orders):"
+            % (reuse["configs"], reuse["capacities"])
+        )
+        lines.append("")
+        lines.append("| path | wall-clock |")
+        lines.append("|---|---|")
+        lines.append("| per-capacity simulation (`--no-mattson`) | %.3f s |" % reuse["ungrouped_s"])
+        lines.append("| grouped Mattson profile | %.3f s (**%.2fx**) |" % (reuse["grouped_s"], reuse["speedup"]))
+        lines.append("| 64 what-if capacities from cached curve | %.6f s |" % reuse["whatif_64caps_s"])
+        lines.append("")
+        lines.append("Results bit-identical across paths: `%s`." % reuse["results_identical"])
+    return lines
+
+
+def main():
+    text = EXPERIMENTS.read_text()
+    if BEGIN not in text or END not in text:
+        sys.exit(f"markers {BEGIN} / {END} not found in {EXPERIMENTS}")
+    head, rest = text.split(BEGIN, 1)
+    _, tail = rest.split(END, 1)
+    block = "\n".join(render(load("BENCH_sweep.json"), load("BENCH_reuse.json")))
+    EXPERIMENTS.write_text(head + BEGIN + "\n" + block + "\n" + END + tail)
+    print(f"updated {EXPERIMENTS}")
+
+
+if __name__ == "__main__":
+    main()
