@@ -7,7 +7,7 @@
 
 pub mod schema;
 
-pub use schema::{ServeConfig, SimRunConfig};
+pub use schema::{ServeConfig, SimRunConfig, SweepServiceConfig};
 
 use std::collections::BTreeMap;
 use std::path::Path;

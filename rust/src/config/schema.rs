@@ -165,6 +165,61 @@ impl ServeConfig {
     }
 }
 
+/// Configuration of the coordinator's sweep service
+/// (`sawtooth sweep-serve`, `[sweep_service]` config section). The limits
+/// are the service's admission control: grids above `max_configs` and
+/// clients above `max_pending` queued submissions are rejected at submit
+/// time instead of monopolizing the shared executor.
+#[derive(Clone, Debug)]
+pub struct SweepServiceConfig {
+    /// Worker threads of the shared executor (0 = host core count).
+    pub threads: usize,
+    /// Largest grid accepted in one submission.
+    pub max_configs: usize,
+    /// Most submissions one client may have queued or in flight.
+    pub max_pending: usize,
+    /// Reuse-distance fast path (capacity-grouped chunks). Disabling it
+    /// (`--no-mattson`) degrades every chunk to a singleton simulation;
+    /// results are byte-identical either way.
+    pub mattson: bool,
+}
+
+impl Default for SweepServiceConfig {
+    fn default() -> Self {
+        SweepServiceConfig {
+            threads: 0,
+            max_configs: 4096,
+            max_pending: 8,
+            mattson: true,
+        }
+    }
+}
+
+impl SweepServiceConfig {
+    pub fn from_config(c: &Config) -> Result<Self> {
+        let d = Self::default();
+        let cfg = SweepServiceConfig {
+            threads: c.int("sweep_service.threads", d.threads as i64) as usize,
+            max_configs: c.int("sweep_service.max_configs", d.max_configs as i64) as usize,
+            max_pending: c.int("sweep_service.max_pending", d.max_pending as i64) as usize,
+            mattson: c.bool("sweep_service.mattson", d.mattson),
+        };
+        if cfg.max_configs == 0 || cfg.max_pending == 0 {
+            bail!("sweep_service.max_configs and sweep_service.max_pending must be >= 1");
+        }
+        Ok(cfg)
+    }
+
+    /// The executor thread count this config resolves to.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -222,5 +277,26 @@ mod tests {
         assert_eq!(s.order, Order::Cyclic);
         let bad = Config::parse("[serve]\nmax_batch = 0").unwrap();
         assert!(ServeConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn sweep_service_parse_and_validate() {
+        let c = Config::parse(
+            "[sweep_service]\nthreads = 2\nmax_configs = 64\nmax_pending = 3\nmattson = false",
+        )
+        .unwrap();
+        let s = SweepServiceConfig::from_config(&c).unwrap();
+        assert_eq!(s.threads, 2);
+        assert_eq!(s.resolved_threads(), 2);
+        assert_eq!(s.max_configs, 64);
+        assert_eq!(s.max_pending, 3);
+        assert!(!s.mattson);
+        // Defaults: host-sized executor, fast path on.
+        let d = SweepServiceConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(d.threads, 0);
+        assert!(d.resolved_threads() >= 1);
+        assert!(d.mattson);
+        let bad = Config::parse("[sweep_service]\nmax_configs = 0").unwrap();
+        assert!(SweepServiceConfig::from_config(&bad).is_err());
     }
 }

@@ -8,7 +8,7 @@ use crate::runtime::Manifest;
 use super::request::AttentionRequest;
 
 /// A request paired with its position in the submission window (used to
-//  route the response back to the right channel).
+/// route the response back to the right channel).
 #[derive(Debug)]
 pub struct PlannedRequest {
     pub req: AttentionRequest,

@@ -11,6 +11,12 @@
 //!   exposes the GB10 perf estimator used for admission-time cost hints.
 //! * [`Engine`] — bounded submission queue (back-pressure), a pipeline
 //!   thread running batcher + PJRT executor, and latency/throughput stats.
+//! * [`sweep_service::SweepService`] — the sweep subsystem
+//!   ([`crate::sim::sweep`]) exposed as a coordinator service: clients
+//!   submit [`request::SweepRequest`] grids alongside attention traffic
+//!   and stream back capacity-grouped result chunks. The engine routes
+//!   sweep submissions to it via [`Engine::submit_sweep`] when started
+//!   with [`Engine::start_with_sweep`].
 //!
 //! Python never runs here: the engine executes artifacts via the runtime's
 //! host backend (see [`crate::runtime`]).
@@ -19,11 +25,16 @@ pub mod batcher;
 pub mod policy;
 pub mod request;
 pub mod stats;
+pub mod sweep_service;
 
 pub use batcher::{BatchPlan, Batcher};
 pub use policy::{GpuEstimate, SchedulePolicy};
-pub use request::{AttentionRequest, AttentionResponse, RequestId};
-pub use stats::EngineStats;
+pub use request::{
+    AttentionRequest, AttentionResponse, ClientId, RequestId, SweepChunk, SweepRequest,
+    SweepResponse,
+};
+pub use stats::{EngineStats, SweepServiceStats};
+pub use sweep_service::{SweepService, SweepTicket};
 
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -32,8 +43,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::ServeConfig;
+use crate::config::{ServeConfig, SweepServiceConfig};
 use crate::runtime::Runtime;
+use crate::sim::SweepSpec;
 
 /// A queued submission: the request plus its response channel.
 struct Submission {
@@ -62,6 +74,9 @@ pub struct Engine {
     pipeline: Option<JoinHandle<()>>,
     stats: Arc<Mutex<EngineStats>>,
     cfg: ServeConfig,
+    /// Sweep-service sidecar ([`Engine::start_with_sweep`]): serves grid
+    /// submissions next to attention traffic.
+    sweep: Option<SweepService>,
 }
 
 impl Engine {
@@ -98,7 +113,30 @@ impl Engine {
         ready_rx
             .recv()
             .map_err(|_| anyhow!("pipeline thread died during startup"))??;
-        Ok(Engine { tx: Some(tx), pipeline: Some(pipeline), stats, cfg })
+        Ok(Engine { tx: Some(tx), pipeline: Some(pipeline), stats, cfg, sweep: None })
+    }
+
+    /// Start the engine with a sweep-service sidecar, so one coordinator
+    /// serves both attention requests and experiment-grid submissions
+    /// (routed via [`Engine::submit_sweep`]).
+    pub fn start_with_sweep(cfg: ServeConfig, sweep_cfg: SweepServiceConfig) -> Result<Engine> {
+        let mut engine = Engine::start(cfg)?;
+        engine.sweep = Some(SweepService::start(sweep_cfg)?);
+        Ok(engine)
+    }
+
+    /// Route a sweep submission to the sweep service. Errors when the
+    /// engine was started without one.
+    pub fn submit_sweep(&self, client: ClientId, spec: SweepSpec) -> Result<SweepTicket> {
+        self.sweep
+            .as_ref()
+            .ok_or_else(|| anyhow!("engine started without a sweep service"))?
+            .submit(client, spec)
+    }
+
+    /// Snapshot of the sweep-service statistics, when enabled.
+    pub fn sweep_stats(&self) -> Option<SweepServiceStats> {
+        self.sweep.as_ref().map(SweepService::stats)
     }
 
     /// Submit a request without blocking on completion. Applies
@@ -132,11 +170,14 @@ impl Engine {
         self.stats.lock().unwrap().clone()
     }
 
-    /// Drain and stop the pipeline.
+    /// Drain and stop the pipeline (and the sweep sidecar, if any).
     pub fn shutdown(mut self) -> EngineStats {
         self.tx.take(); // close the channel → pipeline drains and exits
         if let Some(h) = self.pipeline.take() {
             let _ = h.join();
+        }
+        if let Some(svc) = self.sweep.take() {
+            svc.shutdown();
         }
         self.stats.lock().unwrap().clone()
     }
@@ -240,6 +281,10 @@ fn pipeline_loop(
             let mut st = stats.lock().unwrap();
             st.batches += 1;
             st.record_batch_size(plan.requests.len());
+            // Full executor time, once per plan: a 2-request plan padded
+            // to batch 4 still spent the whole dispatch, so attributing
+            // `elapsed / batch_padded` per request under-reported it.
+            st.record_exec(exec_elapsed.as_secs_f64());
             if let Some(h) = &hint {
                 st.record_cost_hint(h.speedup);
             }
@@ -250,8 +295,6 @@ fn pipeline_loop(
                         let latency = enq.elapsed();
                         st.completed += 1;
                         st.latency.record(latency.as_secs_f64() * 1e3);
-                        st.exec_time_s += exec_elapsed.as_secs_f64()
-                            / plan.batch_padded as f64;
                         let resp = AttentionResponse {
                             id: req.req.id,
                             output: out,
@@ -300,12 +343,17 @@ fn execute_plan(
     for (i, r) in plan.requests.iter().enumerate() {
         let dst = i * elems_per_req;
         let n = elems_per_req;
-        if r.req.q.len() != n {
-            bail!(
-                "request {} payload has {} elems, artifact expects {n}",
-                r.req.id.0,
-                r.req.q.len()
-            );
+        // Validate all three payloads before any copy: a short (or long)
+        // k/v used to panic `copy_from_slice` on the pipeline thread and
+        // kill the engine for every client. A malformed request must come
+        // back as an error on its own response channel instead.
+        for (tensor, len) in [("q", r.req.q.len()), ("k", r.req.k.len()), ("v", r.req.v.len())] {
+            if len != n {
+                bail!(
+                    "request {} {tensor} payload has {len} elems, artifact expects {n}",
+                    r.req.id.0
+                );
+            }
         }
         q[dst..dst + n].copy_from_slice(&r.req.q);
         k[dst..dst + n].copy_from_slice(&r.req.k);

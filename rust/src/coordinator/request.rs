@@ -1,10 +1,57 @@
-//! Client-visible request/response types.
+//! Client-visible request/response types — attention serving
+//! ([`AttentionRequest`]/[`AttentionResponse`]) and sweep submissions
+//! ([`SweepRequest`]/[`SweepResponse`], served by
+//! [`super::sweep_service::SweepService`]).
 
+use std::sync::Arc;
 use std::time::Duration;
+
+use crate::sim::{SimResult, SweepSpec};
 
 /// Unique request identifier.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct RequestId(pub u64);
+
+/// Identifies a sweep-service client for fairness accounting: the service
+/// round-robins across clients with pending work and enforces per-client
+/// submission limits, so one tenant cannot starve the rest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ClientId(pub u64);
+
+/// One sweep submission: a client asking the coordinator to resolve an
+/// experiment grid. Built either from a typed [`SweepSpec`] or from the
+/// line protocol (`super::sweep_service::parse_spec`).
+#[derive(Clone, Debug)]
+pub struct SweepRequest {
+    pub id: RequestId,
+    pub client: ClientId,
+    pub spec: SweepSpec,
+}
+
+/// One streamed result chunk: a capacity group (or singleton) resolved by
+/// the executor. `indices` point into the submitted spec's config list;
+/// `results[j]` answers `spec.configs[indices[j]]`.
+#[derive(Clone, Debug)]
+pub struct SweepChunk {
+    pub indices: Vec<usize>,
+    pub results: Vec<Arc<SimResult>>,
+}
+
+/// Final answer to a [`SweepRequest`]: every config's result in spec
+/// order — byte-identical to `SweepExecutor::run_spec` on a private
+/// sequential executor, regardless of how many clients interleaved.
+#[derive(Clone, Debug)]
+pub struct SweepResponse {
+    pub id: RequestId,
+    /// Name of the submitted spec.
+    pub name: String,
+    /// Per-config results, in the spec's input order.
+    pub results: Vec<Arc<SimResult>>,
+    /// Chunks streamed before completion (capacity groups + singletons).
+    pub chunks: usize,
+    /// Queue + execution latency of the whole submission.
+    pub elapsed: Duration,
+}
 
 /// One attention request: Q/K/V for a single sequence, (H, S, D) flattened
 /// row-major. The engine batches compatible requests together.

@@ -12,11 +12,16 @@ pub struct EngineStats {
     pub rejected: u64,
     /// Executor dispatches.
     pub batches: u64,
-    /// Histogram of dispatch sizes (index = size, capped at 16).
+    /// Histogram of dispatch sizes (index = size, capped at 16; index 0 is
+    /// dead — a dispatch always carries at least one request).
     pub batch_size_hist: [u64; 17],
+    /// Requests carried by all dispatches (exact, unlike the clamped
+    /// histogram; counts requests in failed dispatches too).
+    pub dispatched_requests: u64,
     /// End-to-end latency per completed request, milliseconds.
     pub latency: LatencyStats,
-    /// Executor time attributed per request, seconds.
+    /// Executor wall time, seconds: the full elapsed time of every
+    /// dispatch, attributed once per plan (see [`Self::record_exec`]).
     pub exec_time_s: f64,
     /// Policy cost hints computed (one per dispatched plan; memoized per
     /// shape by the policy probe, so repeats cost nothing).
@@ -29,6 +34,14 @@ pub struct EngineStats {
 impl EngineStats {
     pub fn record_batch_size(&mut self, n: usize) {
         self.batch_size_hist[n.min(16)] += 1;
+        self.dispatched_requests += n as u64;
+    }
+
+    /// Attribute one executor dispatch's wall time. Called once per plan
+    /// with the **full** elapsed time — not a per-request share — so a
+    /// half-full batch still accounts for everything the executor spent.
+    pub fn record_exec(&mut self, elapsed_s: f64) {
+        self.exec_time_s += elapsed_s;
     }
 
     /// Fold one policy cost hint into the running mean.
@@ -38,12 +51,17 @@ impl EngineStats {
         self.mean_est_speedup += (est_speedup - self.mean_est_speedup) / n;
     }
 
-    /// Mean requests per dispatch.
+    /// Mean requests per dispatch, derived from what was *dispatched*
+    /// rather than what *completed*, so failed dispatches (which complete
+    /// no requests) don't drag the mean toward zero. The numerator is the
+    /// exact `dispatched_requests` counter — not the histogram, whose top
+    /// bucket clamps sizes above 16 (and whose index 0 is dead).
     pub fn mean_batch_size(&self) -> f64 {
-        if self.batches == 0 {
+        let dispatches: u64 = self.batch_size_hist.iter().sum();
+        if dispatches == 0 {
             return 0.0;
         }
-        self.completed as f64 / self.batches as f64
+        self.dispatched_requests as f64 / dispatches as f64
     }
 
     /// Render a human-readable summary block.
@@ -73,6 +91,50 @@ impl EngineStats {
     }
 }
 
+/// Counters collected by the sweep service ([`super::sweep_service`]).
+/// The `exec_*` fields are gauges snapshotted from the shared executor at
+/// read time: `exec_profiled > 0` is the observable proof that the Mattson
+/// capacity-grouping fast path engaged on the service path.
+#[derive(Clone, Debug, Default)]
+pub struct SweepServiceStats {
+    /// Submissions accepted into a client queue.
+    pub submitted: u64,
+    /// Submissions rejected at admission (grid too large, client over its
+    /// pending limit, or empty spec).
+    pub rejected: u64,
+    /// Submissions answered with a full [`super::SweepResponse`].
+    pub completed: u64,
+    /// Submissions cancelled before completion.
+    pub cancelled: u64,
+    /// Result chunks streamed (capacity groups + singletons).
+    pub chunks: u64,
+    /// Configurations resolved across completed submissions.
+    pub configs: u64,
+    /// Distinct configurations in the shared executor's result cache.
+    pub exec_cached: u64,
+    /// Capacity curves in the shared executor's profile cache.
+    pub exec_profiled: u64,
+}
+
+impl SweepServiceStats {
+    /// Render a human-readable summary block.
+    pub fn summary(&self) -> String {
+        format!(
+            "sweeps:   {} submitted, {} completed, {} cancelled, {} rejected\n\
+             chunks:   {} streamed over {} configs\n\
+             executor: {} distinct configs cached, {} capacity curves profiled",
+            self.submitted,
+            self.completed,
+            self.cancelled,
+            self.rejected,
+            self.chunks,
+            self.configs,
+            self.exec_cached,
+            self.exec_profiled,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,11 +151,64 @@ mod tests {
     }
 
     #[test]
-    fn mean_batch_size() {
+    fn mean_batch_size_from_histogram() {
         let mut s = EngineStats::default();
         s.batches = 2;
-        s.completed = 6;
+        s.record_batch_size(2);
+        s.record_batch_size(4);
         assert_eq!(s.mean_batch_size(), 3.0);
+    }
+
+    #[test]
+    fn mean_batch_size_exact_above_histogram_cap() {
+        // The histogram clamps a 100-request dispatch into bucket 16, but
+        // the mean uses the exact dispatched-request counter.
+        let mut s = EngineStats::default();
+        s.batches = 2;
+        s.record_batch_size(100);
+        s.record_batch_size(50);
+        assert_eq!(s.batch_size_hist[16], 2);
+        assert_eq!(s.dispatched_requests, 150);
+        assert_eq!(s.mean_batch_size(), 75.0);
+    }
+
+    #[test]
+    fn failed_dispatches_do_not_drag_mean_batch_size() {
+        // Two 4-request dispatches, one of which fails: the mean dispatch
+        // size is still 4 (the old completed/batches formula said 2).
+        let mut s = EngineStats::default();
+        s.batches = 2;
+        s.record_batch_size(4);
+        s.record_batch_size(4);
+        s.completed = 4;
+        s.failed = 4;
+        assert_eq!(s.mean_batch_size(), 4.0);
+    }
+
+    #[test]
+    fn exec_time_attributed_once_per_plan() {
+        // One plan serving 2 requests padded to batch 4 took 0.5 s: the
+        // stats must carry the full 0.5 s, not 2 × (0.5 / 4).
+        let mut s = EngineStats::default();
+        s.record_exec(0.5);
+        s.record_exec(0.25);
+        assert!((s.exec_time_s - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sweep_service_stats_summary_renders() {
+        let mut s = SweepServiceStats::default();
+        s.submitted = 3;
+        s.completed = 2;
+        s.cancelled = 1;
+        s.chunks = 5;
+        s.configs = 12;
+        s.exec_profiled = 4;
+        let txt = s.summary();
+        assert!(txt.contains("3 submitted"));
+        assert!(txt.contains("1 cancelled"));
+        assert!(txt.contains("5 streamed over 12 configs"));
+        assert!(txt.contains("4 capacity curves profiled"));
     }
 
     #[test]

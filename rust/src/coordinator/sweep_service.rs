@@ -1,0 +1,704 @@
+//! Sweep service: the coordinator-side front end of [`SweepExecutor`].
+//!
+//! PR 1/2 built a parallel, memoizing, reuse-distance-accelerated sweep
+//! executor — but it was only reachable from the offline `report` CLI.
+//! This module makes it a first-class, multi-tenant coordinator service
+//! (the ROADMAP's "batched/sharded sweep service" scale-out item):
+//!
+//! * **Submissions** — clients submit [`SweepSpec`] grids (typed, or via
+//!   the line protocol: [`parse_spec`]/[`format_spec`]) and get a
+//!   [`SweepTicket`] back. Admission control rejects grids above
+//!   `max_configs` and clients above `max_pending` queued submissions.
+//! * **Fairness** — a scheduler thread round-robins across clients at
+//!   *chunk* granularity: one capacity group (or singleton) per turn, so a
+//!   tenant with a 4096-config grid cannot starve a tenant with 4.
+//! * **Streaming** — results arrive in capacity-grouped (Mattson) chunks
+//!   ([`SweepChunk`]): one profile pass resolves a whole L2-capacity group
+//!   at once, and the client sees it immediately instead of waiting for
+//!   the full grid.
+//! * **Cancellation** — [`SweepTicket::cancel`] takes effect between
+//!   chunks; the remaining work is dropped and the ticket resolves with an
+//!   error.
+//! * **Sharing** — every submission resolves against one shared
+//!   [`SweepExecutor`], so overlapping grids from different clients (and
+//!   the coordinator's own policy probes, when constructed via
+//!   [`SweepService::start_with_executor`]) hit one memoized curve cache
+//!   instead of re-simulating per caller. Results are therefore
+//!   byte-identical to a private sequential `run_spec`, regardless of how
+//!   many clients interleave.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::ops::Bound;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use rustc_hash::FxHashMap;
+
+use crate::config::SweepServiceConfig;
+use crate::gb10::DeviceSpec;
+use crate::sim::kernel_model::{KernelVariant, Order};
+use crate::sim::scheduler::SchedulerKind;
+use crate::sim::sweep::SweepExecutor;
+use crate::sim::workload::AttentionWorkload;
+use crate::sim::{SimConfig, SweepSpec};
+
+use super::request::{ClientId, RequestId, SweepChunk, SweepRequest, SweepResponse};
+use super::stats::SweepServiceStats;
+
+/// A message from the scheduler to a waiting ticket.
+enum Update {
+    Chunk(SweepChunk),
+    Done(Result<SweepResponse>),
+}
+
+/// An accepted submission on its way to the scheduler.
+struct Admission {
+    req: SweepRequest,
+    cancel: Arc<AtomicBool>,
+    tx: Sender<Update>,
+    accepted: Instant,
+}
+
+/// Handle returned by [`SweepService::submit`].
+pub struct SweepTicket {
+    id: RequestId,
+    cancel: Arc<AtomicBool>,
+    rx: Receiver<Update>,
+}
+
+impl SweepTicket {
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    /// Request cancellation. Takes effect between chunks: work already
+    /// streamed stays streamed, the rest is dropped and the ticket
+    /// resolves with an error. A submission that completes before the
+    /// flag is observed still resolves normally.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// Block until the final response, discarding streamed chunks.
+    pub fn wait(self) -> Result<SweepResponse> {
+        self.wait_streaming(|_| {})
+    }
+
+    /// Block until the final response, handing each streamed chunk to
+    /// `on_chunk` as it resolves.
+    pub fn wait_streaming(self, mut on_chunk: impl FnMut(SweepChunk)) -> Result<SweepResponse> {
+        loop {
+            match self.rx.recv() {
+                Ok(Update::Chunk(c)) => on_chunk(c),
+                Ok(Update::Done(r)) => return r,
+                Err(_) => bail!("sweep service dropped the request (shutdown?)"),
+            }
+        }
+    }
+}
+
+/// The coordinator's sweep service. See the module docs for semantics.
+pub struct SweepService {
+    tx: Option<Sender<Admission>>,
+    scheduler: Option<JoinHandle<()>>,
+    exec: Arc<SweepExecutor>,
+    stats: Arc<Mutex<SweepServiceStats>>,
+    /// Per-client count of queued/in-flight submissions (admission limit).
+    pending: Arc<Mutex<FxHashMap<u64, usize>>>,
+    cfg: SweepServiceConfig,
+    next_id: AtomicU64,
+}
+
+impl SweepService {
+    /// Start the service with its own executor sized from the config.
+    pub fn start(cfg: SweepServiceConfig) -> Result<SweepService> {
+        let exec =
+            Arc::new(SweepExecutor::new(cfg.resolved_threads()).with_mattson(cfg.mattson));
+        Self::start_with_executor(cfg, exec)
+    }
+
+    /// Start the service on a caller-provided executor — the sharing hook:
+    /// the same memoized executor can back `report all`, the policy probe,
+    /// and every remote client.
+    pub fn start_with_executor(
+        cfg: SweepServiceConfig,
+        exec: Arc<SweepExecutor>,
+    ) -> Result<SweepService> {
+        let stats = Arc::new(Mutex::new(SweepServiceStats::default()));
+        let pending: Arc<Mutex<FxHashMap<u64, usize>>> =
+            Arc::new(Mutex::new(FxHashMap::default()));
+        let (tx, rx) = channel::<Admission>();
+        let scheduler = {
+            let exec = Arc::clone(&exec);
+            let stats = Arc::clone(&stats);
+            let pending = Arc::clone(&pending);
+            std::thread::Builder::new()
+                .name("sawtooth-sweep-service".into())
+                .spawn(move || scheduler_loop(rx, exec, stats, pending))
+                .context("spawning sweep-service scheduler thread")?
+        };
+        Ok(SweepService {
+            tx: Some(tx),
+            scheduler: Some(scheduler),
+            exec,
+            stats,
+            pending,
+            cfg,
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    /// The shared executor (test/stats hook: `profiled_len()` shows the
+    /// Mattson fast path engaging on the service path).
+    pub fn executor(&self) -> &Arc<SweepExecutor> {
+        &self.exec
+    }
+
+    /// Submit a grid on behalf of `client`. Fails fast (and counts a
+    /// rejection) when the spec is empty, exceeds `max_configs`, or the
+    /// client is at its `max_pending` limit.
+    pub fn submit(&self, client: ClientId, spec: SweepSpec) -> Result<SweepTicket> {
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("sweep service is shut down"))?;
+        if spec.is_empty() {
+            self.stats.lock().unwrap().rejected += 1;
+            bail!("empty sweep spec '{}'", spec.name);
+        }
+        if spec.len() > self.cfg.max_configs {
+            self.stats.lock().unwrap().rejected += 1;
+            bail!(
+                "sweep '{}' has {} configs, service limit is {}",
+                spec.name,
+                spec.len(),
+                self.cfg.max_configs
+            );
+        }
+        {
+            let mut p = self.pending.lock().unwrap();
+            let n = p.entry(client.0).or_insert(0);
+            if *n >= self.cfg.max_pending {
+                let n_now = *n;
+                drop(p);
+                self.stats.lock().unwrap().rejected += 1;
+                bail!(
+                    "client {} has {n_now} pending sweeps (limit {}): back-pressure",
+                    client.0,
+                    self.cfg.max_pending
+                );
+            }
+            *n += 1;
+        }
+        let id = RequestId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        let cancel = Arc::new(AtomicBool::new(false));
+        let (utx, urx) = channel::<Update>();
+        let adm = Admission {
+            req: SweepRequest { id, client, spec },
+            cancel: Arc::clone(&cancel),
+            tx: utx,
+            accepted: Instant::now(),
+        };
+        if tx.send(adm).is_err() {
+            release_pending(&self.pending, client.0);
+            bail!("sweep service scheduler exited");
+        }
+        self.stats.lock().unwrap().submitted += 1;
+        Ok(SweepTicket { id, cancel, rx: urx })
+    }
+
+    /// Submit and wait (convenience).
+    pub fn run(&self, client: ClientId, spec: SweepSpec) -> Result<SweepResponse> {
+        self.submit(client, spec)?.wait()
+    }
+
+    /// Snapshot of the service statistics (executor gauges read live).
+    pub fn stats(&self) -> SweepServiceStats {
+        let mut s = self.stats.lock().unwrap().clone();
+        s.exec_cached = self.exec.cached_len() as u64;
+        s.exec_profiled = self.exec.profiled_len() as u64;
+        s
+    }
+
+    /// Drain queued submissions and stop the scheduler.
+    pub fn shutdown(mut self) -> SweepServiceStats {
+        self.tx.take(); // close the channel → scheduler drains and exits
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+        self.stats()
+    }
+}
+
+impl Drop for SweepService {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One in-flight submission inside the scheduler.
+struct ActiveJob {
+    req: SweepRequest,
+    /// Capacity chunks not yet resolved (indices into the spec).
+    chunks: VecDeque<Vec<usize>>,
+    /// Chunks streamed so far.
+    streamed: usize,
+    cancel: Arc<AtomicBool>,
+    tx: Sender<Update>,
+    accepted: Instant,
+}
+
+fn release_pending(pending: &Mutex<FxHashMap<u64, usize>>, client: u64) {
+    let mut p = pending.lock().unwrap();
+    if let Some(n) = p.get_mut(&client) {
+        *n = n.saturating_sub(1);
+        if *n == 0 {
+            p.remove(&client);
+        }
+    }
+}
+
+/// The scheduler: admit → pick the next client (round-robin) → resolve one
+/// chunk of that client's oldest submission → repeat. When the submission
+/// channel closes, remaining queued work is drained before exiting, so
+/// `shutdown()` never abandons an accepted submission.
+fn scheduler_loop(
+    rx: Receiver<Admission>,
+    exec: Arc<SweepExecutor>,
+    stats: Arc<Mutex<SweepServiceStats>>,
+    pending: Arc<Mutex<FxHashMap<u64, usize>>>,
+) {
+    let mut queues: BTreeMap<u64, VecDeque<ActiveJob>> = BTreeMap::new();
+    let mut cursor: Option<u64> = None;
+    loop {
+        // Block for work when idle; exit once the channel is closed and
+        // every queue is drained.
+        if queues.is_empty() {
+            match rx.recv() {
+                Ok(a) => admit(&exec, &mut queues, a),
+                Err(_) => break,
+            }
+        }
+        // Admit everything already waiting without blocking, so new
+        // clients join the rotation before the next turn.
+        loop {
+            match rx.try_recv() {
+                Ok(a) => admit(&exec, &mut queues, a),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        let client = match next_client(&queues, cursor) {
+            Some(c) => c,
+            None => continue,
+        };
+        cursor = Some(client);
+        let finished = serve_one_turn(client, &mut queues, &exec, &stats);
+        if finished {
+            release_pending(&pending, client);
+            let empty = queues.get(&client).map(|q| q.is_empty()).unwrap_or(false);
+            if empty {
+                queues.remove(&client);
+            }
+        }
+    }
+}
+
+fn admit(exec: &SweepExecutor, queues: &mut BTreeMap<u64, VecDeque<ActiveJob>>, a: Admission) {
+    let chunks: VecDeque<Vec<usize>> =
+        VecDeque::from(exec.capacity_chunks(&a.req.spec.configs));
+    queues.entry(a.req.client.0).or_default().push_back(ActiveJob {
+        req: a.req,
+        chunks,
+        streamed: 0,
+        cancel: a.cancel,
+        tx: a.tx,
+        accepted: a.accepted,
+    });
+}
+
+/// Smallest client id strictly greater than the cursor, wrapping to the
+/// smallest overall — round-robin over whoever currently has work.
+fn next_client(queues: &BTreeMap<u64, VecDeque<ActiveJob>>, cursor: Option<u64>) -> Option<u64> {
+    if let Some(c) = cursor {
+        if let Some((&k, _)) = queues.range((Bound::Excluded(c), Bound::Unbounded)).next() {
+            return Some(k);
+        }
+    }
+    queues.keys().next().copied()
+}
+
+/// Resolve one chunk of `client`'s oldest submission (or finish it).
+/// Returns true when that submission left the queue.
+fn serve_one_turn(
+    client: u64,
+    queues: &mut BTreeMap<u64, VecDeque<ActiveJob>>,
+    exec: &SweepExecutor,
+    stats: &Mutex<SweepServiceStats>,
+) -> bool {
+    // Defensive arms return true so an (invariant-breaking) empty queue is
+    // still pruned from the rotation instead of spinning forever.
+    let q = match queues.get_mut(&client) {
+        Some(q) => q,
+        None => return true,
+    };
+    let job = match q.front_mut() {
+        Some(j) => j,
+        None => return true,
+    };
+    if job.cancel.load(Ordering::Relaxed) {
+        let _ = job.tx.send(Update::Done(Err(anyhow!(
+            "sweep {} cancelled by client {}",
+            job.req.id.0,
+            job.req.client.0
+        ))));
+        stats.lock().unwrap().cancelled += 1;
+        q.pop_front();
+        return true;
+    }
+    if let Some(chunk) = job.chunks.pop_front() {
+        let cfgs: Vec<SimConfig> =
+            chunk.iter().map(|&i| job.req.spec.configs[i].clone()).collect();
+        let results = exec.run_all(&cfgs);
+        job.streamed += 1;
+        stats.lock().unwrap().chunks += 1;
+        let _ = job.tx.send(Update::Chunk(SweepChunk { indices: chunk, results }));
+    }
+    if !job.chunks.is_empty() {
+        return false;
+    }
+    // Every chunk resolved (all cache hits now): assemble the in-order
+    // response — byte-identical to a sequential `run_spec`.
+    let results = exec.run_spec(&job.req.spec);
+    let resp = SweepResponse {
+        id: job.req.id,
+        name: job.req.spec.name.clone(),
+        results,
+        chunks: job.streamed,
+        elapsed: job.accepted.elapsed(),
+    };
+    {
+        let mut st = stats.lock().unwrap();
+        st.completed += 1;
+        st.configs += job.req.spec.len() as u64;
+    }
+    let _ = job.tx.send(Update::Done(Ok(resp)));
+    q.pop_front();
+    true
+}
+
+// ---------------------------------------------------------------------------
+// Line protocol
+// ---------------------------------------------------------------------------
+//
+// A submission is plain text, one configuration per line — trivially
+// transportable over any byte stream and diffable in test fixtures:
+//
+// ```text
+// sweep <name>
+// config device=gb10 seq=131072 tile=64 order=sawtooth causal=true ...
+// config device=tiny seq=512 tile=16 l2_bytes=32768
+// end
+// ```
+//
+// `config` keys cover exactly the simulation-relevant fields (the
+// [`crate::sim::sweep::ConfigKey`] identity — so equal protocol lines are
+// guaranteed equal results); unset keys take the paper's CUDA-study
+// defaults, and `device=` picks the base preset (gb10|tiny) whose
+// throughput-only fields (bandwidths, latency, peak FLOPS — the fields
+// `ConfigKey` deliberately excludes) are not part of the protocol. `#`
+// starts a comment line; `end` is optional.
+
+/// Serialize a spec to the line protocol. Round-trips through
+/// [`parse_spec`] to configs with identical `ConfigKey` identity.
+pub fn format_spec(spec: &SweepSpec) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("sweep {}\n", spec.name));
+    for cfg in &spec.configs {
+        let dev = &cfg.device;
+        let base = if dev.name == "tiny" { "tiny" } else { "gb10" };
+        out.push_str(&format!(
+            "config device={base} seq={} tile={} batch={} heads={} head_dim={} \
+             elem_bytes={} causal={} order={} scheduler={} variant={} jitter={} \
+             seed={} model_l1={} sms={} l2_bytes={} l1_bytes={} sector_bytes={} \
+             non_tex={}\n",
+            cfg.workload.seq,
+            cfg.workload.tile,
+            cfg.workload.batch,
+            cfg.workload.heads,
+            cfg.workload.head_dim,
+            cfg.workload.elem_bytes,
+            cfg.workload.causal,
+            cfg.order.name(),
+            cfg.scheduler.name(),
+            cfg.variant.name(),
+            cfg.jitter,
+            cfg.seed,
+            cfg.model_l1,
+            dev.num_sms,
+            dev.l2_bytes,
+            dev.l1_bytes,
+            dev.sector_bytes,
+            dev.non_tex_sectors_per_step,
+        ));
+    }
+    out.push_str("end\n");
+    out
+}
+
+/// Parse a line-protocol submission into a [`SweepSpec`].
+pub fn parse_spec(text: &str) -> Result<SweepSpec> {
+    let mut name = String::from("sweep");
+    let mut configs = Vec::new();
+    for (no, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "end" {
+            break;
+        }
+        if let Some(rest) = line.strip_prefix("sweep") {
+            if rest.starts_with(char::is_whitespace) && !rest.trim().is_empty() {
+                name = rest.trim().to_string();
+                continue;
+            }
+        }
+        if let Some(rest) = line.strip_prefix("config") {
+            if rest.is_empty() || rest.starts_with(char::is_whitespace) {
+                let cfg = parse_config_line(rest)
+                    .with_context(|| format!("line {}", no + 1))?;
+                configs.push(cfg);
+                continue;
+            }
+        }
+        bail!(
+            "line {}: expected 'sweep <name>', 'config k=v ...' or 'end', got '{line}'",
+            no + 1
+        );
+    }
+    if configs.is_empty() {
+        bail!("sweep '{name}' has no config lines");
+    }
+    Ok(SweepSpec::new(name, configs))
+}
+
+fn parse_num<T: std::str::FromStr>(k: &str, v: &str) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    v.parse::<T>().map_err(|e| anyhow!("key {k}: {e}"))
+}
+
+fn parse_config_line(rest: &str) -> Result<SimConfig> {
+    let mut base = "gb10";
+    let mut kvs: Vec<(&str, &str)> = Vec::new();
+    for tok in rest.split_whitespace() {
+        let (k, v) = tok
+            .split_once('=')
+            .ok_or_else(|| anyhow!("expected key=value, got '{tok}'"))?;
+        if k == "device" {
+            base = v;
+        } else {
+            kvs.push((k, v));
+        }
+    }
+    let mut cfg = SimConfig::cuda_study(AttentionWorkload::cuda_study(0));
+    cfg.device = match base {
+        "gb10" => DeviceSpec::gb10(),
+        "tiny" => DeviceSpec::tiny(),
+        other => bail!("device must be gb10|tiny, got '{other}'"),
+    };
+    for (k, v) in kvs {
+        match k {
+            "seq" => cfg.workload.seq = parse_num(k, v)?,
+            "tile" => cfg.workload.tile = parse_num(k, v)?,
+            "batch" => cfg.workload.batch = parse_num(k, v)?,
+            "heads" => cfg.workload.heads = parse_num(k, v)?,
+            "head_dim" => cfg.workload.head_dim = parse_num(k, v)?,
+            "elem_bytes" => cfg.workload.elem_bytes = parse_num(k, v)?,
+            "causal" => cfg.workload.causal = parse_num(k, v)?,
+            "order" => {
+                cfg.order = Order::parse(v)
+                    .ok_or_else(|| anyhow!("order must be cyclic|sawtooth, got '{v}'"))?;
+            }
+            "scheduler" => {
+                cfg.scheduler = SchedulerKind::parse(v).ok_or_else(|| {
+                    anyhow!("scheduler must be persistent|non-persistent, got '{v}'")
+                })?;
+            }
+            "variant" => {
+                cfg.variant = match v {
+                    "cuda-wmma" => KernelVariant::CudaWmma,
+                    "cutile-static" => KernelVariant::CuTileStatic,
+                    "cutile-tile" => KernelVariant::CuTileTile,
+                    other => bail!("variant unknown: '{other}'"),
+                };
+            }
+            "jitter" => cfg.jitter = parse_num(k, v)?,
+            "seed" => cfg.seed = parse_num(k, v)?,
+            "model_l1" => cfg.model_l1 = parse_num(k, v)?,
+            "sms" => cfg.device.num_sms = parse_num(k, v)?,
+            "l2_bytes" => cfg.device.l2_bytes = parse_num(k, v)?,
+            "l2_mib" => cfg.device.l2_bytes = parse_num::<u64>(k, v)? * 1024 * 1024,
+            "l1_bytes" => cfg.device.l1_bytes = parse_num(k, v)?,
+            "sector_bytes" => cfg.device.sector_bytes = parse_num(k, v)?,
+            "non_tex" => cfg.device.non_tex_sectors_per_step = parse_num(k, v)?,
+            other => bail!("unknown config key '{other}'"),
+        }
+    }
+    if cfg.workload.seq == 0 || cfg.workload.tile == 0 || cfg.workload.head_dim == 0 {
+        bail!("seq, tile and head_dim must be positive");
+    }
+    if cfg.device.num_sms == 0 || cfg.device.sector_bytes == 0 {
+        bail!("sms and sector_bytes must be positive");
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::sweep::{ConfigKey, SweepGrid};
+
+    fn tiny_spec(name: &str, seqs: &[u64]) -> SweepSpec {
+        let mut base = SimConfig::cuda_study(AttentionWorkload::cuda_study(256).with_tile(16));
+        base.device = DeviceSpec::tiny();
+        SweepGrid::new(base)
+            .seqs(seqs)
+            .orders(&[Order::Cyclic, Order::Sawtooth])
+            .build(name)
+    }
+
+    fn service(max_pending: usize) -> SweepService {
+        SweepService::start(SweepServiceConfig {
+            threads: 2,
+            max_configs: 512,
+            max_pending,
+            mattson: true,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn submit_wait_matches_sequential_run_spec() {
+        let svc = service(4);
+        let spec = tiny_spec("roundtrip", &[256, 512]);
+        let resp = svc.run(ClientId(1), spec.clone()).unwrap();
+        assert_eq!(resp.name, "roundtrip");
+        assert_eq!(resp.results.len(), spec.len());
+        let seq = SweepExecutor::new(1).run_spec(&spec);
+        for (a, b) in resp.results.iter().zip(&seq) {
+            assert_eq!(**a, **b);
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.submitted, 1);
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.configs, spec.len() as u64);
+        assert!(stats.chunks as usize >= 1);
+    }
+
+    #[test]
+    fn streamed_chunks_partition_the_spec() {
+        let svc = service(4);
+        let mut base = SimConfig::cuda_study(AttentionWorkload::cuda_study(512).with_tile(16));
+        base.device = DeviceSpec::tiny();
+        let spec = SweepGrid::new(base)
+            .orders(&[Order::Cyclic, Order::Sawtooth])
+            .l2_bytes(&[16 * 1024, 32 * 1024, 64 * 1024])
+            .build("chunks");
+        let ticket = svc.submit(ClientId(7), spec.clone()).unwrap();
+        let mut seen: Vec<usize> = Vec::new();
+        let resp = ticket
+            .wait_streaming(|c| {
+                assert_eq!(c.indices.len(), c.results.len());
+                seen.extend(&c.indices);
+            })
+            .unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..spec.len()).collect::<Vec<_>>());
+        // 2 orders × 3 capacities → 2 capacity chunks, one profile each.
+        assert_eq!(resp.chunks, 2);
+        assert_eq!(svc.executor().profiled_len(), 2);
+    }
+
+    #[test]
+    fn admission_rejects_oversized_and_empty_specs() {
+        let svc = SweepService::start(SweepServiceConfig {
+            threads: 1,
+            max_configs: 2,
+            max_pending: 2,
+            mattson: true,
+        })
+        .unwrap();
+        let err = svc
+            .submit(ClientId(1), tiny_spec("too-big", &[128, 256, 512]))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("limit"), "{err:#}");
+        let err = svc
+            .submit(ClientId(1), SweepSpec::new("empty", Vec::new()))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("empty"), "{err:#}");
+        let stats = svc.shutdown();
+        assert_eq!(stats.rejected, 2);
+        assert_eq!(stats.submitted, 0);
+    }
+
+    #[test]
+    fn protocol_round_trips_config_identity() {
+        let mut custom = SimConfig::cuda_study(AttentionWorkload::cuda_study(512).with_tile(16));
+        custom.device = DeviceSpec::tiny();
+        custom.order = Order::Sawtooth;
+        custom.scheduler = SchedulerKind::NonPersistent;
+        custom.variant = KernelVariant::CuTileTile;
+        custom.jitter = 0.25;
+        custom.seed = 9;
+        custom.workload.causal = true;
+        custom.device.l2_bytes = 32 * 1024;
+        // Off-preset value of the one throughput-adjacent field ConfigKey
+        // *does* read: must survive the round trip.
+        custom.device.non_tex_sectors_per_step = 0.7;
+        let spec = SweepSpec::new(
+            "proto",
+            vec![SimConfig::cuda_study(AttentionWorkload::cuda_study(1024)), custom],
+        );
+        let text = format_spec(&spec);
+        let parsed = parse_spec(&text).unwrap();
+        assert_eq!(parsed.name, "proto");
+        assert_eq!(parsed.len(), spec.len());
+        for (a, b) in spec.configs.iter().zip(&parsed.configs) {
+            assert_eq!(ConfigKey::of(a), ConfigKey::of(b));
+        }
+    }
+
+    #[test]
+    fn protocol_parses_sparse_lines_and_rejects_garbage() {
+        let spec = parse_spec(
+            "# comment\n\
+             sweep demo\n\
+             config device=tiny seq=512 tile=16\n\
+             config device=tiny seq=512 tile=16 l2_mib=1 order=sawtooth\n\
+             end\n",
+        )
+        .unwrap();
+        assert_eq!(spec.name, "demo");
+        assert_eq!(spec.len(), 2);
+        assert_eq!(spec.configs[0].device.name, "tiny");
+        assert_eq!(spec.configs[1].device.l2_bytes, 1024 * 1024);
+        assert_eq!(spec.configs[1].order, Order::Sawtooth);
+        // Defaults come from the CUDA study base.
+        assert_eq!(spec.configs[0].workload.head_dim, 64);
+
+        assert!(parse_spec("config seq=0 tile=16\n").is_err());
+        assert!(parse_spec("config seq=512 bogus_key=1\n").is_err());
+        assert!(parse_spec("config seq=512 order=spiral\n").is_err());
+        assert!(parse_spec("frobnicate\n").is_err());
+        assert!(parse_spec("sweep only-a-name\n").is_err(), "no configs");
+    }
+}

@@ -14,16 +14,17 @@
 //!   sawtooth estimate --seq 131072 --tile 64 --batch 4
 //!   sawtooth serve --requests 64 --clients 4
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use sawtooth_attn::config::{Config, ServeConfig, SimRunConfig};
-use sawtooth_attn::coordinator::{AttentionRequest, Engine};
+use sawtooth_attn::config::{Config, ServeConfig, SimRunConfig, SweepServiceConfig};
+use sawtooth_attn::coordinator::sweep_service::{format_spec, parse_spec};
+use sawtooth_attn::coordinator::{AttentionRequest, ClientId, Engine, SweepService};
 use sawtooth_attn::l2model::reuse::ReuseProfiler;
 use sawtooth_attn::report;
 use sawtooth_attn::runtime::{default_artifacts_dir, Runtime};
 use sawtooth_attn::sim::cache::block_key;
 use sawtooth_attn::sim::kernel_model::{for_each_kv_access, single_cta_items, Order};
-use sawtooth_attn::sim::sweep::SweepExecutor;
+use sawtooth_attn::sim::sweep::{SweepExecutor, SweepGrid};
 use sawtooth_attn::sim::throughput::{estimate, PerfProfile};
 use sawtooth_attn::sim::Simulator;
 use sawtooth_attn::util::rng::Rng;
@@ -45,6 +46,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "estimate" => cmd_estimate(rest),
         "reuse" => cmd_reuse(rest),
         "serve" => cmd_serve(rest),
+        "sweep-serve" => cmd_sweep_serve(rest),
         "artifacts" => cmd_artifacts(rest),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -65,19 +67,32 @@ COMMANDS:
   estimate [opts]        GB10 cyclic-vs-sawtooth estimate for a workload
   reuse [opts]           reuse-distance histograms, cyclic vs sawtooth
   serve [opts]           run the serving engine on a synthetic load
+  sweep-serve [opts]     run the sweep service; N clients submit
+                         overlapping grids, results stream back in
+                         capacity-grouped chunks, parity vs a sequential
+                         run_spec is verified at the end
   artifacts [--dir D]    list the AOT artifact manifest
 
 COMMON OPTIONS:
-  --config FILE          TOML config (sections [sim], [device], [serve])
+  --config FILE          TOML config (sections [sim], [device], [serve],
+                         [sweep_service])
   --set key=value        override one config key (repeatable)
   --seq N --tile T --batch B --heads H --causal --order cyclic|sawtooth
   --sms N                active SM count (simulate/estimate)
-  --threads N            sweep worker threads for report (default: host
-                         cores; output is byte-identical at any N)
+  --threads N            sweep worker threads for report / sweep-serve
+                         (default: host cores; output is byte-identical
+                         at any N)
   --no-mattson           disable the reuse-distance fast path: simulate
                          every cache capacity separately instead of
                          profiling once (output is byte-identical)
   --requests N --clients N --max-batch N   (serve)
+  --clients N --seqs A,B --orders A,B --l2-mibs A,B,C   (sweep-serve:
+                         demo grid axes over the [sim] base config)
+  --spec FILE            (sweep-serve) submit a line-protocol spec file
+                         instead of the demo grid; --print-spec dumps the
+                         demo grid in protocol form and exits
+  --max-configs N --max-pending N          (sweep-serve service limits)
+  --chunks               (sweep-serve) print each streamed chunk
 ";
 
 /// Tiny flag parser: returns (key→value flags, positional args).
@@ -89,7 +104,8 @@ fn parse_flags(args: &[String]) -> Result<(Vec<(String, String)>, Vec<String>)> 
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
             // Boolean flags take no value; everything else consumes one.
-            const BOOLEANS: &[&str] = &["causal", "exact", "quiet", "no-mattson"];
+            const BOOLEANS: &[&str] =
+                &["causal", "exact", "quiet", "no-mattson", "chunks", "print-spec"];
             if BOOLEANS.contains(&name) {
                 flags.push((name.to_string(), "true".to_string()));
             } else {
@@ -331,6 +347,169 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         stats.completed as f64 / elapsed.as_secs_f64(),
         elapsed
     );
+    Ok(())
+}
+
+/// Parse a comma-separated list flag ("128,256,512").
+fn parse_list<T: std::str::FromStr>(flag_name: &str, s: &str) -> Result<Vec<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    let items: Vec<T> = s
+        .split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| {
+            p.trim()
+                .parse::<T>()
+                .map_err(|e| anyhow!("--{flag_name}: bad item '{}': {e}", p.trim()))
+        })
+        .collect::<Result<_>>()?;
+    if items.is_empty() {
+        bail!("--{flag_name} expects a non-empty comma-separated list");
+    }
+    Ok(items)
+}
+
+/// Run the sweep service end to end: N client threads submit overlapping
+/// grids, stream capacity-grouped chunks back, and every client's results
+/// are verified byte-identical to a private sequential `run_spec`.
+fn cmd_sweep_serve(args: &[String]) -> Result<()> {
+    let (flags, _) = parse_flags(args)?;
+    let cfg = build_config(&flags)?;
+    let mut svc_cfg = SweepServiceConfig::from_config(&cfg)?;
+    if let Some(v) = flag(&flags, "threads") {
+        svc_cfg.threads = v
+            .parse()
+            .with_context(|| format!("--threads expects an integer, got '{v}'"))?;
+    }
+    if let Some(v) = flag(&flags, "max-configs") {
+        svc_cfg.max_configs = v
+            .parse()
+            .with_context(|| format!("--max-configs expects an integer, got '{v}'"))?;
+    }
+    if let Some(v) = flag(&flags, "max-pending") {
+        svc_cfg.max_pending = v
+            .parse()
+            .with_context(|| format!("--max-pending expects an integer, got '{v}'"))?;
+    }
+    if flag(&flags, "no-mattson").is_some() {
+        svc_cfg.mattson = false;
+    }
+    // Re-validate after the CLI overrides: from_config checked the config
+    // file's values, not ours.
+    if svc_cfg.max_configs == 0 || svc_cfg.max_pending == 0 {
+        bail!("--max-configs and --max-pending must be >= 1");
+    }
+
+    let spec = match flag(&flags, "spec") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading spec file {path}"))?;
+            parse_spec(&text)?
+        }
+        None => {
+            // Demo grid: the [sim]/[device] base config swept over the
+            // flagged axes (both traversal orders and a small L2 ladder by
+            // default, so the Mattson capacity grouping visibly engages).
+            let base = SimRunConfig::from_config(&cfg)?.to_sim_config();
+            let seqs = parse_list::<u64>("seqs", flag(&flags, "seqs").unwrap_or("1024,2048"))?;
+            let l2_mibs =
+                parse_list::<u64>("l2-mibs", flag(&flags, "l2-mibs").unwrap_or("8,16,24"))?;
+            let l2_bytes: Vec<u64> = l2_mibs.iter().map(|m| m * 1024 * 1024).collect();
+            let orders = match flag(&flags, "orders") {
+                Some(s) => s
+                    .split(',')
+                    .filter(|p| !p.trim().is_empty())
+                    .map(|o| {
+                        Order::parse(o.trim())
+                            .ok_or_else(|| anyhow!("--orders: unknown order '{}'", o.trim()))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                None => vec![Order::Cyclic, Order::Sawtooth],
+            };
+            SweepGrid::new(base)
+                .seqs(&seqs)
+                .orders(&orders)
+                .l2_bytes(&l2_bytes)
+                .build("sweep-serve")
+        }
+    };
+    if flag(&flags, "print-spec").is_some() {
+        print!("{}", format_spec(&spec));
+        return Ok(());
+    }
+    let clients: usize = flag(&flags, "clients")
+        .unwrap_or("4")
+        .parse()
+        .context("--clients expects an integer")?;
+    let clients = clients.max(1);
+    let verbose = flag(&flags, "chunks").is_some();
+    let mattson = svc_cfg.mattson;
+
+    println!(
+        "sweep service: threads={} mattson={} max_configs={} max_pending={}",
+        svc_cfg.resolved_threads(),
+        svc_cfg.mattson,
+        svc_cfg.max_configs,
+        svc_cfg.max_pending
+    );
+    println!("grid '{}': {} configs, {} clients", spec.name, spec.len(), clients);
+
+    let service = SweepService::start(svc_cfg)?;
+    let t0 = std::time::Instant::now();
+    let all: Vec<Vec<std::sync::Arc<sawtooth_attn::sim::SimResult>>> =
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let service = &service;
+                    let spec = &spec;
+                    s.spawn(move || {
+                        let mut my = spec.clone();
+                        my.name = format!("{}-client{c}", spec.name);
+                        let ticket = service.submit(ClientId(c as u64), my)?;
+                        let resp = ticket.wait_streaming(|chunk| {
+                            if verbose {
+                                println!(
+                                    "client {c}: chunk of {} configs (first index {})",
+                                    chunk.indices.len(),
+                                    chunk.indices[0]
+                                );
+                            }
+                        })?;
+                        println!(
+                            "client {c}: {} results in {} chunks after {:?}",
+                            resp.results.len(),
+                            resp.chunks,
+                            resp.elapsed
+                        );
+                        Ok::<_, anyhow::Error>(resp.results)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("sweep client thread panicked"))
+                .collect::<Result<Vec<_>>>()
+        })?;
+    let elapsed = t0.elapsed();
+
+    // Parity: every client must be byte-identical to a private sequential
+    // executor resolving the same spec (the acceptance bar of the service).
+    let reference = SweepExecutor::new(1).with_mattson(mattson).run_spec(&spec);
+    for (c, results) in all.iter().enumerate() {
+        if results.len() != reference.len() {
+            bail!("client {c}: {} results, expected {}", results.len(), reference.len());
+        }
+        for (i, (a, b)) in results.iter().zip(&reference).enumerate() {
+            if **a != **b {
+                bail!("client {c} config {i} diverged from sequential run_spec");
+            }
+        }
+    }
+    println!("parity: {clients} clients byte-identical to sequential run_spec");
+    let stats = service.shutdown();
+    println!("{}", stats.summary());
+    println!("wall: {elapsed:?} for {clients} overlapping submissions");
     Ok(())
 }
 

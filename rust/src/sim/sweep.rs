@@ -386,6 +386,69 @@ impl SweepExecutor {
         self.run_all(&spec.configs)
     }
 
+    /// Partition `configs` into the capacity chunks the planner would
+    /// resolve together: configs sharing a capacity-independent identity
+    /// (and inside the Mattson validity bound) form one chunk, answered by
+    /// a single profile pass when at least two are uncached; every other
+    /// config is a singleton chunk. Chunks are ordered by first appearance
+    /// and each lists input indices in input order, so concatenating the
+    /// chunks is a permutation of `0..configs.len()`. With the fast path
+    /// disabled every chunk is a singleton.
+    ///
+    /// This is the streaming unit of the coordinator's sweep service: a
+    /// client sees one result chunk per profile pass instead of waiting
+    /// for the whole grid.
+    pub fn capacity_chunks(&self, configs: &[SimConfig]) -> Vec<Vec<usize>> {
+        let mut chunks: Vec<Vec<usize>> = Vec::new();
+        if !self.mattson {
+            chunks.extend((0..configs.len()).map(|i| vec![i]));
+            return chunks;
+        }
+        let mut index: FxHashMap<ProfileKey, usize> = FxHashMap::default();
+        for (i, cfg) in configs.iter().enumerate() {
+            if !mattson_supported(cfg) {
+                chunks.push(vec![i]);
+                continue;
+            }
+            let key = ProfileKey::of(cfg);
+            match index.get(&key) {
+                Some(&c) => chunks[c].push(i),
+                None => {
+                    index.insert(key, chunks.len());
+                    chunks.push(vec![i]);
+                }
+            }
+        }
+        chunks
+    }
+
+    /// Run every configuration, invoking `on_chunk` as each capacity chunk
+    /// resolves — `on_chunk(indices, results)` receives indices into
+    /// `configs` plus their results, in chunk order (capacity groups
+    /// first-appearance ordered, singletons interleaved). The returned
+    /// vector is in input order and byte-identical to [`Self::run_all`]:
+    /// per-config results are memoized, so chunked execution still resolves
+    /// each distinct configuration exactly once, and a capacity group still
+    /// collapses into one Mattson profile pass.
+    ///
+    /// This is the single-caller streaming API. The coordinator's sweep
+    /// service performs the same steps — [`Self::capacity_chunks`], one
+    /// `run_all` per chunk, a final in-order `run_all` — but unrolled in
+    /// its scheduler so chunks of *different clients* can interleave
+    /// between turns, which a blocking call cannot express.
+    pub fn run_chunked<F>(&self, configs: &[SimConfig], mut on_chunk: F) -> Vec<Arc<SimResult>>
+    where
+        F: FnMut(&[usize], &[Arc<SimResult>]),
+    {
+        for chunk in self.capacity_chunks(configs) {
+            let cfgs: Vec<SimConfig> = chunk.iter().map(|&i| configs[i].clone()).collect();
+            let results = self.run_all(&cfgs);
+            on_chunk(&chunk, &results);
+        }
+        // Every config is cached now; assemble the in-order view.
+        self.run_all(configs)
+    }
+
     /// Run every configuration, deduplicating against the cache and each
     /// other, collapsing capacity-only groups into single profile passes,
     /// fanning the rest out over the thread pool, and returning results in
@@ -690,6 +753,57 @@ mod tests {
         let mut c = a.clone();
         c.device.l2_bytes /= 2;
         assert_ne!(ConfigKey::of(&a), ConfigKey::of(&c));
+    }
+
+    #[test]
+    fn capacity_chunks_group_by_capacity_only_identity() {
+        let base = small_cfg(256, Order::Cyclic);
+        let mut cap2 = base.clone();
+        cap2.device.l2_bytes *= 2;
+        let other = small_cfg(512, Order::Cyclic);
+        let mut cap3 = base.clone();
+        cap3.device.l2_bytes /= 2;
+        let configs = vec![base.clone(), other.clone(), cap2, cap3];
+        let exec = SweepExecutor::new(1);
+        let chunks = exec.capacity_chunks(&configs);
+        // [0, 2, 3] share a capacity-independent identity; [1] is alone.
+        assert_eq!(chunks, vec![vec![0, 2, 3], vec![1]]);
+        // Disabling the fast path degrades every chunk to a singleton.
+        let exact = SweepExecutor::new(1).with_mattson(false);
+        let singles = exact.capacity_chunks(&configs);
+        assert_eq!(singles, vec![vec![0], vec![1], vec![2], vec![3]]);
+    }
+
+    #[test]
+    fn run_chunked_streams_chunks_and_matches_run_all() {
+        let grid = SweepGrid::new(small_cfg(512, Order::Cyclic))
+            .orders(&[Order::Cyclic, Order::Sawtooth])
+            .l2_bytes(&[16 * 1024, 32 * 1024, 64 * 1024])
+            .build("chunked");
+        let chunked = SweepExecutor::new(2);
+        let plain = SweepExecutor::new(2);
+        let mut streamed: Vec<(Vec<usize>, Vec<Arc<SimResult>>)> = Vec::new();
+        let a = chunked.run_chunked(&grid.configs, |idx, rs| {
+            streamed.push((idx.to_vec(), rs.to_vec()));
+        });
+        let b = plain.run_all(&grid.configs);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(**x, **y);
+        }
+        // 2 orders → 2 capacity chunks of 3; every index streamed once.
+        assert_eq!(streamed.len(), 2);
+        let mut seen: Vec<usize> = streamed.iter().flat_map(|(i, _)| i.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..grid.configs.len()).collect::<Vec<_>>());
+        // Streamed chunk results equal the in-order view at those indices.
+        for (indices, results) in &streamed {
+            for (&i, r) in indices.iter().zip(results) {
+                assert_eq!(**r, *a[i]);
+            }
+        }
+        // The fast path engaged: one profile pass per order.
+        assert_eq!(chunked.profiled_len(), 2);
     }
 
     #[test]

@@ -89,6 +89,30 @@ fn unsupported_seq_len_fails_cleanly() {
 }
 
 #[test]
+fn malformed_payload_fails_cleanly_and_engine_keeps_serving() {
+    // Regression: a request whose k/v payloads don't match its declared
+    // shape used to panic `copy_from_slice` on the pipeline thread,
+    // killing the engine for every client. It must come back as an error
+    // on the request's own channel, with the engine still serving.
+    let engine = Engine::start(cfg()).unwrap();
+    let mut bad = req(1, 128, false, 21);
+    bad.k.truncate(7); // q is fine, k is short
+    let err = engine.submit(bad).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("k payload"), "{msg}");
+    let mut bad_v = req(2, 128, false, 22);
+    bad_v.v.extend([0.0; 3]); // v is long
+    assert!(engine.submit(bad_v).is_err());
+    // The pipeline thread survived: a well-formed request still succeeds.
+    let good = req(3, 128, false, 23);
+    let resp = engine.submit(good.clone()).unwrap();
+    assert_eq!(resp.output.len(), good.elems());
+    let stats = engine.shutdown();
+    assert_eq!(stats.failed, 2);
+    assert_eq!(stats.completed, 1);
+}
+
+#[test]
 fn back_pressure_rejects_when_queue_full() {
     let mut c = cfg();
     c.queue_depth = 1;

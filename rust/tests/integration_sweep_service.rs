@@ -1,0 +1,243 @@
+//! Integration tests of the coordinator's sweep service: N concurrent
+//! clients submitting overlapping grids must be indistinguishable — byte
+//! for byte — from a private sequential `SweepExecutor::run_spec`, with
+//! the Mattson capacity-grouping fast path engaged on the service path;
+//! cancellation and per-client admission limits must not disturb other
+//! tenants; and the engine must route sweep submissions next to attention
+//! traffic.
+
+use std::sync::Arc;
+
+use sawtooth_attn::config::{ServeConfig, SweepServiceConfig};
+use sawtooth_attn::coordinator::{AttentionRequest, ClientId, Engine, SweepService};
+use sawtooth_attn::gb10::DeviceSpec;
+use sawtooth_attn::runtime::default_artifacts_dir;
+use sawtooth_attn::sim::kernel_model::Order;
+use sawtooth_attn::sim::sweep::{SweepExecutor, SweepGrid};
+use sawtooth_attn::sim::{SimConfig, SimResult};
+use sawtooth_attn::util::proptest::check;
+use sawtooth_attn::util::rng::Rng;
+use sawtooth_attn::AttentionWorkload;
+
+fn tiny_base(seq: u64) -> SimConfig {
+    let mut cfg = SimConfig::cuda_study(AttentionWorkload::cuda_study(seq).with_tile(16));
+    cfg.device = DeviceSpec::tiny();
+    cfg
+}
+
+fn svc_cfg(threads: usize, max_pending: usize, mattson: bool) -> SweepServiceConfig {
+    SweepServiceConfig { threads, max_configs: 4096, max_pending, mattson }
+}
+
+/// Property: for random overlapping grids, N concurrent clients each get
+/// exactly the results a sequential executor produces for their spec —
+/// regardless of how the scheduler interleaved their chunks — and the
+/// capacity ladders engage the Mattson profiling path (`profiled_len`).
+#[test]
+fn prop_concurrent_clients_match_sequential_run_spec() {
+    check("sweep-service-n-clients-eq-sequential", 6, |g| {
+        let n_clients = 2 + g.int(0, 2) as usize;
+        let seq_pool = [256u64, 320, 512];
+        let cap_pool = [16 * 1024u64, 32 * 1024, 64 * 1024];
+        let mut specs = Vec::new();
+        for c in 0..n_clients {
+            let s0 = *g.choose(&seq_pool);
+            let mut seqs = vec![s0];
+            if g.bool() {
+                let s1 = *g.choose(&seq_pool);
+                if s1 != s0 {
+                    seqs.push(s1);
+                }
+            }
+            // Always ≥2 capacities so every grid forms capacity groups.
+            let caps: Vec<u64> =
+                if g.bool() { cap_pool.to_vec() } else { cap_pool[..2].to_vec() };
+            let orders: Vec<Order> = if g.bool() {
+                vec![Order::Cyclic, Order::Sawtooth]
+            } else {
+                vec![Order::Sawtooth]
+            };
+            specs.push(
+                SweepGrid::new(tiny_base(256))
+                    .seqs(&seqs)
+                    .orders(&orders)
+                    .l2_bytes(&caps)
+                    .build(format!("client-{c}")),
+            );
+        }
+        let svc = SweepService::start(svc_cfg(3, 4, true))
+            .map_err(|e| format!("service start failed: {e:#}"))?;
+        let results: Vec<Vec<Arc<SimResult>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = specs
+                .iter()
+                .enumerate()
+                .map(|(c, spec)| {
+                    let svc = &svc;
+                    s.spawn(move || {
+                        svc.run(ClientId(c as u64), spec.clone()).map(|r| r.results)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("sweep client thread panicked"))
+                .collect::<Result<Vec<_>, _>>()
+        })
+        .map_err(|e| format!("submission failed: {e:#}"))?;
+        for (c, (spec, got)) in specs.iter().zip(&results).enumerate() {
+            let want = SweepExecutor::new(1).run_spec(spec);
+            if got.len() != want.len() {
+                return Err(format!(
+                    "client {c}: {} results, expected {}",
+                    got.len(),
+                    want.len()
+                ));
+            }
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                if **a != **b {
+                    return Err(format!(
+                        "client {c} config {i} diverged from sequential run_spec"
+                    ));
+                }
+            }
+        }
+        if svc.executor().profiled_len() == 0 {
+            return Err("capacity grouping never engaged on the service path".into());
+        }
+        Ok(())
+    });
+}
+
+/// `--no-mattson` parity through the service path: the exact per-capacity
+/// route returns the same bytes as the (default) profiled route, chunk
+/// streaming degrades to singletons, and nothing is profiled.
+#[test]
+fn no_mattson_service_parity() {
+    let spec = SweepGrid::new(tiny_base(512))
+        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .l2_bytes(&[16 * 1024, 32 * 1024, 64 * 1024])
+        .build("exact-path");
+    let svc = SweepService::start(svc_cfg(2, 2, false)).unwrap();
+    let results: Vec<Vec<Arc<SimResult>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|c| {
+                let svc = &svc;
+                let spec = &spec;
+                s.spawn(move || {
+                    svc.run(ClientId(c as u64), spec.clone()).map(|r| r.results)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread panicked"))
+            .collect::<Result<Vec<_>, _>>()
+    })
+    .unwrap();
+    // Cross-path parity: reference runs with the fast path *enabled*.
+    let want = SweepExecutor::new(1).run_spec(&spec);
+    for got in &results {
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(**a, **b);
+        }
+    }
+    assert_eq!(svc.executor().profiled_len(), 0, "no-mattson must not profile");
+    let stats = svc.shutdown();
+    assert_eq!(stats.completed, 2);
+    // Every chunk was a singleton: one per config per client.
+    assert_eq!(stats.chunks, 2 * spec.len() as u64);
+}
+
+/// Cancellation drops the remaining chunks and resolves the ticket with an
+/// error, while the service keeps serving other submissions.
+#[test]
+fn cancellation_stops_streaming_and_keeps_serving() {
+    let svc = SweepService::start(svc_cfg(1, 4, true)).unwrap();
+    // No capacity ladder → 12 singleton chunks: plenty of turns for the
+    // cancel flag to land.
+    let big = SweepGrid::new(tiny_base(512))
+        .seqs(&[320, 384, 448, 512, 576, 640])
+        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .build("doomed");
+    let ticket = svc.submit(ClientId(1), big).unwrap();
+    ticket.cancel();
+    let err = ticket.wait().unwrap_err();
+    assert!(format!("{err:#}").contains("cancelled"), "{err:#}");
+    let small = SweepGrid::new(tiny_base(256))
+        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .build("after-cancel");
+    let resp = svc.run(ClientId(2), small.clone()).unwrap();
+    assert_eq!(resp.results.len(), small.len());
+    let stats = svc.shutdown();
+    assert_eq!(stats.cancelled, 1);
+    assert_eq!(stats.completed, 1);
+}
+
+/// A client at its pending limit is rejected (back-pressure) while other
+/// clients are still admitted — the fairness accounting is per client.
+#[test]
+fn per_client_pending_limit_rejects_without_starving_others() {
+    let svc = SweepService::start(svc_cfg(1, 1, true)).unwrap();
+    let heavy = SweepGrid::new(tiny_base(2048))
+        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .build("heavy");
+    let first = svc.submit(ClientId(1), heavy.clone()).unwrap();
+    let mut rejected = 0u64;
+    for _ in 0..3 {
+        if svc.submit(ClientId(1), heavy.clone()).is_err() {
+            rejected += 1;
+        }
+    }
+    assert!(rejected > 0, "expected per-client back-pressure at max_pending=1");
+    let other = svc
+        .submit(ClientId(2), heavy.clone())
+        .expect("another client must be admitted");
+    first.wait().unwrap();
+    other.wait().unwrap();
+    let stats = svc.shutdown();
+    assert_eq!(stats.rejected, rejected);
+    assert!(stats.completed >= 2);
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        artifacts_dir: default_artifacts_dir().display().to_string(),
+        max_batch: 4,
+        batch_window_us: 1000,
+        order: Order::Sawtooth,
+        queue_depth: 32,
+        clients: 2,
+        warmup: false,
+    }
+}
+
+/// The engine routes sweep submissions to its sidecar service next to
+/// attention traffic; an engine without the sidecar rejects them cleanly.
+#[test]
+fn engine_routes_sweep_submissions_alongside_attention() {
+    let engine = Engine::start_with_sweep(serve_cfg(), svc_cfg(2, 2, true)).unwrap();
+    let mut rng = Rng::new(11);
+    let att = engine
+        .submit(AttentionRequest::synthetic(1, 128, 4, 64, false, &mut rng))
+        .unwrap();
+    assert_eq!(att.output.len(), 4 * 128 * 64);
+    let spec = SweepGrid::new(tiny_base(256))
+        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .l2_bytes(&[16 * 1024, 32 * 1024])
+        .build("routed");
+    let resp = engine.submit_sweep(ClientId(9), spec.clone()).unwrap().wait().unwrap();
+    assert_eq!(resp.results.len(), spec.len());
+    let want = SweepExecutor::new(1).run_spec(&spec);
+    for (a, b) in resp.results.iter().zip(&want) {
+        assert_eq!(**a, **b);
+    }
+    let sstats = engine.sweep_stats().expect("sweep service enabled");
+    assert_eq!(sstats.completed, 1);
+    assert!(
+        sstats.exec_profiled >= 1,
+        "Mattson fast path must engage via the engine route"
+    );
+    let plain = Engine::start(serve_cfg()).unwrap();
+    assert!(plain.submit_sweep(ClientId(1), spec).is_err());
+}
