@@ -9,7 +9,7 @@ use sawtooth_attn::gb10::DeviceSpec;
 use sawtooth_attn::l2model;
 use sawtooth_attn::sim::engine::cold_sectors;
 use sawtooth_attn::sim::workload::AttentionWorkload;
-use sawtooth_attn::sim::{Order, SimConfig, Simulator};
+use sawtooth_attn::sim::{SimConfig, Simulator, TraversalRef};
 
 fn main() {
     println!("== 1. L2 sector model validation (paper §3.2, Figs 3-4) ==");
@@ -83,7 +83,7 @@ fn main() {
         let mut cfg = SimConfig::cuda_study(w);
         cfg.device = DeviceSpec::gb10_with_l2(l2_mib << 20);
         let cyc = Simulator::new(cfg.clone()).run();
-        let saw = Simulator::new(cfg.with_order(Order::Sawtooth)).run();
+        let saw = Simulator::new(cfg.with_order(TraversalRef::sawtooth())).run();
         println!(
             "L2={:>2} MiB  cyclic misses {:>11}  sawtooth misses {:>11}  ({})",
             l2_mib,

@@ -11,9 +11,10 @@ use sawtooth_attn::gb10::DeviceSpec;
 use sawtooth_attn::l2model::reuse::ReuseProfiler;
 use sawtooth_attn::sim::cache::block_key;
 use sawtooth_attn::sim::kernel_model::{
-    kv_tile_at, kv_tiles_for, Direction, KernelVariant, Order, WorkItem,
+    kv_tile_at, kv_tiles_for, Direction, KernelVariant, WorkItem,
 };
 use sawtooth_attn::sim::throughput::{estimate, PerfProfile};
+use sawtooth_attn::sim::traversal::TraversalRef;
 use sawtooth_attn::sim::workload::AttentionWorkload;
 use sawtooth_attn::sim::{SimConfig, Simulator};
 
@@ -40,8 +41,8 @@ fn main() {
         );
         let mut cyc_time = 0.0;
         let mut saw_time = 0.0;
-        for order in [Order::Cyclic, Order::Sawtooth] {
-            let cfg = SimConfig::cutile_study(w, KernelVariant::CuTileStatic, order);
+        for order in [TraversalRef::cyclic(), TraversalRef::sawtooth()] {
+            let cfg = SimConfig::cutile_study(w, KernelVariant::CuTileStatic, order.clone());
             let t0 = std::time::Instant::now();
             let r = Simulator::new(cfg).run();
             let perf = estimate(&w, &dev, &r.counters, &PerfProfile::cutile());
@@ -53,7 +54,7 @@ fn main() {
                 perf.tflops,
                 t0.elapsed()
             );
-            if order == Order::Cyclic {
+            if order == TraversalRef::cyclic() {
                 cyc_time = perf.time_s;
             } else {
                 saw_time = perf.time_s;
@@ -65,11 +66,11 @@ fn main() {
     // Why it works: reuse distances of a single CTA's KV stream.
     println!("\n== Reuse-distance view (paper §4) ==");
     let w = AttentionWorkload::cuda_study(128 * 1024);
-    for order in [Order::Cyclic, Order::Sawtooth] {
+    for order in [TraversalRef::cyclic(), TraversalRef::sawtooth()] {
         let n = w.num_tiles();
         let mut prof = ReuseProfiler::new((2 * n * n + 2 * n) as usize);
         for q in 0..n {
-            let dir = if order == Order::Sawtooth && q % 2 == 1 {
+            let dir = if order == TraversalRef::sawtooth() && q % 2 == 1 {
                 Direction::Backward
             } else {
                 Direction::Forward

@@ -18,7 +18,7 @@ use anyhow::Result;
 use sawtooth_attn::config::ServeConfig;
 use sawtooth_attn::coordinator::{AttentionRequest, Engine};
 use sawtooth_attn::runtime::{attention_host_ref, default_artifacts_dir, Runtime};
-use sawtooth_attn::sim::kernel_model::Order;
+use sawtooth_attn::sim::traversal::TraversalRef;
 use sawtooth_attn::util::rng::Rng;
 
 const TOTAL_REQUESTS: usize = 96;
@@ -32,14 +32,14 @@ fn main() -> Result<()> {
         artifacts_dir: artifacts.display().to_string(),
         max_batch: 4,
         batch_window_us: 2000,
-        order: Order::Sawtooth,
+        order: TraversalRef::sawtooth(),
         queue_depth: 64,
         clients: CLIENTS,
         warmup: true,
     };
     println!(
         "engine: order={} max_batch={} window={}µs queue={}",
-        cfg.order.name(),
+        cfg.order,
         cfg.max_batch,
         cfg.batch_window_us,
         cfg.queue_depth

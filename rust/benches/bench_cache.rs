@@ -10,7 +10,7 @@ use common::{bench, report_rate};
 use sawtooth_attn::l2model::reuse::ReuseProfiler;
 use sawtooth_attn::sim::cache::{block_key, ExactLru, WeightedLru};
 use sawtooth_attn::sim::workload::AttentionWorkload;
-use sawtooth_attn::sim::{Order, SimConfig, Simulator};
+use sawtooth_attn::sim::{SimConfig, Simulator, TraversalRef};
 use sawtooth_attn::util::rng::Rng;
 
 fn main() {
@@ -64,6 +64,6 @@ fn main() {
     report_rate("engine/cuda_study_32k_kv_steps", r.kv_steps, t0.elapsed());
 
     let t0 = Instant::now();
-    let r = Simulator::new(cfg.with_order(Order::Sawtooth)).run();
+    let r = Simulator::new(cfg.with_order(TraversalRef::sawtooth())).run();
     report_rate("engine/cuda_study_32k_sawtooth_kv_steps", r.kv_steps, t0.elapsed());
 }

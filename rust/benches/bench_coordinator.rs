@@ -9,7 +9,7 @@ use common::report_rate;
 use sawtooth_attn::config::ServeConfig;
 use sawtooth_attn::coordinator::{AttentionRequest, Engine};
 use sawtooth_attn::runtime::default_artifacts_dir;
-use sawtooth_attn::sim::kernel_model::Order;
+use sawtooth_attn::sim::traversal::TraversalRef;
 use sawtooth_attn::util::rng::Rng;
 
 fn drive(
@@ -23,7 +23,7 @@ fn drive(
         artifacts_dir: default_artifacts_dir().display().to_string(),
         max_batch,
         batch_window_us: window_us,
-        order: Order::Sawtooth,
+        order: TraversalRef::sawtooth(),
         queue_depth: 128,
         clients,
         warmup,

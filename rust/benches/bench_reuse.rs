@@ -8,8 +8,8 @@
 
 use std::time::Instant;
 
-use sawtooth_attn::sim::kernel_model::Order;
 use sawtooth_attn::sim::sweep::{SweepExecutor, SweepGrid};
+use sawtooth_attn::sim::traversal::TraversalRef;
 use sawtooth_attn::sim::workload::AttentionWorkload;
 use sawtooth_attn::sim::SimConfig;
 
@@ -24,7 +24,7 @@ fn grid() -> Vec<SimConfig> {
     let caps: Vec<u64> = CAPACITY_MIBS.iter().map(|m| m << 20).collect();
     let base = SimConfig::cuda_study(AttentionWorkload::cuda_study(64 * 1024));
     SweepGrid::new(base)
-        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .orders(&[TraversalRef::cyclic(), TraversalRef::sawtooth()])
         .l2_bytes(&caps)
         .build("bench-reuse")
         .configs

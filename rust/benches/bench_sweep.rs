@@ -5,8 +5,8 @@
 
 use std::time::Instant;
 
-use sawtooth_attn::sim::kernel_model::Order;
 use sawtooth_attn::sim::sweep::{SweepExecutor, SweepGrid};
+use sawtooth_attn::sim::traversal::TraversalRef;
 use sawtooth_attn::sim::workload::AttentionWorkload;
 use sawtooth_attn::sim::SimConfig;
 
@@ -16,7 +16,7 @@ fn grid() -> Vec<SimConfig> {
     // fan-out dominates thread-pool overhead.
     let base = SimConfig::cuda_study(AttentionWorkload::cuda_study(8 * 1024));
     SweepGrid::new(base)
-        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .orders(&[TraversalRef::cyclic(), TraversalRef::sawtooth()])
         .sms(&[12, 48])
         .seqs(&[8 * 1024, 16 * 1024, 24 * 1024, 32 * 1024, 40 * 1024, 48 * 1024])
         .build("bench-grid")

@@ -196,8 +196,10 @@ fn parse_value(s: &str) -> Result<Value> {
     if let Ok(f) = s.parse::<f64>() {
         return Ok(Value::Float(f));
     }
-    // Bare identifier → string (ergonomic for order = sawtooth).
-    if s.chars().all(|c| c.is_alphanumeric() || c == '-' || c == '_') {
+    // Bare identifier → string (ergonomic for order = sawtooth). ':' is
+    // allowed so parameterized traversal names (order = block-snake:4)
+    // work unquoted in files and in --set overrides.
+    if s.chars().all(|c| c.is_alphanumeric() || c == '-' || c == '_' || c == ':') {
         return Ok(Value::Str(s.to_string()));
     }
     bail!("cannot parse value: {s}")
@@ -276,6 +278,15 @@ l2_mib = 24
         assert!(Config::parse("novalue").is_err());
         assert!(Config::parse("k = [1, 2").is_err());
         assert!(Config::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn bare_values_allow_parameterized_names() {
+        let c = Config::parse("[sim]\norder = block-snake:4").unwrap();
+        assert_eq!(c.str("sim.order", ""), "block-snake:4");
+        let mut c = Config::parse("").unwrap();
+        c.set_override("sim.order=block-snake:8").unwrap();
+        assert_eq!(c.str("sim.order", ""), "block-snake:8");
     }
 
     #[test]

@@ -1,10 +1,11 @@
 //! Typed configuration schemas built on the generic [`super::Config`].
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::gb10::DeviceSpec;
-use crate::sim::kernel_model::{KernelVariant, Order};
+use crate::sim::kernel_model::KernelVariant;
 use crate::sim::scheduler::SchedulerKind;
+use crate::sim::traversal::TraversalRef;
 use crate::sim::workload::AttentionWorkload;
 use crate::sim::SimConfig;
 
@@ -15,7 +16,7 @@ use super::Config;
 pub struct SimRunConfig {
     pub workload: AttentionWorkload,
     pub scheduler: SchedulerKind,
-    pub order: Order,
+    pub order: TraversalRef,
     pub variant: KernelVariant,
     pub num_sms: u32,
     pub l2_mib: u64,
@@ -28,7 +29,7 @@ impl Default for SimRunConfig {
         SimRunConfig {
             workload: AttentionWorkload::cuda_study(32 * 1024),
             scheduler: SchedulerKind::Persistent,
-            order: Order::Cyclic,
+            order: TraversalRef::cyclic(),
             variant: KernelVariant::CudaWmma,
             num_sms: 48,
             l2_mib: 24,
@@ -39,23 +40,22 @@ impl Default for SimRunConfig {
 }
 
 impl SimRunConfig {
-    /// Read from a parsed config (`[sim]` + `[device]` sections).
+    /// Read from a parsed config (`[sim]` + `[device]` sections). The
+    /// name-keyed fields go through the types' `FromStr` impls — any
+    /// registered traversal is accepted for `sim.order`, and a bad value
+    /// reports the shared unknown-value message listing what is legal.
     pub fn from_config(c: &Config) -> Result<Self> {
         let d = Self::default();
-        let order = match Order::parse(&c.str("sim.order", "cyclic")) {
-            Some(o) => o,
-            None => bail!("sim.order must be cyclic|sawtooth"),
-        };
-        let scheduler = match SchedulerKind::parse(&c.str("sim.scheduler", "persistent")) {
-            Some(s) => s,
-            None => bail!("sim.scheduler must be persistent|non-persistent"),
-        };
-        let variant = match c.str("sim.variant", "cuda-wmma").as_str() {
-            "cuda-wmma" => KernelVariant::CudaWmma,
-            "cutile-static" => KernelVariant::CuTileStatic,
-            "cutile-tile" => KernelVariant::CuTileTile,
-            v => bail!("sim.variant unknown: {v}"),
-        };
+        let order: TraversalRef =
+            c.str("sim.order", "cyclic").parse().context("sim.order")?;
+        let scheduler: SchedulerKind = c
+            .str("sim.scheduler", "persistent")
+            .parse()
+            .context("sim.scheduler")?;
+        let variant: KernelVariant = c
+            .str("sim.variant", "cuda-wmma")
+            .parse()
+            .context("sim.variant")?;
         let workload = AttentionWorkload {
             batch: c.int("sim.batch", d.workload.batch as i64) as u32,
             heads: c.int("sim.heads", d.workload.heads as i64) as u32,
@@ -99,7 +99,7 @@ impl SimRunConfig {
             device: self.device(),
             workload: self.workload,
             scheduler: self.scheduler,
-            order: self.order,
+            order: self.order.clone(),
             variant: self.variant,
             jitter: self.jitter,
             seed: self.seed,
@@ -118,7 +118,7 @@ pub struct ServeConfig {
     /// How long the batcher waits to fill a batch (microseconds).
     pub batch_window_us: u64,
     /// KV traversal order requested from the kernel artifacts.
-    pub order: Order,
+    pub order: TraversalRef,
     /// Bounded queue depth before back-pressure rejects.
     pub queue_depth: usize,
     /// Number of synthetic client threads in the driver examples.
@@ -134,7 +134,7 @@ impl Default for ServeConfig {
             artifacts_dir: "artifacts".to_string(),
             max_batch: 8,
             batch_window_us: 200,
-            order: Order::Sawtooth,
+            order: TraversalRef::sawtooth(),
             queue_depth: 256,
             clients: 4,
             warmup: false,
@@ -145,10 +145,8 @@ impl Default for ServeConfig {
 impl ServeConfig {
     pub fn from_config(c: &Config) -> Result<Self> {
         let d = Self::default();
-        let order = match Order::parse(&c.str("serve.order", "sawtooth")) {
-            Some(o) => o,
-            None => bail!("serve.order must be cyclic|sawtooth"),
-        };
+        let order: TraversalRef =
+            c.str("serve.order", "sawtooth").parse().context("serve.order")?;
         let cfg = ServeConfig {
             artifacts_dir: c.str("serve.artifacts_dir", &d.artifacts_dir),
             max_batch: c.int("serve.max_batch", d.max_batch as i64) as usize,
@@ -230,7 +228,7 @@ mod tests {
         let s = SimRunConfig::from_config(&c).unwrap();
         assert_eq!(s.workload.seq, 32 * 1024);
         assert_eq!(s.num_sms, 48);
-        assert_eq!(s.order, Order::Cyclic);
+        assert_eq!(s.order, TraversalRef::cyclic());
         assert_eq!(s.device().l2_bytes, 24 * 1024 * 1024);
     }
 
@@ -244,7 +242,7 @@ mod tests {
         let s = SimRunConfig::from_config(&c).unwrap();
         assert_eq!(s.workload.seq, 2048);
         assert!(s.workload.causal);
-        assert_eq!(s.order, Order::Sawtooth);
+        assert_eq!(s.order, TraversalRef::sawtooth());
         assert_eq!(s.variant, KernelVariant::CuTileTile);
         assert_eq!(s.scheduler, SchedulerKind::NonPersistent);
         assert_eq!(s.device().num_sms, 16);
@@ -254,11 +252,32 @@ mod tests {
     }
 
     #[test]
-    fn sim_rejects_bad_enum() {
+    fn sim_accepts_any_registered_traversal() {
+        let c = Config::parse("[sim]\norder = reverse-cyclic").unwrap();
+        let s = SimRunConfig::from_config(&c).unwrap();
+        assert_eq!(s.order, TraversalRef::reverse_cyclic());
+        // Parameterized names need quoting in TOML-subset files only when
+        // they contain characters outside the bare-identifier set; ':' is
+        // allowed (see config::parse_value).
+        let c = Config::parse("[sim]\norder = block-snake:4").unwrap();
+        let s = SimRunConfig::from_config(&c).unwrap();
+        assert_eq!(s.order.name(), "block-snake:4");
+    }
+
+    #[test]
+    fn sim_rejects_bad_enum_with_shared_message() {
         let c = Config::parse("[sim]\norder = spiral").unwrap();
-        assert!(SimRunConfig::from_config(&c).is_err());
+        let err = SimRunConfig::from_config(&c).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("sim.order"), "{msg}");
+        assert!(msg.contains("unknown traversal 'spiral'"), "{msg}");
+        assert!(msg.contains("sawtooth"), "must list valid values: {msg}");
         let c = Config::parse("[sim]\nvariant = triton").unwrap();
-        assert!(SimRunConfig::from_config(&c).is_err());
+        let msg = format!("{:#}", SimRunConfig::from_config(&c).unwrap_err());
+        assert!(msg.contains("unknown kernel variant 'triton'"), "{msg}");
+        let c = Config::parse("[sim]\nscheduler = turbo").unwrap();
+        let msg = format!("{:#}", SimRunConfig::from_config(&c).unwrap_err());
+        assert!(msg.contains("unknown scheduler 'turbo'"), "{msg}");
     }
 
     #[test]
@@ -274,7 +293,7 @@ mod tests {
         let c = Config::parse("[serve]\nmax_batch = 4\norder = cyclic\nqueue_depth = 16").unwrap();
         let s = ServeConfig::from_config(&c).unwrap();
         assert_eq!(s.max_batch, 4);
-        assert_eq!(s.order, Order::Cyclic);
+        assert_eq!(s.order, TraversalRef::cyclic());
         let bad = Config::parse("[serve]\nmax_batch = 0").unwrap();
         assert!(ServeConfig::from_config(&bad).is_err());
     }

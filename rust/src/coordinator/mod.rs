@@ -86,7 +86,7 @@ impl Engine {
     /// the pipeline for its whole life); startup errors are reported back
     /// synchronously through a one-shot channel.
     pub fn start(cfg: ServeConfig) -> Result<Engine> {
-        let policy = SchedulePolicy::new(cfg.order);
+        let policy = SchedulePolicy::new(cfg.order.clone());
         let stats = Arc::new(Mutex::new(EngineStats::default()));
         let (tx, rx) = sync_channel::<Submission>(cfg.queue_depth);
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();

@@ -14,22 +14,24 @@ use anyhow::{anyhow, Result};
 
 use crate::gb10::DeviceSpec;
 use crate::runtime::{ArtifactKind, ArtifactMeta, Runtime};
-use crate::sim::kernel_model::Order;
 use crate::sim::sweep::SweepExecutor;
 use crate::sim::throughput::{estimate, PerfProfile};
+use crate::sim::traversal::{self, TraversalRef};
 use crate::sim::workload::AttentionWorkload;
 use crate::sim::SimConfig;
 
 /// Policy knobs. The interesting one is the KV traversal order: serving
-/// with `Order::Sawtooth` selects the sawtooth-reordered kernels, which on
-/// GB10-class hardware cut L2 misses by ~50–67% (the paper's result).
+/// with the `sawtooth` traversal selects the sawtooth-reordered kernels,
+/// which on GB10-class hardware cut L2 misses by ~50–67% (the paper's
+/// result). Any registered traversal name is accepted; artifact selection
+/// matches on the canonical name and falls back to cyclic.
 #[derive(Clone, Debug)]
 pub struct SchedulePolicy {
-    pub order: Order,
+    pub order: TraversalRef,
 }
 
 impl SchedulePolicy {
-    pub fn new(order: Order) -> Self {
+    pub fn new(order: TraversalRef) -> Self {
         SchedulePolicy { order }
     }
 
@@ -67,7 +69,7 @@ impl SchedulePolicy {
             })
         };
         pick(self.order.name())
-            .or_else(|| pick(Order::Cyclic.name()))
+            .or_else(|| pick(traversal::CYCLIC))
             .ok_or_else(|| {
                 anyhow!(
                     "no attention artifact for seq={seq} causal={causal} batch={batch} \
@@ -134,7 +136,7 @@ pub fn estimate_gb10_at(w: &AttentionWorkload, l2_bytes: u64) -> GpuEstimate {
     let dev = DeviceSpec::gb10_with_l2(l2_bytes);
     let profile = PerfProfile::cutile();
     let exec = probe_executor();
-    let run = |order: Order| {
+    let run = |order: TraversalRef| {
         let cfg = SimConfig {
             device: dev.clone(),
             workload: *w,
@@ -147,8 +149,8 @@ pub fn estimate_gb10_at(w: &AttentionWorkload, l2_bytes: u64) -> GpuEstimate {
         };
         exec.run_at_capacity(&cfg)
     };
-    let cyc = run(Order::Cyclic);
-    let saw = run(Order::Sawtooth);
+    let cyc = run(TraversalRef::cyclic());
+    let saw = run(TraversalRef::sawtooth());
     let tc = estimate(w, &dev, &cyc.counters, &profile);
     let ts = estimate(w, &dev, &saw.counters, &profile);
     GpuEstimate {

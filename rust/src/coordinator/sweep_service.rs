@@ -40,8 +40,6 @@ use rustc_hash::FxHashMap;
 
 use crate::config::SweepServiceConfig;
 use crate::gb10::DeviceSpec;
-use crate::sim::kernel_model::{KernelVariant, Order};
-use crate::sim::scheduler::SchedulerKind;
 use crate::sim::sweep::SweepExecutor;
 use crate::sim::workload::AttentionWorkload;
 use crate::sim::{SimConfig, SweepSpec};
@@ -412,8 +410,13 @@ fn serve_one_turn(
 // guaranteed equal results); unset keys take the paper's CUDA-study
 // defaults, and `device=` picks the base preset (gb10|tiny) whose
 // throughput-only fields (bandwidths, latency, peak FLOPS — the fields
-// `ConfigKey` deliberately excludes) are not part of the protocol. `#`
-// starts a comment line; `end` is optional.
+// `ConfigKey` deliberately excludes) are not part of the protocol. The
+// `order=` value is any name the global
+// [`TraversalRegistry`](crate::sim::traversal::TraversalRegistry) resolves
+// (including parameterized forms like `block-snake:4`); `scheduler=` and
+// `variant=` parse via the types' `FromStr`, so all three report the
+// shared unknown-value message listing what is legal. `#` starts a comment
+// line; `end` is optional.
 
 /// Serialize a spec to the line protocol. Round-trips through
 /// [`parse_spec`] to configs with identical `ConfigKey` identity.
@@ -435,9 +438,9 @@ pub fn format_spec(spec: &SweepSpec) -> String {
             cfg.workload.head_dim,
             cfg.workload.elem_bytes,
             cfg.workload.causal,
-            cfg.order.name(),
-            cfg.scheduler.name(),
-            cfg.variant.name(),
+            cfg.order,
+            cfg.scheduler,
+            cfg.variant,
             cfg.jitter,
             cfg.seed,
             cfg.model_l1,
@@ -524,23 +527,9 @@ fn parse_config_line(rest: &str) -> Result<SimConfig> {
             "head_dim" => cfg.workload.head_dim = parse_num(k, v)?,
             "elem_bytes" => cfg.workload.elem_bytes = parse_num(k, v)?,
             "causal" => cfg.workload.causal = parse_num(k, v)?,
-            "order" => {
-                cfg.order = Order::parse(v)
-                    .ok_or_else(|| anyhow!("order must be cyclic|sawtooth, got '{v}'"))?;
-            }
-            "scheduler" => {
-                cfg.scheduler = SchedulerKind::parse(v).ok_or_else(|| {
-                    anyhow!("scheduler must be persistent|non-persistent, got '{v}'")
-                })?;
-            }
-            "variant" => {
-                cfg.variant = match v {
-                    "cuda-wmma" => KernelVariant::CudaWmma,
-                    "cutile-static" => KernelVariant::CuTileStatic,
-                    "cutile-tile" => KernelVariant::CuTileTile,
-                    other => bail!("variant unknown: '{other}'"),
-                };
-            }
+            "order" => cfg.order = v.parse()?,
+            "scheduler" => cfg.scheduler = v.parse()?,
+            "variant" => cfg.variant = v.parse()?,
             "jitter" => cfg.jitter = parse_num(k, v)?,
             "seed" => cfg.seed = parse_num(k, v)?,
             "model_l1" => cfg.model_l1 = parse_num(k, v)?,
@@ -565,14 +554,17 @@ fn parse_config_line(rest: &str) -> Result<SimConfig> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::kernel_model::KernelVariant;
+    use crate::sim::scheduler::SchedulerKind;
     use crate::sim::sweep::{ConfigKey, SweepGrid};
+    use crate::sim::traversal::TraversalRef;
 
     fn tiny_spec(name: &str, seqs: &[u64]) -> SweepSpec {
         let mut base = SimConfig::cuda_study(AttentionWorkload::cuda_study(256).with_tile(16));
         base.device = DeviceSpec::tiny();
         SweepGrid::new(base)
             .seqs(seqs)
-            .orders(&[Order::Cyclic, Order::Sawtooth])
+            .orders(&[TraversalRef::cyclic(), TraversalRef::sawtooth()])
             .build(name)
     }
 
@@ -610,7 +602,7 @@ mod tests {
         let mut base = SimConfig::cuda_study(AttentionWorkload::cuda_study(512).with_tile(16));
         base.device = DeviceSpec::tiny();
         let spec = SweepGrid::new(base)
-            .orders(&[Order::Cyclic, Order::Sawtooth])
+            .orders(&[TraversalRef::cyclic(), TraversalRef::sawtooth()])
             .l2_bytes(&[16 * 1024, 32 * 1024, 64 * 1024])
             .build("chunks");
         let ticket = svc.submit(ClientId(7), spec.clone()).unwrap();
@@ -654,7 +646,7 @@ mod tests {
     fn protocol_round_trips_config_identity() {
         let mut custom = SimConfig::cuda_study(AttentionWorkload::cuda_study(512).with_tile(16));
         custom.device = DeviceSpec::tiny();
-        custom.order = Order::Sawtooth;
+        custom.order = TraversalRef::sawtooth();
         custom.scheduler = SchedulerKind::NonPersistent;
         custom.variant = KernelVariant::CuTileTile;
         custom.jitter = 0.25;
@@ -691,14 +683,38 @@ mod tests {
         assert_eq!(spec.len(), 2);
         assert_eq!(spec.configs[0].device.name, "tiny");
         assert_eq!(spec.configs[1].device.l2_bytes, 1024 * 1024);
-        assert_eq!(spec.configs[1].order, Order::Sawtooth);
+        assert_eq!(spec.configs[1].order, TraversalRef::sawtooth());
         // Defaults come from the CUDA study base.
         assert_eq!(spec.configs[0].workload.head_dim, 64);
 
         assert!(parse_spec("config seq=0 tile=16\n").is_err());
         assert!(parse_spec("config seq=512 bogus_key=1\n").is_err());
-        assert!(parse_spec("config seq=512 order=spiral\n").is_err());
         assert!(parse_spec("frobnicate\n").is_err());
         assert!(parse_spec("sweep only-a-name\n").is_err(), "no configs");
+        // Unknown names fail with the shared message listing valid values.
+        let err = parse_spec("config seq=512 order=spiral\n").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown traversal 'spiral'"), "{err:#}");
+        let err = parse_spec("config seq=512 scheduler=turbo\n").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown scheduler 'turbo'"), "{err:#}");
+    }
+
+    #[test]
+    fn protocol_accepts_any_registered_traversal() {
+        // Parameterized and non-paper traversals survive the round trip
+        // with their canonical names (the ConfigKey identity).
+        let spec = parse_spec(
+            "sweep extended\n\
+             config device=tiny seq=512 tile=16 order=block-snake:4\n\
+             config device=tiny seq=512 tile=16 order=reverse-cyclic\n\
+             config device=tiny seq=512 tile=16 order=diagonal\n",
+        )
+        .unwrap();
+        assert_eq!(spec.configs[0].order.name(), "block-snake:4");
+        assert_eq!(spec.configs[1].order, TraversalRef::reverse_cyclic());
+        assert_eq!(spec.configs[2].order, TraversalRef::diagonal());
+        let reparsed = parse_spec(&format_spec(&spec)).unwrap();
+        for (a, b) in spec.configs.iter().zip(&reparsed.configs) {
+            assert_eq!(ConfigKey::of(a), ConfigKey::of(b));
+        }
     }
 }

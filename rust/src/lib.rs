@@ -9,7 +9,10 @@
 //! * [`sim`] — a sector-granularity GB10 memory-hierarchy simulator
 //!   (CTA schedulers, wavefront interleaving, sectored-LRU L1/L2, ncu-style
 //!   counters, calibrated throughput model). This substitutes for the
-//!   paper's GB10 + Nsight Compute testbed (see DESIGN.md §2).
+//!   paper's GB10 + Nsight Compute testbed (see DESIGN.md §2). KV traversal
+//!   orders — the paper's contribution — are an open, registry-backed API
+//!   ([`sim::traversal`]): any registered [`Traversal`] is usable from the
+//!   CLI, config files, sweeps and the serving policy.
 //! * [`l2model`] — the paper's closed-form L2 sector-access model plus a
 //!   Mattson reuse-distance (LRU stack) profiler.
 //! * [`runtime`] — loads the AOT artifact manifest produced by
@@ -37,4 +40,5 @@ pub mod util;
 
 pub use gb10::DeviceSpec;
 pub use sim::sweep::{SweepExecutor, SweepSpec};
+pub use sim::traversal::{Traversal, TraversalRef, TraversalRegistry};
 pub use sim::workload::AttentionWorkload;

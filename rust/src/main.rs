@@ -23,9 +23,10 @@ use sawtooth_attn::l2model::reuse::ReuseProfiler;
 use sawtooth_attn::report;
 use sawtooth_attn::runtime::{default_artifacts_dir, Runtime};
 use sawtooth_attn::sim::cache::block_key;
-use sawtooth_attn::sim::kernel_model::{for_each_kv_access, single_cta_items, Order};
+use sawtooth_attn::sim::kernel_model::{for_each_kv_access, single_cta_items};
 use sawtooth_attn::sim::sweep::{SweepExecutor, SweepGrid};
 use sawtooth_attn::sim::throughput::{estimate, PerfProfile};
+use sawtooth_attn::sim::traversal::{TraversalRef, TraversalRegistry};
 use sawtooth_attn::sim::Simulator;
 use sawtooth_attn::util::rng::Rng;
 
@@ -50,6 +51,12 @@ fn dispatch(args: &[String]) -> Result<()> {
         "artifacts" => cmd_artifacts(rest),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
+            // Generated from the registry, so runtime-registered
+            // traversals appear here without editing the help text.
+            println!(
+                "\nTRAVERSALS (registered; use with --order / --orders / sim.order):\n  {}",
+                TraversalRegistry::global().examples().join(", ")
+            );
             Ok(())
         }
         other => bail!("unknown command '{other}' — try `sawtooth help`"),
@@ -77,7 +84,9 @@ COMMON OPTIONS:
   --config FILE          TOML config (sections [sim], [device], [serve],
                          [sweep_service])
   --set key=value        override one config key (repeatable)
-  --seq N --tile T --batch B --heads H --causal --order cyclic|sawtooth
+  --seq N --tile T --batch B --heads H --causal
+  --order NAME           KV traversal order: any registered name (see the
+                         TRAVERSALS list at the end of this help)
   --sms N                active SM count (simulate/estimate)
   --threads N            sweep worker threads for report / sweep-serve
                          (default: host cores; output is byte-identical
@@ -196,9 +205,9 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     println!("workload: {:?}", run.workload);
     println!(
         "schedule: {} / {} / {} on {} SMs, L2 {} MiB, jitter {}",
-        run.scheduler.name(),
-        run.order.name(),
-        run.variant.name(),
+        run.scheduler,
+        run.order,
+        run.variant,
         dev.num_sms,
         dev.l2_bytes >> 20,
         run.jitter
@@ -254,11 +263,12 @@ fn cmd_reuse(args: &[String]) -> Result<()> {
     let cfg = build_config(&flags)?;
     let run = SimRunConfig::from_config(&cfg)?;
     let w = run.workload;
-    // Single-CTA KV reference stream under both orders: §4's theory, measured.
-    for order in [Order::Cyclic, Order::Sawtooth] {
+    // Single-CTA KV reference stream under every registered traversal:
+    // §4's theory, measured (cyclic and sawtooth anchor the comparison).
+    for order in TraversalRegistry::global().instances() {
         let n = w.num_tiles();
         let mut prof = ReuseProfiler::new((2 * n * n + 4 * n) as usize);
-        for item in single_cta_items(&w, order) {
+        for item in single_cta_items(&w, &order) {
             for_each_kv_access(&w, &item, |a| {
                 let sec = w.rows_sectors(w.tile_rows(a.tile_idx), 32);
                 prof.access(block_key(a.tensor as u8, 0, a.tile_idx), sec);
@@ -266,7 +276,7 @@ fn cmd_reuse(args: &[String]) -> Result<()> {
         }
         let p = prof.finish();
         println!(
-            "{:<9} cold={} total={} mean finite reuse distance = {:.0} sectors",
+            "{:<14} cold={} total={} mean finite reuse distance = {:.0} sectors",
             order.name(),
             p.cold,
             p.total,
@@ -274,7 +284,7 @@ fn cmd_reuse(args: &[String]) -> Result<()> {
         );
         let l2 = sawtooth_attn::DeviceSpec::gb10().l2_sectors();
         println!(
-            "          predicted misses at L2=24MiB: {}  (hit rate {:.2}%)",
+            "               predicted misses at L2=24MiB: {}  (hit rate {:.2}%)",
             p.misses_at(l2),
             100.0 * p.hit_rate_at(l2)
         );
@@ -301,10 +311,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
 
     println!(
         "starting engine: artifacts={} order={} max_batch={} window={}us",
-        serve.artifacts_dir,
-        serve.order.name(),
-        serve.max_batch,
-        serve.batch_window_us
+        serve.artifacts_dir, serve.order, serve.max_batch, serve.batch_window_us
     );
     let engine = Engine::start(serve)?;
     let t0 = std::time::Instant::now();
@@ -420,12 +427,9 @@ fn cmd_sweep_serve(args: &[String]) -> Result<()> {
                 Some(s) => s
                     .split(',')
                     .filter(|p| !p.trim().is_empty())
-                    .map(|o| {
-                        Order::parse(o.trim())
-                            .ok_or_else(|| anyhow!("--orders: unknown order '{}'", o.trim()))
-                    })
+                    .map(|o| o.trim().parse::<TraversalRef>().context("--orders"))
                     .collect::<Result<Vec<_>>>()?,
-                None => vec![Order::Cyclic, Order::Sawtooth],
+                None => vec![TraversalRef::cyclic(), TraversalRef::sawtooth()],
             };
             SweepGrid::new(base)
                 .seqs(&seqs)

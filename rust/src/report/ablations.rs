@@ -1,5 +1,10 @@
 //! Ablation experiments beyond the paper (DESIGN.md §8).
 //!
+//! * `abl-order`    — every registered traversal on one L2-pressured
+//!                    workload: simulated miss counts next to
+//!                    cyclic/sawtooth. Iterates the
+//!                    [`TraversalRegistry`], so registering a new
+//!                    traversal adds a row without touching this file.
 //! * `abl-tile`     — tile-size sweep: how the sawtooth gain varies with T
 //!                    (context for the §4.3.2 tile-128 limitation).
 //! * `abl-jitter`   — wavefront desynchronization: the 1 − 1/N reuse law
@@ -14,11 +19,63 @@ use crate::gb10::DeviceSpec;
 use crate::l2model::reuse::ReuseProfiler;
 use crate::sim::cache::block_key;
 use crate::sim::engine::cold_sectors;
-use crate::sim::kernel_model::{for_each_kv_access, single_cta_items, Order};
+use crate::sim::kernel_model::{for_each_kv_access, single_cta_items};
 use crate::sim::sweep::SweepExecutor;
+use crate::sim::traversal::{self, TraversalRef, TraversalRegistry};
 use crate::sim::workload::AttentionWorkload;
 use crate::sim::SimConfig;
 use crate::util::table::{commas, Table};
+
+/// `abl-order`: one row per registered traversal on the Figs 7–8 CUDA
+/// workload (S=128K: KV = 32 MiB against 24 MiB of L2 — the regime where
+/// traversal choice decides the miss count). The registry is the row
+/// source: cyclic and sawtooth anchor the comparison, and every other
+/// registered order (built-in or user-registered) is measured next to
+/// them.
+pub fn order_sweep(exec: &SweepExecutor) -> String {
+    let traversals = TraversalRegistry::global().instances();
+    let w = AttentionWorkload::cuda_study(128 * 1024);
+    let configs: Vec<SimConfig> = traversals
+        .iter()
+        .map(|t| SimConfig::cuda_study(w).with_order(t.clone()))
+        .collect();
+    let results = exec.run_all(&configs);
+    let cyclic_misses = traversals
+        .iter()
+        .position(|t| t.name() == traversal::CYCLIC)
+        .map(|i| results[i].counters.l2_miss_sectors);
+    let mut t = Table::new(vec![
+        "traversal",
+        "L2 misses",
+        "L2 hit %",
+        "vs cyclic %",
+    ]);
+    for (trav, r) in traversals.iter().zip(&results) {
+        let vs = match cyclic_misses {
+            Some(c) if c > 0 => format!(
+                "{:+.1}",
+                100.0 * (r.counters.l2_miss_sectors as f64 / c as f64 - 1.0)
+            ),
+            _ => "n/a".to_string(),
+        };
+        t.row(vec![
+            trav.name().to_string(),
+            commas(r.counters.l2_miss_sectors),
+            format!("{:.2}", r.counters.l2_hit_rate_pct()),
+            vs,
+        ]);
+    }
+    format!(
+        "Ablation: traversal-order sweep (CUDA study, S=128K, T=80, SM=48)\n{}\n\
+         Every row is one registered traversal (`sawtooth simulate --order <name>`\n\
+         accepts each). sawtooth alternates direction per iteration and recovers\n\
+         ~L2/KV of the stream at every reversal; reverse-cyclic shows that a\n\
+         *constant* reversal has cyclic's reuse distances (no gain); block-snake\n\
+         interpolates between the two as the width grows; diagonal staggers the\n\
+         reversal phase across batch·heads.\n",
+        t.render()
+    )
+}
 
 const TILE_SWEEP_TILES: &[u32] = &[32, 48, 64, 80, 96, 128];
 
@@ -30,7 +87,7 @@ pub fn tile_sweep(exec: &SweepExecutor) -> String {
         let mut cfg = SimConfig::cuda_study(w);
         cfg.device = DeviceSpec::gb10_with_l2(8 * 1024 * 1024);
         configs.push(cfg.clone());
-        configs.push(cfg.with_order(Order::Sawtooth));
+        configs.push(cfg.with_order(TraversalRef::sawtooth()));
     }
     let results = exec.run_all(&configs);
     let mut t = Table::new(vec![
@@ -74,7 +131,7 @@ pub fn jitter_sweep(exec: &SweepExecutor) -> String {
     for &jitter in JITTER_SWEEP_POINTS {
         let cfg = SimConfig::cuda_study(w).with_jitter(jitter, 99);
         configs.push(cfg.clone());
-        configs.push(cfg.with_order(Order::Sawtooth));
+        configs.push(cfg.with_order(TraversalRef::sawtooth()));
     }
     let results = exec.run_all(&configs);
     let mut t = Table::new(vec![
@@ -199,10 +256,10 @@ pub fn reuse_histogram() -> String {
     let w = AttentionWorkload::cuda_study(128 * 1024);
     let l2 = DeviceSpec::gb10().l2_sectors();
     let mut out = String::from("Ablation: reuse-distance histograms (single CTA KV stream, S=128K, T=80)\n");
-    for order in [Order::Cyclic, Order::Sawtooth] {
+    for order in [TraversalRef::cyclic(), TraversalRef::sawtooth()] {
         let n = w.num_tiles();
         let mut prof = ReuseProfiler::new((2 * n * n + 2 * n) as usize);
-        for item in single_cta_items(&w, order) {
+        for item in single_cta_items(&w, &order) {
             for_each_kv_access(&w, &item, |a| {
                 let sec = w.rows_sectors(w.tile_rows(a.tile_idx), 32);
                 prof.access(block_key(a.tensor as u8, 0, a.tile_idx), sec);
@@ -266,5 +323,17 @@ mod tests {
         }
         let s = jitter_sweep(&SweepExecutor::host_sized());
         assert!(s.contains("jitter"));
+    }
+
+    #[test]
+    fn order_sweep_lists_every_registered_traversal() {
+        if cfg!(debug_assertions) {
+            return; // S=128K × registry size: run in release
+        }
+        let s = order_sweep(&SweepExecutor::host_sized());
+        for t in crate::sim::traversal::TraversalRegistry::global().instances() {
+            assert!(s.contains(t.name()), "abl-order missing row for {}", t.name());
+        }
+        assert!(s.contains("vs cyclic"));
     }
 }

@@ -25,10 +25,11 @@ use anyhow::{bail, Result};
 use crate::gb10::DeviceSpec;
 use crate::l2model;
 use crate::sim::engine::cold_sectors;
-use crate::sim::kernel_model::{KernelVariant, Order};
+use crate::sim::kernel_model::KernelVariant;
 use crate::sim::scheduler::SchedulerKind;
 use crate::sim::sweep::SweepExecutor;
 use crate::sim::throughput::{estimate, PerfProfile};
+use crate::sim::traversal::TraversalRef;
 use crate::sim::workload::AttentionWorkload;
 use crate::sim::SimConfig;
 use crate::util::table::{ascii_chart, commas, Table};
@@ -40,8 +41,10 @@ pub const EXPERIMENTS: &[&str] = &[
 ];
 
 /// Ablations beyond the paper (DESIGN.md §8); run via `report <id>` or
-/// `report ablations`.
-pub const ABLATIONS: &[&str] = &["abl-tile", "abl-jitter", "abl-capacity", "abl-reuse"];
+/// `report ablations`. `abl-order` iterates the traversal registry, so
+/// newly registered traversals appear in its table automatically.
+pub const ABLATIONS: &[&str] =
+    &["abl-order", "abl-tile", "abl-jitter", "abl-capacity", "abl-reuse"];
 
 /// Run one experiment (or "all") sequentially and return the rendered
 /// report. Equivalent to [`run_threaded`] with one thread.
@@ -74,6 +77,7 @@ pub fn run_with(experiment: &str, exec: &SweepExecutor) -> Result<String> {
         "fig10" => Ok(fig_cutile(false, true, "Figure 10", exec)),
         "fig11" => Ok(fig_cutile(true, false, "Figure 11", exec)),
         "fig12" => Ok(fig_cutile(true, true, "Figure 12", exec)),
+        "abl-order" => Ok(ablations::order_sweep(exec)),
         "abl-tile" => Ok(ablations::tile_sweep(exec)),
         "abl-jitter" => Ok(ablations::jitter_sweep(exec)),
         "abl-capacity" => Ok(ablations::capacity_sweep(exec)),
@@ -475,7 +479,7 @@ fn fig78_configs() -> Vec<SimConfig> {
     for &b in FIG78_BATCHES {
         let w = AttentionWorkload::cuda_study(128 * 1024).with_batch(b);
         configs.push(SimConfig::cuda_study(w));
-        configs.push(SimConfig::cuda_study(w).with_order(Order::Sawtooth));
+        configs.push(SimConfig::cuda_study(w).with_order(TraversalRef::sawtooth()));
     }
     configs
 }
@@ -527,18 +531,20 @@ fn fig78_cuda(throughput: bool, exec: &SweepExecutor) -> String {
 // Figures 9–12: CuTile — miss count / throughput, (non-)causal.
 // ---------------------------------------------------------------------------
 
-const CUTILE_VARIANTS: [(&str, KernelVariant, Order); 4] = [
-    ("Static", KernelVariant::CuTileStatic, Order::Cyclic),
-    ("Static Alt", KernelVariant::CuTileStatic, Order::Sawtooth),
-    ("Tile", KernelVariant::CuTileTile, Order::Cyclic),
-    ("Tile Alt", KernelVariant::CuTileTile, Order::Sawtooth),
-];
+fn cutile_variants() -> [(&'static str, KernelVariant, TraversalRef); 4] {
+    [
+        ("Static", KernelVariant::CuTileStatic, TraversalRef::cyclic()),
+        ("Static Alt", KernelVariant::CuTileStatic, TraversalRef::sawtooth()),
+        ("Tile", KernelVariant::CuTileTile, TraversalRef::cyclic()),
+        ("Tile Alt", KernelVariant::CuTileTile, TraversalRef::sawtooth()),
+    ]
+}
 
 fn fig_cutile_configs(causal: bool) -> Vec<SimConfig> {
     let w = AttentionWorkload::cutile_study(8, causal);
-    CUTILE_VARIANTS
+    cutile_variants()
         .iter()
-        .map(|(_, variant, order)| SimConfig::cutile_study(w, *variant, *order))
+        .map(|(_, variant, order)| SimConfig::cutile_study(w, *variant, order.clone()))
         .collect()
 }
 
@@ -562,7 +568,7 @@ fn fig_cutile(causal: bool, throughput: bool, fig: &str, exec: &SweepExecutor) -
     } else {
         ["~370M", "~120M", "~370M", "~120M"]
     };
-    for (i, (name, _, _)) in CUTILE_VARIANTS.iter().enumerate() {
+    for (i, (name, _, _)) in cutile_variants().iter().enumerate() {
         let r = &results[i];
         if throughput {
             let e = estimate(&w, &dev, &r.counters, &profile);

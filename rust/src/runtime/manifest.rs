@@ -8,6 +8,8 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::sim::traversal::{self, TraversalRef};
+
 /// What computation an artifact implements.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ArtifactKind {
@@ -72,6 +74,16 @@ impl ArtifactMeta {
     /// Elements in one q/k/v tensor.
     pub fn qkv_elems(&self) -> usize {
         self.batch * self.heads * self.seq * self.head_dim
+    }
+
+    /// Resolve the artifact's `order` column through the global
+    /// [`traversal::TraversalRegistry`](crate::sim::traversal::TraversalRegistry):
+    /// artifact names embed canonical traversal names, so a manifest row
+    /// maps straight back to the simulator-side traversal it was compiled
+    /// for. Fails (with the shared unknown-value message) when the
+    /// manifest names a traversal this build doesn't register.
+    pub fn traversal(&self) -> Result<TraversalRef> {
+        self.order.parse()
     }
 }
 
@@ -141,7 +153,7 @@ impl Manifest {
         let mut artifacts = Vec::new();
         for seq in SEQS {
             for causal in [false, true] {
-                for order in ["cyclic", "sawtooth"] {
+                for order in [traversal::CYCLIC, traversal::SAWTOOTH] {
                     for batch in BATCHES {
                         let mask = if causal { "causal" } else { "full" };
                         let name =
@@ -178,7 +190,7 @@ impl Manifest {
             tile_q: 64,
             tile_kv: 64,
             causal: true,
-            order: "sawtooth".to_string(),
+            order: traversal::SAWTOOTH.to_string(),
             dtype: "float32".to_string(),
             num_args: 5,
         });
@@ -227,9 +239,20 @@ mha\tmha_x\tm.hlo.txt\t1\t4\t256\t64\t64\t64\t1\tsawtooth\tfloat32\t5
         let a = m.find("attn_b").unwrap();
         assert!(a.causal);
         assert_eq!(a.order, "sawtooth");
+        assert_eq!(a.traversal().unwrap(), TraversalRef::sawtooth());
         assert_eq!(a.qkv_shape(), vec![1, 4, 256, 64]);
         assert_eq!(a.qkv_elems(), 4 * 256 * 64);
         assert!(m.find("nope").is_none());
+    }
+
+    #[test]
+    fn traversal_resolution_flags_unknown_orders() {
+        let m = Manifest::parse(
+            "attention\tattn_x\tx.hlo.txt\t1\t4\t256\t64\t64\t64\t0\tspiral\tfloat32\t3\n",
+        )
+        .unwrap();
+        let err = m.find("attn_x").unwrap().traversal().unwrap_err();
+        assert!(format!("{err:#}").contains("unknown traversal 'spiral'"));
     }
 
     #[test]

@@ -27,7 +27,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::sim::kernel_model::Order;
+use crate::sim::traversal::TraversalRef;
 use crate::util::rng::Rng;
 
 /// A loaded ("compiled") artifact plus its metadata. Compilation in the
@@ -150,8 +150,15 @@ impl Runtime {
         self.execute(name, &[(q, &shape), (k, &shape), (v, &shape)])
     }
 
-    /// Pick the attention artifact matching (seq, causal, order), if any.
-    pub fn find_attention(&self, seq: u64, causal: bool, order: Order) -> Option<&ArtifactMeta> {
+    /// Pick the attention artifact matching (seq, causal, traversal), if
+    /// any. Artifacts are keyed by the traversal's canonical name (the
+    /// manifest's `order` column).
+    pub fn find_attention(
+        &self,
+        seq: u64,
+        causal: bool,
+        order: &TraversalRef,
+    ) -> Option<&ArtifactMeta> {
         self.manifest.artifacts().iter().find(|a| {
             a.kind == ArtifactKind::Attention
                 && a.seq as u64 == seq
@@ -359,7 +366,7 @@ mod tests {
         let mut rt = Runtime::open(&dir).unwrap();
         assert!(rt.is_synthetic());
         assert_eq!(rt.manifest().attention_artifacts().count(), 24);
-        let meta = rt.find_attention(128, false, Order::Cyclic).unwrap().clone();
+        let meta = rt.find_attention(128, false, &TraversalRef::cyclic()).unwrap().clone();
         let n = meta.qkv_elems();
         let q = vec![0.5f32; n];
         let out = rt.execute_attention(&meta.name, &q, &q, &q).unwrap();

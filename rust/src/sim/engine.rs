@@ -17,9 +17,10 @@ use crate::util::rng::Rng;
 use super::cache::{DenseWeightedLru, ExactLru};
 use super::counters::CacheCounters;
 use super::kernel_model::{
-    step_accesses, ItemSteps, KernelVariant, Order, Step, TileAccess, WorkItem,
+    step_accesses, ItemSteps, KernelVariant, Step, TileAccess, WorkItem,
 };
 use super::scheduler::{Scheduler, SchedulerKind};
+use super::traversal::TraversalRef;
 use super::workload::AttentionWorkload;
 
 /// Full configuration of one simulated launch.
@@ -28,7 +29,10 @@ pub struct SimConfig {
     pub device: DeviceSpec,
     pub workload: AttentionWorkload,
     pub scheduler: SchedulerKind,
-    pub order: Order,
+    /// KV traversal order (any registered
+    /// [`Traversal`](super::traversal::Traversal) — the paper studies
+    /// cyclic vs sawtooth).
+    pub order: TraversalRef,
     pub variant: KernelVariant,
     /// Wavefront desynchronization knob (0.0 = the paper's synchronized
     /// wavefronts). SM `i` stalls each turn with probability
@@ -50,7 +54,7 @@ impl SimConfig {
             device: DeviceSpec::gb10(),
             workload,
             scheduler: SchedulerKind::Persistent,
-            order: Order::Cyclic,
+            order: TraversalRef::cyclic(),
             variant: KernelVariant::CudaWmma,
             jitter: 0.0,
             seed: 0,
@@ -59,7 +63,11 @@ impl SimConfig {
     }
 
     /// Paper §4.3 configuration for a CuTile variant.
-    pub fn cutile_study(workload: AttentionWorkload, variant: KernelVariant, order: Order) -> Self {
+    pub fn cutile_study(
+        workload: AttentionWorkload,
+        variant: KernelVariant,
+        order: TraversalRef,
+    ) -> Self {
         let scheduler = match variant {
             KernelVariant::CuTileTile => SchedulerKind::NonPersistent,
             _ => SchedulerKind::Persistent,
@@ -76,7 +84,7 @@ impl SimConfig {
         }
     }
 
-    pub fn with_order(mut self, order: Order) -> Self {
+    pub fn with_order(mut self, order: TraversalRef) -> Self {
         self.order = order;
         self
     }
@@ -426,7 +434,8 @@ pub fn stream_accesses<F: FnMut(usize, &TileAccess)>(
     let w = &cfg.workload;
     let dev = &cfg.device;
     let n_sms = dev.num_sms as usize;
-    let mut sched = Scheduler::new(cfg.scheduler, cfg.order, cfg.variant, w, dev.num_sms);
+    let mut sched =
+        Scheduler::new(cfg.scheduler, cfg.order.clone(), cfg.variant, w, dev.num_sms);
     let mut jitter = JitterState::new(cfg, n_sms);
 
     let mut sms: Vec<SmState> = (0..n_sms)
@@ -604,7 +613,7 @@ mod tests {
     use super::*;
     use crate::sim::kernel_model::TensorKind;
 
-    fn small_cfg(seq: u64, causal: bool, order: Order) -> SimConfig {
+    fn small_cfg(seq: u64, causal: bool, order: TraversalRef) -> SimConfig {
         let w = AttentionWorkload {
             batch: 1,
             heads: 1,
@@ -628,7 +637,7 @@ mod tests {
 
     #[test]
     fn executes_every_work_item_exactly_once() {
-        let cfg = small_cfg(256, false, Order::Cyclic);
+        let cfg = small_cfg(256, false, TraversalRef::cyclic());
         let r = Simulator::new(cfg.clone()).run();
         assert_eq!(r.items, cfg.workload.num_work_items());
     }
@@ -636,7 +645,7 @@ mod tests {
     #[test]
     fn total_tex_sectors_match_closed_form() {
         // Non-causal: Q+O touched once, K+V once per Q tile.
-        let cfg = small_cfg(256, false, Order::Cyclic);
+        let cfg = small_cfg(256, false, TraversalRef::cyclic());
         let w = &cfg.workload;
         let n = w.num_tiles();
         let tile_sec = w.tile_sectors(32) as u64;
@@ -650,7 +659,7 @@ mod tests {
 
     #[test]
     fn causal_access_counts_are_triangular() {
-        let cfg = small_cfg(256, true, Order::Cyclic);
+        let cfg = small_cfg(256, true, TraversalRef::cyclic());
         let w = &cfg.workload;
         let n = w.num_tiles();
         let tile_sec = w.tile_sectors(32) as u64;
@@ -667,8 +676,8 @@ mod tests {
         // worth of the stream, so misses drop by ≈ L2/KV minus Q/O
         // pollution (the reduction grows as KV/L2 → 1⁺, cf. GB10's
         // 32 MiB KV vs 24 MiB L2 in the paper).
-        let cyc = Simulator::new(small_cfg(512, false, Order::Cyclic)).run();
-        let saw = Simulator::new(small_cfg(512, false, Order::Sawtooth)).run();
+        let cyc = Simulator::new(small_cfg(512, false, TraversalRef::cyclic())).run();
+        let saw = Simulator::new(small_cfg(512, false, TraversalRef::sawtooth())).run();
         assert_eq!(
             cyc.counters.l2_sectors_from_tex,
             saw.counters.l2_sectors_from_tex,
@@ -686,7 +695,7 @@ mod tests {
     #[test]
     fn fully_cached_workload_only_cold_misses() {
         // KV + Q + O = 4·S·128 bytes; S=64 → 32 KiB < 64 KiB L2.
-        let cfg = small_cfg(64, false, Order::Cyclic);
+        let cfg = small_cfg(64, false, TraversalRef::cyclic());
         let r = Simulator::new(cfg.clone()).run();
         assert_eq!(
             r.counters.l2_miss_sectors,
@@ -697,7 +706,7 @@ mod tests {
 
     #[test]
     fn l1_is_pass_through_for_streaming() {
-        let cfg = small_cfg(512, false, Order::Cyclic);
+        let cfg = small_cfg(512, false, TraversalRef::cyclic());
         let r = Simulator::new(cfg).run();
         // Finding 1 of the paper: negligible L1 hits for streaming attention.
         assert_eq!(r.counters.l1_hit_sectors, 0);
@@ -707,9 +716,9 @@ mod tests {
 
     #[test]
     fn exact_and_weighted_agree_on_small_workloads() {
-        for order in [Order::Cyclic, Order::Sawtooth] {
+        for order in [TraversalRef::cyclic(), TraversalRef::sawtooth()] {
             for causal in [false, true] {
-                let cfg = small_cfg(512, causal, order);
+                let cfg = small_cfg(512, causal, order.clone());
                 let a = Simulator::new(cfg.clone()).run();
                 let b = Simulator::new(cfg).run_exact();
                 assert_eq!(
@@ -731,7 +740,7 @@ mod tests {
     #[test]
     fn nonpersistent_matches_persistent_traffic() {
         // Paper Table 2 finding: scheduling scheme doesn't change totals.
-        let base = small_cfg(512, false, Order::Cyclic);
+        let base = small_cfg(512, false, TraversalRef::cyclic());
         let p = Simulator::new(base.clone()).run();
         let np =
             Simulator::new(base.with_scheduler(SchedulerKind::NonPersistent)).run();
@@ -743,9 +752,10 @@ mod tests {
 
     #[test]
     fn jitter_degrades_hit_rate() {
-        let sync = Simulator::new(small_cfg(1024, false, Order::Cyclic)).run();
+        let sync = Simulator::new(small_cfg(1024, false, TraversalRef::cyclic())).run();
         let jit =
-            Simulator::new(small_cfg(1024, false, Order::Cyclic).with_jitter(0.5, 7)).run();
+            Simulator::new(small_cfg(1024, false, TraversalRef::cyclic()).with_jitter(0.5, 7))
+                .run();
         assert!(
             jit.counters.l2_hit_rate_pct() <= sync.counters.l2_hit_rate_pct() + 1e-9,
             "jitter {} vs sync {}",
@@ -758,8 +768,8 @@ mod tests {
     fn profile_matches_run_at_every_capacity() {
         // One weighted Mattson pass must reproduce run() bit for bit at
         // arbitrary capacities (>= one tile = 64 sectors here).
-        for order in [Order::Cyclic, Order::Sawtooth] {
-            let base = small_cfg(512, false, order);
+        for order in [TraversalRef::cyclic(), TraversalRef::sawtooth()] {
+            let base = small_cfg(512, false, order.clone());
             let profile = Simulator::new(base.clone()).profile();
             for l2_kib in [2u64, 4, 16, 64, 256] {
                 let mut cfg = base.clone();
@@ -773,8 +783,8 @@ mod tests {
 
     #[test]
     fn profile_exact_matches_run_exact_at_every_capacity() {
-        for order in [Order::Cyclic, Order::Sawtooth] {
-            let base = small_cfg(512, true, order);
+        for order in [TraversalRef::cyclic(), TraversalRef::sawtooth()] {
+            let base = small_cfg(512, true, order.clone());
             let profile = Simulator::new(base.clone()).profile_exact();
             for l2_kib in [1u64, 2, 8, 32, 64, 128] {
                 let mut cfg = base.clone();
@@ -790,7 +800,7 @@ mod tests {
     fn profile_rejects_bypass_regime_capacities() {
         // Tile = 16 rows × 4 sectors = 64 sectors; anything smaller is in
         // the weighted LRU's bypass regime.
-        let p = Simulator::new(small_cfg(256, false, Order::Cyclic)).profile();
+        let p = Simulator::new(small_cfg(256, false, TraversalRef::cyclic())).profile();
         assert_eq!(p.curve().min_supported_capacity(), 64);
         assert!(p.supports(64) && !p.supports(63));
     }
@@ -799,7 +809,7 @@ mod tests {
     fn stream_accesses_is_backend_independent() {
         // The generator must not depend on who consumes it: collecting the
         // stream twice yields identical traces and stats.
-        let cfg = small_cfg(256, true, Order::Sawtooth);
+        let cfg = small_cfg(256, true, TraversalRef::sawtooth());
         let mut a = Vec::new();
         let sa = stream_accesses(&cfg, |sm, acc| a.push((sm, *acc)));
         let mut b = Vec::new();
@@ -812,8 +822,8 @@ mod tests {
     #[test]
     fn hit_rate_grows_with_sm_count() {
         // Finding 4 (Fig 6): more synchronized SMs → higher L2 hit rate.
-        let r1 = Simulator::new(small_cfg(1024, false, Order::Cyclic).with_sms(1)).run();
-        let r4 = Simulator::new(small_cfg(1024, false, Order::Cyclic).with_sms(4)).run();
+        let r1 = Simulator::new(small_cfg(1024, false, TraversalRef::cyclic()).with_sms(1)).run();
+        let r4 = Simulator::new(small_cfg(1024, false, TraversalRef::cyclic()).with_sms(4)).run();
         assert!(
             r4.counters.l2_hit_rate_pct() > r1.counters.l2_hit_rate_pct(),
             "SM=4 {} <= SM=1 {}",

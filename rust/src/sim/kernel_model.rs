@@ -7,33 +7,8 @@
 //! streams of all concurrently-running CTAs to form the L2 reference
 //! stream.
 
+use super::traversal::{TraversalCtx, TraversalRef};
 use super::workload::AttentionWorkload;
-
-/// KV traversal order (paper §4).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Order {
-    /// Baseline: every Q tile streams KV tiles 0..Tc-1.
-    Cyclic,
-    /// Sawtooth wavefront reordering: alternate scan direction per local
-    /// iteration (Algorithm 4).
-    Sawtooth,
-}
-
-impl Order {
-    pub fn parse(s: &str) -> Option<Order> {
-        match s {
-            "cyclic" => Some(Order::Cyclic),
-            "sawtooth" => Some(Order::Sawtooth),
-            _ => None,
-        }
-    }
-    pub fn name(&self) -> &'static str {
-        match self {
-            Order::Cyclic => "cyclic",
-            Order::Sawtooth => "sawtooth",
-        }
-    }
-}
 
 /// Which tensor a tile access touches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -96,6 +71,13 @@ pub enum KernelVariant {
 }
 
 impl KernelVariant {
+    /// Every variant, in paper order (error messages, sweeps).
+    pub const ALL: [KernelVariant; 3] = [
+        KernelVariant::CudaWmma,
+        KernelVariant::CuTileStatic,
+        KernelVariant::CuTileTile,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             KernelVariant::CudaWmma => "cuda-wmma",
@@ -113,12 +95,48 @@ impl KernelVariant {
         }
     }
 
-    /// How sawtooth direction is derived: `true` = from the global Q-tile
-    /// index parity (tile-based), `false` = from the CTA-local iteration
-    /// counter (Algorithm 4 as written).
+    /// How the alternating traversals derive their counter: `true` = from
+    /// the global Q-tile index parity (tile-based), `false` = from the
+    /// CTA-local iteration counter (Algorithm 4 as written). Consumed via
+    /// [`TraversalCtx::parity_source`].
     pub fn global_parity(&self) -> bool {
         matches!(self, KernelVariant::CuTileTile)
     }
+}
+
+impl std::fmt::Display for KernelVariant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+impl std::str::FromStr for KernelVariant {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        KernelVariant::ALL
+            .iter()
+            .find(|v| v.name() == s)
+            .copied()
+            .ok_or_else(|| {
+                crate::util::unknown_value(
+                    "kernel variant",
+                    s,
+                    KernelVariant::ALL.iter().map(|v| v.name()),
+                )
+            })
+    }
+}
+
+/// Decompose a bh-major linear work index into a `(batch_head, q_tile)`
+/// pair — the paper's "Identify (Batch, Head, TileIndex) from linear index
+/// k". The single shared decode: the scheduler's claim loop and the
+/// single-CTA reference stream ([`single_cta_items`]) both route through
+/// it.
+#[inline]
+pub fn decode_item(w: &AttentionWorkload, k: u64) -> (u32, u64) {
+    let n = w.num_tiles();
+    ((k / n) as u32, k % n)
 }
 
 /// Number of KV tiles work item `q_tile` visits (causal masking skips
@@ -232,24 +250,25 @@ pub fn step_accesses(
 }
 
 /// Work items of a single-CTA reference stream: one CTA executing every Q
-/// tile of one (batch·head) in order, sawtooth direction derived from the
-/// Q-tile parity. This is the §4 single-stream setting the reuse-distance
-/// theory (and `sawtooth reuse` / the `abl-reuse` ablation) analyses.
-pub fn single_cta_items(w: &AttentionWorkload, order: Order) -> impl Iterator<Item = WorkItem> {
-    let n = w.num_tiles();
-    (0..n).map(move |q| WorkItem {
-        batch_head: 0,
-        q_tile: q,
-        direction: match order {
-            Order::Cyclic => Direction::Forward,
-            Order::Sawtooth => {
-                if q % 2 == 0 {
-                    Direction::Forward
-                } else {
-                    Direction::Backward
-                }
-            }
-        },
+/// tile of one (batch·head) in linear order, directions assigned by the
+/// given traversal. Because a single CTA walks the items in order, the
+/// CTA-local iteration counter equals the linear index, so sawtooth here
+/// alternates on Q-tile parity — the §4 single-stream setting the
+/// reuse-distance theory (and `sawtooth reuse` / the `abl-reuse` ablation)
+/// analyses.
+pub fn single_cta_items<'a>(
+    w: &'a AttentionWorkload,
+    traversal: &'a TraversalRef,
+) -> impl Iterator<Item = WorkItem> + 'a {
+    (0..w.num_tiles()).map(move |k| {
+        let (batch_head, q_tile) = decode_item(w, k);
+        let direction = traversal.direction(&TraversalCtx {
+            variant: KernelVariant::CudaWmma,
+            local_iter: k,
+            q_tile,
+            batch_head,
+        });
+        WorkItem { batch_head, q_tile, direction }
     })
 }
 
@@ -362,15 +381,37 @@ mod tests {
     #[test]
     fn single_cta_stream_alternates_on_sawtooth() {
         let w = wl();
-        let items: Vec<WorkItem> = single_cta_items(&w, Order::Sawtooth).collect();
+        let sawtooth = TraversalRef::sawtooth();
+        let items: Vec<WorkItem> = single_cta_items(&w, &sawtooth).collect();
         assert_eq!(items.len(), 4);
         let dirs: Vec<Direction> = items.iter().map(|i| i.direction).collect();
         assert_eq!(
             dirs,
             vec![Direction::Forward, Direction::Backward, Direction::Forward, Direction::Backward]
         );
-        let cyc: Vec<WorkItem> = single_cta_items(&w, Order::Cyclic).collect();
+        let cyclic = TraversalRef::cyclic();
+        let cyc: Vec<WorkItem> = single_cta_items(&w, &cyclic).collect();
         assert!(cyc.iter().all(|i| i.direction == Direction::Forward));
+    }
+
+    #[test]
+    fn decode_item_is_bh_major() {
+        let w = wl().with_batch(2); // 4 tiles × 2 batch·heads
+        assert_eq!(decode_item(&w, 0), (0, 0));
+        assert_eq!(decode_item(&w, 3), (0, 3));
+        assert_eq!(decode_item(&w, 4), (1, 0));
+        assert_eq!(decode_item(&w, 7), (1, 3));
+    }
+
+    #[test]
+    fn variant_display_parse_roundtrip() {
+        for v in KernelVariant::ALL {
+            assert_eq!(v.to_string().parse::<KernelVariant>().unwrap(), v);
+        }
+        let err = "triton".parse::<KernelVariant>().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown kernel variant 'triton'"), "{msg}");
+        assert!(msg.contains("cuda-wmma") && msg.contains("cutile-tile"), "{msg}");
     }
 
     #[test]
@@ -385,13 +426,5 @@ mod tests {
         assert_eq!(tiles[1], (TensorKind::V, 3));
         assert_eq!(tiles[6], (TensorKind::K, 0));
         assert_eq!(tiles[7], (TensorKind::V, 0));
-    }
-
-    #[test]
-    fn order_parse_roundtrip() {
-        assert_eq!(Order::parse("cyclic"), Some(Order::Cyclic));
-        assert_eq!(Order::parse("sawtooth"), Some(Order::Sawtooth));
-        assert_eq!(Order::parse("zigzag"), None);
-        assert_eq!(Order::Sawtooth.name(), "sawtooth");
     }
 }

@@ -27,13 +27,15 @@ pub mod kernel_model;
 pub mod scheduler;
 pub mod sweep;
 pub mod throughput;
+pub mod traversal;
 pub mod workload;
 
 pub use cache::{ExactLru, WeightedLru};
 pub use counters::CacheCounters;
 pub use engine::{stream_accesses, CapacityProfile, SimConfig, SimResult, Simulator, TraceStats};
-pub use kernel_model::{KernelVariant, Order, TensorKind, TileAccess};
+pub use kernel_model::{KernelVariant, TensorKind, TileAccess};
 pub use scheduler::SchedulerKind;
 pub use sweep::{SweepExecutor, SweepGrid, SweepSpec};
 pub use throughput::{PerfProfile, ThroughputReport};
+pub use traversal::{Traversal, TraversalCtx, TraversalRef, TraversalRegistry};
 pub use workload::AttentionWorkload;

@@ -1,12 +1,18 @@
 //! CTA scheduling and work distribution (paper Algorithms 2 and 3).
 //!
 //! The scheduler decides which Q-tile work item each CTA claims next, and
-//! with which sawtooth direction. Work items are linearised bh-major
-//! (`k = batch_head · N_tiles + q_tile`), matching the paper's
-//! "Identify (Batch, Head, TileIndex) from linear index k".
+//! with which scan direction — the latter delegated to the configured
+//! [`Traversal`](super::traversal::Traversal) implementation. Work items
+//! are linearised bh-major (`k = batch_head · N_tiles + q_tile`), matching
+//! the paper's "Identify (Batch, Head, TileIndex) from linear index k";
+//! the decode itself lives in [`kernel_model::decode_item`](decode_item)
+//! and is shared with the single-CTA reference stream.
 
-use super::kernel_model::{Direction, KernelVariant, Order, WorkItem};
+use super::kernel_model::{Direction, KernelVariant, WorkItem};
+use super::traversal::{TraversalCtx, TraversalRef};
 use super::workload::AttentionWorkload;
+
+pub use super::kernel_model::decode_item;
 
 /// Which CTA scheduling scheme drives the launch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -21,13 +27,10 @@ pub enum SchedulerKind {
 }
 
 impl SchedulerKind {
-    pub fn parse(s: &str) -> Option<Self> {
-        match s {
-            "persistent" => Some(SchedulerKind::Persistent),
-            "non-persistent" | "nonpersistent" => Some(SchedulerKind::NonPersistent),
-            _ => None,
-        }
-    }
+    /// Every scheduling scheme, in paper order (error messages, sweeps).
+    pub const ALL: [SchedulerKind; 2] =
+        [SchedulerKind::Persistent, SchedulerKind::NonPersistent];
+
     pub fn name(&self) -> &'static str {
         match self {
             SchedulerKind::Persistent => "persistent",
@@ -36,28 +39,25 @@ impl SchedulerKind {
     }
 }
 
-/// Decompose linear work index into a (batch_head, q_tile) pair.
-#[inline]
-pub fn decode_item(w: &AttentionWorkload, k: u64) -> (u32, u64) {
-    let n = w.num_tiles();
-    ((k / n) as u32, k % n)
+impl std::fmt::Display for SchedulerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
 }
 
-fn direction_for(
-    order: Order,
-    variant: KernelVariant,
-    local_iter: u64,
-    q_tile: u64,
-) -> Direction {
-    match order {
-        Order::Cyclic => Direction::Forward,
-        Order::Sawtooth => {
-            let parity = if variant.global_parity() { q_tile } else { local_iter };
-            if parity % 2 == 0 {
-                Direction::Forward
-            } else {
-                Direction::Backward
-            }
+impl std::str::FromStr for SchedulerKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "persistent" => Ok(SchedulerKind::Persistent),
+            // Accept the historical unhyphenated spelling.
+            "non-persistent" | "nonpersistent" => Ok(SchedulerKind::NonPersistent),
+            _ => Err(crate::util::unknown_value(
+                "scheduler",
+                s,
+                SchedulerKind::ALL.iter().map(|k| k.name()),
+            )),
         }
     }
 }
@@ -79,7 +79,7 @@ struct CtaState {
 /// persistent-CTA setup).
 pub struct Scheduler {
     kind: SchedulerKind,
-    order: Order,
+    traversal: TraversalRef,
     variant: KernelVariant,
     total_items: u64,
     /// Persistent: stride G. Non-persistent: unused.
@@ -93,7 +93,7 @@ pub struct Scheduler {
 impl Scheduler {
     pub fn new(
         kind: SchedulerKind,
-        order: Order,
+        traversal: TraversalRef,
         variant: KernelVariant,
         w: &AttentionWorkload,
         num_sms: u32,
@@ -106,7 +106,7 @@ impl Scheduler {
         let ctas = (0..num_sms as u64)
             .map(|c| CtaState { next_k: c, remaining: 0, local_iter: 0 })
             .collect();
-        Scheduler { kind, order, variant, total_items, grid, ctas, next_block: 0 }
+        Scheduler { kind, traversal, variant, total_items, grid, ctas, next_block: 0 }
     }
 
     /// Total number of work items in the launch.
@@ -114,20 +114,31 @@ impl Scheduler {
         self.total_items
     }
 
+    /// Direction of the work item at `(local_iter, q_tile, batch_head)`
+    /// under this launch's traversal and variant.
+    #[inline]
+    fn direction(&self, local_iter: u64, q_tile: u64, batch_head: u32) -> Direction {
+        self.traversal.direction(&TraversalCtx {
+            variant: self.variant,
+            local_iter,
+            q_tile,
+            batch_head,
+        })
+    }
+
     /// Claim the next work item for CTA slot `slot` (== SM id here).
     /// Returns None when the CTA has no more work.
     pub fn next_item(&mut self, slot: usize, w: &AttentionWorkload) -> Option<WorkItem> {
         match self.kind {
             SchedulerKind::Persistent => {
-                let cta = &mut self.ctas[slot];
-                if slot as u64 >= self.grid || cta.next_k >= self.total_items {
+                if slot as u64 >= self.grid || self.ctas[slot].next_k >= self.total_items {
                     return None;
                 }
-                let k = cta.next_k;
-                cta.next_k += self.grid;
+                let k = self.ctas[slot].next_k;
+                self.ctas[slot].next_k += self.grid;
                 let (bh, q) = decode_item(w, k);
-                let dir = direction_for(self.order, self.variant, cta.local_iter, q);
-                cta.local_iter += 1;
+                let dir = self.direction(self.ctas[slot].local_iter, q, bh);
+                self.ctas[slot].local_iter += 1;
                 Some(WorkItem { batch_head: bh, q_tile: q, direction: dir })
             }
             SchedulerKind::NonPersistent => {
@@ -147,13 +158,12 @@ impl Scheduler {
                     cta.next_k = start;
                     cta.remaining = count;
                 }
-                let cta = &mut self.ctas[slot];
-                let k = cta.next_k;
-                cta.next_k += 1;
-                cta.remaining -= 1;
+                let k = self.ctas[slot].next_k;
+                self.ctas[slot].next_k += 1;
+                self.ctas[slot].remaining -= 1;
                 let (bh, q) = decode_item(w, k);
-                let dir = direction_for(self.order, self.variant, cta.local_iter, q);
-                cta.local_iter += 1;
+                let dir = self.direction(self.ctas[slot].local_iter, q, bh);
+                self.ctas[slot].local_iter += 1;
                 Some(WorkItem { batch_head: bh, q_tile: q, direction: dir })
             }
         }
@@ -167,7 +177,7 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::kernel_model::Direction::*;
+    use crate::sim::kernel_model::Direction::{self, *};
 
     fn wl(tiles: u64) -> AttentionWorkload {
         AttentionWorkload::cuda_study(tiles * 80)
@@ -194,7 +204,7 @@ mod tests {
         let w = wl(10);
         let mut s = Scheduler::new(
             SchedulerKind::Persistent,
-            Order::Cyclic,
+            TraversalRef::cyclic(),
             KernelVariant::CudaWmma,
             &w,
             4,
@@ -211,7 +221,7 @@ mod tests {
         let w = wl(10);
         let mut s = Scheduler::new(
             SchedulerKind::Persistent,
-            Order::Cyclic,
+            TraversalRef::cyclic(),
             KernelVariant::CudaWmma,
             &w,
             4,
@@ -229,7 +239,7 @@ mod tests {
         let w = wl(8);
         let mut s = Scheduler::new(
             SchedulerKind::Persistent,
-            Order::Sawtooth,
+            TraversalRef::sawtooth(),
             KernelVariant::CudaWmma,
             &w,
             4,
@@ -244,7 +254,7 @@ mod tests {
         let w = wl(8);
         let mut s = Scheduler::new(
             SchedulerKind::Persistent,
-            Order::Cyclic,
+            TraversalRef::cyclic(),
             KernelVariant::CudaWmma,
             &w,
             4,
@@ -254,11 +264,26 @@ mod tests {
     }
 
     #[test]
+    fn reverse_cyclic_is_always_backward() {
+        let w = wl(8);
+        let mut s = Scheduler::new(
+            SchedulerKind::NonPersistent,
+            TraversalRef::reverse_cyclic(),
+            KernelVariant::CuTileStatic,
+            &w,
+            4,
+        );
+        let items = collect_all(&mut s, &w, 4);
+        assert_eq!(items.len(), 8);
+        assert!(items.iter().all(|i| i.direction == Backward));
+    }
+
+    #[test]
     fn nonpersistent_covers_all_items_once() {
         let w = wl(13);
         let mut s = Scheduler::new(
             SchedulerKind::NonPersistent,
-            Order::Cyclic,
+            TraversalRef::cyclic(),
             KernelVariant::CuTileStatic,
             &w,
             4,
@@ -274,7 +299,7 @@ mod tests {
         let w = wl(8);
         let mut s = Scheduler::new(
             SchedulerKind::NonPersistent,
-            Order::Sawtooth,
+            TraversalRef::sawtooth(),
             KernelVariant::CuTileTile,
             &w,
             2,
@@ -303,12 +328,26 @@ mod tests {
         let w = wl(2);
         let mut s = Scheduler::new(
             SchedulerKind::Persistent,
-            Order::Cyclic,
+            TraversalRef::cyclic(),
             KernelVariant::CudaWmma,
             &w,
             48,
         );
         let items = collect_all(&mut s, &w, 48);
         assert_eq!(items.len(), 2);
+    }
+
+    #[test]
+    fn scheduler_kind_display_parse_roundtrip() {
+        for k in SchedulerKind::ALL {
+            assert_eq!(k.to_string().parse::<SchedulerKind>().unwrap(), k);
+        }
+        assert_eq!(
+            "nonpersistent".parse::<SchedulerKind>().unwrap(),
+            SchedulerKind::NonPersistent
+        );
+        let msg = format!("{:#}", "turbo".parse::<SchedulerKind>().unwrap_err());
+        assert!(msg.contains("unknown scheduler 'turbo'"), "{msg}");
+        assert!(msg.contains("persistent, non-persistent"), "{msg}");
     }
 }

@@ -36,20 +36,23 @@ use std::sync::{Arc, Mutex};
 use rustc_hash::FxHashMap;
 
 use super::engine::{CapacityProfile, SimConfig, SimResult, Simulator};
-use super::kernel_model::{KernelVariant, Order};
+use super::kernel_model::KernelVariant;
 use super::scheduler::SchedulerKind;
+use super::traversal::TraversalRef;
 use super::workload::AttentionWorkload;
 
 /// Hashable identity of a [`SimConfig`], restricted to the fields the
 /// simulator actually reads (device fields that only feed the throughput
 /// model — bandwidths, latency, peak FLOPS — are deliberately excluded so
 /// configs differing only in those share one simulation). Floats are
-/// compared by bit pattern.
+/// compared by bit pattern; the traversal is keyed by its canonical name
+/// ([`TraversalRef`] equality/hashing), so memoization and the capacity
+/// fast path work for arbitrary registered orders.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct ConfigKey {
     workload: AttentionWorkload,
     scheduler: SchedulerKind,
-    order: Order,
+    order: TraversalRef,
     variant: KernelVariant,
     jitter_bits: u64,
     seed: u64,
@@ -66,7 +69,7 @@ impl ConfigKey {
         ConfigKey {
             workload: cfg.workload,
             scheduler: cfg.scheduler,
-            order: cfg.order,
+            order: cfg.order.clone(),
             variant: cfg.variant,
             jitter_bits: cfg.jitter.to_bits(),
             seed: cfg.seed,
@@ -139,7 +142,7 @@ impl SweepSpec {
 pub struct SweepGrid {
     base: SimConfig,
     causals: Vec<bool>,
-    orders: Vec<Order>,
+    orders: Vec<TraversalRef>,
     tiles: Vec<u32>,
     l2_bytes: Vec<u64>,
     sms: Vec<u32>,
@@ -152,7 +155,7 @@ impl SweepGrid {
     pub fn new(base: SimConfig) -> Self {
         SweepGrid {
             causals: vec![base.workload.causal],
-            orders: vec![base.order],
+            orders: vec![base.order.clone()],
             tiles: vec![base.workload.tile],
             l2_bytes: vec![base.device.l2_bytes],
             sms: vec![base.device.num_sms],
@@ -168,7 +171,7 @@ impl SweepGrid {
         self
     }
 
-    pub fn orders(mut self, v: &[Order]) -> Self {
+    pub fn orders(mut self, v: &[TraversalRef]) -> Self {
         self.orders = v.to_vec();
         self
     }
@@ -207,7 +210,7 @@ impl SweepGrid {
     pub fn build(&self, name: impl Into<String>) -> SweepSpec {
         let mut configs = Vec::new();
         for &causal in &self.causals {
-            for &order in &self.orders {
+            for order in &self.orders {
                 for &tile in &self.tiles {
                     for &l2 in &self.l2_bytes {
                         for &sms in &self.sms {
@@ -216,7 +219,7 @@ impl SweepGrid {
                                     for &jitter in &self.jitters {
                                         let mut cfg = self.base.clone();
                                         cfg.workload.causal = causal;
-                                        cfg.order = order;
+                                        cfg.order = order.clone();
                                         cfg.workload.tile = tile;
                                         cfg.device.l2_bytes = l2;
                                         cfg.device.num_sms = sms;
@@ -254,7 +257,7 @@ enum Job {
 ///   input order**. Profile-derived results are bit-identical to direct
 ///   simulation, so output built from them is byte-identical at any thread
 ///   count *and* with the fast path disabled (`with_mattson(false)`).
-/// * Capacity curves are cached per [`ProfileKey`] alongside the result
+/// * Capacity curves are cached per `ProfileKey` alongside the result
 ///   cache, so later queries at new capacities of an already-profiled
 ///   shape (the coordinator's policy probe) are O(log) lookups.
 pub struct SweepExecutor {
@@ -597,7 +600,7 @@ mod tests {
     use super::*;
     use crate::gb10::DeviceSpec;
 
-    fn small_cfg(seq: u64, order: Order) -> SimConfig {
+    fn small_cfg(seq: u64, order: TraversalRef) -> SimConfig {
         let mut cfg =
             SimConfig::cuda_study(AttentionWorkload::cuda_study(seq).with_tile(16));
         cfg.device = DeviceSpec::tiny();
@@ -608,11 +611,11 @@ mod tests {
     #[test]
     fn run_one_memoizes() {
         let exec = SweepExecutor::new(1);
-        let a = exec.run_one(&small_cfg(256, Order::Cyclic));
+        let a = exec.run_one(&small_cfg(256, TraversalRef::cyclic()));
         assert_eq!(exec.cached_len(), 1);
-        let b = exec.run_one(&small_cfg(256, Order::Cyclic));
+        let b = exec.run_one(&small_cfg(256, TraversalRef::cyclic()));
         assert!(Arc::ptr_eq(&a, &b), "second run must be a cache hit");
-        let c = exec.run_one(&small_cfg(256, Order::Sawtooth));
+        let c = exec.run_one(&small_cfg(256, TraversalRef::sawtooth()));
         assert_eq!(exec.cached_len(), 2);
         assert!(!Arc::ptr_eq(&a, &c));
     }
@@ -621,9 +624,9 @@ mod tests {
     fn run_all_preserves_input_order_and_dedupes() {
         let exec = SweepExecutor::new(4);
         let cfgs = vec![
-            small_cfg(256, Order::Cyclic),
-            small_cfg(512, Order::Cyclic),
-            small_cfg(256, Order::Cyclic), // duplicate of [0]
+            small_cfg(256, TraversalRef::cyclic()),
+            small_cfg(512, TraversalRef::cyclic()),
+            small_cfg(256, TraversalRef::cyclic()), // duplicate of [0]
         ];
         let rs = exec.run_all(&cfgs);
         assert_eq!(rs.len(), 3);
@@ -636,9 +639,9 @@ mod tests {
 
     #[test]
     fn parallel_matches_sequential() {
-        let grid = SweepGrid::new(small_cfg(256, Order::Cyclic))
+        let grid = SweepGrid::new(small_cfg(256, TraversalRef::cyclic()))
             .seqs(&[128, 256, 512])
-            .orders(&[Order::Cyclic, Order::Sawtooth])
+            .orders(&[TraversalRef::cyclic(), TraversalRef::sawtooth()])
             .causals(&[false, true])
             .build("parity");
         let seq_exec = SweepExecutor::new(1);
@@ -653,23 +656,23 @@ mod tests {
 
     #[test]
     fn grid_expands_in_documented_order() {
-        let spec = SweepGrid::new(small_cfg(256, Order::Cyclic))
-            .orders(&[Order::Cyclic, Order::Sawtooth])
+        let spec = SweepGrid::new(small_cfg(256, TraversalRef::cyclic()))
+            .orders(&[TraversalRef::cyclic(), TraversalRef::sawtooth()])
             .seqs(&[128, 256])
             .build("order-check");
         assert_eq!(spec.len(), 4);
         // order is outermore than seq.
-        assert_eq!(spec.configs[0].order, Order::Cyclic);
+        assert_eq!(spec.configs[0].order, TraversalRef::cyclic());
         assert_eq!(spec.configs[0].workload.seq, 128);
         assert_eq!(spec.configs[1].workload.seq, 256);
-        assert_eq!(spec.configs[2].order, Order::Sawtooth);
+        assert_eq!(spec.configs[2].order, TraversalRef::sawtooth());
         assert_eq!(spec.configs[2].workload.seq, 128);
     }
 
     #[test]
     fn grouped_capacity_sweep_matches_ungrouped_byte_for_byte() {
-        let grid = SweepGrid::new(small_cfg(512, Order::Cyclic))
-            .orders(&[Order::Cyclic, Order::Sawtooth])
+        let grid = SweepGrid::new(small_cfg(512, TraversalRef::cyclic()))
+            .orders(&[TraversalRef::cyclic(), TraversalRef::sawtooth()])
             .l2_bytes(&[16 * 1024, 32 * 1024, 64 * 1024, 128 * 1024])
             .causals(&[false, true])
             .build("capacity-grid");
@@ -689,20 +692,20 @@ mod tests {
     #[test]
     fn profile_one_memoizes_per_shape() {
         let exec = SweepExecutor::new(1);
-        let a = exec.profile_one(&small_cfg(256, Order::Cyclic));
-        let mut other_cap = small_cfg(256, Order::Cyclic);
+        let a = exec.profile_one(&small_cfg(256, TraversalRef::cyclic()));
+        let mut other_cap = small_cfg(256, TraversalRef::cyclic());
         other_cap.device.l2_bytes *= 2;
         let b = exec.profile_one(&other_cap);
         assert!(Arc::ptr_eq(&a, &b), "capacity must not split the profile cache");
         assert_eq!(exec.profiled_len(), 1);
-        let c = exec.profile_one(&small_cfg(256, Order::Sawtooth));
+        let c = exec.profile_one(&small_cfg(256, TraversalRef::sawtooth()));
         assert!(!Arc::ptr_eq(&a, &c));
     }
 
     #[test]
     fn run_at_capacity_derives_from_cached_curve() {
         let exec = SweepExecutor::new(1);
-        let base = small_cfg(512, Order::Sawtooth);
+        let base = small_cfg(512, TraversalRef::sawtooth());
         let r1 = exec.run_at_capacity(&base);
         assert_eq!(exec.profiled_len(), 1);
         // A second capacity of the same shape must reuse the curve (still
@@ -718,7 +721,7 @@ mod tests {
     #[test]
     fn run_one_consults_profile_cache() {
         let exec = SweepExecutor::new(1);
-        let base = small_cfg(256, Order::Cyclic);
+        let base = small_cfg(256, TraversalRef::cyclic());
         exec.profile_one(&base);
         let mut quarter = base.clone();
         quarter.device.l2_bytes /= 4;
@@ -730,7 +733,7 @@ mod tests {
     fn bypass_regime_capacities_fall_back_to_simulation() {
         // Tile weight = 64 sectors = 2 KiB; a 1 KiB L2 is in the weighted
         // LRU's bypass regime, so grouping must not claim it.
-        let mut tiny_l2 = small_cfg(256, Order::Cyclic);
+        let mut tiny_l2 = small_cfg(256, TraversalRef::cyclic());
         tiny_l2.device.l2_bytes = 1024;
         let mut configs = vec![tiny_l2.clone()];
         let mut other = tiny_l2.clone();
@@ -745,7 +748,7 @@ mod tests {
 
     #[test]
     fn config_key_ignores_throughput_only_device_fields() {
-        let a = small_cfg(256, Order::Cyclic);
+        let a = small_cfg(256, TraversalRef::cyclic());
         let mut b = a.clone();
         b.device.dram_bw *= 2.0;
         b.device.peak_fp16_flops *= 2.0;
@@ -757,10 +760,10 @@ mod tests {
 
     #[test]
     fn capacity_chunks_group_by_capacity_only_identity() {
-        let base = small_cfg(256, Order::Cyclic);
+        let base = small_cfg(256, TraversalRef::cyclic());
         let mut cap2 = base.clone();
         cap2.device.l2_bytes *= 2;
-        let other = small_cfg(512, Order::Cyclic);
+        let other = small_cfg(512, TraversalRef::cyclic());
         let mut cap3 = base.clone();
         cap3.device.l2_bytes /= 2;
         let configs = vec![base.clone(), other.clone(), cap2, cap3];
@@ -776,8 +779,8 @@ mod tests {
 
     #[test]
     fn run_chunked_streams_chunks_and_matches_run_all() {
-        let grid = SweepGrid::new(small_cfg(512, Order::Cyclic))
-            .orders(&[Order::Cyclic, Order::Sawtooth])
+        let grid = SweepGrid::new(small_cfg(512, TraversalRef::cyclic()))
+            .orders(&[TraversalRef::cyclic(), TraversalRef::sawtooth()])
             .l2_bytes(&[16 * 1024, 32 * 1024, 64 * 1024])
             .build("chunked");
         let chunked = SweepExecutor::new(2);
@@ -808,14 +811,34 @@ mod tests {
 
     #[test]
     fn config_key_distinguishes_sim_fields() {
-        let a = small_cfg(256, Order::Cyclic);
+        let a = small_cfg(256, TraversalRef::cyclic());
         for (name, cfg) in [
-            ("order", small_cfg(256, Order::Sawtooth)),
-            ("seq", small_cfg(512, Order::Cyclic)),
-            ("jitter", small_cfg(256, Order::Cyclic).with_jitter(0.5, 0)),
-            ("seed", small_cfg(256, Order::Cyclic).with_jitter(0.0, 9)),
+            ("order", small_cfg(256, TraversalRef::sawtooth())),
+            ("order-param", small_cfg(256, TraversalRef::block_snake(4))),
+            ("seq", small_cfg(512, TraversalRef::cyclic())),
+            ("jitter", small_cfg(256, TraversalRef::cyclic()).with_jitter(0.5, 0)),
+            ("seed", small_cfg(256, TraversalRef::cyclic()).with_jitter(0.0, 9)),
         ] {
             assert_ne!(ConfigKey::of(&a), ConfigKey::of(&cfg), "axis {name}");
         }
+        // Same canonical name → same key: the traversal id is the identity.
+        let b4 = small_cfg(256, TraversalRef::block_snake(4));
+        let b4_again = small_cfg(256, "block-snake:4".parse().unwrap());
+        assert_eq!(ConfigKey::of(&b4), ConfigKey::of(&b4_again));
+    }
+
+    #[test]
+    fn new_traversals_memoize_and_profile_like_builtins() {
+        // Memoization and the Mattson capacity grouping must treat a
+        // non-paper traversal exactly like cyclic/sawtooth.
+        let exec = SweepExecutor::new(2);
+        let base = small_cfg(512, TraversalRef::diagonal());
+        let mut half = base.clone();
+        half.device.l2_bytes /= 2;
+        let rs = exec.run_all(&[base.clone(), half.clone(), base.clone()]);
+        assert!(Arc::ptr_eq(&rs[0], &rs[2]), "duplicates share one result");
+        assert_eq!(exec.profiled_len(), 1, "capacity pair collapses to one profile");
+        assert_eq!(*rs[0], Simulator::new(base).run());
+        assert_eq!(*rs[1], Simulator::new(half).run());
     }
 }

@@ -1,0 +1,715 @@
+//! Pluggable wavefront-traversal API: the paper's contribution — *which
+//! direction a work item walks its KV tiles* — as an open, registry-backed
+//! extension point instead of a closed enum.
+//!
+//! The paper shows that sawtooth KV reordering alone cuts L2 misses by
+//! ≥50% on GB10; FlashAttention-2 and FlatAttention show the wider space
+//! of work-partitioning/dataflow schedules is rich. This module makes that
+//! space explorable without touching the simulator:
+//!
+//! * [`Traversal`] — the trait: a stable [`Traversal::name`] (the
+//!   memoization / protocol / artifact identity) plus
+//!   [`Traversal::direction`], the per-work-item scan-direction rule.
+//! * [`TraversalRef`] — a cheap, clonable handle (`Arc<dyn Traversal>`)
+//!   with value semantics keyed on the canonical name: `PartialEq`/`Hash`
+//!   compare names, `Display` prints the name, and `FromStr` resolves
+//!   through the global registry — so sweep keys, the line protocol, the
+//!   CLI and config files all speak the same strings.
+//! * [`TraversalRegistry`] — name → implementation resolution, including
+//!   parameterized families (`block-snake:<width>`). New traversals
+//!   registered at runtime are immediately accepted by the CLI, the config
+//!   schema, the sweep-service line protocol, and `report abl-order`.
+//!
+//! # Built-ins
+//!
+//! | name                 | direction rule                                        |
+//! |----------------------|-------------------------------------------------------|
+//! | `cyclic`             | always forward (paper baseline)                       |
+//! | `sawtooth`           | parity of the variant's counter (paper Algorithm 4)   |
+//! | `reverse-cyclic`     | always backward                                       |
+//! | `block-snake:<w>`    | alternate every `w` items (`w = 1` ≡ sawtooth)        |
+//! | `diagonal`           | parity of `batch_head + q_tile` (zigzag over the grid)|
+//!
+//! # Registering a new traversal
+//!
+//! ```
+//! use sawtooth_attn::sim::kernel_model::Direction;
+//! use sawtooth_attn::sim::traversal::{
+//!     Traversal, TraversalCtx, TraversalRef, TraversalRegistry,
+//! };
+//!
+//! #[derive(Debug)]
+//! struct EveryThird;
+//! impl Traversal for EveryThird {
+//!     fn name(&self) -> &str {
+//!         "every-third"
+//!     }
+//!     fn direction(&self, ctx: &TraversalCtx) -> Direction {
+//!         if ctx.parity_source() % 3 == 0 {
+//!             Direction::Backward
+//!         } else {
+//!             Direction::Forward
+//!         }
+//!     }
+//! }
+//!
+//! let reg = TraversalRegistry::with_builtins();
+//! reg.register("every-third", "every-third", false, |_| {
+//!     Ok(TraversalRef::custom(std::sync::Arc::new(EveryThird)))
+//! })
+//! .unwrap();
+//! assert_eq!(reg.resolve("every-third").unwrap().name(), "every-third");
+//! ```
+//!
+//! The **name is the identity**: two implementations with equal names are
+//! treated as the same traversal by memoization, hashing and the wire
+//! protocol. Names must be stable across processes and must not contain
+//! whitespace, `=` (line-protocol delimiter) or `:` (reserved to separate
+//! a factory key from its parameter).
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::unknown_value;
+
+use super::kernel_model::{Direction, KernelVariant};
+
+/// Canonical name of the baseline forward traversal.
+pub const CYCLIC: &str = "cyclic";
+/// Canonical name of the paper's sawtooth traversal (Algorithm 4).
+pub const SAWTOOTH: &str = "sawtooth";
+/// Canonical name of the always-backward traversal.
+pub const REVERSE_CYCLIC: &str = "reverse-cyclic";
+/// Factory key of the parameterized block-snake family
+/// (`block-snake:<width>`).
+pub const BLOCK_SNAKE: &str = "block-snake";
+/// Canonical name of the diagonal (zigzag-over-the-work-grid) traversal.
+pub const DIAGONAL: &str = "diagonal";
+
+/// Everything a traversal may consult when assigning a scan direction to
+/// one work item. Kept `Copy`-small: the scheduler builds one per claimed
+/// item on the trace hot path.
+#[derive(Clone, Copy, Debug)]
+pub struct TraversalCtx {
+    /// Kernel variant executing the item (selects the parity source).
+    pub variant: KernelVariant,
+    /// CTA-local iteration counter (Algorithm 4's `i_local`).
+    pub local_iter: u64,
+    /// Global Q-tile index of the item.
+    pub q_tile: u64,
+    /// Flattened (batch · head) index of the item.
+    pub batch_head: u32,
+}
+
+impl TraversalCtx {
+    /// The alternation counter the paper's kernels actually key on: the
+    /// global Q-tile index for the tile-based CuTile variant
+    /// ([`KernelVariant::global_parity`]), the CTA-local iteration counter
+    /// otherwise (Algorithm 4 as written).
+    pub fn parity_source(&self) -> u64 {
+        if self.variant.global_parity() {
+            self.q_tile
+        } else {
+            self.local_iter
+        }
+    }
+}
+
+/// A KV traversal order: the rule assigning each work item its scan
+/// direction. Implementations must be pure functions of the context —
+/// the simulator memoizes and replays on the assumption that equal
+/// `(name, ctx)` always yields the same direction.
+pub trait Traversal: Send + Sync {
+    /// Canonical, stable identity. Used for sweep memoization keys, the
+    /// line protocol, CLI/config values and artifact naming — see the
+    /// module docs for the allowed character set.
+    fn name(&self) -> &str;
+
+    /// Scan direction of the work item described by `ctx`.
+    fn direction(&self, ctx: &TraversalCtx) -> Direction;
+}
+
+/// Shared handle to a [`Traversal`] with value semantics on the canonical
+/// name: cloning is an `Arc` bump, equality/hashing compare
+/// [`Traversal::name`], `Display` prints it, and [`FromStr`] resolves any
+/// registered name (so `"block-snake:4".parse::<TraversalRef>()` works
+/// wherever strings arrive — CLI, config, line protocol).
+#[derive(Clone)]
+pub struct TraversalRef(Arc<dyn Traversal>);
+
+impl TraversalRef {
+    /// Wrap a custom implementation. The handle's identity is the
+    /// implementation's [`Traversal::name`].
+    pub fn custom(imp: Arc<dyn Traversal>) -> Self {
+        TraversalRef(imp)
+    }
+
+    /// The baseline forward traversal.
+    pub fn cyclic() -> Self {
+        static T: OnceLock<TraversalRef> = OnceLock::new();
+        T.get_or_init(|| TraversalRef(Arc::new(Cyclic))).clone()
+    }
+
+    /// The paper's sawtooth traversal (Algorithm 4).
+    pub fn sawtooth() -> Self {
+        static T: OnceLock<TraversalRef> = OnceLock::new();
+        T.get_or_init(|| TraversalRef(Arc::new(Sawtooth))).clone()
+    }
+
+    /// The always-backward traversal.
+    pub fn reverse_cyclic() -> Self {
+        static T: OnceLock<TraversalRef> = OnceLock::new();
+        T.get_or_init(|| TraversalRef(Arc::new(ReverseCyclic))).clone()
+    }
+
+    /// Block-snake with the given width (direction alternates every
+    /// `width` items of the parity counter). `block_snake(1)` behaves
+    /// like sawtooth but keeps its own identity.
+    ///
+    /// # Panics
+    /// Panics when `width == 0`; parse the string form
+    /// (`"block-snake:<w>"`) for fallible construction.
+    pub fn block_snake(width: u64) -> Self {
+        assert!(width >= 1, "block-snake width must be >= 1");
+        TraversalRef(Arc::new(BlockSnake {
+            width,
+            name: format!("{BLOCK_SNAKE}:{width}"),
+        }))
+    }
+
+    /// The diagonal traversal: direction from `batch_head + q_tile`
+    /// parity, a zigzag wave over the 2-D (batch·head, Q-tile) work grid.
+    pub fn diagonal() -> Self {
+        static T: OnceLock<TraversalRef> = OnceLock::new();
+        T.get_or_init(|| TraversalRef(Arc::new(Diagonal))).clone()
+    }
+
+    /// Canonical name (the identity — see [`Traversal::name`]).
+    pub fn name(&self) -> &str {
+        self.0.name()
+    }
+
+    /// Scan direction of the work item described by `ctx`.
+    #[inline]
+    pub fn direction(&self, ctx: &TraversalCtx) -> Direction {
+        self.0.direction(ctx)
+    }
+}
+
+impl fmt::Debug for TraversalRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+impl fmt::Display for TraversalRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+impl PartialEq for TraversalRef {
+    fn eq(&self, other: &Self) -> bool {
+        self.name() == other.name()
+    }
+}
+
+impl Eq for TraversalRef {}
+
+impl std::hash::Hash for TraversalRef {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.name().hash(state);
+    }
+}
+
+impl FromStr for TraversalRef {
+    type Err = anyhow::Error;
+
+    /// Resolve through the [global registry](TraversalRegistry::global).
+    fn from_str(s: &str) -> Result<Self> {
+        TraversalRegistry::global().resolve(s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in implementations
+// ---------------------------------------------------------------------------
+
+/// Baseline: every work item streams KV tiles forward.
+struct Cyclic;
+
+impl Traversal for Cyclic {
+    fn name(&self) -> &str {
+        CYCLIC
+    }
+    #[inline]
+    fn direction(&self, _ctx: &TraversalCtx) -> Direction {
+        Direction::Forward
+    }
+}
+
+/// Sawtooth wavefront reordering (paper Algorithm 4): alternate the scan
+/// direction on every step of the variant's parity counter.
+struct Sawtooth;
+
+impl Traversal for Sawtooth {
+    fn name(&self) -> &str {
+        SAWTOOTH
+    }
+    #[inline]
+    fn direction(&self, ctx: &TraversalCtx) -> Direction {
+        if ctx.parity_source() % 2 == 0 {
+            Direction::Forward
+        } else {
+            Direction::Backward
+        }
+    }
+}
+
+/// Every work item streams KV tiles backward. Control case: a *constant*
+/// reversal has cyclic's reuse distances (no wavefront-adjacent overlap),
+/// so it should match cyclic's misses — separating "reversal per se" from
+/// "alternation" in ablations.
+struct ReverseCyclic;
+
+impl Traversal for ReverseCyclic {
+    fn name(&self) -> &str {
+        REVERSE_CYCLIC
+    }
+    #[inline]
+    fn direction(&self, _ctx: &TraversalCtx) -> Direction {
+        Direction::Backward
+    }
+}
+
+/// Coarsened sawtooth: direction flips every `width` items of the parity
+/// counter, so `width` consecutive items share a direction (a "snake" at
+/// block granularity). Interpolates between sawtooth (`width = 1` parity
+/// behaviour) and cyclic (`width = ∞`).
+struct BlockSnake {
+    width: u64,
+    name: String,
+}
+
+impl Traversal for BlockSnake {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    #[inline]
+    fn direction(&self, ctx: &TraversalCtx) -> Direction {
+        if (ctx.parity_source() / self.width) % 2 == 0 {
+            Direction::Forward
+        } else {
+            Direction::Backward
+        }
+    }
+}
+
+/// Direction from the parity of `batch_head + q_tile`: neighbouring rows
+/// of the work grid scan in opposite directions, a diagonal zigzag. For
+/// B·H = 1 this coincides with tile-parity sawtooth; with many
+/// batch·heads it staggers reversals *across* the concurrent CTA set.
+struct Diagonal;
+
+impl Traversal for Diagonal {
+    fn name(&self) -> &str {
+        DIAGONAL
+    }
+    #[inline]
+    fn direction(&self, ctx: &TraversalCtx) -> Direction {
+        if (ctx.q_tile + ctx.batch_head as u64) % 2 == 0 {
+            Direction::Forward
+        } else {
+            Direction::Backward
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+type Factory = dyn Fn(Option<&str>) -> Result<TraversalRef> + Send + Sync;
+
+struct Entry {
+    /// Factory key: the part of a name before the optional `:` parameter.
+    key: String,
+    /// Human-facing form shown in error messages and docs
+    /// (e.g. `block-snake:<width>`).
+    example: String,
+    /// Whether the factory accepts a `:parameter` suffix.
+    parameterized: bool,
+    make: Box<Factory>,
+}
+
+/// Name → [`Traversal`] resolution. Holds a list of factories, each owning
+/// a key; `resolve("key")` or `resolve("key:arg")` invokes the matching
+/// factory. The [global](TraversalRegistry::global) instance starts with
+/// the built-ins and accepts further [`TraversalRegistry::register`] calls
+/// at runtime — everything that parses traversal names (CLI, config
+/// schema, sweep line protocol, `report abl-order`) goes through it, so a
+/// registered traversal is usable end to end immediately.
+pub struct TraversalRegistry {
+    entries: Mutex<Vec<Arc<Entry>>>,
+}
+
+impl TraversalRegistry {
+    /// An empty registry (tests / embedding).
+    pub fn empty() -> Self {
+        TraversalRegistry { entries: Mutex::new(Vec::new()) }
+    }
+
+    /// A registry pre-populated with the built-in traversals, in the
+    /// documented order: cyclic, sawtooth, reverse-cyclic, block-snake,
+    /// diagonal.
+    pub fn with_builtins() -> Self {
+        let reg = Self::empty();
+        reg.register(CYCLIC, CYCLIC, false, |_| Ok(TraversalRef::cyclic()))
+            .expect("builtin registration");
+        reg.register(SAWTOOTH, SAWTOOTH, false, |_| Ok(TraversalRef::sawtooth()))
+            .expect("builtin registration");
+        reg.register(REVERSE_CYCLIC, REVERSE_CYCLIC, false, |_| {
+            Ok(TraversalRef::reverse_cyclic())
+        })
+        .expect("builtin registration");
+        reg.register(BLOCK_SNAKE, "block-snake:<width>", true, |arg| {
+            let width = match arg {
+                None => 2,
+                Some(s) => s
+                    .parse::<u64>()
+                    .map_err(|e| anyhow!("block-snake width '{s}': {e}"))?,
+            };
+            if width == 0 {
+                bail!("block-snake width must be >= 1");
+            }
+            Ok(TraversalRef::block_snake(width))
+        })
+        .expect("builtin registration");
+        reg.register(DIAGONAL, DIAGONAL, false, |_| Ok(TraversalRef::diagonal()))
+            .expect("builtin registration");
+        reg
+    }
+
+    /// The process-wide registry every string-parsing surface consults.
+    pub fn global() -> &'static TraversalRegistry {
+        static GLOBAL: OnceLock<TraversalRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(TraversalRegistry::with_builtins)
+    }
+
+    /// Register a factory under `key`. `example` is the form listed in
+    /// error messages (for parameterized factories, include the parameter
+    /// placeholder). `parameterized` controls whether `key:arg` names are
+    /// routed here (the factory receives `Some(arg)`); non-parameterized
+    /// factories always receive `None`. Fails on an already-taken key or
+    /// a key containing reserved characters (whitespace, `=`, `:`).
+    pub fn register<F>(
+        &self,
+        key: &str,
+        example: &str,
+        parameterized: bool,
+        make: F,
+    ) -> Result<()>
+    where
+        F: Fn(Option<&str>) -> Result<TraversalRef> + Send + Sync + 'static,
+    {
+        if key.is_empty()
+            || key.chars().any(|c| c.is_whitespace() || c == '=' || c == ':')
+        {
+            bail!(
+                "traversal key '{key}' is invalid: must be non-empty and free of \
+                 whitespace, '=' and ':'"
+            );
+        }
+        let mut entries = self.entries.lock().unwrap();
+        if entries.iter().any(|e| e.key == key) {
+            bail!("traversal '{key}' is already registered");
+        }
+        entries.push(Arc::new(Entry {
+            key: key.to_string(),
+            example: example.to_string(),
+            parameterized,
+            make: Box::new(make),
+        }));
+        Ok(())
+    }
+
+    /// Resolve a name (`key` or `key:arg`) to an implementation. Unknown
+    /// keys fail with the shared unknown-value message listing every
+    /// registered name, so the CLI, config files and the line protocol
+    /// report identically.
+    pub fn resolve(&self, name: &str) -> Result<TraversalRef> {
+        let (key, arg) = match name.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (name, None),
+        };
+        let entry = {
+            let entries = self.entries.lock().unwrap();
+            match entries.iter().find(|e| e.key == key) {
+                Some(e) => Arc::clone(e),
+                None => {
+                    return Err(unknown_value(
+                        "traversal",
+                        name,
+                        entries.iter().map(|e| e.example.clone()),
+                    ))
+                }
+            }
+        };
+        if arg.is_some() && !entry.parameterized {
+            bail!("traversal '{key}' takes no parameter (got '{name}')");
+        }
+        let t = (entry.make)(arg)?;
+        // The canonical name is the wire/memoization identity: reject
+        // instances whose name would corrupt the `key=value` line protocol
+        // before they reach a SimConfig.
+        if t.name().is_empty()
+            || t.name().chars().any(|c| c.is_whitespace() || c == '=')
+        {
+            bail!(
+                "traversal '{key}' produced invalid canonical name '{}' \
+                 (must be non-empty, no whitespace, no '=')",
+                t.name()
+            );
+        }
+        Ok(t)
+    }
+
+    /// The registered name forms, in registration order (error messages,
+    /// docs, `--help`).
+    pub fn examples(&self) -> Vec<String> {
+        self.entries
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|e| e.example.clone())
+            .collect()
+    }
+
+    /// One default instance per registered factory, in registration order
+    /// (parameterized factories yield their default parameter). This is
+    /// what `report abl-order` and the coverage property tests iterate.
+    /// Factories that cannot construct a default (a parameterized factory
+    /// that requires its argument) are skipped rather than failing the
+    /// whole iteration.
+    pub fn instances(&self) -> Vec<TraversalRef> {
+        let entries: Vec<Arc<Entry>> =
+            self.entries.lock().unwrap().iter().map(Arc::clone).collect();
+        entries.iter().filter_map(|e| (e.make)(None).ok()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(variant: KernelVariant, local_iter: u64, q_tile: u64, bh: u32) -> TraversalCtx {
+        TraversalCtx { variant, local_iter, q_tile, batch_head: bh }
+    }
+
+    /// The retired `enum Order` semantics, verbatim: the parity source is
+    /// the global Q-tile index for tile-based CuTile, the CTA-local
+    /// iteration counter otherwise.
+    fn legacy_direction(
+        sawtooth: bool,
+        variant: KernelVariant,
+        local_iter: u64,
+        q_tile: u64,
+    ) -> Direction {
+        if !sawtooth {
+            return Direction::Forward;
+        }
+        let parity = if variant.global_parity() { q_tile } else { local_iter };
+        if parity % 2 == 0 {
+            Direction::Forward
+        } else {
+            Direction::Backward
+        }
+    }
+
+    #[test]
+    fn cyclic_and_sawtooth_reproduce_legacy_enum_semantics() {
+        let variants = [
+            KernelVariant::CudaWmma,
+            KernelVariant::CuTileStatic,
+            KernelVariant::CuTileTile,
+        ];
+        let cyclic = TraversalRef::cyclic();
+        let sawtooth = TraversalRef::sawtooth();
+        for variant in variants {
+            for local_iter in 0..8 {
+                for q_tile in 0..8 {
+                    for bh in [0u32, 1, 3] {
+                        let c = ctx(variant, local_iter, q_tile, bh);
+                        assert_eq!(
+                            cyclic.direction(&c),
+                            legacy_direction(false, variant, local_iter, q_tile),
+                        );
+                        assert_eq!(
+                            sawtooth.direction(&c),
+                            legacy_direction(true, variant, local_iter, q_tile),
+                            "variant={variant:?} local={local_iter} q={q_tile}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn handles_compare_and_hash_by_name() {
+        assert_eq!(TraversalRef::cyclic(), TraversalRef::cyclic());
+        assert_ne!(TraversalRef::cyclic(), TraversalRef::sawtooth());
+        assert_eq!(TraversalRef::block_snake(4), TraversalRef::block_snake(4));
+        assert_ne!(TraversalRef::block_snake(4), TraversalRef::block_snake(8));
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        let h = |t: &TraversalRef| {
+            let mut s = DefaultHasher::new();
+            t.hash(&mut s);
+            s.finish()
+        };
+        assert_eq!(h(&TraversalRef::diagonal()), h(&TraversalRef::diagonal()));
+    }
+
+    #[test]
+    fn names_display_and_parse_roundtrip() {
+        for t in TraversalRegistry::global().instances() {
+            let parsed: TraversalRef = t.name().parse().unwrap();
+            assert_eq!(parsed, t);
+            assert_eq!(format!("{t}"), t.name());
+        }
+        let bs: TraversalRef = "block-snake:7".parse().unwrap();
+        assert_eq!(bs.name(), "block-snake:7");
+        // The bare family key resolves to the default width, canonically
+        // named — later round trips are stable.
+        let default_bs: TraversalRef = "block-snake".parse().unwrap();
+        assert_eq!(default_bs.name(), "block-snake:2");
+    }
+
+    #[test]
+    fn unknown_name_error_lists_valid_values() {
+        let err = "spiral".parse::<TraversalRef>().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown traversal 'spiral'"), "{msg}");
+        for listed in ["cyclic", "sawtooth", "reverse-cyclic", "block-snake:<width>", "diagonal"]
+        {
+            assert!(msg.contains(listed), "missing {listed} in: {msg}");
+        }
+    }
+
+    #[test]
+    fn parameter_validation() {
+        assert!("block-snake:0".parse::<TraversalRef>().is_err());
+        assert!("block-snake:two".parse::<TraversalRef>().is_err());
+        assert!("cyclic:3".parse::<TraversalRef>().is_err(), "no parameter allowed");
+    }
+
+    #[test]
+    fn registry_rejects_duplicate_and_invalid_keys() {
+        let reg = TraversalRegistry::with_builtins();
+        assert!(reg.register(CYCLIC, CYCLIC, false, |_| Ok(TraversalRef::cyclic())).is_err());
+        assert!(reg
+            .register("has space", "has space", false, |_| Ok(TraversalRef::cyclic()))
+            .is_err());
+        assert!(reg
+            .register("has:colon", "has:colon", false, |_| Ok(TraversalRef::cyclic()))
+            .is_err());
+    }
+
+    #[test]
+    fn instances_skip_default_less_factories_and_resolve_rejects_bad_names() {
+        let reg = TraversalRegistry::with_builtins();
+        let n_builtin = reg.instances().len();
+        // A parameterized factory with no default: resolvable with an
+        // argument, silently absent from the default-instance iteration.
+        reg.register("stride", "stride:<n>", true, |arg| {
+            let n: u64 = arg
+                .ok_or_else(|| anyhow!("stride requires a parameter"))?
+                .parse()
+                .map_err(|e| anyhow!("stride parameter: {e}"))?;
+            Ok(TraversalRef::block_snake(n.max(1)))
+        })
+        .unwrap();
+        assert_eq!(reg.instances().len(), n_builtin, "no-default factory is skipped");
+        assert!(reg.resolve("stride").is_err());
+        assert!(reg.resolve("stride:4").is_ok());
+        // A factory whose instance name would corrupt the line protocol is
+        // rejected at resolve time.
+        struct BadName;
+        impl Traversal for BadName {
+            fn name(&self) -> &str {
+                "has space"
+            }
+            fn direction(&self, _: &TraversalCtx) -> Direction {
+                Direction::Forward
+            }
+        }
+        reg.register("bad", "bad", false, |_| {
+            Ok(TraversalRef::custom(Arc::new(BadName)))
+        })
+        .unwrap();
+        let err = reg.resolve("bad").unwrap_err();
+        assert!(format!("{err:#}").contains("invalid canonical name"), "{err:#}");
+    }
+
+    #[test]
+    fn custom_registration_resolves() {
+        struct AlwaysBack;
+        impl Traversal for AlwaysBack {
+            fn name(&self) -> &str {
+                "always-back"
+            }
+            fn direction(&self, _: &TraversalCtx) -> Direction {
+                Direction::Backward
+            }
+        }
+        let reg = TraversalRegistry::with_builtins();
+        let before = reg.instances().len();
+        reg.register("always-back", "always-back", false, |_| {
+            Ok(TraversalRef::custom(Arc::new(AlwaysBack)))
+        })
+        .unwrap();
+        let t = reg.resolve("always-back").unwrap();
+        assert_eq!(
+            t.direction(&ctx(KernelVariant::CudaWmma, 0, 0, 0)),
+            Direction::Backward
+        );
+        assert_eq!(reg.instances().len(), before + 1);
+    }
+
+    #[test]
+    fn builtin_direction_rules() {
+        let c = |i, q, bh| ctx(KernelVariant::CudaWmma, i, q, bh);
+        assert_eq!(TraversalRef::reverse_cyclic().direction(&c(0, 0, 0)), Direction::Backward);
+        // block-snake:2 over local_iter: F F B B F F ...
+        let bs = TraversalRef::block_snake(2);
+        let dirs: Vec<Direction> = (0..6).map(|i| bs.direction(&c(i, i, 0))).collect();
+        assert_eq!(
+            dirs,
+            vec![
+                Direction::Forward,
+                Direction::Forward,
+                Direction::Backward,
+                Direction::Backward,
+                Direction::Forward,
+                Direction::Forward,
+            ]
+        );
+        // diagonal: (q + bh) parity.
+        let d = TraversalRef::diagonal();
+        assert_eq!(d.direction(&c(0, 2, 0)), Direction::Forward);
+        assert_eq!(d.direction(&c(0, 2, 1)), Direction::Backward);
+        assert_eq!(d.direction(&c(0, 3, 1)), Direction::Forward);
+    }
+
+    #[test]
+    fn parity_source_follows_variant() {
+        let tile = ctx(KernelVariant::CuTileTile, 5, 8, 0);
+        assert_eq!(tile.parity_source(), 8, "tile-based keys on the global q index");
+        let wmma = ctx(KernelVariant::CudaWmma, 5, 8, 0);
+        assert_eq!(wmma.parity_source(), 5, "persistent kernels key on i_local");
+    }
+}

@@ -5,3 +5,27 @@ pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod table;
+
+/// The one shared "unknown value" error for every name-keyed lookup —
+/// traversal names, scheduler kinds, kernel variants — so the CLI, config
+/// files and the sweep line protocol all report the same message, and that
+/// message always says what *is* legal.
+pub fn unknown_value<I, S>(what: &str, got: &str, valid: I) -> anyhow::Error
+where
+    I: IntoIterator<Item = S>,
+    S: AsRef<str>,
+{
+    let list: Vec<String> =
+        valid.into_iter().map(|s| s.as_ref().to_string()).collect();
+    anyhow::anyhow!("unknown {what} '{got}' (valid: {})", list.join(", "))
+}
+
+#[cfg(test)]
+mod util_tests {
+    #[test]
+    fn unknown_value_lists_alternatives() {
+        let e = super::unknown_value("scheduler", "turbo", ["persistent", "non-persistent"]);
+        let msg = format!("{e:#}");
+        assert_eq!(msg, "unknown scheduler 'turbo' (valid: persistent, non-persistent)");
+    }
+}

@@ -1,7 +1,8 @@
 //! The shipped config files must parse into valid run configurations.
 
 use sawtooth_attn::config::{Config, ServeConfig, SimRunConfig};
-use sawtooth_attn::sim::kernel_model::{KernelVariant, Order};
+use sawtooth_attn::sim::kernel_model::KernelVariant;
+use sawtooth_attn::sim::traversal::TraversalRef;
 
 #[test]
 fn cuda_study_config_parses() {
@@ -28,7 +29,7 @@ fn serve_config_parses() {
     let c = Config::load("configs/serve.toml").unwrap();
     let s = ServeConfig::from_config(&c).unwrap();
     assert_eq!(s.max_batch, 4);
-    assert_eq!(s.order, Order::Sawtooth);
+    assert_eq!(s.order, TraversalRef::sawtooth());
     assert!(s.warmup);
 }
 
@@ -38,7 +39,7 @@ fn overrides_compose_with_files() {
     c.set_override("sim.order=sawtooth").unwrap();
     c.set_override("device.sms=16").unwrap();
     let s = SimRunConfig::from_config(&c).unwrap();
-    assert_eq!(s.order, Order::Sawtooth);
+    assert_eq!(s.order, TraversalRef::sawtooth());
     assert_eq!(s.device().num_sms, 16);
     // Untouched keys keep file values.
     assert_eq!(s.workload.tile, 80);

@@ -4,7 +4,7 @@
 use sawtooth_attn::config::ServeConfig;
 use sawtooth_attn::coordinator::{AttentionRequest, Engine};
 use sawtooth_attn::runtime::{attention_host_ref, default_artifacts_dir};
-use sawtooth_attn::sim::kernel_model::Order;
+use sawtooth_attn::sim::traversal::TraversalRef;
 use sawtooth_attn::util::rng::Rng;
 
 fn cfg() -> ServeConfig {
@@ -12,7 +12,7 @@ fn cfg() -> ServeConfig {
         artifacts_dir: default_artifacts_dir().display().to_string(),
         max_batch: 4,
         batch_window_us: 1000,
-        order: Order::Sawtooth,
+        order: TraversalRef::sawtooth(),
         queue_depth: 32,
         clients: 2,
         warmup: false,
@@ -137,7 +137,7 @@ fn back_pressure_rejects_when_queue_full() {
 #[test]
 fn cyclic_policy_selects_cyclic_artifacts() {
     let mut c = cfg();
-    c.order = Order::Cyclic;
+    c.order = TraversalRef::cyclic();
     let engine = Engine::start(c).unwrap();
     let resp = engine.submit(req(1, 128, false, 5)).unwrap();
     assert!(resp.artifact.contains("cyclic"));

@@ -5,14 +5,15 @@
 //! ungrouped path.
 
 use sawtooth_attn::gb10::DeviceSpec;
-use sawtooth_attn::sim::kernel_model::{KernelVariant, Order};
+use sawtooth_attn::sim::kernel_model::KernelVariant;
 use sawtooth_attn::sim::scheduler::SchedulerKind;
 use sawtooth_attn::sim::sweep::{SweepExecutor, SweepGrid};
+use sawtooth_attn::sim::traversal::TraversalRef;
 use sawtooth_attn::sim::workload::AttentionWorkload;
 use sawtooth_attn::sim::{SimConfig, Simulator};
 use sawtooth_attn::util::proptest::check;
 
-fn tiny_cfg(seq: u64, order: Order, causal: bool, sched: SchedulerKind) -> SimConfig {
+fn tiny_cfg(seq: u64, order: TraversalRef, causal: bool, sched: SchedulerKind) -> SimConfig {
     let w = AttentionWorkload {
         batch: 1,
         heads: 1,
@@ -42,10 +43,10 @@ fn tiny_cfg(seq: u64, order: Order, causal: bool, sched: SchedulerKind) -> SimCo
 fn capacity_curve_equals_run_exact_across_the_grid() {
     // 9 capacities spanning "far below the working set" to "holds it all".
     let l2_kib: [u64; 9] = [1, 2, 4, 8, 12, 16, 32, 64, 128];
-    for order in [Order::Cyclic, Order::Sawtooth] {
+    for order in [TraversalRef::cyclic(), TraversalRef::sawtooth()] {
         for causal in [false, true] {
             for sched in [SchedulerKind::Persistent, SchedulerKind::NonPersistent] {
-                let base = tiny_cfg(512, order, causal, sched);
+                let base = tiny_cfg(512, order.clone(), causal, sched);
                 let profile = Simulator::new(base.clone()).profile_exact();
                 for &kib in &l2_kib {
                     let mut cfg = base.clone();
@@ -70,7 +71,7 @@ fn prop_weighted_profile_equals_run() {
     check("weighted-profile-eq-run", 10, |g| {
         let mut cfg = tiny_cfg(
             *g.choose(&[256u64, 512, 768]),
-            *g.choose(&[Order::Cyclic, Order::Sawtooth]),
+            g.choose(&[TraversalRef::cyclic(), TraversalRef::sawtooth()]).clone(),
             g.bool(),
             *g.choose(&[SchedulerKind::Persistent, SchedulerKind::NonPersistent]),
         );
@@ -109,11 +110,11 @@ fn prop_grouped_sweep_equals_ungrouped() {
         let caps: Vec<u64> = vec![16 * 1024, 32 * 1024, 48 * 1024, 64 * 1024, 128 * 1024];
         let grid = SweepGrid::new(tiny_cfg(
             256,
-            Order::Cyclic,
+            TraversalRef::cyclic(),
             g.bool(),
             *g.choose(&[SchedulerKind::Persistent, SchedulerKind::NonPersistent]),
         ))
-        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .orders(&[TraversalRef::cyclic(), TraversalRef::sawtooth()])
         .l2_bytes(&caps)
         .seqs(&seqs)
         .build("grouped-vs-ungrouped");
@@ -141,7 +142,7 @@ fn prop_grouped_sweep_equals_ungrouped() {
 /// cold-miss floor once the cache holds the whole footprint.
 #[test]
 fn curve_is_monotone_and_saturates_at_cold_misses() {
-    let cfg = tiny_cfg(512, Order::Sawtooth, false, SchedulerKind::Persistent);
+    let cfg = tiny_cfg(512, TraversalRef::sawtooth(), false, SchedulerKind::Persistent);
     let profile = Simulator::new(cfg.clone()).profile();
     let mut prev = u64::MAX;
     for kib in [2u64, 4, 8, 16, 32, 64, 128, 256, 512] {

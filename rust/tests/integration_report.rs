@@ -51,6 +51,26 @@ fn figures_7_to_12_render_with_both_orders() {
 }
 
 #[test]
+#[cfg_attr(debug_assertions, ignore = "heavy: run with cargo test --release")]
+fn abl_order_lists_every_registered_traversal() {
+    let s = report::run("abl-order").unwrap();
+    for t in sawtooth_attn::sim::traversal::TraversalRegistry::global().instances() {
+        assert!(s.contains(t.name()), "abl-order missing {}", t.name());
+    }
+    // Cyclic is the baseline column; sawtooth's row must show a reduction.
+    assert!(s.contains("vs cyclic"));
+}
+
+#[test]
+fn ablation_ids_dispatch() {
+    assert!(report::ABLATIONS.contains(&"abl-order"));
+    // Unknown ablation ids must hit the error arm (dispatch happens before
+    // any simulation, so this is cheap even in debug builds).
+    let err = report::run("abl-nope").unwrap_err();
+    assert!(format!("{err:#}").contains("unknown experiment"), "{err:#}");
+}
+
+#[test]
 fn all_experiment_ids_dispatch() {
     // Every id must at least be recognised (we don't run the heavy ones in
     // debug — just check the error path never triggers for known ids).

@@ -5,7 +5,7 @@
 //! artifacts target).
 
 use sawtooth_attn::runtime::{attention_host_ref, default_artifacts_dir, Runtime};
-use sawtooth_attn::sim::kernel_model::Order;
+use sawtooth_attn::sim::traversal::TraversalRef;
 use sawtooth_attn::util::rng::Rng;
 
 fn open() -> Runtime {
@@ -26,9 +26,9 @@ fn manifest_covers_serving_grid() {
     assert_eq!(m.mha_artifacts().count(), 1);
     for seq in [128usize, 256, 512] {
         for causal in [false, true] {
-            for order in [Order::Cyclic, Order::Sawtooth] {
+            for order in [TraversalRef::cyclic(), TraversalRef::sawtooth()] {
                 assert!(
-                    rt.find_attention(seq as u64, causal, order).is_some(),
+                    rt.find_attention(seq as u64, causal, &order).is_some(),
                     "missing artifact seq={seq} causal={causal} order={order:?}"
                 );
             }
@@ -67,8 +67,8 @@ fn smallest_artifact_matches_host_reference_all_variants() {
 #[test]
 fn sawtooth_and_cyclic_artifacts_agree() {
     let mut rt = open();
-    let saw = rt.find_attention(256, true, Order::Sawtooth).unwrap().clone();
-    let cyc = rt.find_attention(256, true, Order::Cyclic).unwrap().clone();
+    let saw = rt.find_attention(256, true, &TraversalRef::sawtooth()).unwrap().clone();
+    let cyc = rt.find_attention(256, true, &TraversalRef::cyclic()).unwrap().clone();
     let n = saw.qkv_elems();
     let q = payload(n, 4);
     let k = payload(n, 5);
@@ -123,7 +123,7 @@ fn batched_artifact_executes_and_splits() {
 #[test]
 fn execute_rejects_wrong_arity_and_shape() {
     let mut rt = open();
-    let meta = rt.find_attention(128, false, Order::Cyclic).unwrap().clone();
+    let meta = rt.find_attention(128, false, &TraversalRef::cyclic()).unwrap().clone();
     let n = meta.qkv_elems();
     let q = payload(n, 10);
     // Wrong arity.

@@ -7,9 +7,10 @@
 use sawtooth_attn::gb10::DeviceSpec;
 use sawtooth_attn::l2model;
 use sawtooth_attn::sim::engine::cold_sectors;
-use sawtooth_attn::sim::kernel_model::{KernelVariant, Order};
+use sawtooth_attn::sim::kernel_model::KernelVariant;
 use sawtooth_attn::sim::scheduler::SchedulerKind;
 use sawtooth_attn::sim::throughput::{estimate, PerfProfile};
+use sawtooth_attn::sim::traversal::TraversalRef;
 use sawtooth_attn::sim::workload::AttentionWorkload;
 use sawtooth_attn::sim::{SimConfig, Simulator};
 
@@ -102,7 +103,7 @@ fn cuda_study_throughput_anchors() {
     let dev = DeviceSpec::gb10();
     let w = AttentionWorkload::cuda_study(128 * 1024);
     let cyc = Simulator::new(SimConfig::cuda_study(w)).run();
-    let saw = Simulator::new(SimConfig::cuda_study(w).with_order(Order::Sawtooth)).run();
+    let saw = Simulator::new(SimConfig::cuda_study(w).with_order(TraversalRef::sawtooth())).run();
     assert!(
         saw.counters.l2_miss_sectors * 2 < cyc.counters.l2_miss_sectors,
         "sawtooth must cut misses by >50%: {} vs {}",
@@ -123,13 +124,16 @@ fn cutile_study_miss_anchors() {
     let w = AttentionWorkload::cutile_study(8, false);
     let dev = DeviceSpec::gb10();
     let profile = PerfProfile::cutile();
-    let cyc =
-        Simulator::new(SimConfig::cutile_study(w, KernelVariant::CuTileStatic, Order::Cyclic))
-            .run();
+    let cyc = Simulator::new(SimConfig::cutile_study(
+        w,
+        KernelVariant::CuTileStatic,
+        TraversalRef::cyclic(),
+    ))
+    .run();
     let saw = Simulator::new(SimConfig::cutile_study(
         w,
         KernelVariant::CuTileStatic,
-        Order::Sawtooth,
+        TraversalRef::sawtooth(),
     ))
     .run();
     // Paper: ~370M → ~120M.
@@ -149,13 +153,16 @@ fn cutile_study_miss_anchors() {
 #[cfg_attr(debug_assertions, ignore = "heavy: run with cargo test --release")]
 fn cutile_causal_sawtooth_still_wins() {
     let w = AttentionWorkload::cutile_study(8, true);
-    let cyc =
-        Simulator::new(SimConfig::cutile_study(w, KernelVariant::CuTileStatic, Order::Cyclic))
-            .run();
+    let cyc = Simulator::new(SimConfig::cutile_study(
+        w,
+        KernelVariant::CuTileStatic,
+        TraversalRef::cyclic(),
+    ))
+    .run();
     let saw = Simulator::new(SimConfig::cutile_study(
         w,
         KernelVariant::CuTileStatic,
-        Order::Sawtooth,
+        TraversalRef::sawtooth(),
     ))
     .run();
     assert!(
@@ -182,9 +189,12 @@ fn sawtooth_preserves_issued_traffic_volume() {
                 tile: 64,
                 causal,
             };
-            let cyc = Simulator::new(SimConfig::cutile_study(w, variant, Order::Cyclic)).run();
+            let cyc =
+                Simulator::new(SimConfig::cutile_study(w, variant, TraversalRef::cyclic()))
+                    .run();
             let saw =
-                Simulator::new(SimConfig::cutile_study(w, variant, Order::Sawtooth)).run();
+                Simulator::new(SimConfig::cutile_study(w, variant, TraversalRef::sawtooth()))
+                    .run();
             assert_eq!(
                 cyc.counters.l1_sectors, saw.counters.l1_sectors,
                 "variant={variant:?} causal={causal}"
@@ -225,7 +235,7 @@ fn tile_sweep_changes_absolute_traffic_not_reduction_sign() {
             ..SimConfig::cuda_study(w)
         };
         let cyc = Simulator::new(cfg.clone()).run();
-        let saw = Simulator::new(cfg.with_order(Order::Sawtooth)).run();
+        let saw = Simulator::new(cfg.with_order(TraversalRef::sawtooth())).run();
         // Larger tiles → fewer KV iterations → less total traffic.
         assert!(cyc.counters.l2_sectors_from_tex < last_traffic);
         last_traffic = cyc.counters.l2_sectors_from_tex;

@@ -7,9 +7,10 @@ use std::sync::Arc;
 
 use sawtooth_attn::gb10::DeviceSpec;
 use sawtooth_attn::report;
-use sawtooth_attn::sim::kernel_model::{KernelVariant, Order};
+use sawtooth_attn::sim::kernel_model::KernelVariant;
 use sawtooth_attn::sim::scheduler::SchedulerKind;
 use sawtooth_attn::sim::sweep::{SweepExecutor, SweepGrid};
+use sawtooth_attn::sim::traversal::TraversalRef;
 use sawtooth_attn::sim::workload::AttentionWorkload;
 use sawtooth_attn::sim::{SimConfig, Simulator};
 use sawtooth_attn::util::proptest::check;
@@ -28,7 +29,7 @@ fn tiny_cfg(seq: u64, tile: u32) -> SimConfig {
         device: DeviceSpec::tiny(),
         workload: w,
         scheduler: SchedulerKind::Persistent,
-        order: Order::Cyclic,
+        order: TraversalRef::cyclic(),
         variant: KernelVariant::CudaWmma,
         jitter: 0.0,
         seed: 0,
@@ -46,7 +47,8 @@ fn prop_parallel_executor_matches_sequential() {
         let n = g.int(1, 6) as usize + 2;
         for _ in 0..n {
             let mut cfg = tiny_cfg(*g.choose(&[256u64, 320, 512, 640]), 16);
-            cfg.order = *g.choose(&[Order::Cyclic, Order::Sawtooth]);
+            cfg.order =
+                g.choose(&[TraversalRef::cyclic(), TraversalRef::sawtooth()]).clone();
             cfg.scheduler =
                 *g.choose(&[SchedulerKind::Persistent, SchedulerKind::NonPersistent]);
             cfg.workload.causal = g.bool();
@@ -74,7 +76,7 @@ fn prop_parallel_executor_matches_sequential() {
 fn prop_weighted_and_exact_backends_agree() {
     check("generic-loop-run-vs-run-exact", 10, |g| {
         let mut cfg = tiny_cfg(*g.choose(&[512u64, 768, 1024]), 16);
-        cfg.order = *g.choose(&[Order::Cyclic, Order::Sawtooth]);
+        cfg.order = g.choose(&[TraversalRef::cyclic(), TraversalRef::sawtooth()]).clone();
         cfg.scheduler =
             *g.choose(&[SchedulerKind::Persistent, SchedulerKind::NonPersistent]);
         cfg.workload.causal = g.bool();
@@ -105,7 +107,7 @@ fn prop_weighted_and_exact_backends_agree() {
 #[test]
 fn executor_memoizes_across_calls() {
     let grid = SweepGrid::new(tiny_cfg(256, 16))
-        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .orders(&[TraversalRef::cyclic(), TraversalRef::sawtooth()])
         .seqs(&[256, 512])
         .build("memo");
     let exec = SweepExecutor::new(2);

@@ -12,8 +12,8 @@ use sawtooth_attn::config::{ServeConfig, SweepServiceConfig};
 use sawtooth_attn::coordinator::{AttentionRequest, ClientId, Engine, SweepService};
 use sawtooth_attn::gb10::DeviceSpec;
 use sawtooth_attn::runtime::default_artifacts_dir;
-use sawtooth_attn::sim::kernel_model::Order;
 use sawtooth_attn::sim::sweep::{SweepExecutor, SweepGrid};
+use sawtooth_attn::sim::traversal::TraversalRef;
 use sawtooth_attn::sim::{SimConfig, SimResult};
 use sawtooth_attn::util::proptest::check;
 use sawtooth_attn::util::rng::Rng;
@@ -52,10 +52,10 @@ fn prop_concurrent_clients_match_sequential_run_spec() {
             // Always ≥2 capacities so every grid forms capacity groups.
             let caps: Vec<u64> =
                 if g.bool() { cap_pool.to_vec() } else { cap_pool[..2].to_vec() };
-            let orders: Vec<Order> = if g.bool() {
-                vec![Order::Cyclic, Order::Sawtooth]
+            let orders: Vec<TraversalRef> = if g.bool() {
+                vec![TraversalRef::cyclic(), TraversalRef::sawtooth()]
             } else {
-                vec![Order::Sawtooth]
+                vec![TraversalRef::sawtooth()]
             };
             specs.push(
                 SweepGrid::new(tiny_base(256))
@@ -114,7 +114,7 @@ fn prop_concurrent_clients_match_sequential_run_spec() {
 #[test]
 fn no_mattson_service_parity() {
     let spec = SweepGrid::new(tiny_base(512))
-        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .orders(&[TraversalRef::cyclic(), TraversalRef::sawtooth()])
         .l2_bytes(&[16 * 1024, 32 * 1024, 64 * 1024])
         .build("exact-path");
     let svc = SweepService::start(svc_cfg(2, 2, false)).unwrap();
@@ -158,14 +158,14 @@ fn cancellation_stops_streaming_and_keeps_serving() {
     // cancel flag to land.
     let big = SweepGrid::new(tiny_base(512))
         .seqs(&[320, 384, 448, 512, 576, 640])
-        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .orders(&[TraversalRef::cyclic(), TraversalRef::sawtooth()])
         .build("doomed");
     let ticket = svc.submit(ClientId(1), big).unwrap();
     ticket.cancel();
     let err = ticket.wait().unwrap_err();
     assert!(format!("{err:#}").contains("cancelled"), "{err:#}");
     let small = SweepGrid::new(tiny_base(256))
-        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .orders(&[TraversalRef::cyclic(), TraversalRef::sawtooth()])
         .build("after-cancel");
     let resp = svc.run(ClientId(2), small.clone()).unwrap();
     assert_eq!(resp.results.len(), small.len());
@@ -180,7 +180,7 @@ fn cancellation_stops_streaming_and_keeps_serving() {
 fn per_client_pending_limit_rejects_without_starving_others() {
     let svc = SweepService::start(svc_cfg(1, 1, true)).unwrap();
     let heavy = SweepGrid::new(tiny_base(2048))
-        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .orders(&[TraversalRef::cyclic(), TraversalRef::sawtooth()])
         .build("heavy");
     let first = svc.submit(ClientId(1), heavy.clone()).unwrap();
     let mut rejected = 0u64;
@@ -205,7 +205,7 @@ fn serve_cfg() -> ServeConfig {
         artifacts_dir: default_artifacts_dir().display().to_string(),
         max_batch: 4,
         batch_window_us: 1000,
-        order: Order::Sawtooth,
+        order: TraversalRef::sawtooth(),
         queue_depth: 32,
         clients: 2,
         warmup: false,
@@ -223,7 +223,7 @@ fn engine_routes_sweep_submissions_alongside_attention() {
         .unwrap();
     assert_eq!(att.output.len(), 4 * 128 * 64);
     let spec = SweepGrid::new(tiny_base(256))
-        .orders(&[Order::Cyclic, Order::Sawtooth])
+        .orders(&[TraversalRef::cyclic(), TraversalRef::sawtooth()])
         .l2_bytes(&[16 * 1024, 32 * 1024])
         .build("routed");
     let resp = engine.submit_sweep(ClientId(9), spec.clone()).unwrap().wait().unwrap();
