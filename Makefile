@@ -13,10 +13,11 @@ test:
 bench:
 	cd rust && cargo bench
 
-# Run the two perf benches and fold their measured numbers into
+# Run the perf benches and fold their measured numbers into
 # EXPERIMENTS.md (between the BENCH markers).
 bench-perf:
-	cd rust && cargo bench --bench bench_sweep && cargo bench --bench bench_reuse
+	cd rust && cargo bench --bench bench_sweep && cargo bench --bench bench_reuse \
+		&& cargo bench --bench bench_policy
 	python3 scripts/update_experiments_perf.py
 
 # Lower the Pallas/JAX attention variants to HLO text + manifest.tsv.

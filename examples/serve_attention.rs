@@ -15,7 +15,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use sawtooth_attn::config::ServeConfig;
+use sawtooth_attn::config::{PolicyConfig, ServeConfig};
 use sawtooth_attn::coordinator::{AttentionRequest, Engine};
 use sawtooth_attn::runtime::{attention_host_ref, default_artifacts_dir, Runtime};
 use sawtooth_attn::sim::traversal::TraversalRef;
@@ -36,6 +36,7 @@ fn main() -> Result<()> {
         queue_depth: 64,
         clients: CLIENTS,
         warmup: true,
+        policy: PolicyConfig::default(),
     };
     println!(
         "engine: order={} max_batch={} window={}µs queue={}",

@@ -6,7 +6,7 @@ mod common;
 use std::time::Instant;
 
 use common::report_rate;
-use sawtooth_attn::config::ServeConfig;
+use sawtooth_attn::config::{PolicyConfig, ServeConfig};
 use sawtooth_attn::coordinator::{AttentionRequest, Engine};
 use sawtooth_attn::runtime::default_artifacts_dir;
 use sawtooth_attn::sim::traversal::TraversalRef;
@@ -27,6 +27,7 @@ fn drive(
         queue_depth: 128,
         clients,
         warmup,
+        policy: PolicyConfig::default(),
     };
     let engine = match Engine::start(cfg) {
         Ok(e) => e,

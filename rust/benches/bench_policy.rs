@@ -1,0 +1,107 @@
+//! Policy-engine benchmark: cold registry-wide `decide` (one profiled
+//! trace pass per candidate, optionally fanned out over probe threads) vs
+//! cached `decide` (pure decision-memo hit) vs per-capacity what-ifs
+//! (new decisions answered from the cached Mattson curves). Emits
+//! `BENCH_policy.json` (in the crate directory) so the numbers are
+//! recorded machine-readably (EXPERIMENTS.md §Policy).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use sawtooth_attn::coordinator::cost::{default_candidates, MinMisses};
+use sawtooth_attn::coordinator::policy::PolicyEngine;
+use sawtooth_attn::sim::sweep::SweepExecutor;
+use sawtooth_attn::sim::workload::AttentionWorkload;
+
+const WHATIF_L2_MIBS: [u64; 8] = [4, 6, 8, 10, 12, 16, 20, 24];
+const CACHED_ITERS: u32 = 1000;
+
+fn main() {
+    println!("== bench_policy: cold vs cached decide vs per-capacity what-ifs ==");
+    let w = AttentionWorkload::cuda_study(64 * 1024);
+    let candidates = default_candidates();
+    let n_cand = candidates.len();
+
+    // Cold decide on a sequential probe executor (the serving default).
+    let seq_engine = PolicyEngine::with_executor(
+        Arc::new(MinMisses),
+        candidates.clone(),
+        Arc::new(SweepExecutor::new(1)),
+    );
+    let t0 = Instant::now();
+    let d1 = seq_engine.decide(&w);
+    let cold_1t_s = t0.elapsed().as_secs_f64();
+    println!(
+        "bench policy/cold decide, 1 probe thread ({n_cand} candidates)  {cold_1t_s:>9.3}s \
+         (winner {})",
+        d1.winner
+    );
+
+    // Cold decide with the candidate profiling fanned out ([policy]
+    // probe_threads).
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let par_engine = PolicyEngine::with_executor(
+        Arc::new(MinMisses),
+        candidates.clone(),
+        Arc::new(SweepExecutor::new(threads)),
+    );
+    let t0 = Instant::now();
+    let dn = par_engine.decide(&w);
+    let cold_nt_s = t0.elapsed().as_secs_f64();
+    let fanout_speedup = cold_1t_s / cold_nt_s;
+    println!(
+        "bench policy/cold decide, {threads} probe threads               {cold_nt_s:>9.3}s \
+         (speedup {fanout_speedup:.2}x)"
+    );
+
+    // Thread count must not change the decision (byte-determinism).
+    assert_eq!(d1.winner, dn.winner, "probe thread count changed the winner");
+    for (a, b) in d1.report.candidates.iter().zip(&dn.report.candidates) {
+        assert_eq!(a.l2_miss_sectors, b.l2_miss_sectors, "candidate {}", a.order);
+    }
+
+    // Cached decide: the order=auto steady state.
+    let t0 = Instant::now();
+    for _ in 0..CACHED_ITERS {
+        let d = seq_engine.decide(&w);
+        assert!(d.cached, "repeat decision must be a cache hit");
+    }
+    let cached_s = t0.elapsed().as_secs_f64() / CACHED_ITERS as f64;
+    println!("bench policy/cached decide (per call)               {cached_s:>12.6}s");
+
+    // Per-capacity what-ifs: new decisions, zero new trace passes.
+    let profiles_before = seq_engine.executor().profiled_len();
+    let t0 = Instant::now();
+    let mut checksum = 0u64;
+    for &mib in &WHATIF_L2_MIBS {
+        let d = seq_engine.decide_at(&w, mib << 20);
+        checksum ^= d.winner_estimate().l2_miss_sectors;
+    }
+    let whatif_s = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        seq_engine.executor().profiled_len(),
+        profiles_before,
+        "what-if capacities must answer from cached curves"
+    );
+    println!(
+        "bench policy/{} capacity what-ifs from cached curves {whatif_s:>10.6}s  \
+         (checksum {checksum})",
+        WHATIF_L2_MIBS.len()
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"policy_engine\",\n  \"workload\": \"cuda_study S=64K\",\n  \
+         \"candidates\": {n_cand},\n  \"threads\": {threads},\n  \
+         \"cold_decide_1t_s\": {cold_1t_s:.6},\n  \"cold_decide_nt_s\": {cold_nt_s:.6},\n  \
+         \"fanout_speedup\": {fanout_speedup:.3},\n  \"cached_decide_s\": {cached_s:.9},\n  \
+         \"whatif_caps\": {},\n  \"whatif_s\": {whatif_s:.6},\n  \"winner\": \"{}\"\n}}\n",
+        WHATIF_L2_MIBS.len(),
+        d1.winner
+    );
+    let path = "BENCH_policy.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    print!("{json}");
+}

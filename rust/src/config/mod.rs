@@ -7,7 +7,10 @@
 
 pub mod schema;
 
-pub use schema::{ServeConfig, SimRunConfig, SweepServiceConfig};
+pub use schema::{
+    parse_candidate_list, PolicyConfig, PolicyOrder, ServeConfig, SimRunConfig,
+    SweepServiceConfig,
+};
 
 use std::collections::BTreeMap;
 use std::path::Path;

@@ -1,7 +1,10 @@
 //! Typed configuration schemas built on the generic [`super::Config`].
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::cost::{parse_objective, MinMisses, Objective};
 use crate::gb10::DeviceSpec;
 use crate::sim::kernel_model::KernelVariant;
 use crate::sim::scheduler::SchedulerKind;
@@ -9,7 +12,7 @@ use crate::sim::traversal::TraversalRef;
 use crate::sim::workload::AttentionWorkload;
 use crate::sim::SimConfig;
 
-use super::Config;
+use super::{Config, Value};
 
 /// Configuration of one simulator run (`sawtooth simulate`).
 #[derive(Clone, Debug)]
@@ -108,6 +111,105 @@ impl SimRunConfig {
     }
 }
 
+/// How the scheduling policy chooses a traversal order
+/// (`[policy] order`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PolicyOrder {
+    /// Key absent: keep the legacy fixed behaviour driven by
+    /// `serve.order`.
+    Inherit,
+    /// `order = auto`: the policy engine picks the per-shape winner from
+    /// its cached capacity curves.
+    Auto,
+    /// An explicit traversal name: fixed to that order (overrides
+    /// `serve.order`).
+    Fixed(TraversalRef),
+}
+
+/// Configuration of the coordinator's policy engine (`[policy]` section):
+/// order mode, scoring objective, candidate set, and probe parallelism.
+#[derive(Clone, Debug)]
+pub struct PolicyConfig {
+    pub order: PolicyOrder,
+    /// Scoring objective (`min-misses` | `max-tflops` |
+    /// `latency-slo:<seconds>` — quote the latter in TOML, the budget
+    /// contains a '.').
+    pub objective: Arc<dyn Objective>,
+    /// Candidate traversals to score (array or comma-separated string);
+    /// empty = the registry default including the `block-snake:{2,4,8}`
+    /// parameter sweep.
+    pub candidates: Vec<TraversalRef>,
+    /// Probe-executor threads for the registry-wide candidate fan-out
+    /// (default 1: shares the process-wide memoizer; 0 = host core count;
+    /// results are byte-identical at any value).
+    pub probe_threads: usize,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig {
+            order: PolicyOrder::Inherit,
+            objective: Arc::new(MinMisses),
+            candidates: Vec::new(),
+            probe_threads: 1,
+        }
+    }
+}
+
+/// Parse a comma-separated traversal-candidate list
+/// (`"cyclic, block-snake:4"`) — the one grammar shared by
+/// `policy.candidates` string values and the `sawtooth policy explain
+/// --candidates` flag.
+pub fn parse_candidate_list(s: &str) -> Result<Vec<TraversalRef>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(|p| p.parse::<TraversalRef>())
+        .collect()
+}
+
+impl PolicyConfig {
+    pub fn from_config(c: &Config) -> Result<Self> {
+        let order = match c.str("policy.order", "").as_str() {
+            "" => PolicyOrder::Inherit,
+            "auto" => PolicyOrder::Auto,
+            name => PolicyOrder::Fixed(name.parse().context("policy.order")?),
+        };
+        let objective =
+            parse_objective(&c.str("policy.objective", "min-misses")).context("policy.objective")?;
+        let candidates = match c.get("policy.candidates") {
+            None => Vec::new(),
+            Some(Value::Str(s)) => parse_candidate_list(s).context("policy.candidates")?,
+            Some(Value::Array(items)) => {
+                let mut list: Vec<TraversalRef> = Vec::with_capacity(items.len());
+                for v in items {
+                    let name = v.as_str().ok_or_else(|| {
+                        anyhow::anyhow!("policy.candidates items must be names")
+                    })?;
+                    list.push(name.parse().context("policy.candidates")?);
+                }
+                list
+            }
+            Some(other) => bail!("policy.candidates must be a list of names, got {other:?}"),
+        };
+        Ok(PolicyConfig {
+            order,
+            objective,
+            candidates,
+            probe_threads: c.int("policy.probe_threads", 1) as usize,
+        })
+    }
+
+    /// The probe thread count this config resolves to (0 = host cores).
+    pub fn resolved_probe_threads(&self) -> usize {
+        if self.probe_threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.probe_threads
+        }
+    }
+}
+
 /// Configuration of the serving coordinator (`sawtooth serve`).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -117,7 +219,8 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// How long the batcher waits to fill a batch (microseconds).
     pub batch_window_us: u64,
-    /// KV traversal order requested from the kernel artifacts.
+    /// KV traversal order requested from the kernel artifacts (the legacy
+    /// fixed knob; `[policy] order` can override it or switch to `auto`).
     pub order: TraversalRef,
     /// Bounded queue depth before back-pressure rejects.
     pub queue_depth: usize,
@@ -126,6 +229,8 @@ pub struct ServeConfig {
     /// Pre-compile all attention artifacts at startup so first-request
     /// latency reflects steady state.
     pub warmup: bool,
+    /// Policy-engine knobs (`[policy]` section).
+    pub policy: PolicyConfig,
 }
 
 impl Default for ServeConfig {
@@ -138,6 +243,7 @@ impl Default for ServeConfig {
             queue_depth: 256,
             clients: 4,
             warmup: false,
+            policy: PolicyConfig::default(),
         }
     }
 }
@@ -155,6 +261,7 @@ impl ServeConfig {
             queue_depth: c.int("serve.queue_depth", d.queue_depth as i64) as usize,
             clients: c.int("serve.clients", d.clients as i64) as usize,
             warmup: c.bool("serve.warmup", d.warmup),
+            policy: PolicyConfig::from_config(c)?,
         };
         if cfg.max_batch == 0 || cfg.queue_depth == 0 {
             bail!("serve.max_batch and serve.queue_depth must be >= 1");
@@ -296,6 +403,70 @@ mod tests {
         assert_eq!(s.order, TraversalRef::cyclic());
         let bad = Config::parse("[serve]\nmax_batch = 0").unwrap();
         assert!(ServeConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn policy_config_parses_modes_objectives_and_candidates() {
+        // Absent section: legacy inherit mode, min-misses, registry-wide.
+        let d = PolicyConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(d.order, PolicyOrder::Inherit);
+        assert_eq!(d.objective.name(), "min-misses");
+        assert!(d.candidates.is_empty());
+        assert_eq!(d.probe_threads, 1);
+        assert_eq!(d.resolved_probe_threads(), 1);
+
+        let c = Config::parse(
+            "[policy]\norder = auto\nobjective = max-tflops\n\
+             candidates = [cyclic, sawtooth, block-snake:4]\nprobe_threads = 3",
+        )
+        .unwrap();
+        let p = PolicyConfig::from_config(&c).unwrap();
+        assert_eq!(p.order, PolicyOrder::Auto);
+        assert_eq!(p.objective.name(), "max-tflops");
+        assert_eq!(p.probe_threads, 3);
+        let names: Vec<&str> = p.candidates.iter().map(TraversalRef::name).collect();
+        assert_eq!(names, vec!["cyclic", "sawtooth", "block-snake:4"]);
+
+        // Comma-string candidates, explicit fixed order, quoted SLO.
+        let c = Config::parse(
+            "[policy]\norder = reverse-cyclic\nobjective = \"latency-slo:0.004\"\n\
+             candidates = \"sawtooth, diagonal\"",
+        )
+        .unwrap();
+        let p = PolicyConfig::from_config(&c).unwrap();
+        assert_eq!(p.order, PolicyOrder::Fixed(TraversalRef::reverse_cyclic()));
+        assert_eq!(p.objective.name(), "latency-slo:0.004");
+        assert_eq!(p.candidates.len(), 2);
+
+        // probe_threads = 0 resolves to the host core count.
+        let c = Config::parse("[policy]\nprobe_threads = 0").unwrap();
+        assert!(PolicyConfig::from_config(&c).unwrap().resolved_probe_threads() >= 1);
+    }
+
+    #[test]
+    fn policy_config_rejects_bad_values_with_shared_messages() {
+        let c = Config::parse("[policy]\norder = spiral").unwrap();
+        let msg = format!("{:#}", PolicyConfig::from_config(&c).unwrap_err());
+        assert!(msg.contains("policy.order"), "{msg}");
+        assert!(msg.contains("unknown traversal 'spiral'"), "{msg}");
+        let c = Config::parse("[policy]\nobjective = fastest").unwrap();
+        let msg = format!("{:#}", PolicyConfig::from_config(&c).unwrap_err());
+        assert!(msg.contains("unknown objective 'fastest'"), "{msg}");
+        assert!(msg.contains("latency-slo:<seconds>"), "{msg}");
+        let c = Config::parse("[policy]\ncandidates = [cyclic, spiral]").unwrap();
+        let msg = format!("{:#}", PolicyConfig::from_config(&c).unwrap_err());
+        assert!(msg.contains("unknown traversal 'spiral'"), "{msg}");
+    }
+
+    #[test]
+    fn serve_config_carries_policy_section() {
+        let c = Config::parse("[serve]\norder = cyclic\n[policy]\norder = auto").unwrap();
+        let s = ServeConfig::from_config(&c).unwrap();
+        assert_eq!(s.order, TraversalRef::cyclic());
+        assert_eq!(s.policy.order, PolicyOrder::Auto);
+        // No [policy] section: default inherits the serve.order knob.
+        let s = ServeConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(s.policy.order, PolicyOrder::Inherit);
     }
 
     #[test]

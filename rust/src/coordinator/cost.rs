@@ -1,0 +1,381 @@
+//! Registry-wide cost model: per-traversal GB10 estimates, scoring
+//! objectives, and the [`CostReport`] the policy engine decides from.
+//!
+//! This replaces the retired `GpuEstimate` pair (hardcoded
+//! `cyclic_tflops`/`sawtooth_tflops` fields): a cost question is now asked
+//! about a *candidate set* of registered traversals — by default the whole
+//! [`TraversalRegistry`](crate::sim::traversal::TraversalRegistry),
+//! including parameterized widths of the `block-snake` family — and
+//! answered with one [`TraversalEstimate`] per candidate plus the cyclic
+//! baseline. Which estimate "wins" is not baked into the report: an
+//! [`Objective`] scores estimates (lower is better) and the policy engine
+//! ([`super::policy::PolicyEngine`]) ranks candidates under it.
+//!
+//! All estimates come from the probe executor's cached Mattson capacity
+//! curves ([`SweepExecutor::run_at_capacity_all`]): the first report for a
+//! shape profiles each candidate once, and every later report — at this or
+//! any other L2 capacity — derives from the cached curves without
+//! re-simulating.
+
+use std::fmt;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::gb10::DeviceSpec;
+use crate::sim::kernel_model::KernelVariant;
+use crate::sim::scheduler::SchedulerKind;
+use crate::sim::sweep::SweepExecutor;
+use crate::sim::throughput::{estimate, PerfProfile};
+use crate::sim::traversal::{self, TraversalRef};
+use crate::sim::workload::AttentionWorkload;
+use crate::sim::SimConfig;
+use crate::util::unknown_value;
+
+/// GB10 estimate of one traversal order for one workload shape, produced
+/// by the simulator + calibrated throughput model.
+#[derive(Clone, Debug)]
+pub struct TraversalEstimate {
+    pub order: TraversalRef,
+    pub tflops: f64,
+    pub time_s: f64,
+    pub l2_miss_sectors: u64,
+    /// `baseline.time_s / self.time_s` — > 1 when this traversal is
+    /// estimated faster than the cyclic baseline.
+    pub speedup_vs_baseline: f64,
+}
+
+/// The full cost picture for one (shape, L2 capacity): the cyclic baseline
+/// plus one estimate per candidate traversal, in candidate-set order. When
+/// cyclic is itself a candidate, `baseline` duplicates that entry.
+#[derive(Clone, Debug)]
+pub struct CostReport {
+    pub baseline: TraversalEstimate,
+    pub candidates: Vec<TraversalEstimate>,
+}
+
+impl CostReport {
+    /// The estimate for a traversal by canonical name, if it was scored.
+    pub fn get(&self, name: &str) -> Option<&TraversalEstimate> {
+        self.candidates.iter().find(|e| e.order.name() == name)
+    }
+
+    /// Candidate indices with their scores under `objective`, best-first.
+    /// The single source of ranking truth: a stable sort, so ties keep
+    /// candidate-set order (the baseline-first convention of
+    /// [`default_candidates`] makes cyclic win exact ties).
+    pub fn scored(&self, objective: &dyn Objective) -> Vec<(usize, f64)> {
+        let mut idx: Vec<(usize, f64)> = self
+            .candidates
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (i, objective.score(e)))
+            .collect();
+        idx.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+        idx
+    }
+
+    /// Candidates ordered best-first under `objective` (see
+    /// [`Self::scored`] for the tie-break contract).
+    pub fn ranked(&self, objective: &dyn Objective) -> Vec<&TraversalEstimate> {
+        self.scored(objective)
+            .into_iter()
+            .map(|(i, _)| &self.candidates[i])
+            .collect()
+    }
+}
+
+/// A scoring rule over [`TraversalEstimate`]s. Lower scores are better;
+/// ties resolve to the earlier candidate (deterministic given a candidate
+/// order). Implementations must be pure — the policy engine memoizes
+/// decisions per `(shape, l2_bytes, objective name)`.
+pub trait Objective: Send + Sync + fmt::Debug {
+    /// Stable identity (decision-cache key, config value, protocol token),
+    /// e.g. `min-misses` or `latency-slo:0.004`.
+    fn name(&self) -> String;
+
+    /// Score an estimate; lower is better.
+    fn score(&self, e: &TraversalEstimate) -> f64;
+}
+
+/// Minimize simulated L2 miss sectors (the paper's headline metric).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MinMisses;
+
+impl Objective for MinMisses {
+    fn name(&self) -> String {
+        "min-misses".to_string()
+    }
+    fn score(&self, e: &TraversalEstimate) -> f64 {
+        e.l2_miss_sectors as f64
+    }
+}
+
+/// Maximize estimated throughput.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MaxTflops;
+
+impl Objective for MaxTflops {
+    fn name(&self) -> String {
+        "max-tflops".to_string()
+    }
+    fn score(&self, e: &TraversalEstimate) -> f64 {
+        -e.tflops
+    }
+}
+
+/// Score offset separating SLO-meeting candidates from SLO-missing ones in
+/// [`LatencySlo`]: misses (the in-budget score) are far below it, overshoot
+/// seconds far above zero, so every in-budget candidate outranks every
+/// out-of-budget one.
+const SLO_MISS_PENALTY: f64 = 1e30;
+
+/// Latency-SLO objective: among candidates whose estimated time meets the
+/// budget, minimize L2 misses (DRAM traffic); candidates over budget rank
+/// strictly worse, ordered by overshoot.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencySlo {
+    pub budget_s: f64,
+}
+
+impl Objective for LatencySlo {
+    fn name(&self) -> String {
+        format!("latency-slo:{}", self.budget_s)
+    }
+    fn score(&self, e: &TraversalEstimate) -> f64 {
+        if e.time_s <= self.budget_s {
+            e.l2_miss_sectors as f64
+        } else {
+            // Multiplicative, not additive: the overshoot must survive f64
+            // rounding next to the penalty (1e30 + x == 1e30, but
+            // 1e30 * (1 + x) keeps the ordering).
+            SLO_MISS_PENALTY * (1.0 + (e.time_s - self.budget_s))
+        }
+    }
+}
+
+/// The objective name forms listed in error messages and `--help`.
+pub const OBJECTIVE_EXAMPLES: &[&str] = &["min-misses", "max-tflops", "latency-slo:<seconds>"];
+
+/// Parse an objective name (`min-misses`, `max-tflops`,
+/// `latency-slo:<seconds>`). Unknown names fail with the shared
+/// unknown-value message listing what is legal, like traversal / scheduler
+/// / variant parsing does.
+pub fn parse_objective(s: &str) -> Result<Arc<dyn Objective>> {
+    let (key, arg) = match s.split_once(':') {
+        Some((k, a)) => (k, Some(a)),
+        None => (s, None),
+    };
+    match (key, arg) {
+        ("min-misses", None) => Ok(Arc::new(MinMisses)),
+        ("max-tflops", None) => Ok(Arc::new(MaxTflops)),
+        ("min-misses" | "max-tflops", Some(_)) => {
+            bail!("objective '{key}' takes no parameter (got '{s}')")
+        }
+        ("latency-slo", Some(a)) => {
+            let budget_s: f64 =
+                a.parse().map_err(|e| anyhow!("latency-slo budget '{a}': {e}"))?;
+            if !(budget_s > 0.0 && budget_s.is_finite()) {
+                bail!("latency-slo budget must be a positive number of seconds");
+            }
+            Ok(Arc::new(LatencySlo { budget_s }))
+        }
+        ("latency-slo", None) => {
+            bail!("objective 'latency-slo' requires a budget: latency-slo:<seconds>")
+        }
+        _ => Err(unknown_value("objective", s, OBJECTIVE_EXAMPLES.iter().copied())),
+    }
+}
+
+/// The default candidate set: every registered traversal's default
+/// instance, widened with the `block-snake:{2,4,8}` parameter sweep (the
+/// registry's default instance only covers width 2). Cyclic stays first —
+/// the stable-sort tie-break of [`CostReport::ranked`] then favors the
+/// baseline when candidates score equal.
+pub fn default_candidates() -> Vec<TraversalRef> {
+    let mut out = traversal::TraversalRegistry::global().instances();
+    for width in [4u64, 8] {
+        let t = TraversalRef::block_snake(width);
+        if !out.contains(&t) {
+            out.push(t);
+        }
+    }
+    out
+}
+
+/// The probe configuration behind every estimate: the serving-policy
+/// convention inherited from the retired `GpuEstimate` path (persistent
+/// scheduler, CuTile-static variant, no jitter), so probes memoize onto
+/// the same executor entries across the whole stack.
+fn probe_config(w: &AttentionWorkload, dev: &DeviceSpec, order: TraversalRef) -> SimConfig {
+    SimConfig {
+        device: dev.clone(),
+        workload: *w,
+        scheduler: SchedulerKind::Persistent,
+        order,
+        variant: KernelVariant::CuTileStatic,
+        jitter: 0.0,
+        seed: 0,
+        model_l1: true,
+    }
+}
+
+/// Compute a [`CostReport`] for `w` on a GB10 with `l2_bytes` of L2,
+/// scoring every candidate (plus the cyclic baseline, simulated even when
+/// absent from the set) through `exec`'s capacity-curve cache: each
+/// (shape, order) pays one profiled trace pass ever, fanned out over the
+/// executor's thread pool, and every other capacity is an O(log) lookup.
+pub fn compute_cost_report(
+    exec: &SweepExecutor,
+    w: &AttentionWorkload,
+    candidates: &[TraversalRef],
+    l2_bytes: u64,
+) -> CostReport {
+    let dev = DeviceSpec::gb10_with_l2(l2_bytes);
+    let profile = PerfProfile::cutile();
+    let base_pos = candidates.iter().position(|t| t.name() == traversal::CYCLIC);
+    let mut cfgs: Vec<SimConfig> = candidates
+        .iter()
+        .map(|o| probe_config(w, &dev, o.clone()))
+        .collect();
+    if base_pos.is_none() {
+        cfgs.push(probe_config(w, &dev, TraversalRef::cyclic()));
+    }
+    let results = exec.run_at_capacity_all(&cfgs);
+    let reports: Vec<_> = results
+        .iter()
+        .map(|r| estimate(w, &dev, &r.counters, &profile))
+        .collect();
+    let bi = base_pos.unwrap_or(cfgs.len() - 1);
+    let mk = |i: usize, order: TraversalRef| TraversalEstimate {
+        order,
+        tflops: reports[i].tflops,
+        time_s: reports[i].time_s,
+        l2_miss_sectors: results[i].counters.l2_miss_sectors,
+        speedup_vs_baseline: reports[i].speedup_over(&reports[bi]),
+    };
+    CostReport {
+        baseline: mk(bi, TraversalRef::cyclic()),
+        candidates: candidates
+            .iter()
+            .enumerate()
+            .map(|(i, o)| mk(i, o.clone()))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est(name: &str, misses: u64, time_s: f64, tflops: f64) -> TraversalEstimate {
+        TraversalEstimate {
+            order: if name == "cyclic" {
+                TraversalRef::cyclic()
+            } else {
+                TraversalRef::sawtooth()
+            },
+            tflops,
+            time_s,
+            l2_miss_sectors: misses,
+            speedup_vs_baseline: 1.0,
+        }
+    }
+
+    #[test]
+    fn objectives_score_and_rank() {
+        let report = CostReport {
+            baseline: est("cyclic", 100, 2.0, 10.0),
+            candidates: vec![est("cyclic", 100, 2.0, 10.0), est("sawtooth", 50, 1.0, 20.0)],
+        };
+        let ranked = report.ranked(&MinMisses);
+        assert_eq!(ranked[0].l2_miss_sectors, 50);
+        let ranked = report.ranked(&MaxTflops);
+        assert!((ranked[0].tflops - 20.0).abs() < 1e-12);
+        // SLO of 1.5 s: only sawtooth meets it.
+        let slo = LatencySlo { budget_s: 1.5 };
+        let ranked = report.ranked(&slo);
+        assert_eq!(ranked[0].order.name(), "sawtooth");
+        assert!(slo.score(&report.candidates[0]) > SLO_MISS_PENALTY / 2.0);
+    }
+
+    #[test]
+    fn latency_slo_orders_over_budget_candidates_by_overshoot() {
+        // Both miss a 1 s budget; the smaller overshoot must score
+        // strictly better (an additive penalty would collapse: the
+        // overshoot seconds vanish next to 1e30 in f64).
+        let slo = LatencySlo { budget_s: 1.0 };
+        let near = slo.score(&est("cyclic", 10, 1.5, 1.0));
+        let far = slo.score(&est("sawtooth", 5, 3.0, 1.0));
+        assert!(near > SLO_MISS_PENALTY / 2.0, "over budget must be penalized");
+        assert!(near < far, "smaller overshoot must rank better: {near} vs {far}");
+    }
+
+    #[test]
+    fn ranked_ties_keep_candidate_order() {
+        let report = CostReport {
+            baseline: est("cyclic", 100, 2.0, 10.0),
+            candidates: vec![est("cyclic", 100, 2.0, 10.0), est("sawtooth", 100, 2.0, 10.0)],
+        };
+        assert_eq!(report.ranked(&MinMisses)[0].order.name(), "cyclic");
+    }
+
+    #[test]
+    fn parse_objective_names() {
+        assert_eq!(parse_objective("min-misses").unwrap().name(), "min-misses");
+        assert_eq!(parse_objective("max-tflops").unwrap().name(), "max-tflops");
+        let slo = parse_objective("latency-slo:0.004").unwrap();
+        assert_eq!(slo.name(), "latency-slo:0.004");
+        assert!(parse_objective("latency-slo").is_err(), "budget required");
+        assert!(parse_objective("latency-slo:-1").is_err());
+        assert!(parse_objective("min-misses:3").is_err(), "no parameter allowed");
+        let err = parse_objective("max-speed").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown objective 'max-speed'"), "{msg}");
+        for listed in OBJECTIVE_EXAMPLES {
+            assert!(msg.contains(listed), "missing {listed} in: {msg}");
+        }
+    }
+
+    #[test]
+    fn default_candidates_cover_registry_and_block_snake_widths() {
+        let cands = default_candidates();
+        assert_eq!(cands[0].name(), traversal::CYCLIC, "baseline first");
+        for name in ["cyclic", "sawtooth", "reverse-cyclic", "diagonal"] {
+            assert!(cands.iter().any(|t| t.name() == name), "missing {name}");
+        }
+        for width in ["block-snake:2", "block-snake:4", "block-snake:8"] {
+            assert!(cands.iter().any(|t| t.name() == width), "missing {width}");
+        }
+        // No duplicates: names are the identity.
+        let mut names: Vec<&str> = cands.iter().map(|t| t.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), cands.len());
+    }
+
+    #[test]
+    fn cost_report_scores_candidates_against_cyclic_baseline() {
+        // S=16K fits L2 entirely: every traversal only cold-misses, so all
+        // estimates equal the baseline (speedup exactly 1.0).
+        let exec = SweepExecutor::new(1);
+        let w = AttentionWorkload::cuda_study(16 * 1024).with_tile(64);
+        let cands = vec![TraversalRef::cyclic(), TraversalRef::sawtooth()];
+        let r = compute_cost_report(&exec, &w, &cands, 24 << 20);
+        assert_eq!(r.candidates.len(), 2);
+        assert_eq!(r.baseline.l2_miss_sectors, r.candidates[1].l2_miss_sectors);
+        assert!((r.candidates[1].speedup_vs_baseline - 1.0).abs() < 1e-9);
+        assert_eq!(r.get("sawtooth").unwrap().order, TraversalRef::sawtooth());
+        assert!(r.get("diagonal").is_none());
+    }
+
+    #[test]
+    fn baseline_simulated_even_when_absent_from_candidates() {
+        let exec = SweepExecutor::new(1);
+        let w = AttentionWorkload::cuda_study(16 * 1024).with_tile(64);
+        let r = compute_cost_report(&exec, &w, &[TraversalRef::sawtooth()], 24 << 20);
+        assert_eq!(r.candidates.len(), 1);
+        assert_eq!(r.baseline.order, TraversalRef::cyclic());
+        assert!(r.baseline.l2_miss_sectors > 0);
+    }
+}

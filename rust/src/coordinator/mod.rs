@@ -7,8 +7,12 @@
 //! * [`request::AttentionRequest`] — client-visible unit of work.
 //! * [`batcher::Batcher`] — groups compatible requests (same seq/causal)
 //!   and pads them into the AOT batch variants, amortising dispatch.
-//! * [`policy::SchedulePolicy`] — picks the artifact (traversal order) and
-//!   exposes the GB10 perf estimator used for admission-time cost hints.
+//! * [`cost`] — the registry-wide cost model: per-traversal GB10
+//!   estimates ([`cost::CostReport`]) scored under pluggable
+//!   [`cost::Objective`]s.
+//! * [`policy::PolicyEngine`] / [`policy::SchedulePolicy`] — memoized
+//!   per-shape traversal decisions (`order = auto`) and artifact selection
+//!   with score-ordered degradation.
 //! * [`Engine`] — bounded submission queue (back-pressure), a pipeline
 //!   thread running batcher + PJRT executor, and latency/throughput stats.
 //! * [`sweep_service::SweepService`] — the sweep subsystem
@@ -22,13 +26,15 @@
 //! host backend (see [`crate::runtime`]).
 
 pub mod batcher;
+pub mod cost;
 pub mod policy;
 pub mod request;
 pub mod stats;
 pub mod sweep_service;
 
 pub use batcher::{BatchPlan, Batcher};
-pub use policy::{GpuEstimate, SchedulePolicy};
+pub use cost::{CostReport, Objective, TraversalEstimate};
+pub use policy::{PolicyDecision, PolicyEngine, SchedulePolicy};
 pub use request::{
     AttentionRequest, AttentionResponse, ClientId, RequestId, SweepChunk, SweepRequest,
     SweepResponse,
@@ -86,7 +92,7 @@ impl Engine {
     /// the pipeline for its whole life); startup errors are reported back
     /// synchronously through a one-shot channel.
     pub fn start(cfg: ServeConfig) -> Result<Engine> {
-        let policy = SchedulePolicy::new(cfg.order.clone());
+        let policy = SchedulePolicy::from_serve_config(&cfg);
         let stats = Arc::new(Mutex::new(EngineStats::default()));
         let (tx, rx) = sync_channel::<Submission>(cfg.queue_depth);
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
@@ -252,31 +258,37 @@ fn pipeline_loop(
             .unzip();
         let plans = batcher.plan(reqs);
         for mut plan in plans {
-            // Admission-time cost hint: what the paper's GB10 would do for
-            // this dispatch shape under each traversal order. The policy
-            // probe is memoized per shape (sim::sweep), so only the first
-            // dispatch of a shape pays for a simulation — and only
-            // serving-scale shapes are probed at all: a research-scale
-            // sequence would block the pipeline thread for seconds.
-            const COST_HINT_MAX_SEQ: usize = 8192;
-            let hint = {
+            // The dispatch shape as a simulator workload: drives the
+            // admission-time policy decision AND artifact selection, so
+            // `order = auto` resolves per-shape winners from one memoized
+            // decision.
+            let w = {
                 let first = &plan.requests[0].req;
-                if first.seq <= COST_HINT_MAX_SEQ {
-                    Some(policy.cost_hint(&crate::sim::workload::AttentionWorkload {
-                        batch: plan.batch_padded as u32,
-                        heads: first.heads as u32,
-                        seq: first.seq as u64,
-                        head_dim: first.head_dim as u32,
-                        elem_bytes: 2,
-                        tile: 64,
-                        causal: first.causal,
-                    }))
-                } else {
-                    None
+                crate::sim::workload::AttentionWorkload {
+                    batch: plan.batch_padded as u32,
+                    heads: first.heads as u32,
+                    seq: first.seq as u64,
+                    head_dim: first.head_dim as u32,
+                    elem_bytes: 2,
+                    tile: 64,
+                    causal: first.causal,
                 }
             };
+            // Admission-time policy decision: what the paper's GB10 would
+            // do for this dispatch shape under every candidate traversal.
+            // Decisions are memoized per shape, so only the first dispatch
+            // of a shape pays for scoring — and only in auto mode, where
+            // artifact selection consumes the same memoized decision: a
+            // fixed-order policy would score the whole candidate set just
+            // to fill a stats counter. Research-scale sequences are never
+            // probed (they would block the pipeline thread for seconds).
+            let decision = if policy.is_auto() && w.seq <= policy::PROBE_MAX_SEQ {
+                Some(policy.decide(&w))
+            } else {
+                None
+            };
             let t0 = Instant::now();
-            let result = execute_plan(&mut runtime, &policy, &mut plan);
+            let result = execute_plan(&mut runtime, &policy, &w, decision.as_ref(), &mut plan);
             let exec_elapsed = t0.elapsed();
             let mut st = stats.lock().unwrap();
             st.batches += 1;
@@ -285,8 +297,8 @@ fn pipeline_loop(
             // to batch 4 still spent the whole dispatch, so attributing
             // `elapsed / batch_padded` per request under-reported it.
             st.record_exec(exec_elapsed.as_secs_f64());
-            if let Some(h) = &hint {
-                st.record_cost_hint(h.speedup);
+            if let Some(d) = &decision {
+                st.record_decision(d.winner_speedup(), d.cached);
             }
             match result {
                 Ok(outputs) => {
@@ -326,11 +338,12 @@ fn pipeline_loop(
 fn execute_plan(
     runtime: &mut Runtime,
     policy: &SchedulePolicy,
+    w: &crate::sim::workload::AttentionWorkload,
+    decision: Option<&PolicyDecision>,
     plan: &mut BatchPlan,
 ) -> Result<Vec<Vec<f32>>> {
-    let first = &plan.requests[0].req;
     let meta = policy
-        .select_artifact(runtime, first.seq, first.causal, plan.batch_padded)?
+        .select_artifact_with(runtime, w, plan.batch_padded, decision)?
         .clone();
     plan.artifact = meta.name.clone();
     let elems_per_req = meta.heads * meta.seq * meta.head_dim;

@@ -1,178 +1,518 @@
-//! Scheduling policy: artifact selection (the sawtooth/cyclic knob) and the
-//! GB10 performance estimator used for cost hints.
+//! Scheduling policy: the registry-wide [`PolicyEngine`] (cost reports,
+//! objectives, memoized per-shape decisions) and the [`SchedulePolicy`]
+//! wrapper the serving pipeline drives (fixed-order or `auto` mode, plus
+//! artifact selection with score-ordered degradation).
 //!
-//! The estimator's policy-probe simulations go through a process-wide
-//! [`SweepExecutor`] memoizer: serving traffic re-submits the same handful
-//! of shapes over and over, so each (shape, order) pair is *profiled* once
-//! per process — into a Mattson capacity curve that answers the cost hint
-//! at GB10's 24 MiB **and any other L2 capacity** ([`estimate_gb10_at`])
-//! — and every later probe is a cache hit.
+//! The retired `GpuEstimate` hardcoded exactly two traversals
+//! (`cyclic_tflops`/`sawtooth_tflops`); the engine scores a whole
+//! candidate set — by default every registered traversal including the
+//! `block-snake:{2,4,8}` parameter sweep — under a pluggable
+//! [`Objective`](super::cost::Objective), and memoizes the winning
+//! [`PolicyDecision`] per `(shape, l2_bytes, objective)`.
+//!
+//! Probe simulations go through a memoizing [`SweepExecutor`]: serving
+//! traffic re-submits the same handful of shapes over and over, so each
+//! (shape, order) pair is *profiled* once per executor — into a Mattson
+//! capacity curve that answers the cost question at GB10's 24 MiB **and
+//! any other L2 capacity** — and every later probe is a cache hit. The
+//! default engine (one probe thread) shares a process-wide executor;
+//! `[policy] probe_threads = N` fans the registry-wide candidate profiling
+//! out over a private N-thread pool (byte-identical results at any N).
 
-use std::sync::OnceLock;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{anyhow, Result};
+use rustc_hash::FxHashMap;
 
+use crate::config::{PolicyConfig, PolicyOrder, ServeConfig};
 use crate::gb10::DeviceSpec;
 use crate::runtime::{ArtifactKind, ArtifactMeta, Runtime};
 use crate::sim::sweep::SweepExecutor;
-use crate::sim::throughput::{estimate, PerfProfile};
 use crate::sim::traversal::{self, TraversalRef};
 use crate::sim::workload::AttentionWorkload;
-use crate::sim::SimConfig;
 
-/// Policy knobs. The interesting one is the KV traversal order: serving
-/// with the `sawtooth` traversal selects the sawtooth-reordered kernels,
-/// which on GB10-class hardware cut L2 misses by ~50–67% (the paper's
-/// result). Any registered traversal name is accepted; artifact selection
-/// matches on the canonical name and falls back to cyclic.
+use super::cost::{
+    compute_cost_report, default_candidates, CostReport, MinMisses, Objective, TraversalEstimate,
+};
+
+/// Largest sequence length the serving path will probe-simulate for a
+/// policy decision: a research-scale sequence would block the pipeline
+/// thread for seconds, so bigger shapes skip the cost probe (and `auto`
+/// artifact selection degrades to the cyclic baseline).
+pub const PROBE_MAX_SEQ: u64 = 8192;
+
+/// One memoized policy decision: the winning traversal for a (shape, L2
+/// capacity) under an objective, with the full ranked cost picture and a
+/// human-readable explanation trail.
+#[derive(Clone, Debug)]
+pub struct PolicyDecision {
+    pub winner: TraversalRef,
+    /// Canonical objective name the ranking was scored under.
+    pub objective: String,
+    /// L2 capacity the estimates were taken at.
+    pub l2_bytes: u64,
+    pub report: CostReport,
+    /// Indices into `report.candidates` best-first, with their scores.
+    pub ranking: Vec<(usize, f64)>,
+    /// One line per step of the decision (shown by `sawtooth policy
+    /// explain` and kept alongside the cached decision).
+    pub explanation: Vec<String>,
+    /// True when this value came from the decision cache rather than a
+    /// fresh scoring pass.
+    pub cached: bool,
+}
+
+impl PolicyDecision {
+    /// Candidates best-first under the decision's objective.
+    pub fn ranked(&self) -> impl Iterator<Item = &TraversalEstimate> + '_ {
+        self.ranking.iter().map(|(i, _)| &self.report.candidates[*i])
+    }
+
+    /// The winner's estimate.
+    pub fn winner_estimate(&self) -> &TraversalEstimate {
+        &self.report.candidates[self.ranking[0].0]
+    }
+
+    /// Estimated speedup of the winner over the cyclic baseline.
+    pub fn winner_speedup(&self) -> f64 {
+        self.winner_estimate().speedup_vs_baseline
+    }
+}
+
+type DecisionKey = (AttentionWorkload, u64, String);
+
+/// Registry-wide cost/policy engine: scores a candidate set of traversals
+/// for a workload shape from the probe executor's cached Mattson curves
+/// and memoizes the winning decision per `(shape, l2_bytes, objective)`.
+pub struct PolicyEngine {
+    exec: Arc<SweepExecutor>,
+    candidates: Vec<TraversalRef>,
+    objective: Arc<dyn Objective>,
+    decisions: Mutex<FxHashMap<DecisionKey, PolicyDecision>>,
+    computed: AtomicU64,
+    cache_hits: AtomicU64,
+}
+
+impl fmt::Debug for PolicyEngine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PolicyEngine")
+            .field("objective", &self.objective.name())
+            .field(
+                "candidates",
+                &self.candidates.iter().map(TraversalRef::name).collect::<Vec<_>>(),
+            )
+            .field("probe_threads", &self.exec.threads())
+            .finish()
+    }
+}
+
+impl PolicyEngine {
+    /// Engine over an explicit candidate set (empty ⇒
+    /// [`default_candidates`]). `probe_threads <= 1` shares the
+    /// process-wide probe executor (every engine and free-function probe
+    /// memoizes into one cache); larger counts get a private pool that
+    /// profiles the candidate fan-out concurrently.
+    pub fn new(
+        objective: Arc<dyn Objective>,
+        candidates: Vec<TraversalRef>,
+        probe_threads: usize,
+    ) -> Self {
+        let exec = if probe_threads <= 1 {
+            probe_executor()
+        } else {
+            Arc::new(SweepExecutor::new(probe_threads))
+        };
+        Self::with_executor(objective, candidates, exec)
+    }
+
+    /// Engine over a caller-provided executor (report harness, tests).
+    pub fn with_executor(
+        objective: Arc<dyn Objective>,
+        candidates: Vec<TraversalRef>,
+        exec: Arc<SweepExecutor>,
+    ) -> Self {
+        let candidates = if candidates.is_empty() { default_candidates() } else { candidates };
+        PolicyEngine {
+            exec,
+            candidates,
+            objective,
+            decisions: Mutex::new(FxHashMap::default()),
+            computed: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+        }
+    }
+
+    /// Engine configured from a `[policy]` config section.
+    pub fn from_policy_config(cfg: &PolicyConfig) -> Self {
+        Self::new(
+            Arc::clone(&cfg.objective),
+            cfg.candidates.clone(),
+            cfg.resolved_probe_threads(),
+        )
+    }
+
+    pub fn objective(&self) -> &dyn Objective {
+        self.objective.as_ref()
+    }
+
+    pub fn candidates(&self) -> &[TraversalRef] {
+        &self.candidates
+    }
+
+    pub fn executor(&self) -> &Arc<SweepExecutor> {
+        &self.exec
+    }
+
+    /// Decisions computed from scratch (scoring passes).
+    pub fn decisions_computed(&self) -> u64 {
+        self.computed.load(Ordering::Relaxed)
+    }
+
+    /// Decisions answered from the memo (the `order = auto` steady state).
+    pub fn decision_cache_hits(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// Distinct `(shape, l2_bytes, objective)` decisions memoized.
+    pub fn decision_cache_len(&self) -> usize {
+        self.decisions.lock().unwrap().len()
+    }
+
+    /// Cost report for `w` over this engine's candidate set at `l2_bytes`
+    /// (no decision memo — the underlying simulations are still memoized
+    /// and curve-cached by the probe executor).
+    pub fn cost_report_at(&self, w: &AttentionWorkload, l2_bytes: u64) -> CostReport {
+        compute_cost_report(&self.exec, w, &self.candidates, l2_bytes)
+    }
+
+    /// [`Self::decide_at`] at GB10's 24 MiB L2.
+    pub fn decide(&self, w: &AttentionWorkload) -> PolicyDecision {
+        self.decide_at(w, DeviceSpec::gb10().l2_bytes)
+    }
+
+    /// Pick the best candidate for `w` on a GB10 with `l2_bytes` of L2
+    /// under this engine's objective. The first call for a `(shape,
+    /// l2_bytes, objective)` scores every candidate (profiling each
+    /// (shape, order) once, ever); every later call is a decision-cache
+    /// hit (`PolicyDecision::cached`).
+    pub fn decide_at(&self, w: &AttentionWorkload, l2_bytes: u64) -> PolicyDecision {
+        let key: DecisionKey = (*w, l2_bytes, self.objective.name());
+        if let Some(d) = self.decisions.lock().unwrap().get(&key) {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
+            let mut d = d.clone();
+            d.cached = true;
+            return d;
+        }
+        let report = self.cost_report_at(w, l2_bytes);
+        let objective = self.objective.name();
+        // Ties go to the earlier candidate (cyclic-first in the default
+        // set) — the contract lives in `CostReport::scored`.
+        let ranking = report.scored(self.objective.as_ref());
+        let winner = report.candidates[ranking[0].0].order.clone();
+        let mut explanation = vec![format!(
+            "objective {objective} over {} candidates at L2 {} bytes ({} MiB), \
+             baseline cyclic: {} misses",
+            report.candidates.len(),
+            l2_bytes,
+            l2_bytes >> 20,
+            report.baseline.l2_miss_sectors,
+        )];
+        for (rank, (i, score)) in ranking.iter().enumerate() {
+            let e = &report.candidates[*i];
+            explanation.push(format!(
+                "#{} {}: {} misses, {:.2} TFLOPS, {:.6} s, {:.2}x vs baseline (score {score})",
+                rank + 1,
+                e.order,
+                e.l2_miss_sectors,
+                e.tflops,
+                e.time_s,
+                e.speedup_vs_baseline,
+            ));
+        }
+        explanation.push(format!(
+            "winner: {winner} ({:.2}x vs cyclic under {objective})",
+            report.candidates[ranking[0].0].speedup_vs_baseline,
+        ));
+        let decision = PolicyDecision {
+            winner,
+            objective,
+            l2_bytes,
+            report,
+            ranking,
+            explanation,
+            cached: false,
+        };
+        self.computed.fetch_add(1, Ordering::Relaxed);
+        self.decisions
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| decision.clone())
+            .clone()
+    }
+
+    /// Rank an explicit set of traversals for `w` (GB10 L2) under this
+    /// engine's objective, best first. Used by artifact-selection
+    /// degradation, where the set is "whatever the manifest ships".
+    pub fn rank_orders(&self, w: &AttentionWorkload, orders: &[TraversalRef]) -> Vec<TraversalRef> {
+        let report =
+            compute_cost_report(&self.exec, w, orders, DeviceSpec::gb10().l2_bytes);
+        report
+            .ranked(self.objective.as_ref())
+            .into_iter()
+            .map(|e| e.order.clone())
+            .collect()
+    }
+}
+
+/// How [`SchedulePolicy`] chooses the traversal order.
+#[derive(Clone, Debug)]
+pub enum OrderMode {
+    /// Always request this traversal's artifacts (the legacy knob).
+    Fixed(TraversalRef),
+    /// Ask the [`PolicyEngine`] for the per-shape winner.
+    Auto,
+}
+
+/// Scheduling policy: a thin wrapper over [`PolicyEngine`] that the
+/// serving pipeline drives. In `Fixed` mode artifact selection requests
+/// one traversal (byte-identical to the pre-engine behaviour when the
+/// artifact exists); in `Auto` mode it requests the memoized per-shape
+/// winner. Either way a missing artifact degrades to the best-scoring
+/// traversal the manifest *does* ship for the shape, and only then errors.
 #[derive(Clone, Debug)]
 pub struct SchedulePolicy {
-    pub order: TraversalRef,
+    mode: OrderMode,
+    engine: Arc<PolicyEngine>,
 }
 
 impl SchedulePolicy {
-    pub fn new(order: TraversalRef) -> Self {
-        SchedulePolicy { order }
+    /// Fixed-order policy over a default (min-misses, registry-wide,
+    /// shared-executor) engine.
+    pub fn fixed(order: TraversalRef) -> Self {
+        SchedulePolicy {
+            mode: OrderMode::Fixed(order),
+            engine: Arc::new(PolicyEngine::new(Arc::new(MinMisses), Vec::new(), 1)),
+        }
     }
 
-    /// Admission-time cost hint for a request shape: what the paper's GB10
-    /// would do under each traversal order. Memoized per shape (see
-    /// [`estimate_gb10`]) so the serving pipeline can call this per batch.
-    pub fn cost_hint(&self, w: &AttentionWorkload) -> GpuEstimate {
-        estimate_gb10(w)
+    /// Auto-order policy over the given engine.
+    pub fn auto(engine: Arc<PolicyEngine>) -> Self {
+        SchedulePolicy { mode: OrderMode::Auto, engine }
     }
 
-    /// What-if cost hint at an arbitrary L2 capacity, answered from the
-    /// shape's cached capacity curve (one profiled pass per shape and
-    /// order, ever — see [`estimate_gb10_at`]).
-    pub fn cost_hint_at(&self, w: &AttentionWorkload, l2_bytes: u64) -> GpuEstimate {
-        estimate_gb10_at(w, l2_bytes)
+    /// Build from the serving config: `[policy] order` selects the mode
+    /// (`auto`, an explicit traversal, or — when absent — the legacy
+    /// `serve.order` fixed behaviour), and the engine takes the `[policy]`
+    /// objective/candidates/probe_threads knobs.
+    pub fn from_serve_config(cfg: &ServeConfig) -> Self {
+        let engine = Arc::new(PolicyEngine::from_policy_config(&cfg.policy));
+        let mode = match &cfg.policy.order {
+            PolicyOrder::Auto => OrderMode::Auto,
+            PolicyOrder::Fixed(t) => OrderMode::Fixed(t.clone()),
+            PolicyOrder::Inherit => OrderMode::Fixed(cfg.order.clone()),
+        };
+        SchedulePolicy { mode, engine }
     }
 
-    /// Pick the artifact for (seq, causal) padded to `batch` rows.
-    /// Falls back to the cyclic kernel when no sawtooth artifact exists
-    /// (numerics are identical; only the access order differs).
+    pub fn mode(&self) -> &OrderMode {
+        &self.mode
+    }
+
+    pub fn is_auto(&self) -> bool {
+        matches!(self.mode, OrderMode::Auto)
+    }
+
+    /// The fixed traversal, when not in auto mode.
+    pub fn requested_order(&self) -> Option<&TraversalRef> {
+        match &self.mode {
+            OrderMode::Fixed(t) => Some(t),
+            OrderMode::Auto => None,
+        }
+    }
+
+    pub fn engine(&self) -> &Arc<PolicyEngine> {
+        &self.engine
+    }
+
+    /// Admission-time policy decision for a request shape (memoized per
+    /// shape — the serving pipeline calls this per batch).
+    pub fn decide(&self, w: &AttentionWorkload) -> PolicyDecision {
+        self.engine.decide(w)
+    }
+
+    /// What-if decision at an arbitrary L2 capacity, answered from the
+    /// shape's cached capacity curves.
+    pub fn decide_at(&self, w: &AttentionWorkload, l2_bytes: u64) -> PolicyDecision {
+        self.engine.decide_at(w, l2_bytes)
+    }
+
+    /// Pick the artifact for `w` (seq/causal) padded to `batch` rows.
+    ///
+    /// The preferred traversal — the fixed order, or auto mode's memoized
+    /// winner — is requested first. When its artifact is missing the
+    /// selection degrades to the best-scoring traversal that *has* an
+    /// artifact for the shape (ranked by this policy's objective over
+    /// exactly the manifest's available orders), and only errors when the
+    /// shape has no artifact at all.
     pub fn select_artifact<'r>(
         &self,
         runtime: &'r Runtime,
-        seq: usize,
-        causal: bool,
+        w: &AttentionWorkload,
         batch: usize,
     ) -> Result<&'r ArtifactMeta> {
+        self.select_artifact_with(runtime, w, batch, None)
+    }
+
+    /// [`Self::select_artifact`] reusing an already-computed decision for
+    /// `w` (the pipeline's admission-time `decide`), so the auto serving
+    /// path consults the engine once per plan, not twice.
+    pub fn select_artifact_with<'r>(
+        &self,
+        runtime: &'r Runtime,
+        w: &AttentionWorkload,
+        batch: usize,
+        decision: Option<&PolicyDecision>,
+    ) -> Result<&'r ArtifactMeta> {
+        let manifest = runtime.manifest();
         let pick = |order: &str| {
-            runtime.manifest().artifacts().iter().find(|a| {
+            manifest.artifacts().iter().find(|a| {
                 a.kind == ArtifactKind::Attention
-                    && a.seq == seq
-                    && a.causal == causal
+                    && a.seq as u64 == w.seq
+                    && a.causal == w.causal
                     && a.batch == batch
                     && a.order == order
             })
         };
-        pick(self.order.name())
-            .or_else(|| pick(traversal::CYCLIC))
-            .ok_or_else(|| {
-                anyhow!(
-                    "no attention artifact for seq={seq} causal={causal} batch={batch} \
-                     (have: {:?})",
-                    runtime
-                        .manifest()
-                        .attention_artifacts()
-                        .map(|a| (a.seq, a.batch, a.causal, a.order.clone()))
-                        .collect::<Vec<_>>()
-                )
-            })
+        let preferred = match (&self.mode, decision) {
+            (OrderMode::Fixed(t), _) => Some(t.clone()),
+            (OrderMode::Auto, Some(d)) => Some(d.winner.clone()),
+            (OrderMode::Auto, None) if w.seq <= PROBE_MAX_SEQ => {
+                Some(self.engine.decide(w).winner)
+            }
+            // Too big to probe: serve the baseline artifact if shipped.
+            (OrderMode::Auto, None) => Some(TraversalRef::cyclic()),
+        };
+        if let Some(p) = &preferred {
+            if let Some(a) = pick(p.name()) {
+                return Ok(a);
+            }
+        }
+        // Degrade by score over what the manifest actually ships.
+        let mut avail: Vec<&str> = Vec::new();
+        for order in manifest.attention_orders(w.seq as usize, w.causal, batch) {
+            if !avail.contains(&order) {
+                avail.push(order);
+            }
+        }
+        let choice: Option<&str> = match avail.len() {
+            0 => None,
+            1 => Some(avail[0]),
+            _ => {
+                let parsed: Vec<TraversalRef> =
+                    avail.iter().filter_map(|n| n.parse().ok()).collect();
+                if parsed.is_empty() || w.seq > PROBE_MAX_SEQ {
+                    // Un-scoreable (unregistered orders or research-scale
+                    // shape): baseline if shipped, else manifest order.
+                    Some(if avail.contains(&traversal::CYCLIC) {
+                        traversal::CYCLIC
+                    } else {
+                        avail[0]
+                    })
+                } else {
+                    let ranked = self.engine.rank_orders(w, &parsed);
+                    let best = ranked
+                        .first()
+                        .map(|t| t.name().to_string())
+                        .unwrap_or_else(|| avail[0].to_string());
+                    Some(avail.iter().copied().find(|n| *n == best).unwrap_or(avail[0]))
+                }
+            }
+        };
+        match choice {
+            Some(order) => Ok(pick(order).expect("order taken from the manifest")),
+            None => Err(anyhow!(
+                "no attention artifact for seq={} causal={} batch={batch} (have: {:?})",
+                w.seq,
+                w.causal,
+                manifest
+                    .attention_artifacts()
+                    .map(|a| (a.seq, a.batch, a.causal, a.order.clone()))
+                    .collect::<Vec<_>>()
+            )),
+        }
     }
 }
 
-/// What the request would cost on the paper's GB10 under each traversal
-/// order — produced by the simulator + calibrated throughput model.
-#[derive(Clone, Debug)]
-pub struct GpuEstimate {
-    pub cyclic_tflops: f64,
-    pub sawtooth_tflops: f64,
-    pub cyclic_l2_misses: u64,
-    pub sawtooth_l2_misses: u64,
-    /// Speedup of sawtooth over cyclic (≥ 1 when sawtooth helps).
-    pub speedup: f64,
-}
-
-/// Process-wide memoizing executor behind [`estimate_gb10`]: repeated
-/// `submit()`/probe calls with the same shape never re-simulate, and each
-/// probed shape is profiled into a capacity curve (`sim::sweep`'s
-/// reuse-distance fast path), so what-if questions at *other* L2
-/// capacities ([`estimate_gb10_at`]) are answered from the cached curve
-/// without any further trace pass.
-fn probe_executor() -> &'static SweepExecutor {
-    static PROBE: OnceLock<SweepExecutor> = OnceLock::new();
+/// Process-wide memoizing executor shared by every 1-thread
+/// [`PolicyEngine`] and the free [`cost_report`]/[`cost_report_at`]
+/// helpers: repeated probes of the same shape never re-simulate, and each
+/// probed (shape, order) is profiled into a capacity curve so what-if
+/// questions at *other* L2 capacities are answered without any further
+/// trace pass.
+fn probe_executor() -> Arc<SweepExecutor> {
+    static PROBE: OnceLock<Arc<SweepExecutor>> = OnceLock::new();
     // Probes arrive one shape at a time on the serving path, so a single
     // sequential executor is right — the win here is the memoizer.
-    PROBE.get_or_init(|| SweepExecutor::new(1))
+    // `[policy] probe_threads > 1` builds a private pool instead.
+    Arc::clone(PROBE.get_or_init(|| Arc::new(SweepExecutor::new(1))))
 }
 
-/// Distinct configurations cached by the policy-probe memoizer (stats /
-/// test hook).
+/// Distinct configurations cached by the shared policy-probe memoizer
+/// (stats / test hook).
 pub fn probe_cache_len() -> usize {
     probe_executor().cached_len()
 }
 
-/// Capacity curves profiled by the policy probe (stats / test hook).
+/// Capacity curves profiled by the shared policy probe (stats / test
+/// hook).
 pub fn probe_profile_len() -> usize {
     probe_executor().profiled_len()
 }
 
-/// Estimate GB10 performance of an attention workload under both orders.
-/// The first probe of a shape pays one profiled trace pass per order;
-/// every later probe — at this or any other L2 capacity — is a cache hit.
-pub fn estimate_gb10(w: &AttentionWorkload) -> GpuEstimate {
-    estimate_gb10_at(w, DeviceSpec::gb10().l2_bytes)
+/// Cost report for `w` at GB10's 24 MiB L2 through the shared probe
+/// executor. Empty `candidates` ⇒ [`default_candidates`].
+pub fn cost_report(w: &AttentionWorkload, candidates: &[TraversalRef]) -> CostReport {
+    cost_report_at(w, candidates, DeviceSpec::gb10().l2_bytes)
 }
 
-/// What-if variant of [`estimate_gb10`]: the same cyclic-vs-sawtooth cost
-/// hint on a GB10 with `l2_bytes` of L2. Shapes already probed at any
-/// capacity answer from their cached [`crate::sim::CapacityProfile`] — no
-/// re-simulation (the Mattson inclusion property predicts every capacity
-/// from one pass).
-pub fn estimate_gb10_at(w: &AttentionWorkload, l2_bytes: u64) -> GpuEstimate {
-    let dev = DeviceSpec::gb10_with_l2(l2_bytes);
-    let profile = PerfProfile::cutile();
-    let exec = probe_executor();
-    let run = |order: TraversalRef| {
-        let cfg = SimConfig {
-            device: dev.clone(),
-            workload: *w,
-            scheduler: crate::sim::scheduler::SchedulerKind::Persistent,
-            order,
-            variant: crate::sim::kernel_model::KernelVariant::CuTileStatic,
-            jitter: 0.0,
-            seed: 0,
-            model_l1: true,
-        };
-        exec.run_at_capacity(&cfg)
+/// What-if variant of [`cost_report`]: the same registry-wide estimates on
+/// a GB10 with `l2_bytes` of L2. Shapes already probed at any capacity
+/// answer from their cached curves — no re-simulation (the Mattson
+/// inclusion property predicts every capacity from one pass).
+pub fn cost_report_at(
+    w: &AttentionWorkload,
+    candidates: &[TraversalRef],
+    l2_bytes: u64,
+) -> CostReport {
+    let defaults;
+    let candidates = if candidates.is_empty() {
+        defaults = default_candidates();
+        &defaults
+    } else {
+        candidates
     };
-    let cyc = run(TraversalRef::cyclic());
-    let saw = run(TraversalRef::sawtooth());
-    let tc = estimate(w, &dev, &cyc.counters, &profile);
-    let ts = estimate(w, &dev, &saw.counters, &profile);
-    GpuEstimate {
-        cyclic_tflops: tc.tflops,
-        sawtooth_tflops: ts.tflops,
-        cyclic_l2_misses: cyc.counters.l2_miss_sectors,
-        sawtooth_l2_misses: saw.counters.l2_miss_sectors,
-        speedup: tc.time_s / ts.time_s,
-    }
+    compute_cost_report(&probe_executor(), w, candidates, l2_bytes)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn pair() -> Vec<TraversalRef> {
+        vec![TraversalRef::cyclic(), TraversalRef::sawtooth()]
+    }
+
     #[test]
     fn estimator_favors_sawtooth_on_l2_exceeding_kv() {
         // S=128K: KV (32 MiB) > L2 (24 MiB) → sawtooth must win.
         let w = AttentionWorkload::cuda_study(128 * 1024).with_tile(64);
-        let e = estimate_gb10(&w);
-        assert!(e.sawtooth_l2_misses < e.cyclic_l2_misses);
-        assert!(e.speedup > 1.05, "speedup {}", e.speedup);
+        let r = cost_report(&w, &pair());
+        let saw = r.get("sawtooth").unwrap();
+        assert!(saw.l2_miss_sectors < r.baseline.l2_miss_sectors);
+        assert!(saw.speedup_vs_baseline > 1.05, "speedup {}", saw.speedup_vs_baseline);
     }
 
     #[test]
@@ -182,42 +522,111 @@ mod tests {
         // cache hits. (The cache is process-global, so we don't assert an
         // exact length — other tests may populate it concurrently.)
         let w = AttentionWorkload::cuda_study(24 * 1024).with_tile(48);
-        let a = estimate_gb10(&w);
+        let a = cost_report(&w, &pair());
         assert!(probe_cache_len() >= 2);
-        let b = estimate_gb10(&w);
-        assert_eq!(a.cyclic_l2_misses, b.cyclic_l2_misses);
-        assert_eq!(a.sawtooth_l2_misses, b.sawtooth_l2_misses);
-        assert_eq!(a.speedup.to_bits(), b.speedup.to_bits());
+        let b = cost_report(&w, &pair());
+        assert_eq!(a.baseline.l2_miss_sectors, b.baseline.l2_miss_sectors);
+        assert_eq!(
+            a.get("sawtooth").unwrap().l2_miss_sectors,
+            b.get("sawtooth").unwrap().l2_miss_sectors
+        );
+        assert_eq!(
+            a.get("sawtooth").unwrap().speedup_vs_baseline.to_bits(),
+            b.get("sawtooth").unwrap().speedup_vs_baseline.to_bits()
+        );
     }
 
     #[test]
     fn estimator_neutral_when_kv_fits_l2() {
         // S=16K: KV (4 MiB) ≪ L2 → both orders only cold-miss.
         let w = AttentionWorkload::cuda_study(16 * 1024).with_tile(64);
-        let e = estimate_gb10(&w);
-        assert_eq!(e.cyclic_l2_misses, e.sawtooth_l2_misses);
-        assert!((e.speedup - 1.0).abs() < 1e-9);
+        let r = cost_report(&w, &pair());
+        let saw = r.get("sawtooth").unwrap();
+        assert_eq!(r.baseline.l2_miss_sectors, saw.l2_miss_sectors);
+        assert!((saw.speedup_vs_baseline - 1.0).abs() < 1e-9);
     }
 
     #[test]
     fn capacity_what_ifs_reuse_one_profile_per_order() {
-        // A shape unique to this test. The first hint profiles it (one
-        // curve per order); hints at other capacities must not add curves.
+        // A shape unique to this test. The first report profiles it (one
+        // curve per order); reports at other capacities must not add
+        // curves.
         let w = AttentionWorkload::cuda_study(20 * 1024).with_tile(80);
-        let full = estimate_gb10_at(&w, 24 << 20);
+        let full = cost_report_at(&w, &pair(), 24 << 20);
         assert!(probe_profile_len() >= 2, "both orders should be profiled");
-        let squeezed = estimate_gb10_at(&w, 6 << 20);
-        let tiny = estimate_gb10_at(&w, 4 << 20);
+        let squeezed = cost_report_at(&w, &pair(), 6 << 20);
+        let tiny = cost_report_at(&w, &pair(), 4 << 20);
         // (Profile-reuse across capacities is asserted on a private
         // executor in sim::sweep's tests; the probe cache is process-global
         // so an exact count here would race with sibling tests.)
-        let again = estimate_gb10_at(&w, 24 << 20);
-        assert_eq!(full.cyclic_l2_misses, again.cyclic_l2_misses);
-        assert_eq!(full.speedup.to_bits(), again.speedup.to_bits());
+        let again = cost_report_at(&w, &pair(), 24 << 20);
+        assert_eq!(full.baseline.l2_miss_sectors, again.baseline.l2_miss_sectors);
         // Inclusion property: misses are non-increasing in capacity.
-        assert!(squeezed.cyclic_l2_misses >= full.cyclic_l2_misses);
-        assert!(tiny.cyclic_l2_misses >= squeezed.cyclic_l2_misses);
+        assert!(squeezed.baseline.l2_miss_sectors >= full.baseline.l2_miss_sectors);
+        assert!(tiny.baseline.l2_miss_sectors >= squeezed.baseline.l2_miss_sectors);
         // KV = 5 MiB: a 4 MiB L2 cannot hold the stream, 24 MiB can.
-        assert!(tiny.cyclic_l2_misses > full.cyclic_l2_misses);
+        assert!(tiny.baseline.l2_miss_sectors > full.baseline.l2_miss_sectors);
+    }
+
+    #[test]
+    fn decisions_memoize_per_shape_capacity_and_objective() {
+        let engine = PolicyEngine::with_executor(
+            Arc::new(MinMisses),
+            pair(),
+            Arc::new(SweepExecutor::new(1)),
+        );
+        let w = AttentionWorkload::cuda_study(16 * 1024).with_tile(64);
+        let first = engine.decide(&w);
+        assert!(!first.cached);
+        assert_eq!(engine.decisions_computed(), 1);
+        let second = engine.decide(&w);
+        assert!(second.cached, "repeat decision must be a cache hit");
+        assert_eq!(second.winner, first.winner);
+        assert_eq!(engine.decision_cache_hits(), 1);
+        assert_eq!(engine.decisions_computed(), 1);
+        // A different capacity is a different decision.
+        let other = engine.decide_at(&w, 6 << 20);
+        assert!(!other.cached);
+        assert_eq!(engine.decision_cache_len(), 2);
+        // ...but reuses the cached curves: no new profiles.
+        assert_eq!(engine.executor().profiled_len(), 2);
+    }
+
+    #[test]
+    fn decision_explanation_ranks_every_candidate() {
+        let engine = PolicyEngine::with_executor(
+            Arc::new(MinMisses),
+            Vec::new(), // default registry-wide set
+            Arc::new(SweepExecutor::new(1)),
+        );
+        let w = AttentionWorkload::cuda_study(16 * 1024).with_tile(64);
+        let d = engine.decide(&w);
+        assert_eq!(d.ranking.len(), engine.candidates().len());
+        assert_eq!(d.ranked().count(), engine.candidates().len());
+        // Header + one line per candidate + winner line.
+        assert_eq!(d.explanation.len(), engine.candidates().len() + 2);
+        for t in engine.candidates() {
+            assert!(
+                d.explanation.iter().any(|l| l.contains(t.name())),
+                "explanation missing {}",
+                t.name()
+            );
+        }
+        // KV fits L2 here: everything ties, the stable sort hands the win
+        // to the baseline-first candidate order.
+        assert_eq!(d.winner, TraversalRef::cyclic());
+        assert_eq!(d.winner_estimate().l2_miss_sectors, d.report.baseline.l2_miss_sectors);
+        assert!((d.winner_speedup() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_candidate_set_falls_back_to_registry_default() {
+        let engine = PolicyEngine::with_executor(
+            Arc::new(MinMisses),
+            Vec::new(),
+            Arc::new(SweepExecutor::new(1)),
+        );
+        assert!(engine.candidates().len() >= 7, "registry + block-snake widths");
+        assert_eq!(engine.candidates()[0].name(), traversal::CYCLIC);
     }
 }

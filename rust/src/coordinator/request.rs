@@ -20,7 +20,10 @@ pub struct ClientId(pub u64);
 
 /// One sweep submission: a client asking the coordinator to resolve an
 /// experiment grid. Built either from a typed [`SweepSpec`] or from the
-/// line protocol (`super::sweep_service::parse_spec`).
+/// line protocol (`super::sweep_service::parse_spec`), whose optional
+/// `objective=` header rides on [`SweepSpec::objective`] — the scoring
+/// rule (validated against [`super::cost::parse_objective`]) the client
+/// will rank the results under.
 #[derive(Clone, Debug)]
 pub struct SweepRequest {
     pub id: RequestId,

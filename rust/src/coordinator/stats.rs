@@ -23,12 +23,16 @@ pub struct EngineStats {
     /// Executor wall time, seconds: the full elapsed time of every
     /// dispatch, attributed once per plan (see [`Self::record_exec`]).
     pub exec_time_s: f64,
-    /// Policy cost hints computed (one per dispatched plan; memoized per
-    /// shape by the policy probe, so repeats cost nothing).
-    pub cost_hints: u64,
-    /// Running mean of the estimated sawtooth-over-cyclic speedup across
-    /// dispatched plans.
-    pub mean_est_speedup: f64,
+    /// Policy decisions taken (one per dispatched plan under
+    /// `order = auto`; memoized per shape by the policy engine, so repeats
+    /// cost nothing).
+    pub policy_decisions: u64,
+    /// Decisions answered from the policy engine's decision cache — the
+    /// `order = auto` steady state serves winners without re-scoring.
+    pub decision_cache_hits: u64,
+    /// Running mean of the winner's estimated speedup over the cyclic
+    /// baseline across dispatched plans.
+    pub mean_winner_speedup: f64,
 }
 
 impl EngineStats {
@@ -44,11 +48,15 @@ impl EngineStats {
         self.exec_time_s += elapsed_s;
     }
 
-    /// Fold one policy cost hint into the running mean.
-    pub fn record_cost_hint(&mut self, est_speedup: f64) {
-        self.cost_hints += 1;
-        let n = self.cost_hints as f64;
-        self.mean_est_speedup += (est_speedup - self.mean_est_speedup) / n;
+    /// Fold one policy decision into the counters and the running mean of
+    /// the winner's estimated speedup over the cyclic baseline.
+    pub fn record_decision(&mut self, winner_speedup: f64, cached: bool) {
+        self.policy_decisions += 1;
+        if cached {
+            self.decision_cache_hits += 1;
+        }
+        let n = self.policy_decisions as f64;
+        self.mean_winner_speedup += (winner_speedup - self.mean_winner_speedup) / n;
     }
 
     /// Mean requests per dispatch, derived from what was *dispatched*
@@ -81,10 +89,10 @@ impl EngineStats {
             self.latency.max(),
             self.latency.count(),
         );
-        if self.cost_hints > 0 {
+        if self.policy_decisions > 0 {
             s.push_str(&format!(
-                "\npolicy:   {} cost hints, mean est. sawtooth speedup {:.2}x",
-                self.cost_hints, self.mean_est_speedup
+                "\npolicy:   {} decisions ({} cached), mean est. winner speedup {:.2}x vs cyclic",
+                self.policy_decisions, self.decision_cache_hits, self.mean_winner_speedup
             ));
         }
         s
@@ -212,13 +220,15 @@ mod tests {
     }
 
     #[test]
-    fn cost_hint_running_mean() {
+    fn decision_running_mean_and_cache_hits() {
         let mut s = EngineStats::default();
-        s.record_cost_hint(1.0);
-        s.record_cost_hint(2.0);
-        assert_eq!(s.cost_hints, 2);
-        assert!((s.mean_est_speedup - 1.5).abs() < 1e-12);
-        assert!(s.summary().contains("2 cost hints"));
+        s.record_decision(1.0, false);
+        s.record_decision(2.0, true);
+        s.record_decision(1.5, true);
+        assert_eq!(s.policy_decisions, 3);
+        assert_eq!(s.decision_cache_hits, 2);
+        assert!((s.mean_winner_speedup - 1.5).abs() < 1e-12);
+        assert!(s.summary().contains("3 decisions (2 cached)"));
     }
 
     #[test]

@@ -400,10 +400,18 @@ fn serve_one_turn(
 //
 // ```text
 // sweep <name>
+// objective=min-misses
 // config device=gb10 seq=131072 tile=64 order=sawtooth causal=true ...
 // config device=tiny seq=512 tile=16 l2_bytes=32768
 // end
 // ```
+//
+// The optional `objective=` header annotates the sweep with the scoring
+// objective the submitter will rank the results under (any name
+// [`crate::coordinator::cost::parse_objective`] accepts — unknown names
+// fail at parse time with the shared unknown-value message). It rides on
+// [`SweepSpec::objective`] and round-trips through [`format_spec`];
+// execution itself is unaffected.
 //
 // `config` keys cover exactly the simulation-relevant fields (the
 // [`crate::sim::sweep::ConfigKey`] identity — so equal protocol lines are
@@ -423,6 +431,9 @@ fn serve_one_turn(
 pub fn format_spec(spec: &SweepSpec) -> String {
     let mut out = String::new();
     out.push_str(&format!("sweep {}\n", spec.name));
+    if let Some(obj) = &spec.objective {
+        out.push_str(&format!("objective={obj}\n"));
+    }
     for cfg in &spec.configs {
         let dev = &cfg.device;
         let base = if dev.name == "tiny" { "tiny" } else { "gb10" };
@@ -458,6 +469,7 @@ pub fn format_spec(spec: &SweepSpec) -> String {
 /// Parse a line-protocol submission into a [`SweepSpec`].
 pub fn parse_spec(text: &str) -> Result<SweepSpec> {
     let mut name = String::from("sweep");
+    let mut objective: Option<String> = None;
     let mut configs = Vec::new();
     for (no, raw) in text.lines().enumerate() {
         let line = raw.trim();
@@ -473,6 +485,14 @@ pub fn parse_spec(text: &str) -> Result<SweepSpec> {
                 continue;
             }
         }
+        if let Some(rest) = line.strip_prefix("objective=") {
+            // Validate through the shared parser; store the canonical name
+            // so round trips are stable.
+            let obj = super::cost::parse_objective(rest.trim())
+                .with_context(|| format!("line {}", no + 1))?;
+            objective = Some(obj.name());
+            continue;
+        }
         if let Some(rest) = line.strip_prefix("config") {
             if rest.is_empty() || rest.starts_with(char::is_whitespace) {
                 let cfg = parse_config_line(rest)
@@ -482,14 +502,17 @@ pub fn parse_spec(text: &str) -> Result<SweepSpec> {
             }
         }
         bail!(
-            "line {}: expected 'sweep <name>', 'config k=v ...' or 'end', got '{line}'",
+            "line {}: expected 'sweep <name>', 'objective=<name>', 'config k=v ...' \
+             or 'end', got '{line}'",
             no + 1
         );
     }
     if configs.is_empty() {
         bail!("sweep '{name}' has no config lines");
     }
-    Ok(SweepSpec::new(name, configs))
+    let mut spec = SweepSpec::new(name, configs);
+    spec.objective = objective;
+    Ok(spec)
 }
 
 fn parse_num<T: std::str::FromStr>(k: &str, v: &str) -> Result<T>
@@ -696,6 +719,36 @@ mod tests {
         assert!(format!("{err:#}").contains("unknown traversal 'spiral'"), "{err:#}");
         let err = parse_spec("config seq=512 scheduler=turbo\n").unwrap_err();
         assert!(format!("{err:#}").contains("unknown scheduler 'turbo'"), "{err:#}");
+    }
+
+    #[test]
+    fn protocol_objective_header_round_trips_and_validates() {
+        let spec = parse_spec(
+            "sweep scored\n\
+             objective=min-misses\n\
+             config device=tiny seq=512 tile=16\n",
+        )
+        .unwrap();
+        assert_eq!(spec.objective.as_deref(), Some("min-misses"));
+        let text = format_spec(&spec);
+        assert!(text.contains("objective=min-misses\n"), "{text}");
+        let reparsed = parse_spec(&text).unwrap();
+        assert_eq!(reparsed.objective, spec.objective);
+        // Parameterized objectives canonicalize and survive the round trip.
+        let spec = parse_spec(
+            "sweep slo\nobjective=latency-slo:0.004\nconfig device=tiny seq=512 tile=16\n",
+        )
+        .unwrap();
+        assert_eq!(spec.objective.as_deref(), Some("latency-slo:0.004"));
+        // No header → no annotation; unknown names fail with the shared
+        // unknown-value message.
+        assert_eq!(
+            parse_spec("config device=tiny seq=512 tile=16\n").unwrap().objective,
+            None
+        );
+        let err =
+            parse_spec("objective=fastest\nconfig device=tiny seq=512 tile=16\n").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown objective 'fastest'"), "{err:#}");
     }
 
     #[test]

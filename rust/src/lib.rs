@@ -21,8 +21,11 @@
 //!   artifacts exist on disk).
 //! * [`coordinator`] — an attention serving engine (request queue, dynamic
 //!   batcher, schedule policy, worker pool) whose scheduling policy is the
-//!   paper's contribution: sawtooth wavefront reordering as a first-class
-//!   serving-time option.
+//!   paper's contribution as a first-class serving-time option: a
+//!   registry-wide cost model ([`coordinator::cost`]) and policy engine
+//!   ([`coordinator::policy::PolicyEngine`]) score every registered
+//!   traversal under pluggable objectives and pick per-shape winners
+//!   (`order = auto`) from cached capacity curves.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation from the simulator (`sawtooth report all`).
 //!

@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   report <exp|all>    regenerate paper tables/figures from the simulator
 //!   simulate            run one simulator launch (config file + overrides)
-//!   estimate            GB10 cyclic-vs-sawtooth estimate for a workload
+//!   estimate            GB10 estimate for a workload, every registered traversal
+//!   policy explain      ranked policy decision (cost report + explanation)
 //!   reuse               reuse-distance histograms, cyclic vs sawtooth
 //!   serve               start the serving engine on a synthetic load
 //!   artifacts           list the AOT artifact manifest
@@ -12,13 +13,17 @@
 //!   sawtooth report fig7
 //!   sawtooth simulate --set sim.seq=65536 --set sim.order=sawtooth
 //!   sawtooth estimate --seq 131072 --tile 64 --batch 4
+//!   sawtooth policy explain --seq 131072 --l2 25165824 --objective min-misses
 //!   sawtooth serve --requests 64 --clients 4
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use sawtooth_attn::config::{Config, ServeConfig, SimRunConfig, SweepServiceConfig};
+use sawtooth_attn::coordinator::cost::{self, OBJECTIVE_EXAMPLES};
+use sawtooth_attn::coordinator::policy::{self, PolicyEngine};
 use sawtooth_attn::coordinator::sweep_service::{format_spec, parse_spec};
 use sawtooth_attn::coordinator::{AttentionRequest, ClientId, Engine, SweepService};
+use sawtooth_attn::gb10::DeviceSpec;
 use sawtooth_attn::l2model::reuse::ReuseProfiler;
 use sawtooth_attn::report;
 use sawtooth_attn::runtime::{default_artifacts_dir, Runtime};
@@ -45,6 +50,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "report" => cmd_report(rest),
         "simulate" => cmd_simulate(rest),
         "estimate" => cmd_estimate(rest),
+        "policy" => cmd_policy(rest),
         "reuse" => cmd_reuse(rest),
         "serve" => cmd_serve(rest),
         "sweep-serve" => cmd_sweep_serve(rest),
@@ -56,6 +62,10 @@ fn dispatch(args: &[String]) -> Result<()> {
             println!(
                 "\nTRAVERSALS (registered; use with --order / --orders / sim.order):\n  {}",
                 TraversalRegistry::global().examples().join(", ")
+            );
+            println!(
+                "OBJECTIVES (use with --objective / [policy] objective / objective=):\n  {}",
+                OBJECTIVE_EXAMPLES.join(", ")
             );
             Ok(())
         }
@@ -71,7 +81,12 @@ USAGE: sawtooth <command> [options]
 COMMANDS:
   report <exp|all>       regenerate a paper table/figure (table1..3, fig1..12)
   simulate [opts]        run one simulated kernel launch and print counters
-  estimate [opts]        GB10 cyclic-vs-sawtooth estimate for a workload
+  estimate [opts]        GB10 estimate for a workload: one row per registered
+                         traversal, ranked against the cyclic baseline
+  policy explain [opts]  the policy engine's ranked decision for a shape:
+                         full cost report + explanation trail
+                         (--l2 BYTES for what-ifs, --objective NAME,
+                         --candidates A,B,C for an explicit set)
   reuse [opts]           reuse-distance histograms, cyclic vs sawtooth
   serve [opts]           run the serving engine on a synthetic load
   sweep-serve [opts]     run the sweep service; N clients submit
@@ -87,6 +102,10 @@ COMMON OPTIONS:
   --seq N --tile T --batch B --heads H --causal
   --order NAME           KV traversal order: any registered name (see the
                          TRAVERSALS list at the end of this help)
+  --objective NAME       policy scoring objective: min-misses | max-tflops |
+                         latency-slo:<seconds>   (policy explain)
+  --l2 BYTES             what-if L2 capacity in bytes (policy explain;
+                         default: GB10's 24 MiB)
   --sms N                active SM count (simulate/estimate)
   --threads N            sweep worker threads for report / sweep-serve
                          (default: host cores; output is byte-identical
@@ -244,17 +263,113 @@ fn cmd_estimate(args: &[String]) -> Result<()> {
     let (flags, _) = parse_flags(args)?;
     let cfg = build_config(&flags)?;
     let run = SimRunConfig::from_config(&cfg)?;
-    let e = sawtooth_attn::coordinator::policy::estimate_gb10(&run.workload);
+    // Registry-wide: one row per default candidate (the retired estimator
+    // hardcoded cyclic vs sawtooth; `policy explain` adds the ranked view).
+    let report = policy::cost_report(&run.workload, &[]);
+    println!("workload: {:?}", run.workload);
+    let mut t = sawtooth_attn::util::table::Table::new(vec![
+        "traversal",
+        "L2 misses",
+        "TFLOPS",
+        "time (s)",
+        "vs cyclic",
+    ]);
+    for e in &report.candidates {
+        t.row(vec![
+            e.order.name().to_string(),
+            sawtooth_attn::util::table::commas(e.l2_miss_sectors),
+            format!("{:.2}", e.tflops),
+            format!("{:.6}", e.time_s),
+            format!("{:.2}x", e.speedup_vs_baseline),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+/// `sawtooth policy explain --seq N [--l2 BYTES] [--objective NAME]
+/// [--candidates A,B,C]`: print the policy engine's ranked cost report and
+/// decision trail for one workload shape.
+fn cmd_policy(args: &[String]) -> Result<()> {
+    let (flags, pos) = parse_flags(args)?;
+    match pos.first().map(String::as_str) {
+        Some("explain") => {}
+        other => bail!(
+            "unknown policy action '{}' — try `sawtooth policy explain --seq N`",
+            other.unwrap_or("<none>")
+        ),
+    }
+    let cfg = build_config(&flags)?;
+    let run = SimRunConfig::from_config(&cfg)?;
+    let l2_bytes: u64 = match flag(&flags, "l2") {
+        Some(v) => v
+            .parse()
+            .with_context(|| format!("--l2 expects bytes, got '{v}'"))?,
+        None => DeviceSpec::gb10().l2_bytes,
+    };
+    if l2_bytes == 0 {
+        bail!("--l2 must be positive");
+    }
+    // Flags map onto a [policy] config section, so the CLI shares the
+    // schema's parsing and thread-resolution (0 = host cores) semantics.
+    let policy_cfg = sawtooth_attn::config::PolicyConfig {
+        order: sawtooth_attn::config::PolicyOrder::Auto,
+        objective: cost::parse_objective(flag(&flags, "objective").unwrap_or("min-misses"))
+            .context("--objective")?,
+        candidates: match flag(&flags, "candidates") {
+            Some(s) => sawtooth_attn::config::parse_candidate_list(s).context("--candidates")?,
+            None => Vec::new(), // registry default incl. block-snake widths
+        },
+        probe_threads: flag(&flags, "probe-threads")
+            .map(|v| v.parse::<usize>())
+            .transpose()
+            .context("--probe-threads expects an integer")?
+            .unwrap_or(1),
+    };
+    let engine = PolicyEngine::from_policy_config(&policy_cfg);
+    let decision = engine.decide_at(&run.workload, l2_bytes);
+
     println!("workload: {:?}", run.workload);
     println!(
-        "cyclic   : {:>12} L2 misses, {:.2} TFLOPS",
-        e.cyclic_l2_misses, e.cyclic_tflops
+        "objective: {}   L2: {} bytes ({} MiB)   candidates: {}",
+        decision.objective,
+        decision.l2_bytes,
+        decision.l2_bytes >> 20,
+        engine.candidates().len()
     );
+    let mut t = sawtooth_attn::util::table::Table::new(vec![
+        "rank",
+        "traversal",
+        "L2 misses",
+        "TFLOPS",
+        "time (s)",
+        "vs cyclic",
+        "score",
+    ]);
+    for (rank, (i, score)) in decision.ranking.iter().enumerate() {
+        let e = &decision.report.candidates[*i];
+        t.row(vec![
+            (rank + 1).to_string(),
+            e.order.name().to_string(),
+            sawtooth_attn::util::table::commas(e.l2_miss_sectors),
+            format!("{:.2}", e.tflops),
+            format!("{:.6}", e.time_s),
+            format!("{:.2}x", e.speedup_vs_baseline),
+            format!("{score}"),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("explanation:");
+    for line in &decision.explanation {
+        println!("  {line}");
+    }
     println!(
-        "sawtooth : {:>12} L2 misses, {:.2} TFLOPS",
-        e.sawtooth_l2_misses, e.sawtooth_tflops
+        "winner: {} (decision {} — probe cache: {} configs, {} curves)",
+        decision.winner,
+        if decision.cached { "cached" } else { "computed" },
+        engine.executor().cached_len(),
+        engine.executor().profiled_len(),
     );
-    println!("speedup  : {:.2}x", e.speedup);
     Ok(())
 }
 
@@ -572,5 +687,13 @@ mod tests {
     #[test]
     fn dispatch_rejects_unknown_command() {
         assert!(dispatch(&["frobnicate".to_string()]).is_err());
+    }
+
+    #[test]
+    fn policy_requires_explain_action() {
+        assert!(dispatch(&["policy".to_string()]).is_err());
+        let err =
+            dispatch(&["policy".to_string(), "rank".to_string()]).unwrap_err();
+        assert!(format!("{err:#}").contains("policy explain"), "{err:#}");
     }
 }

@@ -41,10 +41,13 @@ pub const EXPERIMENTS: &[&str] = &[
 ];
 
 /// Ablations beyond the paper (DESIGN.md §8); run via `report <id>` or
-/// `report ablations`. `abl-order` iterates the traversal registry, so
-/// newly registered traversals appear in its table automatically.
+/// `report ablations`. `abl-order` iterates the traversal registry (so
+/// newly registered traversals appear in its table automatically) and
+/// `abl-policy` runs the policy engine's co-design search: the winning
+/// registered traversal per KV:L2 ratio, from one Mattson profile pass per
+/// candidate.
 pub const ABLATIONS: &[&str] =
-    &["abl-order", "abl-tile", "abl-jitter", "abl-capacity", "abl-reuse"];
+    &["abl-order", "abl-policy", "abl-tile", "abl-jitter", "abl-capacity", "abl-reuse"];
 
 /// Run one experiment (or "all") sequentially and return the rendered
 /// report. Equivalent to [`run_threaded`] with one thread.
@@ -78,6 +81,7 @@ pub fn run_with(experiment: &str, exec: &SweepExecutor) -> Result<String> {
         "fig11" => Ok(fig_cutile(true, false, "Figure 11", exec)),
         "fig12" => Ok(fig_cutile(true, true, "Figure 12", exec)),
         "abl-order" => Ok(ablations::order_sweep(exec)),
+        "abl-policy" => Ok(ablations::policy_sweep(exec)),
         "abl-tile" => Ok(ablations::tile_sweep(exec)),
         "abl-jitter" => Ok(ablations::jitter_sweep(exec)),
         "abl-capacity" => Ok(ablations::capacity_sweep(exec)),

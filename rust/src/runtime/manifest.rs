@@ -209,6 +209,18 @@ impl Manifest {
         self.artifacts.iter().filter(|a| a.kind == ArtifactKind::Attention)
     }
 
+    /// Traversal-order column values of the attention artifacts shipped
+    /// for a (seq, causal, batch) shape, in manifest order (may repeat if
+    /// the manifest lists duplicates). The policy's artifact-selection
+    /// degradation ranks exactly this set by score when the preferred
+    /// order has no artifact.
+    pub fn attention_orders(&self, seq: usize, causal: bool, batch: usize) -> Vec<&str> {
+        self.attention_artifacts()
+            .filter(|a| a.seq == seq && a.causal == causal && a.batch == batch)
+            .map(|a| a.order.as_str())
+            .collect()
+    }
+
     pub fn mha_artifacts(&self) -> impl Iterator<Item = &ArtifactMeta> {
         self.artifacts.iter().filter(|a| a.kind == ArtifactKind::Mha)
     }
@@ -253,6 +265,16 @@ mha\tmha_x\tm.hlo.txt\t1\t4\t256\t64\t64\t64\t1\tsawtooth\tfloat32\t5
         .unwrap();
         let err = m.find("attn_x").unwrap().traversal().unwrap_err();
         assert!(format!("{err:#}").contains("unknown traversal 'spiral'"));
+    }
+
+    #[test]
+    fn attention_orders_filter_by_shape() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.attention_orders(256, false, 1), vec!["cyclic"]);
+        assert_eq!(m.attention_orders(256, true, 1), vec!["sawtooth"]);
+        assert!(m.attention_orders(512, false, 1).is_empty());
+        let syn = Manifest::synthetic_serving_grid();
+        assert_eq!(syn.attention_orders(128, false, 4), vec!["cyclic", "sawtooth"]);
     }
 
     #[test]

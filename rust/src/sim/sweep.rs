@@ -118,11 +118,23 @@ fn mattson_supported(cfg: &SimConfig) -> bool {
 pub struct SweepSpec {
     pub name: String,
     pub configs: Vec<SimConfig>,
+    /// Optional scoring objective the submitter intends to rank the
+    /// results under (canonical name, e.g. `min-misses`). Carried by the
+    /// sweep-service line protocol's `objective=` header and validated at
+    /// parse time; inert during execution — results are always the full
+    /// grid in input order.
+    pub objective: Option<String>,
 }
 
 impl SweepSpec {
     pub fn new(name: impl Into<String>, configs: Vec<SimConfig>) -> Self {
-        SweepSpec { name: name.into(), configs }
+        SweepSpec { name: name.into(), configs, objective: None }
+    }
+
+    /// Annotate the spec with a scoring objective (see [`Self::objective`]).
+    pub fn with_objective(mut self, objective: impl Into<String>) -> Self {
+        self.objective = Some(objective.into());
+        self
     }
 
     pub fn len(&self) -> usize {
@@ -373,6 +385,64 @@ impl SweepExecutor {
                 .clone();
         }
         self.run_one(cfg)
+    }
+
+    /// Fan [`Self::run_at_capacity`] out over the thread pool: every
+    /// uncached capacity-independent identity in `configs` is profiled
+    /// concurrently (one Mattson pass per distinct identity, even
+    /// singletons — unlike [`Self::run_all`], which only profiles groups
+    /// of ≥ 2 capacities), then each config's result derives from its
+    /// curve. This is the policy engine's registry-wide scoring
+    /// primitive: N candidate traversals profile in parallel on the first
+    /// probe of a shape, and every later probe — at this or any other L2
+    /// capacity — is answered from the cached curves without simulating.
+    /// Bit-identical to [`Self::run_all`]; with the fast path disabled it
+    /// delegates to it.
+    pub fn run_at_capacity_all(&self, configs: &[SimConfig]) -> Vec<Arc<SimResult>> {
+        if !self.mattson {
+            return self.run_all(configs);
+        }
+        // Distinct profile identities not yet resolved, in first-appearance
+        // order (deterministic work distribution).
+        let mut todo: Vec<SimConfig> = Vec::new();
+        {
+            let cache = self.cache.lock().unwrap();
+            let profiles = self.profiles.lock().unwrap();
+            let mut seen: FxHashMap<ProfileKey, ()> = FxHashMap::default();
+            for cfg in configs {
+                if !mattson_supported(cfg) || cache.contains_key(&ConfigKey::of(cfg)) {
+                    continue;
+                }
+                let key = ProfileKey::of(cfg);
+                if profiles.contains_key(&key) || seen.contains_key(&key) {
+                    continue;
+                }
+                seen.insert(key, ());
+                todo.push(cfg.clone());
+            }
+        }
+        let workers = self.threads.min(todo.len());
+        if workers > 1 {
+            let next = AtomicUsize::new(0);
+            let todo_ref = &todo;
+            let next_ref = &next;
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(move || loop {
+                        let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                        if i >= todo_ref.len() {
+                            break;
+                        }
+                        self.profile_one(&todo_ref[i]);
+                    });
+                }
+            });
+        } else {
+            for cfg in &todo {
+                self.profile_one(cfg);
+            }
+        }
+        configs.iter().map(|cfg| self.run_at_capacity(cfg)).collect()
     }
 
     /// Result from an already-cached capacity curve, if one applies.
@@ -807,6 +877,64 @@ mod tests {
         }
         // The fast path engaged: one profile pass per order.
         assert_eq!(chunked.profiled_len(), 2);
+    }
+
+    #[test]
+    fn run_at_capacity_all_profiles_singletons_in_parallel() {
+        // Four distinct traversals at ONE capacity each: run_all would plan
+        // four plain simulations (no group has 2 capacities), but the probe
+        // fan-out profiles every identity so later what-ifs are free.
+        let orders = [
+            TraversalRef::cyclic(),
+            TraversalRef::sawtooth(),
+            TraversalRef::diagonal(),
+            TraversalRef::block_snake(4),
+        ];
+        let configs: Vec<SimConfig> =
+            orders.iter().map(|o| small_cfg(512, o.clone())).collect();
+        let exec = SweepExecutor::new(3);
+        let rs = exec.run_at_capacity_all(&configs);
+        assert_eq!(exec.profiled_len(), 4, "every candidate identity profiled");
+        for (cfg, r) in configs.iter().zip(&rs) {
+            assert_eq!(**r, Simulator::new(cfg.clone()).run());
+        }
+        // A new capacity for every candidate: pure curve lookups.
+        let halved: Vec<SimConfig> = configs
+            .iter()
+            .map(|c| {
+                let mut c = c.clone();
+                c.device.l2_bytes /= 2;
+                c
+            })
+            .collect();
+        let rs2 = exec.run_at_capacity_all(&halved);
+        assert_eq!(exec.profiled_len(), 4, "what-ifs must not re-profile");
+        for (cfg, r) in halved.iter().zip(&rs2) {
+            assert_eq!(**r, Simulator::new(cfg.clone()).run());
+        }
+    }
+
+    #[test]
+    fn run_at_capacity_all_matches_exact_path() {
+        let orders = [TraversalRef::cyclic(), TraversalRef::sawtooth()];
+        let configs: Vec<SimConfig> =
+            orders.iter().map(|o| small_cfg(256, o.clone())).collect();
+        let fast = SweepExecutor::new(2);
+        let exact = SweepExecutor::new(2).with_mattson(false);
+        let a = fast.run_at_capacity_all(&configs);
+        let b = exact.run_at_capacity_all(&configs);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(**x, **y);
+        }
+        assert_eq!(exact.profiled_len(), 0, "exact path must not profile");
+    }
+
+    #[test]
+    fn spec_objective_annotation_round_trips() {
+        let spec = SweepSpec::new("scored", vec![small_cfg(256, TraversalRef::cyclic())])
+            .with_objective("min-misses");
+        assert_eq!(spec.objective.as_deref(), Some("min-misses"));
+        assert_eq!(SweepSpec::new("plain", Vec::new()).objective, None);
     }
 
     #[test]

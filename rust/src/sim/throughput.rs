@@ -79,6 +79,15 @@ pub struct ThroughputReport {
     pub bound_by: &'static str,
 }
 
+impl ThroughputReport {
+    /// Estimated speedup of this launch over `baseline` (> 1 when this
+    /// one is faster) — the comparison every cost report and policy
+    /// decision quotes against the cyclic baseline.
+    pub fn speedup_over(&self, baseline: &ThroughputReport) -> f64 {
+        baseline.time_s / self.time_s
+    }
+}
+
 /// Convert simulated counters into a throughput estimate.
 pub fn estimate(
     w: &AttentionWorkload,
@@ -175,6 +184,17 @@ mod tests {
         let r = estimate(&w, &dev, &counters(0, 1_000_000), &p);
         assert_eq!(r.t_exposed_s, 0.0);
         assert!((r.tflops * 1e12 - p.peak_flops).abs() / p.peak_flops < 0.2);
+    }
+
+    #[test]
+    fn speedup_over_compares_times() {
+        let w = AttentionWorkload::cutile_study(8, false);
+        let dev = DeviceSpec::gb10();
+        let p = PerfProfile::cutile();
+        let slow = estimate(&w, &dev, &counters(370_000_000, 14_000_000_000), &p);
+        let fast = estimate(&w, &dev, &counters(120_000_000, 14_000_000_000), &p);
+        assert!(fast.speedup_over(&slow) > 1.0);
+        assert!((slow.speedup_over(&slow) - 1.0).abs() < 1e-12);
     }
 
     #[test]

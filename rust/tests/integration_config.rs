@@ -1,6 +1,7 @@
 //! The shipped config files must parse into valid run configurations.
 
-use sawtooth_attn::config::{Config, ServeConfig, SimRunConfig};
+use sawtooth_attn::config::{Config, PolicyOrder, ServeConfig, SimRunConfig};
+use sawtooth_attn::coordinator::cost::Objective;
 use sawtooth_attn::sim::kernel_model::KernelVariant;
 use sawtooth_attn::sim::traversal::TraversalRef;
 
@@ -31,6 +32,12 @@ fn serve_config_parses() {
     assert_eq!(s.max_batch, 4);
     assert_eq!(s.order, TraversalRef::sawtooth());
     assert!(s.warmup);
+    // The shipped config demonstrates auto mode: the policy engine picks
+    // the per-shape winner under min-misses on one probe thread.
+    assert_eq!(s.policy.order, PolicyOrder::Auto);
+    assert_eq!(s.policy.objective.name(), "min-misses");
+    assert!(s.policy.candidates.is_empty(), "registry-wide default set");
+    assert_eq!(s.policy.probe_threads, 1);
 }
 
 #[test]

@@ -1,7 +1,7 @@
 //! Integration tests of the serving coordinator: batching, back-pressure,
 //! correctness under concurrency, failure paths.
 
-use sawtooth_attn::config::ServeConfig;
+use sawtooth_attn::config::{PolicyConfig, ServeConfig};
 use sawtooth_attn::coordinator::{AttentionRequest, Engine};
 use sawtooth_attn::runtime::{attention_host_ref, default_artifacts_dir};
 use sawtooth_attn::sim::traversal::TraversalRef;
@@ -16,6 +16,7 @@ fn cfg() -> ServeConfig {
         queue_depth: 32,
         clients: 2,
         warmup: false,
+        policy: PolicyConfig::default(),
     }
 }
 

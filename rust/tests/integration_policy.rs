@@ -1,0 +1,258 @@
+//! Integration tests of the registry-wide policy engine: the min-misses
+//! decision property across the whole candidate set and a ladder of L2
+//! capacities, artifact-selection degradation for partial manifests,
+//! `order = auto` serving with memoized per-shape decisions, and a legacy
+//! compat shim mirroring the retired cyclic-vs-sawtooth `GpuEstimate`
+//! view of a [`CostReport`].
+
+use std::sync::Arc;
+
+use sawtooth_attn::config::{PolicyConfig, PolicyOrder, ServeConfig};
+use sawtooth_attn::coordinator::cost::{
+    default_candidates, CostReport, MaxTflops, MinMisses,
+};
+use sawtooth_attn::coordinator::policy::{self, PolicyEngine, SchedulePolicy};
+use sawtooth_attn::coordinator::{AttentionRequest, Engine};
+use sawtooth_attn::runtime::{default_artifacts_dir, Runtime};
+use sawtooth_attn::sim::sweep::SweepExecutor;
+use sawtooth_attn::sim::traversal::TraversalRef;
+use sawtooth_attn::util::proptest::check;
+use sawtooth_attn::util::rng::Rng;
+use sawtooth_attn::AttentionWorkload;
+
+/// Property (ISSUE 5): under `min-misses`, `decide` never selects a
+/// traversal with more misses than the cyclic baseline at the probed
+/// capacity — across the whole registry (plus block-snake widths) and
+/// capacities {4, 6, 24} MiB.
+#[test]
+fn prop_min_misses_winner_never_worse_than_cyclic() {
+    // One engine for the whole property: the probe executor memoizes each
+    // (shape, order) into a capacity curve, so repeated cases are lookups.
+    let engine = PolicyEngine::with_executor(
+        Arc::new(MinMisses),
+        default_candidates(),
+        Arc::new(SweepExecutor::new(2)),
+    );
+    let seqs = [16u64 * 1024, 32 * 1024];
+    let caps_mib = [4u64, 6, 24];
+    check("min-misses-never-worse-than-cyclic", 12, |g| {
+        let seq = *g.choose(&seqs);
+        let cap = *g.choose(&caps_mib) << 20;
+        let w = AttentionWorkload::cuda_study(seq).with_tile(64);
+        let d = engine.decide_at(&w, cap);
+        let win = d.winner_estimate();
+        let base = &d.report.baseline;
+        if win.l2_miss_sectors > base.l2_miss_sectors {
+            return Err(format!(
+                "seq={seq} l2={cap}: winner {} has {} misses > cyclic {}",
+                win.order, win.l2_miss_sectors, base.l2_miss_sectors
+            ));
+        }
+        // The winner is the candidate-set minimum, and every candidate was
+        // scored.
+        if d.ranking.len() != engine.candidates().len() {
+            return Err("not every candidate was scored".to_string());
+        }
+        let min = d
+            .report
+            .candidates
+            .iter()
+            .map(|e| e.l2_miss_sectors)
+            .min()
+            .expect("non-empty candidate set");
+        if win.l2_miss_sectors != min {
+            return Err(format!(
+                "winner {} misses {} != candidate minimum {min}",
+                win.order, win.l2_miss_sectors
+            ));
+        }
+        // Decisions are memoized: the replay must be a cache hit with the
+        // identical winner.
+        let again = engine.decide_at(&w, cap);
+        if !again.cached || again.winner != d.winner {
+            return Err("repeat decision was not a stable cache hit".to_string());
+        }
+        Ok(())
+    });
+}
+
+/// Past the cache-pressure knee an alternating traversal must win under
+/// min-misses (KV = 8 MiB against 4 MiB of L2), and the winner's estimate
+/// must come from the cached curves (no extra profiling vs the candidate
+/// count).
+#[test]
+fn pressured_capacity_is_won_by_an_alternating_traversal() {
+    let engine = PolicyEngine::with_executor(
+        Arc::new(MinMisses),
+        default_candidates(),
+        Arc::new(SweepExecutor::new(1)),
+    );
+    let w = AttentionWorkload::cuda_study(32 * 1024).with_tile(64);
+    let d = engine.decide_at(&w, 4 << 20);
+    assert_ne!(d.winner.name(), "cyclic", "pressured regime must not tie to baseline");
+    assert!(d.winner_estimate().l2_miss_sectors < d.report.baseline.l2_miss_sectors);
+    let profiles = engine.executor().profiled_len();
+    assert!(profiles <= engine.candidates().len() + 1, "one curve per candidate");
+    // A second capacity: new decision, zero new curves.
+    engine.decide_at(&w, 6 << 20);
+    assert_eq!(engine.executor().profiled_len(), profiles);
+}
+
+fn tmp_artifacts_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("sawtooth-policy-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn serving_workload(seq: u64, causal: bool) -> AttentionWorkload {
+    AttentionWorkload {
+        batch: 1,
+        heads: 4,
+        seq,
+        head_dim: 64,
+        elem_bytes: 2,
+        tile: 64,
+        causal,
+    }
+}
+
+/// Regression (ISSUE 5 satellite): a manifest that ships sawtooth-only
+/// used to fail under a cyclic policy (the fallback was hardcoded to
+/// cyclic). Selection must degrade to the best traversal that *has* an
+/// artifact, and only error when the shape has none at all.
+#[test]
+fn sawtooth_only_manifest_serves_cyclic_policy() {
+    let dir = tmp_artifacts_dir("sawtooth-only");
+    std::fs::write(
+        dir.join("manifest.tsv"),
+        "attention\tattn_s\ts.hlo.txt\t1\t4\t128\t64\t64\t64\t0\tsawtooth\tfloat32\t3\n",
+    )
+    .unwrap();
+    let rt = Runtime::open(&dir).unwrap();
+    let policy = SchedulePolicy::fixed(TraversalRef::cyclic());
+    let w = serving_workload(128, false);
+    let meta = policy.select_artifact(&rt, &w, 1).unwrap();
+    assert_eq!(meta.order, "sawtooth", "must degrade to the shipped artifact");
+    // A shape with no artifact at all still errors.
+    let err = policy.select_artifact(&rt, &serving_workload(256, false), 1).unwrap_err();
+    assert!(format!("{err:#}").contains("no attention artifact"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// With several artifacts and the preferred order missing, the fallback
+/// ranks the *available* orders under the policy's objective — ties (the
+/// cache-resident serving shapes) resolve deterministically to the first
+/// manifest order, under any objective.
+#[test]
+fn fallback_ranks_available_orders_deterministically() {
+    let dir = tmp_artifacts_dir("two-orders");
+    std::fs::write(
+        dir.join("manifest.tsv"),
+        "attention\tattn_r\tr.hlo.txt\t1\t4\t128\t64\t64\t64\t0\treverse-cyclic\tfloat32\t3\n\
+         attention\tattn_s\ts.hlo.txt\t1\t4\t128\t64\t64\t64\t0\tsawtooth\tfloat32\t3\n",
+    )
+    .unwrap();
+    let rt = Runtime::open(&dir).unwrap();
+    let w = serving_workload(128, false);
+    // Preferred order (diagonal) has no artifact → score the shipped set.
+    let policy = SchedulePolicy::fixed(TraversalRef::diagonal());
+    let first = policy.select_artifact(&rt, &w, 1).unwrap().name.clone();
+    let again = policy.select_artifact(&rt, &w, 1).unwrap().name.clone();
+    assert_eq!(first, again, "degradation must be deterministic");
+    assert_eq!(first, "attn_r", "tied scores keep manifest order");
+    let max_tflops = SchedulePolicy::auto(Arc::new(PolicyEngine::with_executor(
+        Arc::new(MaxTflops),
+        vec![TraversalRef::diagonal()], // winner has no artifact either
+        Arc::new(SweepExecutor::new(1)),
+    )));
+    assert_eq!(max_tflops.select_artifact(&rt, &w, 1).unwrap().name, "attn_r");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `order = auto` serving end to end: per-shape winners come from the
+/// decision cache after the first dispatch (the acceptance criterion's
+/// "without re-simulating" — asserted via the engine's cache-hit stats),
+/// and at cache-resident serving shapes the tie goes to the cyclic
+/// baseline artifacts.
+#[test]
+fn auto_mode_serves_from_decision_cache() {
+    let cfg = ServeConfig {
+        artifacts_dir: default_artifacts_dir().display().to_string(),
+        max_batch: 4,
+        batch_window_us: 200,
+        order: TraversalRef::sawtooth(), // overridden by policy.order = auto
+        queue_depth: 32,
+        clients: 1,
+        warmup: false,
+        policy: PolicyConfig { order: PolicyOrder::Auto, ..PolicyConfig::default() },
+    };
+    let engine = Engine::start(cfg).unwrap();
+    let mut rng = Rng::new(31);
+    for i in 0..3 {
+        // Sequential submits → three single-request plans of one shape.
+        let resp = engine
+            .submit(AttentionRequest::synthetic(i, 128, 4, 64, false, &mut rng))
+            .unwrap();
+        assert!(
+            resp.artifact.contains("cyclic"),
+            "cache-resident shape must tie to the baseline, got {}",
+            resp.artifact
+        );
+    }
+    let stats = engine.shutdown();
+    assert_eq!(stats.completed, 3);
+    assert_eq!(stats.policy_decisions, 3);
+    assert!(
+        stats.decision_cache_hits >= 2,
+        "repeat dispatches of one shape must hit the decision cache, got {}",
+        stats.decision_cache_hits
+    );
+    assert!(stats.summary().contains("decisions"));
+}
+
+/// Legacy fixed-order serving stays intact: the sawtooth policy still
+/// selects sawtooth artifacts (the numerics/byte-parity tests live in
+/// integration_engine.rs — this pins the selection path post-redesign).
+#[test]
+fn fixed_mode_selection_is_unchanged() {
+    let rt = Runtime::open(default_artifacts_dir()).unwrap();
+    let w = serving_workload(128, false);
+    let saw = SchedulePolicy::fixed(TraversalRef::sawtooth());
+    assert_eq!(saw.select_artifact(&rt, &w, 1).unwrap().order, "sawtooth");
+    let cyc = SchedulePolicy::fixed(TraversalRef::cyclic());
+    assert_eq!(cyc.select_artifact(&rt, &w, 1).unwrap().order, "cyclic");
+    assert!(!saw.is_auto());
+    assert_eq!(saw.requested_order().unwrap().name(), "sawtooth");
+}
+
+/// Compat shim (tests only): the retired `GpuEstimate`'s cyclic-vs-
+/// sawtooth view of a [`CostReport`], for porting legacy assertions.
+struct LegacyEstimate {
+    cyclic_l2_misses: u64,
+    sawtooth_l2_misses: u64,
+    speedup: f64,
+}
+
+fn legacy_view(r: &CostReport) -> LegacyEstimate {
+    let saw = r.get("sawtooth").expect("sawtooth scored");
+    LegacyEstimate {
+        cyclic_l2_misses: r.baseline.l2_miss_sectors,
+        sawtooth_l2_misses: saw.l2_miss_sectors,
+        speedup: saw.speedup_vs_baseline,
+    }
+}
+
+#[test]
+fn legacy_estimate_shim_reproduces_the_paper_direction() {
+    // KV (8 MiB) > L2 (4 MiB): the legacy pair must favor sawtooth, as
+    // the retired estimator did on L2-exceeding shapes.
+    let w = AttentionWorkload::cuda_study(32 * 1024).with_tile(64);
+    let pair = [TraversalRef::cyclic(), TraversalRef::sawtooth()];
+    let e = legacy_view(&policy::cost_report_at(&w, &pair, 4 << 20));
+    assert!(e.sawtooth_l2_misses < e.cyclic_l2_misses);
+    assert!(e.speedup > 1.0, "speedup {}", e.speedup);
+    // Cache-resident: the pair ties, exactly like the old estimator.
+    let neutral = legacy_view(&policy::cost_report_at(&w, &pair, 24 << 20));
+    assert_eq!(neutral.cyclic_l2_misses, neutral.sawtooth_l2_misses);
+    assert!((neutral.speedup - 1.0).abs() < 1e-9);
+}

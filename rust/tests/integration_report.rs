@@ -64,6 +64,7 @@ fn abl_order_lists_every_registered_traversal() {
 #[test]
 fn ablation_ids_dispatch() {
     assert!(report::ABLATIONS.contains(&"abl-order"));
+    assert!(report::ABLATIONS.contains(&"abl-policy"));
     // Unknown ablation ids must hit the error arm (dispatch happens before
     // any simulation, so this is cheap even in debug builds).
     let err = report::run("abl-nope").unwrap_err();

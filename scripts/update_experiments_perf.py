@@ -1,10 +1,11 @@
 #!/usr/bin/env python3
 """Fill EXPERIMENTS.md's measured-numbers block from the bench JSON files.
 
-Reads rust/BENCH_sweep.json and rust/BENCH_reuse.json (produced by
-`cargo bench --bench bench_sweep` / `--bench bench_reuse`, or downloaded
-from the CI artifacts) and rewrites the region between the
-`<!-- BENCH:begin -->` / `<!-- BENCH:end -->` markers in EXPERIMENTS.md.
+Reads rust/BENCH_sweep.json, rust/BENCH_reuse.json and
+rust/BENCH_policy.json (produced by `cargo bench --bench bench_sweep` /
+`--bench bench_reuse` / `--bench bench_policy`, or downloaded from the CI
+artifacts) and rewrites the region between the `<!-- BENCH:begin -->` /
+`<!-- BENCH:end -->` markers in EXPERIMENTS.md.
 
 Usage: python3 scripts/update_experiments_perf.py   (from the repo root,
 or anywhere — paths are resolved relative to this file).
@@ -28,13 +29,13 @@ def load(name):
         return json.load(f)
 
 
-def render(sweep, reuse):
+def render(sweep, reuse, policy):
     lines = []
-    if sweep is None and reuse is None:
+    if sweep is None and reuse is None and policy is None:
         lines.append(
             "*No measured numbers yet: run `make bench-perf` on a ≥8-core "
-            "host (or download the CI `BENCH_sweep`/`BENCH_reuse` "
-            "artifacts into `rust/`) and re-run "
+            "host (or download the CI `BENCH_sweep`/`BENCH_reuse`/"
+            "`BENCH_policy` artifacts into `rust/`) and re-run "
             "`python3 scripts/update_experiments_perf.py`.*"
         )
         return lines
@@ -62,6 +63,25 @@ def render(sweep, reuse):
         lines.append("| 64 what-if capacities from cached curve | %.6f s |" % reuse["whatif_64caps_s"])
         lines.append("")
         lines.append("Results bit-identical across paths: `%s`." % reuse["results_identical"])
+        lines.append("")
+    if policy is not None:
+        lines.append(
+            "Policy engine (`bench_policy`, %d candidates, winner `%s`):"
+            % (policy["candidates"], policy["winner"])
+        )
+        lines.append("")
+        lines.append("| path | wall-clock |")
+        lines.append("|---|---|")
+        lines.append("| cold decide, 1 probe thread | %.3f s |" % policy["cold_decide_1t_s"])
+        lines.append(
+            "| cold decide, %d probe threads | %.3f s (**%.2fx**) |"
+            % (policy["threads"], policy["cold_decide_nt_s"], policy["fanout_speedup"])
+        )
+        lines.append("| cached decide (per call) | %.9f s |" % policy["cached_decide_s"])
+        lines.append(
+            "| %d per-capacity what-ifs from cached curves | %.6f s |"
+            % (policy["whatif_caps"], policy["whatif_s"])
+        )
     return lines
 
 
@@ -71,7 +91,9 @@ def main():
         sys.exit(f"markers {BEGIN} / {END} not found in {EXPERIMENTS}")
     head, rest = text.split(BEGIN, 1)
     _, tail = rest.split(END, 1)
-    block = "\n".join(render(load("BENCH_sweep.json"), load("BENCH_reuse.json")))
+    block = "\n".join(
+        render(load("BENCH_sweep.json"), load("BENCH_reuse.json"), load("BENCH_policy.json"))
+    )
     EXPERIMENTS.write_text(head + BEGIN + "\n" + block + "\n" + END + tail)
     print(f"updated {EXPERIMENTS}")
 
