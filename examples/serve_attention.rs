@@ -3,8 +3,10 @@
 //! Proves all layers compose: Pallas flash-attention kernels (L1) lowered
 //! through JAX (L2) to HLO artifacts, executed by the PJRT runtime inside
 //! the Rust serving coordinator (L3) under a concurrent synthetic load —
-//! with dynamic batching, back-pressure, and the sawtooth scheduling
-//! policy. Reports latency/throughput and validates numerics on the fly.
+//! with iteration-level continuous batching (token-budget admission,
+//! `waiting_served_ratio` dispatch), back-pressure, and the sawtooth
+//! scheduling policy. Reports latency/throughput and validates numerics
+//! on the fly.
 //!
 //! Also loads the small *real model* artifact (an MHA block with trained-
 //! style projection weights) and serves one forward pass through it.
@@ -15,7 +17,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use sawtooth_attn::config::{PolicyConfig, ServeConfig};
+use sawtooth_attn::config::{PolicyConfig, QueueConfig, QueueMode, ServeConfig};
 use sawtooth_attn::coordinator::{AttentionRequest, Engine};
 use sawtooth_attn::runtime::{attention_host_ref, default_artifacts_dir, Runtime};
 use sawtooth_attn::sim::traversal::TraversalRef;
@@ -37,13 +39,23 @@ fn main() -> Result<()> {
         clients: CLIENTS,
         warmup: true,
         policy: PolicyConfig::default(),
+        // The headline intake: iteration-level continuous batching with a
+        // bounded waiting queue and a per-dispatch token budget.
+        queue: QueueConfig {
+            mode: QueueMode::Continuous,
+            max_waiting: 64,
+            ..QueueConfig::default()
+        },
     };
     println!(
-        "engine: order={} max_batch={} window={}µs queue={}",
+        "engine: order={} max_batch={} window={}µs queue mode={} (max_waiting={}, \
+         token budget={})",
         cfg.order,
         cfg.max_batch,
         cfg.batch_window_us,
-        cfg.queue_depth
+        cfg.queue.mode,
+        cfg.queue.max_waiting,
+        cfg.queue.max_batch_total_tokens,
     );
     let engine = Engine::start(cfg)?;
 
@@ -122,8 +134,8 @@ fn main() -> Result<()> {
     let stats = engine.shutdown();
     println!("{}", stats.summary());
     println!("batch size histogram (size: dispatches):");
-    for (size, n) in stats.batch_size_hist.iter().enumerate() {
-        if *n > 0 {
+    for (size, n) in stats.batch_size_buckets() {
+        if n > 0 {
             println!("  {size:>2}: {n}");
         }
     }

@@ -1,61 +1,96 @@
-//! Serving-engine benchmarks: request throughput and latency vs batching
-//! policy. Requires `make artifacts`.
+//! Serving-engine benchmark: static windows vs iteration-level continuous
+//! batching under a mixed-size Poisson offered load. Emits
+//! `BENCH_serve.json` (in the crate directory) so the numbers are recorded
+//! machine-readably (EXPERIMENTS.md §Serving): per offered-load point,
+//! throughput, mean/p99 time-in-queue, shed rate, and mean tokens/batch
+//! for both intake modes.
 
 mod common;
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use common::report_rate;
-use sawtooth_attn::config::{PolicyConfig, ServeConfig};
-use sawtooth_attn::coordinator::{AttentionRequest, Engine};
+use sawtooth_attn::config::{PolicyConfig, QueueConfig, QueueMode, ServeConfig};
+use sawtooth_attn::coordinator::{AttentionRequest, Engine, EngineStats};
 use sawtooth_attn::runtime::default_artifacts_dir;
 use sawtooth_attn::sim::traversal::TraversalRef;
 use sawtooth_attn::util::rng::Rng;
 
-fn drive(
-    max_batch: usize,
-    window_us: u64,
-    requests: usize,
-    clients: usize,
-    warmup: bool,
-) -> Option<f64> {
-    let cfg = ServeConfig {
+const REQUESTS: usize = 240;
+const CLIENTS: usize = 6;
+const OFFERED_RPS: [f64; 3] = [100.0, 400.0, 1600.0];
+/// Max handles a client holds before draining (bounds client memory, not
+/// the engine).
+const IN_FLIGHT: usize = 16;
+
+struct RunPoint {
+    throughput_rps: f64,
+    tiq_mean_ms: f64,
+    tiq_p99_ms: f64,
+    shed_rate: f64,
+    mean_tokens_per_batch: f64,
+    mean_batch_size: f64,
+}
+
+fn serve_cfg(mode: QueueMode) -> ServeConfig {
+    ServeConfig {
         artifacts_dir: default_artifacts_dir().display().to_string(),
-        max_batch,
-        batch_window_us: window_us,
+        max_batch: 4,
+        batch_window_us: 2000,
         order: TraversalRef::sawtooth(),
-        queue_depth: 128,
-        clients,
-        warmup,
+        queue_depth: 64,
+        clients: CLIENTS,
+        warmup: true,
         policy: PolicyConfig::default(),
-    };
-    let engine = match Engine::start(cfg) {
+        queue: QueueConfig {
+            mode,
+            max_waiting: 64,
+            max_batch_total_tokens: 4 * 131_072, // four seq-512 requests
+            ..QueueConfig::default()
+        },
+    }
+}
+
+/// Drive one (mode, offered load) point: CLIENTS threads submit a mixed
+/// 128/256/512 load with Poisson (exponential) interarrival gaps tuned so
+/// the aggregate offered rate is `offered_rps`.
+fn drive(mode: QueueMode, offered_rps: f64) -> Option<(f64, EngineStats)> {
+    let engine = match Engine::start(serve_cfg(mode)) {
         Ok(e) => e,
         Err(e) => {
             eprintln!("skipping bench_coordinator: {e:#} (run `make artifacts`)");
             return None;
         }
     };
+    let mean_gap_s = CLIENTS as f64 / offered_rps;
     let t0 = Instant::now();
     std::thread::scope(|s| {
-        for c in 0..clients {
+        for c in 0..CLIENTS {
             let engine = &engine;
             s.spawn(move || {
-                let mut rng = Rng::new(c as u64);
+                let mut rng = Rng::new(0xBEEF ^ c as u64);
+                let seqs = [128usize, 256, 512];
                 let mut handles = Vec::new();
-                for i in 0..requests / clients {
+                for i in 0..REQUESTS / CLIENTS {
+                    // Exponential interarrival gap (capped so one long
+                    // draw can't stall a client).
+                    let u = (1.0 - rng.next_f64()).max(1e-12);
+                    let gap = (-u.ln() * mean_gap_s).min(0.05);
+                    std::thread::sleep(Duration::from_secs_f64(gap));
+                    let seq = seqs[rng.next_below(3) as usize];
                     let req = AttentionRequest::synthetic(
                         (c * 10_000 + i) as u64,
-                        128,
+                        seq,
                         4,
                         64,
                         false,
                         &mut rng,
                     );
+                    // Rejections (back-pressure / shed) are part of the
+                    // measurement: the request is simply lost.
                     if let Ok(h) = engine.submit_async(req) {
                         handles.push(h);
                     }
-                    if handles.len() >= 8 {
+                    if handles.len() >= IN_FLIGHT {
                         for h in handles.drain(..) {
                             let _ = h.wait();
                         }
@@ -69,32 +104,85 @@ fn drive(
     });
     let elapsed = t0.elapsed();
     let stats = engine.shutdown();
-    report_rate(
-        &format!(
-            "engine/max_batch={max_batch} window={window_us}us mean_batch={:.2}",
-            stats.mean_batch_size()
-        ),
-        stats.completed,
-        elapsed,
-    );
+    Some((elapsed.as_secs_f64(), stats))
+}
+
+fn point(mode: QueueMode, offered_rps: f64) -> Option<RunPoint> {
+    let (elapsed_s, stats) = drive(mode, offered_rps)?;
+    let offered = stats.submitted + stats.rejected;
+    let shed_rate = if offered == 0 {
+        0.0
+    } else {
+        stats.rejected as f64 / offered as f64
+    };
+    let p = RunPoint {
+        throughput_rps: stats.completed as f64 / elapsed_s,
+        tiq_mean_ms: stats.time_in_queue.mean(),
+        tiq_p99_ms: stats.time_in_queue.p99(),
+        shed_rate,
+        mean_tokens_per_batch: stats.mean_tokens_per_batch(),
+        mean_batch_size: stats.mean_batch_size(),
+    };
     println!(
-        "      latency p50 {:.2} ms  p99 {:.2} ms",
-        stats.latency.p50(),
-        stats.latency.p99()
+        "bench serve/{mode:<10} offered {offered_rps:>6.0} rps  →  {:.1} req/s, \
+         in-queue mean {:.2} ms p99 {:.2} ms, shed {:.1}%, \
+         tokens/batch {:.0}, mean batch {:.2}",
+        p.throughput_rps,
+        p.tiq_mean_ms,
+        p.tiq_p99_ms,
+        100.0 * p.shed_rate,
+        p.mean_tokens_per_batch,
+        p.mean_batch_size,
     );
-    Some(stats.completed as f64 / elapsed.as_secs_f64())
+    Some(p)
+}
+
+fn json_point(p: &RunPoint) -> String {
+    format!(
+        "{{\"throughput_rps\": {:.3}, \"tiq_mean_ms\": {:.4}, \"tiq_p99_ms\": {:.4}, \
+         \"shed_rate\": {:.4}, \"mean_tokens_per_batch\": {:.1}, \"mean_batch_size\": {:.3}}}",
+        p.throughput_rps,
+        p.tiq_mean_ms,
+        p.tiq_p99_ms,
+        p.shed_rate,
+        p.mean_tokens_per_batch,
+        p.mean_batch_size,
+    )
 }
 
 fn main() {
-    println!("== bench_coordinator: serving throughput vs batching policy ==");
-    // Cold (compile on the request path) vs warm, unbatched vs batched.
-    let cold = drive(1, 50, 32, 4, false);
-    let unbatched = drive(1, 50, 64, 4, true);
-    let batched = drive(4, 2000, 64, 4, true);
-    if let Some(c) = cold {
-        println!("cold-start throughput: {c:.2} req/s");
+    println!(
+        "== bench_coordinator: static windows vs continuous batching \
+         ({REQUESTS} requests, {CLIENTS} clients, mixed 128/256/512 Poisson load) =="
+    );
+    let mut entries = Vec::new();
+    for &rps in &OFFERED_RPS {
+        let st = point(QueueMode::Static, rps);
+        let co = point(QueueMode::Continuous, rps);
+        let (Some(st), Some(co)) = (st, co) else {
+            return; // skip reason already printed
+        };
+        println!(
+            "      continuous vs static at {rps:.0} rps: tokens/batch {:.2}x, \
+             in-queue p99 {:.2}x",
+            co.mean_tokens_per_batch / st.mean_tokens_per_batch.max(1.0),
+            co.tiq_p99_ms / st.tiq_p99_ms.max(1e-9),
+        );
+        entries.push(format!(
+            "    {{\"offered_rps\": {rps:.0}, \"static\": {}, \"continuous\": {}}}",
+            json_point(&st),
+            json_point(&co)
+        ));
     }
-    if let (Some(u), Some(b)) = (unbatched, batched) {
-        println!("batching speedup (warm): {:.2}x", b / u);
+    let json = format!(
+        "{{\n  \"bench\": \"serve\",\n  \"requests\": {REQUESTS},\n  \"clients\": {CLIENTS},\n  \
+         \"points\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    let path = "BENCH_serve.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
+    print!("{json}");
 }

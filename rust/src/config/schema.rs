@@ -210,6 +210,103 @@ impl PolicyConfig {
     }
 }
 
+/// Intake mode of the serving coordinator (`[queue] mode`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QueueMode {
+    /// Legacy intake: a bounded channel drained in fixed
+    /// `batch_window_us` windows. Byte-identical to the pre-queue engine
+    /// (responses and `EngineStats::summary`).
+    #[default]
+    Static,
+    /// Iteration-level continuous batching: one shared waiting queue with
+    /// token-budget admission, `waiting_served_ratio` dispatch, per-request
+    /// cancellation, and overload shedding.
+    Continuous,
+}
+
+impl std::str::FromStr for QueueMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "static" => Ok(QueueMode::Static),
+            "continuous" => Ok(QueueMode::Continuous),
+            other => bail!("unknown queue mode '{other}' — expected static | continuous"),
+        }
+    }
+}
+
+impl std::fmt::Display for QueueMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            QueueMode::Static => "static",
+            QueueMode::Continuous => "continuous",
+        })
+    }
+}
+
+/// Admission-control knobs of the serving coordinator (`[queue]`
+/// section). Only read in `mode = continuous` except where noted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueueConfig {
+    /// Intake mode (`static` | `continuous`).
+    pub mode: QueueMode,
+    /// Most requests allowed to wait in the shared queue before admission
+    /// rejects with `EngineError::QueueFull`.
+    pub max_waiting: usize,
+    /// Token budget (q/k/v elements, `AttentionRequest::elems`) per
+    /// dispatch; 0 = unbounded. The oldest waiting request is always
+    /// admitted, so one over-budget request cannot wedge the queue.
+    pub max_batch_total_tokens: u64,
+    /// Dispatch heuristic: serve as soon as
+    /// `waiting >= ratio × last_served` instead of waiting out the full
+    /// batch window. Lower values dispatch sooner (lower latency);
+    /// higher values wait for fuller batches (higher throughput).
+    pub waiting_served_ratio: f64,
+    /// Most response handles a process may hold in flight before
+    /// admission sheds with `EngineError::ShedOverload`; 0 = unlimited.
+    /// Enforced in both intake modes (the static default, 0, keeps legacy
+    /// behaviour).
+    pub max_concurrent_clients: usize,
+}
+
+impl Default for QueueConfig {
+    fn default() -> Self {
+        QueueConfig {
+            mode: QueueMode::Static,
+            max_waiting: 256,
+            max_batch_total_tokens: 1 << 20,
+            waiting_served_ratio: 1.2,
+            max_concurrent_clients: 0,
+        }
+    }
+}
+
+impl QueueConfig {
+    pub fn from_config(c: &Config) -> Result<Self> {
+        let d = Self::default();
+        let mode: QueueMode = c.str("queue.mode", "static").parse().context("queue.mode")?;
+        let cfg = QueueConfig {
+            mode,
+            max_waiting: c.int("queue.max_waiting", d.max_waiting as i64) as usize,
+            max_batch_total_tokens: c
+                .int("queue.max_batch_total_tokens", d.max_batch_total_tokens as i64)
+                as u64,
+            waiting_served_ratio: c.float("queue.waiting_served_ratio", d.waiting_served_ratio),
+            max_concurrent_clients: c
+                .int("queue.max_concurrent_clients", d.max_concurrent_clients as i64)
+                as usize,
+        };
+        if cfg.max_waiting == 0 {
+            bail!("queue.max_waiting must be >= 1");
+        }
+        if !cfg.waiting_served_ratio.is_finite() || cfg.waiting_served_ratio <= 0.0 {
+            bail!("queue.waiting_served_ratio must be a finite positive number");
+        }
+        Ok(cfg)
+    }
+}
+
 /// Configuration of the serving coordinator (`sawtooth serve`).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -231,6 +328,9 @@ pub struct ServeConfig {
     pub warmup: bool,
     /// Policy-engine knobs (`[policy]` section).
     pub policy: PolicyConfig,
+    /// Intake-queue knobs (`[queue]` section): mode, admission limits,
+    /// dispatch heuristic.
+    pub queue: QueueConfig,
 }
 
 impl Default for ServeConfig {
@@ -244,6 +344,7 @@ impl Default for ServeConfig {
             clients: 4,
             warmup: false,
             policy: PolicyConfig::default(),
+            queue: QueueConfig::default(),
         }
     }
 }
@@ -262,6 +363,7 @@ impl ServeConfig {
             clients: c.int("serve.clients", d.clients as i64) as usize,
             warmup: c.bool("serve.warmup", d.warmup),
             policy: PolicyConfig::from_config(c)?,
+            queue: QueueConfig::from_config(c)?,
         };
         if cfg.max_batch == 0 || cfg.queue_depth == 0 {
             bail!("serve.max_batch and serve.queue_depth must be >= 1");
@@ -467,6 +569,59 @@ mod tests {
         // No [policy] section: default inherits the serve.order knob.
         let s = ServeConfig::from_config(&Config::parse("").unwrap()).unwrap();
         assert_eq!(s.policy.order, PolicyOrder::Inherit);
+    }
+
+    #[test]
+    fn queue_config_defaults_and_parse() {
+        // Absent section: static mode with the legacy-compatible defaults.
+        let d = QueueConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(d, QueueConfig::default());
+        assert_eq!(d.mode, QueueMode::Static);
+        assert_eq!(d.max_waiting, 256);
+        assert_eq!(d.max_batch_total_tokens, 1 << 20);
+        assert!((d.waiting_served_ratio - 1.2).abs() < 1e-12);
+        assert_eq!(d.max_concurrent_clients, 0);
+
+        let c = Config::parse(
+            "[queue]\nmode = continuous\nmax_waiting = 64\n\
+             max_batch_total_tokens = 524288\nwaiting_served_ratio = 0.8\n\
+             max_concurrent_clients = 12",
+        )
+        .unwrap();
+        let q = QueueConfig::from_config(&c).unwrap();
+        assert_eq!(q.mode, QueueMode::Continuous);
+        assert_eq!(q.max_waiting, 64);
+        assert_eq!(q.max_batch_total_tokens, 524_288);
+        assert!((q.waiting_served_ratio - 0.8).abs() < 1e-12);
+        assert_eq!(q.max_concurrent_clients, 12);
+        // Modes round-trip through Display.
+        assert_eq!(QueueMode::Continuous.to_string().parse::<QueueMode>().unwrap(), q.mode);
+    }
+
+    #[test]
+    fn queue_config_rejects_bad_values() {
+        let c = Config::parse("[queue]\nmode = adaptive").unwrap();
+        let msg = format!("{:#}", QueueConfig::from_config(&c).unwrap_err());
+        assert!(msg.contains("queue.mode"), "{msg}");
+        assert!(msg.contains("unknown queue mode 'adaptive'"), "{msg}");
+        assert!(msg.contains("static | continuous"), "{msg}");
+        let c = Config::parse("[queue]\nmax_waiting = 0").unwrap();
+        assert!(QueueConfig::from_config(&c).is_err());
+        let c = Config::parse("[queue]\nwaiting_served_ratio = 0.0").unwrap();
+        assert!(QueueConfig::from_config(&c).is_err());
+        let c = Config::parse("[queue]\nwaiting_served_ratio = -2.5").unwrap();
+        assert!(QueueConfig::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn serve_config_carries_queue_section() {
+        let c = Config::parse("[serve]\nmax_batch = 4\n[queue]\nmode = continuous").unwrap();
+        let s = ServeConfig::from_config(&c).unwrap();
+        assert_eq!(s.max_batch, 4);
+        assert_eq!(s.queue.mode, QueueMode::Continuous);
+        // No [queue] section: static legacy intake.
+        let s = ServeConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(s.queue.mode, QueueMode::Static);
     }
 
     #[test]

@@ -13,8 +13,16 @@
 //! * [`policy::PolicyEngine`] / [`policy::SchedulePolicy`] — memoized
 //!   per-shape traversal decisions (`order = auto`) and artifact selection
 //!   with score-ordered degradation.
-//! * [`Engine`] — bounded submission queue (back-pressure), a pipeline
-//!   thread running batcher + PJRT executor, and latency/throughput stats.
+//! * [`queue::Queue`] — the shared waiting queue behind
+//!   `[queue] mode = continuous`: token-budget admission
+//!   (`max_batch_total_tokens`), iteration-level continuous batching with
+//!   the `waiting_served_ratio` dispatch heuristic, per-request
+//!   cancellation (drop the [`ResponseHandle`] ⇒ eviction before
+//!   dispatch), and overload shedding, all surfaced as typed
+//!   [`EngineError`]s. `mode = static` keeps the legacy bounded channel
+//!   drained in fixed windows, byte-identical to the pre-queue engine.
+//! * [`Engine`] — admission control + a pipeline thread running batcher +
+//!   PJRT executor, with latency/throughput/queue stats.
 //! * [`sweep_service::SweepService`] — the sweep subsystem
 //!   ([`crate::sim::sweep`]) exposed as a coordinator service: clients
 //!   submit [`request::SweepRequest`] grids alongside attention traffic
@@ -28,6 +36,7 @@
 pub mod batcher;
 pub mod cost;
 pub mod policy;
+pub mod queue;
 pub mod request;
 pub mod stats;
 pub mod sweep_service;
@@ -35,6 +44,7 @@ pub mod sweep_service;
 pub use batcher::{BatchPlan, Batcher};
 pub use cost::{CostReport, Objective, TraversalEstimate};
 pub use policy::{PolicyDecision, PolicyEngine, SchedulePolicy};
+pub use queue::EngineError;
 pub use request::{
     AttentionRequest, AttentionResponse, ClientId, RequestId, SweepChunk, SweepRequest,
     SweepResponse,
@@ -42,51 +52,99 @@ pub use request::{
 pub use stats::{EngineStats, SweepServiceStats};
 pub use sweep_service::{SweepService, SweepTicket};
 
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::{ServeConfig, SweepServiceConfig};
+use crate::config::{QueueMode, ServeConfig, SweepServiceConfig};
 use crate::runtime::Runtime;
 use crate::sim::SweepSpec;
 
-/// A queued submission: the request plus its response channel.
+use queue::{Permit, Queue, QueueEntry, Semaphore};
+
+/// A queued submission: the request plus its response channel (static
+/// intake mode).
 struct Submission {
     req: AttentionRequest,
     enqueued: Instant,
-    resp_tx: std::sync::mpsc::Sender<Result<AttentionResponse>>,
+    resp_tx: Sender<Result<AttentionResponse>>,
 }
 
 /// Handle returned by [`Engine::submit_async`].
+///
+/// Dropping the handle without calling [`ResponseHandle::wait`] cancels
+/// the request: in continuous intake mode a still-waiting request is
+/// evicted from the queue before dispatch (counted in
+/// `EngineStats::cancelled_total`); a request already dispatched runs to
+/// completion and its response is discarded.
 pub struct ResponseHandle {
     rx: Receiver<Result<AttentionResponse>>,
+    /// Cancel flag shared with the queued entry (continuous mode only).
+    /// Disarmed by `wait`; armed by `drop`.
+    cancel: Option<Arc<AtomicBool>>,
+    /// Concurrency-limiter permit (`max_concurrent_clients`), released
+    /// when the handle resolves or is dropped.
+    _permit: Option<Permit>,
 }
 
 impl ResponseHandle {
     /// Block until the response arrives.
-    pub fn wait(self) -> Result<AttentionResponse> {
+    pub fn wait(mut self) -> Result<AttentionResponse> {
+        // Disarm cancellation first: a handle that is being waited on must
+        // never evict its own request.
+        self.cancel = None;
         self.rx
             .recv()
-            .map_err(|_| anyhow!("engine dropped the request (shutdown?)"))?
+            .map_err(|_| anyhow::Error::new(EngineError::ShuttingDown))?
     }
+
+    /// Cancel the request explicitly (equivalent to dropping the handle).
+    pub fn cancel(self) {}
+}
+
+impl Drop for ResponseHandle {
+    fn drop(&mut self) {
+        if let Some(flag) = &self.cancel {
+            flag.store(true, Ordering::Release);
+        }
+    }
+}
+
+/// Where [`Engine::submit_async`] sends accepted requests.
+enum Intake {
+    /// Legacy bounded channel drained in fixed windows.
+    Static(SyncSender<Submission>),
+    /// Shared waiting queue with continuous batching.
+    Continuous(Arc<Queue>),
+    /// The engine was shut down.
+    Closed,
 }
 
 /// The serving engine.
 pub struct Engine {
-    tx: Option<SyncSender<Submission>>,
-    pipeline: Option<JoinHandle<()>>,
+    intake: Mutex<Intake>,
+    pipeline: Mutex<Option<JoinHandle<()>>>,
     stats: Arc<Mutex<EngineStats>>,
     cfg: ServeConfig,
+    /// Concurrency limiter (`queue.max_concurrent_clients`); `None` =
+    /// unlimited (the default — legacy behaviour).
+    limiter: Option<Semaphore>,
     /// Sweep-service sidecar ([`Engine::start_with_sweep`]): serves grid
     /// submissions next to attention traffic.
-    sweep: Option<SweepService>,
+    sweep: Mutex<Option<SweepService>>,
 }
 
 impl Engine {
     /// Start the engine and spawn the pipeline thread (batcher + executor).
+    ///
+    /// `cfg.queue.mode` picks the intake: `static` is the legacy bounded
+    /// channel drained in fixed `batch_window_us` windows (byte-identical
+    /// results); `continuous` is the shared queue with token-budget
+    /// admission and iteration-level continuous batching.
     ///
     /// The runtime is opened *inside* the pipeline thread (it is owned by
     /// the pipeline for its whole life); startup errors are reported back
@@ -94,40 +152,47 @@ impl Engine {
     pub fn start(cfg: ServeConfig) -> Result<Engine> {
         let policy = SchedulePolicy::from_serve_config(&cfg);
         let stats = Arc::new(Mutex::new(EngineStats::default()));
-        let (tx, rx) = sync_channel::<Submission>(cfg.queue_depth);
+        let limiter = match cfg.queue.max_concurrent_clients {
+            0 => None,
+            n => Some(Semaphore::new(n)),
+        };
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
-        let pipeline = {
-            let stats = Arc::clone(&stats);
-            let cfg = cfg.clone();
-            std::thread::Builder::new()
-                .name("sawtooth-pipeline".into())
-                .spawn(move || {
-                    let runtime = match open_runtime(&cfg) {
-                        Ok(rt) => {
-                            let _ = ready_tx.send(Ok(()));
-                            rt
-                        }
-                        Err(e) => {
-                            let _ = ready_tx.send(Err(e));
-                            return;
-                        }
-                    };
+        let (intake, pipeline) = match cfg.queue.mode {
+            QueueMode::Static => {
+                let (tx, rx) = sync_channel::<Submission>(cfg.queue_depth);
+                let handle = spawn_pipeline(&cfg, &stats, ready_tx, move |runtime, cfg, stats| {
                     pipeline_loop(rx, runtime, policy, cfg, stats)
-                })
-                .context("spawning pipeline thread")?
+                })?;
+                (Intake::Static(tx), handle)
+            }
+            QueueMode::Continuous => {
+                let q = Arc::new(Queue::new(cfg.queue.max_waiting));
+                let q_pipeline = Arc::clone(&q);
+                let handle = spawn_pipeline(&cfg, &stats, ready_tx, move |runtime, cfg, stats| {
+                    continuous_loop(q_pipeline, runtime, policy, cfg, stats)
+                })?;
+                (Intake::Continuous(q), handle)
+            }
         };
         ready_rx
             .recv()
             .map_err(|_| anyhow!("pipeline thread died during startup"))??;
-        Ok(Engine { tx: Some(tx), pipeline: Some(pipeline), stats, cfg, sweep: None })
+        Ok(Engine {
+            intake: Mutex::new(intake),
+            pipeline: Mutex::new(Some(pipeline)),
+            stats,
+            cfg,
+            limiter,
+            sweep: Mutex::new(None),
+        })
     }
 
     /// Start the engine with a sweep-service sidecar, so one coordinator
     /// serves both attention requests and experiment-grid submissions
     /// (routed via [`Engine::submit_sweep`]).
     pub fn start_with_sweep(cfg: ServeConfig, sweep_cfg: SweepServiceConfig) -> Result<Engine> {
-        let mut engine = Engine::start(cfg)?;
-        engine.sweep = Some(SweepService::start(sweep_cfg)?);
+        let engine = Engine::start(cfg)?;
+        *engine.sweep.lock().unwrap() = Some(SweepService::start(sweep_cfg)?);
         Ok(engine)
     }
 
@@ -135,6 +200,8 @@ impl Engine {
     /// engine was started without one.
     pub fn submit_sweep(&self, client: ClientId, spec: SweepSpec) -> Result<SweepTicket> {
         self.sweep
+            .lock()
+            .unwrap()
             .as_ref()
             .ok_or_else(|| anyhow!("engine started without a sweep service"))?
             .submit(client, spec)
@@ -142,27 +209,82 @@ impl Engine {
 
     /// Snapshot of the sweep-service statistics, when enabled.
     pub fn sweep_stats(&self) -> Option<SweepServiceStats> {
-        self.sweep.as_ref().map(SweepService::stats)
+        self.sweep.lock().unwrap().as_ref().map(SweepService::stats)
     }
 
-    /// Submit a request without blocking on completion. Applies
-    /// back-pressure: fails fast when the bounded queue is full.
+    /// Submit a request without blocking on completion. Admission control
+    /// fails fast with a typed [`EngineError`] (recover it with
+    /// `err.downcast_ref::<EngineError>()`):
+    ///
+    /// * [`EngineError::ShedOverload`] — `queue.max_concurrent_clients`
+    ///   handles already in flight;
+    /// * [`EngineError::QueueFull`] — back-pressure from the bounded
+    ///   channel (static) or the waiting queue (continuous);
+    /// * [`EngineError::ShuttingDown`] — the engine was shut down or its
+    ///   pipeline thread exited.
     pub fn submit_async(&self, req: AttentionRequest) -> Result<ResponseHandle> {
+        let permit = match &self.limiter {
+            None => None,
+            Some(limiter) => match limiter.try_acquire() {
+                Some(p) => Some(p),
+                None => {
+                    let mut st = self.stats.lock().unwrap();
+                    st.rejected += 1;
+                    st.shed_total += 1;
+                    return Err(anyhow::Error::new(EngineError::ShedOverload {
+                        limit: self.cfg.queue.max_concurrent_clients,
+                    }));
+                }
+            },
+        };
         let (resp_tx, resp_rx) = std::sync::mpsc::channel();
-        let sub = Submission { req, enqueued: Instant::now(), resp_tx };
-        let tx = self.tx.as_ref().ok_or_else(|| anyhow!("engine is shut down"))?;
-        match tx.try_send(sub) {
-            Ok(()) => {
-                self.stats.lock().unwrap().submitted += 1;
-                Ok(ResponseHandle { rx: resp_rx })
+        let intake = self.intake.lock().unwrap();
+        match &*intake {
+            Intake::Static(tx) => {
+                let sub = Submission { req, enqueued: Instant::now(), resp_tx };
+                match tx.try_send(sub) {
+                    Ok(()) => {
+                        self.stats.lock().unwrap().submitted += 1;
+                        Ok(ResponseHandle { rx: resp_rx, cancel: None, _permit: permit })
+                    }
+                    Err(std::sync::mpsc::TrySendError::Full(_)) => {
+                        self.stats.lock().unwrap().rejected += 1;
+                        Err(anyhow::Error::new(EngineError::QueueFull {
+                            limit: self.cfg.queue_depth,
+                        }))
+                    }
+                    Err(std::sync::mpsc::TrySendError::Disconnected(_)) => {
+                        Err(anyhow::Error::new(EngineError::ShuttingDown))
+                    }
+                }
             }
-            Err(std::sync::mpsc::TrySendError::Full(_)) => {
-                self.stats.lock().unwrap().rejected += 1;
-                bail!("queue full ({} deep): back-pressure", self.cfg.queue_depth)
+            Intake::Continuous(q) => {
+                let cancelled = Arc::new(AtomicBool::new(false));
+                let entry = QueueEntry {
+                    req,
+                    resp_tx,
+                    enqueued: Instant::now(),
+                    cancelled: Arc::clone(&cancelled),
+                };
+                match q.append(entry) {
+                    Ok(()) => {
+                        self.stats.lock().unwrap().submitted += 1;
+                        Ok(ResponseHandle {
+                            rx: resp_rx,
+                            cancel: Some(cancelled),
+                            _permit: permit,
+                        })
+                    }
+                    Err(e @ EngineError::QueueFull { .. }) => {
+                        let mut st = self.stats.lock().unwrap();
+                        st.rejected += 1;
+                        st.shed_total += 1;
+                        Err(anyhow::Error::new(e))
+                    }
+                    Err(e) => Err(anyhow::Error::new(e)),
+                }
             }
-            Err(std::sync::mpsc::TrySendError::Disconnected(_)) => {
-                bail!("engine pipeline exited")
-            }
+            Intake::Closed => Err(anyhow::Error::new(EngineError::ShuttingDown)),
         }
     }
 
@@ -177,25 +299,67 @@ impl Engine {
     }
 
     /// Drain and stop the pipeline (and the sweep sidecar, if any).
-    pub fn shutdown(mut self) -> EngineStats {
-        self.tx.take(); // close the channel → pipeline drains and exits
-        if let Some(h) = self.pipeline.take() {
-            let _ = h.join();
-        }
-        if let Some(svc) = self.sweep.take() {
+    /// Idempotent; later [`Engine::submit_async`] calls fail with
+    /// [`EngineError::ShuttingDown`]. Accepted requests are always served
+    /// before the pipeline exits.
+    pub fn shutdown(&self) -> EngineStats {
+        self.close_and_join();
+        if let Some(svc) = self.sweep.lock().unwrap().take() {
             svc.shutdown();
         }
         self.stats.lock().unwrap().clone()
+    }
+
+    /// Close the intake (→ pipeline drains and exits) and join the
+    /// pipeline thread.
+    fn close_and_join(&self) {
+        match std::mem::replace(&mut *self.intake.lock().unwrap(), Intake::Closed) {
+            Intake::Static(tx) => drop(tx),
+            Intake::Continuous(q) => q.close(),
+            Intake::Closed => {}
+        }
+        if let Some(h) = self.pipeline.lock().unwrap().take() {
+            let _ = h.join();
+        }
     }
 }
 
 impl Drop for Engine {
     fn drop(&mut self) {
-        self.tx.take();
-        if let Some(h) = self.pipeline.take() {
-            let _ = h.join();
-        }
+        self.close_and_join();
     }
+}
+
+/// Spawn the pipeline thread: open the runtime inside it, report startup
+/// success/failure through `ready_tx`, then hand off to the intake-mode
+/// loop.
+fn spawn_pipeline<F>(
+    cfg: &ServeConfig,
+    stats: &Arc<Mutex<EngineStats>>,
+    ready_tx: Sender<Result<()>>,
+    body: F,
+) -> Result<JoinHandle<()>>
+where
+    F: FnOnce(Runtime, ServeConfig, Arc<Mutex<EngineStats>>) + Send + 'static,
+{
+    let stats = Arc::clone(stats);
+    let cfg = cfg.clone();
+    std::thread::Builder::new()
+        .name("sawtooth-pipeline".into())
+        .spawn(move || {
+            let runtime = match open_runtime(&cfg) {
+                Ok(rt) => {
+                    let _ = ready_tx.send(Ok(()));
+                    rt
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            body(runtime, cfg, stats)
+        })
+        .context("spawning pipeline thread")
 }
 
 /// Open the runtime and optionally pre-compile all attention artifacts so
@@ -216,7 +380,8 @@ fn open_runtime(cfg: &ServeConfig) -> Result<Runtime> {
     Ok(runtime)
 }
 
-/// The pipeline: collect → batch → execute → respond.
+/// The static-intake pipeline: collect → batch → execute → respond, in
+/// fixed `batch_window_us` windows (legacy behaviour, byte-identical).
 fn pipeline_loop(
     rx: Receiver<Submission>,
     mut runtime: Runtime,
@@ -230,11 +395,11 @@ fn pipeline_loop(
     let mut batcher = Batcher::from_manifest(cfg.max_batch, runtime.manifest());
     let mut pending: Vec<Submission> = Vec::new();
 
-    'outer: loop {
+    loop {
         // Block for the first submission (or exit when all senders drop).
         let first = match rx.recv() {
             Ok(s) => s,
-            Err(_) => break 'outer,
+            Err(_) => break,
         };
         pending.push(first);
         // Fill the window.
@@ -256,77 +421,162 @@ fn pipeline_loop(
             .into_iter()
             .map(|s| (s.req, (s.enqueued, Some(s.resp_tx))))
             .unzip();
-        let plans = batcher.plan(reqs);
-        for mut plan in plans {
-            // The dispatch shape as a simulator workload: drives the
-            // admission-time policy decision AND artifact selection, so
-            // `order = auto` resolves per-shape winners from one memoized
-            // decision.
-            let w = {
-                let first = &plan.requests[0].req;
-                crate::sim::workload::AttentionWorkload {
-                    batch: plan.batch_padded as u32,
-                    heads: first.heads as u32,
-                    seq: first.seq as u64,
-                    head_dim: first.head_dim as u32,
-                    elem_bytes: 2,
-                    tile: 64,
-                    causal: first.causal,
-                }
-            };
-            // Admission-time policy decision: what the paper's GB10 would
-            // do for this dispatch shape under every candidate traversal.
-            // Decisions are memoized per shape, so only the first dispatch
-            // of a shape pays for scoring — and only in auto mode, where
-            // artifact selection consumes the same memoized decision: a
-            // fixed-order policy would score the whole candidate set just
-            // to fill a stats counter. Research-scale sequences are never
-            // probed (they would block the pipeline thread for seconds).
-            let decision = if policy.is_auto() && w.seq <= policy::PROBE_MAX_SEQ {
-                Some(policy.decide(&w))
-            } else {
-                None
-            };
-            let t0 = Instant::now();
-            let result = execute_plan(&mut runtime, &policy, &w, decision.as_ref(), &mut plan);
-            let exec_elapsed = t0.elapsed();
-            let mut st = stats.lock().unwrap();
-            st.batches += 1;
-            st.record_batch_size(plan.requests.len());
-            // Full executor time, once per plan: a 2-request plan padded
-            // to batch 4 still spent the whole dispatch, so attributing
-            // `elapsed / batch_padded` per request under-reported it.
-            st.record_exec(exec_elapsed.as_secs_f64());
-            if let Some(d) = &decision {
-                st.record_decision(d.winner_speedup(), d.cached);
+        for plan in batcher.plan(reqs) {
+            run_plan(&mut runtime, &policy, &stats, plan, &mut channels);
+        }
+    }
+}
+
+/// The continuous-intake pipeline: iteration-level batching from the
+/// shared queue. Each turn waits for work, lets the window/heuristic fill
+/// the queue, then takes one token-budgeted same-shape dispatch —
+/// leftover requests stay queued and are reconsidered next turn, so new
+/// arrivals fold into the running traffic instead of waiting out a fixed
+/// window behind it.
+fn continuous_loop(
+    queue: Arc<Queue>,
+    mut runtime: Runtime,
+    policy: SchedulePolicy,
+    cfg: ServeConfig,
+    stats: Arc<Mutex<EngineStats>>,
+) {
+    let window = Duration::from_micros(cfg.batch_window_us);
+    let mut batcher = Batcher::from_manifest(cfg.max_batch, runtime.manifest());
+    // One dispatch can't carry more than the largest AOT batch variant, so
+    // never take more than that from the queue at once.
+    let max_artifact_batch = batcher.available_batches().last().copied().unwrap_or(1);
+    let chunk_limit = cfg.max_batch.min(max_artifact_batch).max(1);
+    let ratio = cfg.queue.waiting_served_ratio;
+    let budget = cfg.queue.max_batch_total_tokens;
+    // Size of the previous dispatch: the waiting_served_ratio heuristic
+    // serves as soon as the queue holds `ratio ×` that much work again.
+    let mut last_served = 0usize;
+
+    while queue.wait_nonempty() {
+        let deadline = Instant::now() + window;
+        loop {
+            let waiting = queue.live_len();
+            if waiting == 0 || waiting >= chunk_limit {
+                break;
             }
-            match result {
-                Ok(outputs) => {
-                    for (req, out) in plan.requests.into_iter().zip(outputs) {
-                        let (enq, ch) = &mut channels[req.slot];
-                        let latency = enq.elapsed();
-                        st.completed += 1;
-                        st.latency.record(latency.as_secs_f64() * 1e3);
-                        let resp = AttentionResponse {
-                            id: req.req.id,
-                            output: out,
-                            artifact: plan.artifact.clone(),
-                            latency,
-                        };
-                        if let Some(tx) = ch.take() {
-                            let _ = tx.send(Ok(resp));
-                        }
-                    }
+            if last_served > 0 && waiting as f64 >= ratio * last_served as f64 {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            queue.wait_event(deadline - now);
+        }
+        let Some(batch) = queue.take_batch(chunk_limit, budget) else {
+            continue;
+        };
+        {
+            let mut st = stats.lock().unwrap();
+            st.cancelled_total += queue.drain_evictions();
+            st.record_queue_dispatch(batch.depth);
+        }
+        last_served = batch.entries.len();
+        let (reqs, mut channels): (Vec<_>, Vec<_>) = batch
+            .entries
+            .into_iter()
+            .map(|e| (e.req, (e.enqueued, Some(e.resp_tx))))
+            .unzip();
+        for plan in batcher.plan(reqs) {
+            run_plan(&mut runtime, &policy, &stats, plan, &mut channels);
+        }
+    }
+    // Entries cancelled after the last dispatch still count.
+    stats.lock().unwrap().cancelled_total += queue.drain_evictions();
+}
+
+/// Execute one batch plan and respond on each request's channel — the
+/// dispatch body shared by both intake loops.
+fn run_plan(
+    runtime: &mut Runtime,
+    policy: &SchedulePolicy,
+    stats: &Mutex<EngineStats>,
+    mut plan: BatchPlan,
+    channels: &mut [(Instant, Option<Sender<Result<AttentionResponse>>>)],
+) {
+    // The dispatch shape as a simulator workload: drives the
+    // admission-time policy decision AND artifact selection, so
+    // `order = auto` resolves per-shape winners from one memoized
+    // decision.
+    let w = {
+        let first = &plan.requests[0].req;
+        crate::sim::workload::AttentionWorkload {
+            batch: plan.batch_padded as u32,
+            heads: first.heads as u32,
+            seq: first.seq as u64,
+            head_dim: first.head_dim as u32,
+            elem_bytes: 2,
+            tile: 64,
+            causal: first.causal,
+        }
+    };
+    // Admission-time policy decision: what the paper's GB10 would
+    // do for this dispatch shape under every candidate traversal.
+    // Decisions are memoized per shape, so only the first dispatch
+    // of a shape pays for scoring — and only in auto mode, where
+    // artifact selection consumes the same memoized decision: a
+    // fixed-order policy would score the whole candidate set just
+    // to fill a stats counter. Research-scale sequences are never
+    // probed (they would block the pipeline thread for seconds).
+    let decision = if policy.is_auto() && w.seq <= policy::PROBE_MAX_SEQ {
+        Some(policy.decide(&w))
+    } else {
+        None
+    };
+    let tokens: u64 = plan.requests.iter().map(|r| r.req.elems() as u64).sum();
+    // Time-in-queue per request: submission → start of its dispatch.
+    let queue_waits_ms: Vec<f64> = plan
+        .requests
+        .iter()
+        .map(|r| channels[r.slot].0.elapsed().as_secs_f64() * 1e3)
+        .collect();
+    let t0 = Instant::now();
+    let result = execute_plan(runtime, policy, &w, decision.as_ref(), &mut plan);
+    let exec_elapsed = t0.elapsed();
+    let mut st = stats.lock().unwrap();
+    st.batches += 1;
+    st.record_batch_size(plan.requests.len());
+    // Full executor time, once per plan: a 2-request plan padded
+    // to batch 4 still spent the whole dispatch, so attributing
+    // `elapsed / batch_padded` per request under-reported it.
+    st.record_exec(exec_elapsed.as_secs_f64());
+    st.record_plan_tokens(tokens);
+    for ms in queue_waits_ms {
+        st.time_in_queue.record(ms);
+    }
+    if let Some(d) = &decision {
+        st.record_decision(d.winner_speedup(), d.cached);
+    }
+    match result {
+        Ok(outputs) => {
+            for (req, out) in plan.requests.into_iter().zip(outputs) {
+                let (enq, ch) = &mut channels[req.slot];
+                let latency = enq.elapsed();
+                st.completed += 1;
+                st.latency.record(latency.as_secs_f64() * 1e3);
+                let resp = AttentionResponse {
+                    id: req.req.id,
+                    output: out,
+                    artifact: plan.artifact.clone(),
+                    latency,
+                };
+                if let Some(tx) = ch.take() {
+                    let _ = tx.send(Ok(resp));
                 }
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    for req in plan.requests {
-                        let (_, ch) = &mut channels[req.slot];
-                        st.failed += 1;
-                        if let Some(tx) = ch.take() {
-                            let _ = tx.send(Err(anyhow!("{msg}")));
-                        }
-                    }
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for req in plan.requests {
+                let (_, ch) = &mut channels[req.slot];
+                st.failed += 1;
+                if let Some(tx) = ch.take() {
+                    let _ = tx.send(Err(anyhow!("{msg}")));
                 }
             }
         }

@@ -1,0 +1,442 @@
+//! Shared request queue for iteration-level continuous batching.
+//!
+//! The continuous intake mode (`[queue] mode = continuous`) replaces the
+//! legacy bounded channel with one shared [`Queue`] in the tgimagik-router
+//! mould: requests wait keyed by arrival order and token cost
+//! ([`crate::coordinator::AttentionRequest::elems`]), and the pipeline
+//! folds waiting work into the next dispatch whenever the
+//! `waiting_served_ratio` heuristic and the `max_batch_total_tokens`
+//! budget allow ([`Queue::take_batch`]) instead of draining fixed windows.
+//!
+//! Three overload/lifecycle mechanics live here too:
+//!
+//! * **Typed errors** — [`EngineError`] replaces the raw channel-send
+//!   errors on every admission path; callers downcast with
+//!   `err.downcast_ref::<EngineError>()`.
+//! * **Cancellation** — each queued entry carries an `Arc<AtomicBool>`
+//!   shared with its `ResponseHandle`; dropping the handle sets the flag
+//!   and the entry is evicted before dispatch ([`Queue`] prunes on every
+//!   touch and counts evictions).
+//! * **Shedding** — a counting [`Semaphore`] bounds in-flight response
+//!   handles (`max_concurrent_clients`); `try_acquire` failure surfaces
+//!   as [`EngineError::ShedOverload`] at submit time.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::request::{AttentionRequest, AttentionResponse};
+
+/// Typed admission/lifecycle errors of the serving engine. Wrapped in
+/// [`anyhow::Error`] by the public API; recover the variant with
+/// `err.downcast_ref::<EngineError>()`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// Back-pressure: the waiting queue (continuous mode, `max_waiting`)
+    /// or the bounded submission channel (static mode, `queue_depth`) is
+    /// full. Retry later.
+    QueueFull {
+        /// The configured depth that was hit.
+        limit: usize,
+    },
+    /// Overload shedding: admitting the request would exceed
+    /// `max_concurrent_clients` in-flight response handles.
+    ShedOverload {
+        /// The configured concurrency limit.
+        limit: usize,
+    },
+    /// The engine is shut down (or its pipeline thread exited).
+    ShuttingDown,
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            // Keeps the exact legacy back-pressure message, so static-mode
+            // error strings are unchanged alongside the byte-identical
+            // responses and stats.
+            EngineError::QueueFull { limit } => {
+                write!(f, "queue full ({limit} deep): back-pressure")
+            }
+            EngineError::ShedOverload { limit } => {
+                write!(f, "shed: {limit} requests already in flight")
+            }
+            EngineError::ShuttingDown => write!(f, "engine is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// One waiting request: payload, response channel, arrival time, and the
+/// cancel flag shared with the client's `ResponseHandle`.
+pub struct QueueEntry {
+    pub req: AttentionRequest,
+    pub resp_tx: Sender<Result<AttentionResponse>>,
+    pub enqueued: Instant,
+    pub cancelled: Arc<AtomicBool>,
+}
+
+impl QueueEntry {
+    fn live(&self) -> bool {
+        !self.cancelled.load(Ordering::Acquire)
+    }
+}
+
+/// One continuous dispatch taken from the queue: a same-shape prefix of
+/// the waiting work, bounded by the chunk limit and the token budget.
+pub struct TakenBatch {
+    pub entries: Vec<QueueEntry>,
+    /// Live queue depth observed at dispatch (including the taken
+    /// entries) — feeds `EngineStats::queue_depth_hist`.
+    pub depth: usize,
+    /// Token cost (q/k/v elements) of the taken entries.
+    pub tokens: u64,
+}
+
+struct QueueState {
+    entries: VecDeque<QueueEntry>,
+    closed: bool,
+    /// Cancelled entries pruned since the last [`Queue::drain_evictions`].
+    evicted: u64,
+}
+
+impl QueueState {
+    /// Drop every cancelled entry (their response channels close, which is
+    /// what the cancelling client asked for) and count the evictions.
+    fn prune(&mut self) {
+        let before = self.entries.len();
+        self.entries.retain(QueueEntry::live);
+        self.evicted += (before - self.entries.len()) as u64;
+    }
+}
+
+/// The shared waiting queue of the continuous intake mode.
+pub struct Queue {
+    max_waiting: usize,
+    state: Mutex<QueueState>,
+    /// Signalled on every append and on close.
+    arrived: Condvar,
+}
+
+impl Queue {
+    pub fn new(max_waiting: usize) -> Self {
+        Queue {
+            max_waiting: max_waiting.max(1),
+            state: Mutex::new(QueueState {
+                entries: VecDeque::new(),
+                closed: false,
+                evicted: 0,
+            }),
+            arrived: Condvar::new(),
+        }
+    }
+
+    /// Admit one request, or reject it with a typed error: the queue is
+    /// closed, or `max_waiting` live entries are already waiting
+    /// (cancelled entries are evicted first rather than counted against
+    /// the limit).
+    pub fn append(&self, entry: QueueEntry) -> Result<(), EngineError> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(EngineError::ShuttingDown);
+        }
+        if st.entries.len() >= self.max_waiting {
+            st.prune();
+            if st.entries.len() >= self.max_waiting {
+                return Err(EngineError::QueueFull { limit: self.max_waiting });
+            }
+        }
+        st.entries.push_back(entry);
+        drop(st);
+        self.arrived.notify_one();
+        Ok(())
+    }
+
+    /// Close the queue: further appends fail with
+    /// [`EngineError::ShuttingDown`]; the pipeline drains what is left.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.arrived.notify_all();
+    }
+
+    /// Block until at least one live entry is waiting. Returns `false`
+    /// once the queue is closed *and* drained — the pipeline's exit
+    /// condition, so no accepted request is ever dropped.
+    pub fn wait_nonempty(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            st.prune();
+            if !st.entries.is_empty() {
+                return true;
+            }
+            if st.closed {
+                return false;
+            }
+            st = self.arrived.wait(st).unwrap();
+        }
+    }
+
+    /// Block up to `timeout` for an arrival (or close) notification.
+    /// Returns `false` on timeout. Spurious wakeups return `true`; the
+    /// caller's fill loop re-checks its conditions either way.
+    pub fn wait_event(&self, timeout: Duration) -> bool {
+        let st = self.state.lock().unwrap();
+        let (_st, res) = self.arrived.wait_timeout(st, timeout).unwrap();
+        !res.timed_out()
+    }
+
+    /// Live entries currently waiting.
+    pub fn live_len(&self) -> usize {
+        let mut st = self.state.lock().unwrap();
+        st.prune();
+        st.entries.len()
+    }
+
+    /// Take the next dispatch: anchor on the oldest live entry (FIFO — no
+    /// shape starvation), then fold in every other waiting request with
+    /// the same shape key, up to `chunk_limit` requests and
+    /// `max_batch_total_tokens` q/k/v elements (0 = unbounded). The
+    /// anchor is always admitted, so an over-budget request cannot wedge
+    /// the queue. Returns `None` when nothing live is waiting.
+    pub fn take_batch(&self, chunk_limit: usize, max_tokens: u64) -> Option<TakenBatch> {
+        let budget = if max_tokens == 0 { u64::MAX } else { max_tokens };
+        let mut st = self.state.lock().unwrap();
+        st.prune();
+        let depth = st.entries.len();
+        let key = st.entries.front()?.req.shape_key();
+        let mut entries = Vec::new();
+        let mut tokens = 0u64;
+        let mut i = 0;
+        while i < st.entries.len() && entries.len() < chunk_limit.max(1) {
+            if st.entries[i].req.shape_key() != key {
+                i += 1;
+                continue;
+            }
+            let cost = st.entries[i].req.elems() as u64;
+            if !entries.is_empty() && tokens.saturating_add(cost) > budget {
+                break;
+            }
+            tokens += cost;
+            // `remove` shifts the tail left, so `i` already points at the
+            // next candidate.
+            entries.push(st.entries.remove(i).unwrap());
+        }
+        Some(TakenBatch { entries, depth, tokens })
+    }
+
+    /// Evictions (cancelled entries pruned) since the last call.
+    pub fn drain_evictions(&self) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        std::mem::take(&mut st.evicted)
+    }
+}
+
+/// A counting semaphore bounding in-flight response handles
+/// (`max_concurrent_clients`). Non-blocking by design: at the limit,
+/// admission *sheds* ([`EngineError::ShedOverload`]) instead of queueing
+/// the caller.
+pub struct Semaphore {
+    inner: Arc<SemaphoreInner>,
+}
+
+struct SemaphoreInner {
+    limit: usize,
+    held: Mutex<usize>,
+}
+
+impl Semaphore {
+    pub fn new(limit: usize) -> Self {
+        Semaphore {
+            inner: Arc::new(SemaphoreInner { limit: limit.max(1), held: Mutex::new(0) }),
+        }
+    }
+
+    /// One permit, or `None` at the limit. The permit releases on drop.
+    pub fn try_acquire(&self) -> Option<Permit> {
+        let mut held = self.inner.held.lock().unwrap();
+        if *held >= self.inner.limit {
+            return None;
+        }
+        *held += 1;
+        Some(Permit { inner: Arc::clone(&self.inner) })
+    }
+}
+
+/// An acquired [`Semaphore`] permit; released when dropped (i.e. when the
+/// `ResponseHandle` that carries it is waited on or dropped).
+pub struct Permit {
+    inner: Arc<SemaphoreInner>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        let mut held = self.inner.held.lock().unwrap();
+        *held = held.saturating_sub(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::RequestId;
+    use crate::util::rng::Rng;
+
+    fn entry(id: u64, seq: usize) -> (QueueEntry, Arc<AtomicBool>) {
+        let mut rng = Rng::new(id);
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let e = QueueEntry {
+            req: AttentionRequest::synthetic(id, seq, 4, 64, false, &mut rng),
+            resp_tx: tx,
+            enqueued: Instant::now(),
+            cancelled: Arc::clone(&cancelled),
+        };
+        (e, cancelled)
+    }
+
+    fn ids(batch: &TakenBatch) -> Vec<u64> {
+        batch.entries.iter().map(|e| e.req.id.0).collect()
+    }
+
+    #[test]
+    fn fifo_anchor_folds_same_shape_from_anywhere() {
+        let q = Queue::new(16);
+        // Shapes interleave: 128, 256, 128, 128 — the anchor (id 0,
+        // seq 128) must fold ids 2 and 3 past the 256 in between.
+        for (id, seq) in [(0u64, 128usize), (1, 256), (2, 128), (3, 128)] {
+            q.append(entry(id, seq).0).unwrap();
+        }
+        let b = q.take_batch(4, 0).unwrap();
+        assert_eq!(ids(&b), vec![0, 2, 3]);
+        assert_eq!(b.depth, 4);
+        assert_eq!(b.tokens, 3 * 4 * 128 * 64);
+        // Next dispatch serves the leftover 256.
+        let b = q.take_batch(4, 0).unwrap();
+        assert_eq!(ids(&b), vec![1]);
+        assert!(q.take_batch(4, 0).is_none());
+    }
+
+    #[test]
+    fn token_budget_bounds_a_dispatch_but_admits_the_anchor() {
+        let q = Queue::new(16);
+        for id in 0..4u64 {
+            q.append(entry(id, 128).0).unwrap();
+        }
+        let one = (4 * 128 * 64) as u64;
+        // Budget of two requests → two per dispatch.
+        let b = q.take_batch(8, 2 * one).unwrap();
+        assert_eq!(ids(&b), vec![0, 1]);
+        assert_eq!(b.tokens, 2 * one);
+        // Budget below a single request still admits the anchor.
+        let b = q.take_batch(8, 1).unwrap();
+        assert_eq!(ids(&b), vec![2]);
+        assert_eq!(b.tokens, one);
+    }
+
+    #[test]
+    fn chunk_limit_caps_a_dispatch() {
+        let q = Queue::new(16);
+        for id in 0..6u64 {
+            q.append(entry(id, 128).0).unwrap();
+        }
+        let b = q.take_batch(4, 0).unwrap();
+        assert_eq!(ids(&b), vec![0, 1, 2, 3]);
+        assert_eq!(b.depth, 6);
+    }
+
+    #[test]
+    fn append_sheds_at_max_waiting_after_evicting_cancelled() {
+        let q = Queue::new(2);
+        let (e0, c0) = entry(0, 128);
+        q.append(e0).unwrap();
+        q.append(entry(1, 128).0).unwrap();
+        assert_eq!(
+            q.append(entry(2, 128).0).unwrap_err(),
+            EngineError::QueueFull { limit: 2 }
+        );
+        // Cancelling a waiting entry frees its slot for the next append.
+        c0.store(true, Ordering::Release);
+        q.append(entry(3, 128).0).unwrap();
+        assert_eq!(q.drain_evictions(), 1);
+        let b = q.take_batch(4, 0).unwrap();
+        assert_eq!(ids(&b), vec![1, 3]);
+    }
+
+    #[test]
+    fn cancelled_entries_are_evicted_before_dispatch() {
+        let q = Queue::new(16);
+        let (e0, c0) = entry(0, 128);
+        let (e1, _c1) = entry(1, 128);
+        let (e2, c2) = entry(2, 128);
+        q.append(e0).unwrap();
+        q.append(e1).unwrap();
+        q.append(e2).unwrap();
+        c0.store(true, Ordering::Release);
+        c2.store(true, Ordering::Release);
+        let b = q.take_batch(4, 0).unwrap();
+        assert_eq!(ids(&b), vec![1]);
+        assert_eq!(b.depth, 1, "depth counts live entries only");
+        assert_eq!(q.drain_evictions(), 2);
+        assert_eq!(q.drain_evictions(), 0, "evictions drain once");
+    }
+
+    #[test]
+    fn close_rejects_appends_and_unblocks_waiters() {
+        let q = Arc::new(Queue::new(4));
+        let waiter = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || q.wait_nonempty())
+        };
+        q.close();
+        assert!(!waiter.join().unwrap(), "closed+empty must return false");
+        assert_eq!(q.append(entry(0, 128).0).unwrap_err(), EngineError::ShuttingDown);
+    }
+
+    #[test]
+    fn close_still_drains_waiting_entries() {
+        let q = Queue::new(4);
+        q.append(entry(0, 128).0).unwrap();
+        q.close();
+        assert!(q.wait_nonempty(), "waiting work survives close");
+        let b = q.take_batch(4, 0).unwrap();
+        assert_eq!(ids(&b), vec![0]);
+        assert!(!q.wait_nonempty());
+    }
+
+    #[test]
+    fn wait_event_times_out_without_arrivals() {
+        let q = Queue::new(4);
+        assert!(!q.wait_event(Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn semaphore_sheds_at_limit_and_releases_on_drop() {
+        let s = Semaphore::new(2);
+        let p0 = s.try_acquire().unwrap();
+        let _p1 = s.try_acquire().unwrap();
+        assert!(s.try_acquire().is_none());
+        drop(p0);
+        assert!(s.try_acquire().is_some());
+    }
+
+    #[test]
+    fn engine_error_display_is_stable() {
+        assert_eq!(
+            EngineError::QueueFull { limit: 32 }.to_string(),
+            "queue full (32 deep): back-pressure"
+        );
+        assert_eq!(
+            EngineError::ShedOverload { limit: 8 }.to_string(),
+            "shed: 8 requests already in flight"
+        );
+        assert_eq!(EngineError::ShuttingDown.to_string(), "engine is shut down");
+        // Typed recovery through the anyhow wrapper.
+        let e = anyhow::Error::new(EngineError::ShuttingDown);
+        assert_eq!(e.downcast_ref::<EngineError>(), Some(&EngineError::ShuttingDown));
+    }
+}

@@ -98,7 +98,9 @@ impl AttentionRequest {
         }
     }
 
-    /// Elements in each of q/k/v.
+    /// Elements in each of q/k/v — also the request's token cost under
+    /// continuous batching's `queue.max_batch_total_tokens` admission
+    /// budget (see [`crate::config::QueueConfig`]).
     pub fn elems(&self) -> usize {
         self.heads * self.seq * self.head_dim
     }

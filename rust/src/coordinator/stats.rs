@@ -8,13 +8,15 @@ pub struct EngineStats {
     pub submitted: u64,
     pub completed: u64,
     pub failed: u64,
-    /// Rejected at the queue (back-pressure).
+    /// Rejected at admission (back-pressure or overload shedding).
     pub rejected: u64,
     /// Executor dispatches.
     pub batches: u64,
-    /// Histogram of dispatch sizes (index = size, capped at 16; index 0 is
-    /// dead — a dispatch always carries at least one request).
-    pub batch_size_hist: [u64; 17],
+    /// Histogram of dispatch sizes, 1-based: index `i` counts dispatches of
+    /// `i + 1` requests, with the top bucket clamping sizes ≥ 16. (A
+    /// dispatch always carries at least one request, so there is no dead
+    /// size-0 slot.) Prefer [`Self::batch_size_buckets`] for display.
+    pub batch_size_hist: [u64; 16],
     /// Requests carried by all dispatches (exact, unlike the clamped
     /// histogram; counts requests in failed dispatches too).
     pub dispatched_requests: u64,
@@ -33,12 +35,39 @@ pub struct EngineStats {
     /// Running mean of the winner's estimated speedup over the cyclic
     /// baseline across dispatched plans.
     pub mean_winner_speedup: f64,
+    /// Requests shed at admission by the concurrency limiter or the
+    /// continuous waiting queue (subset of `rejected`).
+    pub shed_total: u64,
+    /// Requests evicted from the waiting queue after their
+    /// `ResponseHandle` was dropped (continuous mode only).
+    pub cancelled_total: u64,
+    /// Continuous-mode dispatches taken from the shared queue (the
+    /// denominator of [`Self::mean_queue_depth`]).
+    pub queue_batches: u64,
+    /// Histogram of live queue depth observed at each continuous dispatch,
+    /// 1-based like `batch_size_hist`: index `i` counts dispatches that saw
+    /// `i + 1` waiting requests, top bucket clamping depths ≥ 16.
+    pub queue_depth_hist: [u64; 16],
+    /// Sum of observed queue depths (exact, for the mean).
+    pub queue_depth_sum: u64,
+    /// Token cost (q/k/v elements) carried by all dispatches — the
+    /// numerator of [`Self::mean_tokens_per_batch`].
+    pub tokens_dispatched: u64,
+    /// Time each dispatched request spent waiting in the queue,
+    /// milliseconds (continuous mode only).
+    pub time_in_queue: LatencyStats,
 }
 
 impl EngineStats {
     pub fn record_batch_size(&mut self, n: usize) {
-        self.batch_size_hist[n.min(16)] += 1;
+        self.batch_size_hist[n.clamp(1, 16) - 1] += 1;
         self.dispatched_requests += n as u64;
+    }
+
+    /// The dispatch-size histogram as `(size, count)` pairs — sizes are
+    /// 1-based and the final bucket aggregates every size ≥ 16.
+    pub fn batch_size_buckets(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.batch_size_hist.iter().enumerate().map(|(i, &n)| (i + 1, n))
     }
 
     /// Attribute one executor dispatch's wall time. Called once per plan
@@ -59,17 +88,47 @@ impl EngineStats {
         self.mean_winner_speedup += (winner_speedup - self.mean_winner_speedup) / n;
     }
 
+    /// Attribute one plan's token cost (q/k/v elements across its
+    /// requests).
+    pub fn record_plan_tokens(&mut self, tokens: u64) {
+        self.tokens_dispatched += tokens;
+    }
+
+    /// Record the live queue depth observed when a continuous dispatch was
+    /// taken from the shared queue.
+    pub fn record_queue_dispatch(&mut self, depth: usize) {
+        self.queue_batches += 1;
+        self.queue_depth_sum += depth as u64;
+        self.queue_depth_hist[depth.clamp(1, 16) - 1] += 1;
+    }
+
     /// Mean requests per dispatch, derived from what was *dispatched*
     /// rather than what *completed*, so failed dispatches (which complete
     /// no requests) don't drag the mean toward zero. The numerator is the
     /// exact `dispatched_requests` counter — not the histogram, whose top
-    /// bucket clamps sizes above 16 (and whose index 0 is dead).
+    /// bucket clamps sizes above 16.
     pub fn mean_batch_size(&self) -> f64 {
         let dispatches: u64 = self.batch_size_hist.iter().sum();
         if dispatches == 0 {
             return 0.0;
         }
         self.dispatched_requests as f64 / dispatches as f64
+    }
+
+    /// Mean token cost (q/k/v elements) per dispatch.
+    pub fn mean_tokens_per_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.tokens_dispatched as f64 / self.batches as f64
+    }
+
+    /// Mean live queue depth observed at continuous dispatches.
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.queue_batches == 0 {
+            return 0.0;
+        }
+        self.queue_depth_sum as f64 / self.queue_batches as f64
     }
 
     /// Render a human-readable summary block.
@@ -93,6 +152,25 @@ impl EngineStats {
             s.push_str(&format!(
                 "\npolicy:   {} decisions ({} cached), mean est. winner speedup {:.2}x vs cyclic",
                 self.policy_decisions, self.decision_cache_hits, self.mean_winner_speedup
+            ));
+        }
+        // Continuous-batching block: only rendered once queue-path counters
+        // move, so static-mode summaries stay byte-identical to the
+        // pre-queue engine.
+        if self.queue_batches > 0 || self.shed_total > 0 || self.cancelled_total > 0 {
+            s.push_str(&format!(
+                "\nqueue:    {} dispatches, mean depth {:.2}, mean tokens/batch {:.0}, \
+                 {} shed, {} cancelled\n\
+                 in-queue: p50 {:.2} ms, p99 {:.2} ms, max {:.2} ms (n={})",
+                self.queue_batches,
+                self.mean_queue_depth(),
+                self.mean_tokens_per_batch(),
+                self.shed_total,
+                self.cancelled_total,
+                self.time_in_queue.p50(),
+                self.time_in_queue.p99(),
+                self.time_in_queue.max(),
+                self.time_in_queue.count(),
             ));
         }
         s
@@ -148,14 +226,16 @@ mod tests {
     use super::*;
 
     #[test]
-    fn batch_size_histogram_caps() {
+    fn batch_size_histogram_is_one_based_and_caps() {
         let mut s = EngineStats::default();
         s.record_batch_size(1);
         s.record_batch_size(4);
         s.record_batch_size(100);
-        assert_eq!(s.batch_size_hist[1], 1);
-        assert_eq!(s.batch_size_hist[4], 1);
-        assert_eq!(s.batch_size_hist[16], 1);
+        assert_eq!(s.batch_size_hist[0], 1, "size 1 lands in bucket 0");
+        assert_eq!(s.batch_size_hist[3], 1, "size 4 lands in bucket 3");
+        assert_eq!(s.batch_size_hist[15], 1, "size ≥16 clamps to the top");
+        let buckets: Vec<_> = s.batch_size_buckets().filter(|&(_, n)| n > 0).collect();
+        assert_eq!(buckets, vec![(1, 1), (4, 1), (16, 1)]);
     }
 
     #[test]
@@ -169,13 +249,13 @@ mod tests {
 
     #[test]
     fn mean_batch_size_exact_above_histogram_cap() {
-        // The histogram clamps a 100-request dispatch into bucket 16, but
-        // the mean uses the exact dispatched-request counter.
+        // The histogram clamps a 100-request dispatch into the top bucket,
+        // but the mean uses the exact dispatched-request counter.
         let mut s = EngineStats::default();
         s.batches = 2;
         s.record_batch_size(100);
         s.record_batch_size(50);
-        assert_eq!(s.batch_size_hist[16], 2);
+        assert_eq!(s.batch_size_hist[15], 2);
         assert_eq!(s.dispatched_requests, 150);
         assert_eq!(s.mean_batch_size(), 75.0);
     }
@@ -201,6 +281,47 @@ mod tests {
         s.record_exec(0.5);
         s.record_exec(0.25);
         assert!((s.exec_time_s - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn queue_dispatch_counters_and_means() {
+        let mut s = EngineStats::default();
+        s.batches = 2;
+        s.record_queue_dispatch(3);
+        s.record_queue_dispatch(100);
+        s.record_plan_tokens(131_072);
+        s.record_plan_tokens(65_536);
+        assert_eq!(s.queue_batches, 2);
+        assert_eq!(s.queue_depth_hist[2], 1, "depth 3 lands in bucket 2");
+        assert_eq!(s.queue_depth_hist[15], 1, "depth ≥16 clamps to the top");
+        assert!((s.mean_queue_depth() - 51.5).abs() < 1e-12);
+        assert!((s.mean_tokens_per_batch() - 98_304.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_gates_queue_block_on_queue_counters() {
+        // Static-mode parity: with no queue-path activity the summary must
+        // render exactly the legacy three(+policy) sections.
+        let mut s = EngineStats::default();
+        s.submitted = 3;
+        s.completed = 3;
+        s.latency.record(1.0);
+        let txt = s.summary();
+        assert!(!txt.contains("queue:"), "{txt}");
+        assert!(!txt.contains("in-queue:"), "{txt}");
+        // Any queue-path counter unlocks the block.
+        s.shed_total = 1;
+        let txt = s.summary();
+        assert!(txt.contains("1 shed"), "{txt}");
+        s.shed_total = 0;
+        s.batches = 1;
+        s.record_queue_dispatch(4);
+        s.record_plan_tokens(65_536);
+        s.time_in_queue.record(2.0);
+        let txt = s.summary();
+        assert!(txt.contains("queue:    1 dispatches, mean depth 4.00"), "{txt}");
+        assert!(txt.contains("mean tokens/batch 65536"), "{txt}");
+        assert!(txt.contains("in-queue: p50 2.00 ms"), "{txt}");
     }
 
     #[test]

@@ -97,7 +97,7 @@ COMMANDS:
 
 COMMON OPTIONS:
   --config FILE          TOML config (sections [sim], [device], [serve],
-                         [sweep_service])
+                         [queue], [policy], [sweep_service])
   --set key=value        override one config key (repeatable)
   --seq N --tile T --batch B --heads H --causal
   --order NAME           KV traversal order: any registered name (see the
@@ -114,6 +114,9 @@ COMMON OPTIONS:
                          every cache capacity separately instead of
                          profiling once (output is byte-identical)
   --requests N --clients N --max-batch N   (serve)
+  --queue-mode MODE      (serve) intake mode: static (legacy windows) |
+                         continuous (token-budget continuous batching;
+                         knobs in the [queue] config section)
   --clients N --seqs A,B --orders A,B --l2-mibs A,B,C   (sweep-serve:
                          demo grid axes over the [sim] base config)
   --spec FILE            (sweep-serve) submit a line-protocol spec file
@@ -416,6 +419,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if let Some(v) = flag(&flags, "artifacts-dir") {
         cfg.set_override(&format!("serve.artifacts_dir=\"{v}\""))?;
     }
+    if let Some(v) = flag(&flags, "queue-mode") {
+        cfg.set_override(&format!("queue.mode={v}"))?;
+    }
     let serve = ServeConfig::from_config(&cfg)?;
     let requests: usize = flag(&flags, "requests").unwrap_or("32").parse()?;
     let clients: usize = flag(&flags, "clients")
@@ -425,8 +431,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .max(1);
 
     println!(
-        "starting engine: artifacts={} order={} max_batch={} window={}us",
-        serve.artifacts_dir, serve.order, serve.max_batch, serve.batch_window_us
+        "starting engine: artifacts={} order={} max_batch={} window={}us queue_mode={}",
+        serve.artifacts_dir, serve.order, serve.max_batch, serve.batch_window_us, serve.queue.mode
     );
     let engine = Engine::start(serve)?;
     let t0 = std::time::Instant::now();

@@ -1,6 +1,6 @@
 //! The shipped config files must parse into valid run configurations.
 
-use sawtooth_attn::config::{Config, PolicyOrder, ServeConfig, SimRunConfig};
+use sawtooth_attn::config::{Config, PolicyOrder, QueueMode, ServeConfig, SimRunConfig};
 use sawtooth_attn::coordinator::cost::Objective;
 use sawtooth_attn::sim::kernel_model::KernelVariant;
 use sawtooth_attn::sim::traversal::TraversalRef;
@@ -38,6 +38,13 @@ fn serve_config_parses() {
     assert_eq!(s.policy.objective.name(), "min-misses");
     assert!(s.policy.candidates.is_empty(), "registry-wide default set");
     assert_eq!(s.policy.probe_threads, 1);
+    // The shipped config serves with continuous batching; every [queue]
+    // knob is spelled out in the file.
+    assert_eq!(s.queue.mode, QueueMode::Continuous);
+    assert_eq!(s.queue.max_waiting, 256);
+    assert_eq!(s.queue.max_batch_total_tokens, 1 << 20);
+    assert!((s.queue.waiting_served_ratio - 1.2).abs() < 1e-12);
+    assert_eq!(s.queue.max_concurrent_clients, 0);
 }
 
 #[test]

@@ -1,7 +1,7 @@
 //! Integration tests of the serving coordinator: batching, back-pressure,
 //! correctness under concurrency, failure paths.
 
-use sawtooth_attn::config::{PolicyConfig, ServeConfig};
+use sawtooth_attn::config::{PolicyConfig, QueueConfig, ServeConfig};
 use sawtooth_attn::coordinator::{AttentionRequest, Engine};
 use sawtooth_attn::runtime::{attention_host_ref, default_artifacts_dir};
 use sawtooth_attn::sim::traversal::TraversalRef;
@@ -17,6 +17,7 @@ fn cfg() -> ServeConfig {
         clients: 2,
         warmup: false,
         policy: PolicyConfig::default(),
+        queue: QueueConfig::default(),
     }
 }
 
@@ -160,9 +161,7 @@ fn stats_account_for_every_request() {
     assert_eq!(stats.failed, 0);
     assert_eq!(stats.latency.count(), 12);
     let hist_total: u64 = stats
-        .batch_size_hist
-        .iter()
-        .enumerate()
+        .batch_size_buckets()
         .map(|(size, n)| size as u64 * n)
         .sum();
     assert_eq!(hist_total, 12, "histogram must account for all requests");

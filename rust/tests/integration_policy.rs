@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use sawtooth_attn::config::{PolicyConfig, PolicyOrder, ServeConfig};
+use sawtooth_attn::config::{PolicyConfig, PolicyOrder, QueueConfig, ServeConfig};
 use sawtooth_attn::coordinator::cost::{
     default_candidates, CostReport, MaxTflops, MinMisses,
 };
@@ -185,6 +185,7 @@ fn auto_mode_serves_from_decision_cache() {
         clients: 1,
         warmup: false,
         policy: PolicyConfig { order: PolicyOrder::Auto, ..PolicyConfig::default() },
+        queue: QueueConfig::default(),
     };
     let engine = Engine::start(cfg).unwrap();
     let mut rng = Rng::new(31);

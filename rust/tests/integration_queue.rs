@@ -1,0 +1,313 @@
+//! Integration tests of the continuous-batching intake (`[queue]`): typed
+//! admission errors, cancellation, token-budget dispatch, static-mode
+//! byte parity, and the exactly-once partition property under concurrent
+//! submit + cancel + shed.
+
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+use sawtooth_attn::config::{PolicyConfig, QueueConfig, QueueMode, ServeConfig};
+use sawtooth_attn::coordinator::{AttentionRequest, Engine, EngineError};
+use sawtooth_attn::runtime::{attention_host_ref, default_artifacts_dir};
+use sawtooth_attn::sim::traversal::TraversalRef;
+use sawtooth_attn::util::proptest::check;
+use sawtooth_attn::util::rng::Rng;
+
+fn cfg(mode: QueueMode) -> ServeConfig {
+    ServeConfig {
+        artifacts_dir: default_artifacts_dir().display().to_string(),
+        max_batch: 4,
+        batch_window_us: 1000,
+        order: TraversalRef::sawtooth(),
+        queue_depth: 32,
+        clients: 2,
+        warmup: false,
+        policy: PolicyConfig::default(),
+        queue: QueueConfig { mode, ..QueueConfig::default() },
+    }
+}
+
+fn req(id: u64, seq: usize, causal: bool, seed: u64) -> AttentionRequest {
+    let mut rng = Rng::new(seed);
+    AttentionRequest::synthetic(id, seq, 4, 64, causal, &mut rng)
+}
+
+#[test]
+fn continuous_round_trip_is_correct() {
+    let engine = Engine::start(cfg(QueueMode::Continuous)).expect("run `make artifacts` first");
+    let r = req(1, 128, false, 7);
+    let resp = engine.submit(r.clone()).unwrap();
+    assert_eq!(resp.id.0, 1);
+    let reference = attention_host_ref(&r.q, &r.k, &r.v, 1, 4, 128, 64, false);
+    let max_err = resp
+        .output
+        .iter()
+        .zip(&reference)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-4, "max err {max_err}");
+    // Concurrent same-shape requests still coalesce.
+    let handles: Vec<_> = (0..8)
+        .map(|i| engine.submit_async(req(10 + i, 256, true, 100 + i)).unwrap())
+        .collect();
+    for h in handles {
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.output.len(), 4 * 256 * 64);
+    }
+    let stats = engine.shutdown();
+    assert_eq!(stats.completed, 9);
+    assert_eq!(stats.failed, 0);
+    assert!(stats.mean_batch_size() > 1.0, "mean batch {}", stats.mean_batch_size());
+    // The queue-path stats moved, and the summary shows them.
+    assert_eq!(stats.queue_batches, stats.batches);
+    assert!(stats.tokens_dispatched > 0);
+    assert_eq!(stats.time_in_queue.count(), 9);
+    let txt = stats.summary();
+    assert!(txt.contains("queue:"), "{txt}");
+    assert!(txt.contains("in-queue:"), "{txt}");
+}
+
+/// `mode = static` must reproduce the pre-queue engine exactly: same
+/// response bytes, same artifact names, and a summary without any of the
+/// new queue lines.
+#[test]
+fn static_mode_byte_parity() {
+    let static_engine = Engine::start(cfg(QueueMode::Static)).unwrap();
+    let continuous_engine = Engine::start(cfg(QueueMode::Continuous)).unwrap();
+    // Sequential submits: each dispatch is a singleton in both modes, so
+    // the artifact choice and padding are identical and the outputs must
+    // match bit for bit.
+    let shapes = [(128usize, false), (128, true), (256, false), (512, true)];
+    for (i, (seq, causal)) in shapes.iter().enumerate() {
+        let r = req(i as u64, *seq, *causal, 40 + i as u64);
+        let a = static_engine.submit(r.clone()).unwrap();
+        let b = continuous_engine.submit(r).unwrap();
+        assert_eq!(a.artifact, b.artifact, "artifact diverged for seq {seq}");
+        assert_eq!(a.output, b.output, "output bytes diverged for seq {seq}");
+    }
+    let st = static_engine.shutdown();
+    assert_eq!(
+        (st.submitted, st.completed, st.failed, st.rejected),
+        (4, 4, 0, 0)
+    );
+    // None of the queue-path counters may move in static mode...
+    assert_eq!(st.queue_batches, 0);
+    assert_eq!(st.shed_total, 0);
+    assert_eq!(st.cancelled_total, 0);
+    // ...so the summary renders exactly the legacy block: three lines,
+    // starting with the legacy headers, no queue section.
+    let txt = st.summary();
+    assert_eq!(txt.lines().count(), 3, "{txt}");
+    assert!(txt.starts_with("requests: 4 submitted, 4 completed, 0 failed, 0 rejected"), "{txt}");
+    assert!(txt.contains("\nbatches:  4 dispatches, mean size 1.00"), "{txt}");
+    assert!(txt.contains("\nlatency:  p50"), "{txt}");
+    assert!(!txt.contains("queue:"), "{txt}");
+    assert!(!txt.contains("in-queue:"), "{txt}");
+    continuous_engine.shutdown();
+}
+
+#[test]
+fn submit_after_shutdown_is_typed_shutting_down() {
+    for mode in [QueueMode::Static, QueueMode::Continuous] {
+        let engine = Engine::start(cfg(mode)).unwrap();
+        engine.shutdown();
+        let err = engine.submit_async(req(1, 128, false, 1)).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<EngineError>(),
+            Some(&EngineError::ShuttingDown),
+            "mode {mode}: {err:#}"
+        );
+        // Shutdown is idempotent.
+        engine.shutdown();
+    }
+}
+
+#[test]
+fn continuous_back_pressure_is_typed_and_counted() {
+    let mut c = cfg(QueueMode::Continuous);
+    c.queue.max_waiting = 1;
+    c.batch_window_us = 50_000; // slow pipeline so the queue backs up
+    let engine = Engine::start(c).unwrap();
+    let mut handles = Vec::new();
+    let mut rejected = 0u64;
+    for i in 0..50 {
+        match engine.submit_async(req(i, 128, false, i)) {
+            Ok(h) => handles.push(h),
+            Err(e) => {
+                let typed = e.downcast_ref::<EngineError>().expect("typed error");
+                assert_eq!(typed, &EngineError::QueueFull { limit: 1 }, "{e:#}");
+                // The legacy back-pressure message is preserved verbatim.
+                assert_eq!(format!("{e}"), "queue full (1 deep): back-pressure");
+                rejected += 1;
+            }
+        }
+    }
+    assert!(rejected > 0, "expected back-pressure with max_waiting=1");
+    for h in handles {
+        h.wait().unwrap();
+    }
+    let stats = engine.shutdown();
+    assert_eq!(stats.rejected, rejected);
+    assert_eq!(stats.shed_total, rejected, "queue-full rejects count as shed");
+}
+
+#[test]
+fn concurrency_limit_sheds_with_typed_error() {
+    let mut c = cfg(QueueMode::Continuous);
+    c.queue.max_concurrent_clients = 1;
+    let engine = Engine::start(c).unwrap();
+    let held = engine.submit_async(req(1, 128, false, 1)).unwrap();
+    // The first handle holds the only permit: the next submit sheds.
+    let err = engine.submit_async(req(2, 128, false, 2)).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<EngineError>(),
+        Some(&EngineError::ShedOverload { limit: 1 }),
+        "{err:#}"
+    );
+    // Resolving the handle releases the permit.
+    held.wait().unwrap();
+    engine.submit(req(3, 128, false, 3)).unwrap();
+    let stats = engine.shutdown();
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.shed_total, 1);
+    assert_eq!(stats.completed, 2);
+}
+
+#[test]
+fn dropping_a_handle_cancels_a_waiting_request() {
+    let mut c = cfg(QueueMode::Continuous);
+    c.batch_window_us = 300_000; // long window: requests sit in the queue
+    let engine = Engine::start(c).unwrap();
+    let keep = engine.submit_async(req(1, 128, false, 1)).unwrap();
+    let drop_a = engine.submit_async(req(2, 128, false, 2)).unwrap();
+    let drop_b = engine.submit_async(req(3, 128, false, 3)).unwrap();
+    // Three waiting < chunk limit 4 and no previous dispatch: nothing can
+    // be served before the window closes, so both drops evict.
+    drop(drop_a);
+    drop_b.cancel();
+    let resp = keep.wait().unwrap();
+    assert_eq!(resp.id.0, 1);
+    let stats = engine.shutdown();
+    assert_eq!(stats.submitted, 3);
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.cancelled_total, 2);
+    assert_eq!(stats.failed, 0);
+    assert!(stats.summary().contains("2 cancelled"), "{}", stats.summary());
+}
+
+#[test]
+fn token_budget_bounds_each_dispatch() {
+    let mut c = cfg(QueueMode::Continuous);
+    // Budget = exactly one seq-128 request (4 heads × 128 × 64): every
+    // dispatch degrades to a singleton even under concurrent load.
+    c.queue.max_batch_total_tokens = 4 * 128 * 64;
+    let engine = Engine::start(c).unwrap();
+    let handles: Vec<_> = (0..8)
+        .map(|i| engine.submit_async(req(i, 128, false, i)).unwrap())
+        .collect();
+    for h in handles {
+        h.wait().unwrap();
+    }
+    let stats = engine.shutdown();
+    assert_eq!(stats.completed, 8);
+    assert_eq!(stats.batches, 8, "token budget must forbid coalescing");
+    assert!((stats.mean_batch_size() - 1.0).abs() < 1e-12);
+    assert!((stats.mean_tokens_per_batch() - 32_768.0).abs() < 1e-12);
+}
+
+/// The exactly-once partition property: under concurrent submit + cancel
+/// + shed, every accepted request ends up in exactly one of
+/// {completed, failed, cancelled}, every rejection is observed by exactly
+/// one client, and every waited handle resolves with its own response.
+#[test]
+fn continuous_partitions_every_request_exactly_once() {
+    check("queue-exactly-once-partition", 6, |g| {
+        let mut c = cfg(QueueMode::Continuous);
+        c.queue.max_waiting = 1 + g.int(0, 7) as usize; // small: force sheds
+        c.batch_window_us = 500 + g.int(0, 2000);
+        let engine = Engine::start(c).unwrap();
+        let n_clients = 2 + g.int(0, 1) as usize;
+        let per_client = 4 + g.int(0, 8);
+        let accepted = Mutex::new(0u64);
+        let rejected = Mutex::new(0u64);
+        let waited: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        let seeds: Vec<u64> = (0..n_clients).map(|_| g.rng.next_u64()).collect();
+        std::thread::scope(|s| {
+            for (cidx, seed) in seeds.iter().enumerate() {
+                let engine = &engine;
+                let (accepted, rejected, waited) = (&accepted, &rejected, &waited);
+                let seed = *seed;
+                s.spawn(move || {
+                    let mut rng = Rng::new(seed);
+                    let seqs = [128usize, 256, 512];
+                    let mut handles = Vec::new();
+                    for i in 0..per_client {
+                        let seq = seqs[rng.next_below(3) as usize];
+                        let id = (cidx as u64) * 1000 + i;
+                        match engine.submit_async(req(id, seq, rng.chance(0.5), id)) {
+                            Ok(h) => {
+                                *accepted.lock().unwrap() += 1;
+                                if rng.chance(0.25) {
+                                    drop(h); // cancel
+                                } else {
+                                    handles.push((id, h));
+                                }
+                            }
+                            Err(e) => {
+                                assert!(
+                                    e.downcast_ref::<EngineError>().is_some(),
+                                    "untyped rejection: {e:#}"
+                                );
+                                *rejected.lock().unwrap() += 1;
+                            }
+                        }
+                    }
+                    for (id, h) in handles {
+                        let resp = h.wait().expect("kept handle must resolve");
+                        assert_eq!(resp.id.0, id, "response routed to the wrong handle");
+                        waited.lock().unwrap().push(id);
+                    }
+                });
+            }
+        });
+        let stats = engine.shutdown();
+        let accepted = *accepted.lock().unwrap();
+        let rejected = *rejected.lock().unwrap();
+        let waited = waited.lock().unwrap();
+        let unique: HashSet<u64> = waited.iter().copied().collect();
+        if unique.len() != waited.len() {
+            return Err("a response id resolved more than once".into());
+        }
+        if stats.submitted != accepted {
+            return Err(format!("submitted {} != accepted {accepted}", stats.submitted));
+        }
+        if stats.rejected != rejected || stats.shed_total != rejected {
+            return Err(format!(
+                "rejected {} / shed {} != client-observed {rejected}",
+                stats.rejected, stats.shed_total
+            ));
+        }
+        if stats.failed != 0 {
+            return Err(format!("{} unexpected failures", stats.failed));
+        }
+        // The partition: every accepted request completed or was evicted
+        // after its handle dropped — nothing lost, nothing double-counted.
+        if stats.completed + stats.cancelled_total != stats.submitted {
+            return Err(format!(
+                "partition broken: {} completed + {} cancelled != {} submitted",
+                stats.completed, stats.cancelled_total, stats.submitted
+            ));
+        }
+        // Every waited handle is among the completions (a dropped handle
+        // may also complete if it was already dispatched — that's the
+        // cancel-after-dispatch case, counted under completed).
+        if (waited.len() as u64) > stats.completed {
+            return Err(format!(
+                "{} waited handles but only {} completions",
+                waited.len(),
+                stats.completed
+            ));
+        }
+        Ok(())
+    });
+}

@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use sawtooth_attn::config::{PolicyConfig, ServeConfig, SweepServiceConfig};
+use sawtooth_attn::config::{PolicyConfig, QueueConfig, ServeConfig, SweepServiceConfig};
 use sawtooth_attn::coordinator::{AttentionRequest, ClientId, Engine, SweepService};
 use sawtooth_attn::gb10::DeviceSpec;
 use sawtooth_attn::runtime::default_artifacts_dir;
@@ -210,6 +210,7 @@ fn serve_cfg() -> ServeConfig {
         clients: 2,
         warmup: false,
         policy: PolicyConfig::default(),
+        queue: QueueConfig::default(),
     }
 }
 

@@ -10,7 +10,8 @@
 //! * `{:#}` (alternate Display) prints the whole context chain joined by
 //!   `": "` — the format the CLI and tests rely on;
 //! * any `std::error::Error + Send + Sync + 'static` converts into [`Error`]
-//!   via `?`;
+//!   via `?` (or [`Error::new`]), and the typed value stays recoverable
+//!   through any number of `.context(..)` wraps via [`Error::downcast_ref`];
 //! * `.context(..)` / `.with_context(..)` wrap both `Result` (including
 //!   `anyhow::Result` itself) and `Option`.
 
@@ -23,12 +24,23 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 /// the last element is the root cause.
 pub struct Error {
     chain: Vec<String>,
+    /// The typed root cause, kept when the error was built from a concrete
+    /// `std::error::Error` value so callers can [`Error::downcast_ref`] it
+    /// (e.g. the coordinator's `EngineError`). Purely message-built errors
+    /// (`anyhow!`, `Error::msg`) carry none.
+    source: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 impl Error {
     /// Create an error from a printable message.
     pub fn msg<M: fmt::Display>(message: M) -> Self {
-        Error { chain: vec![message.to_string()] }
+        Error { chain: vec![message.to_string()], source: None }
+    }
+
+    /// Create an error from a typed error value, keeping it recoverable
+    /// via [`Error::downcast_ref`].
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Self {
+        Error { chain: vec![error.to_string()], source: Some(Box::new(error)) }
     }
 
     /// Wrap this error with an outer context message.
@@ -45,6 +57,18 @@ impl Error {
     /// The root cause (innermost message).
     pub fn root_cause(&self) -> &str {
         self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// The typed root cause, when this error was built from a concrete
+    /// error value of type `E` (directly, via `?`, or via [`Error::new`])
+    /// — context wraps do not erase it.
+    pub fn downcast_ref<E: 'static>(&self) -> Option<&E> {
+        self.source.as_ref()?.downcast_ref::<E>()
+    }
+
+    /// Whether the typed root cause is an `E` (see [`Error::downcast_ref`]).
+    pub fn is<E: 'static>(&self) -> bool {
+        self.downcast_ref::<E>().is_some()
     }
 }
 
@@ -72,7 +96,7 @@ where
     E: std::error::Error + Send + Sync + 'static,
 {
     fn from(e: E) -> Self {
-        Error::msg(e)
+        Error::new(e)
     }
 }
 
@@ -88,7 +112,7 @@ mod private {
         E: std::error::Error + Send + Sync + 'static,
     {
         fn into_error(self) -> super::Error {
-            super::Error::msg(self)
+            super::Error::new(self)
         }
     }
 
@@ -178,6 +202,26 @@ mod tests {
         let r: Result<u32> = Err(anyhow!("inner"));
         let r = r.with_context(|| "outer");
         assert_eq!(format!("{:#}", r.unwrap_err()), "outer: inner");
+    }
+
+    #[test]
+    fn downcast_ref_recovers_typed_cause_through_context() {
+        let e: Error = io_err().into();
+        let e = e.context("reading config").context("loading run");
+        let io = e.downcast_ref::<std::io::Error>().expect("typed cause kept");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        assert!(e.is::<std::io::Error>());
+        assert!(!e.is::<std::fmt::Error>());
+        // Message-built errors carry no typed cause.
+        let m = anyhow!("plain message");
+        assert!(m.downcast_ref::<std::io::Error>().is_none());
+    }
+
+    #[test]
+    fn error_new_preserves_display() {
+        let e = Error::new(io_err());
+        assert_eq!(format!("{e}"), "missing");
+        assert_eq!(e.root_cause(), "missing");
     }
 
     #[test]

@@ -1,11 +1,11 @@
 #!/usr/bin/env python3
 """Fill EXPERIMENTS.md's measured-numbers block from the bench JSON files.
 
-Reads rust/BENCH_sweep.json, rust/BENCH_reuse.json and
-rust/BENCH_policy.json (produced by `cargo bench --bench bench_sweep` /
-`--bench bench_reuse` / `--bench bench_policy`, or downloaded from the CI
-artifacts) and rewrites the region between the `<!-- BENCH:begin -->` /
-`<!-- BENCH:end -->` markers in EXPERIMENTS.md.
+Reads rust/BENCH_sweep.json, rust/BENCH_reuse.json, rust/BENCH_policy.json
+and rust/BENCH_serve.json (produced by `cargo bench --bench bench_sweep` /
+`--bench bench_reuse` / `--bench bench_policy` / `--bench bench_coordinator`,
+or downloaded from the CI artifacts) and rewrites the region between the
+`<!-- BENCH:begin -->` / `<!-- BENCH:end -->` markers in EXPERIMENTS.md.
 
 Usage: python3 scripts/update_experiments_perf.py   (from the repo root,
 or anywhere — paths are resolved relative to this file).
@@ -29,14 +29,14 @@ def load(name):
         return json.load(f)
 
 
-def render(sweep, reuse, policy):
+def render(sweep, reuse, policy, serve):
     lines = []
-    if sweep is None and reuse is None and policy is None:
+    if sweep is None and reuse is None and policy is None and serve is None:
         lines.append(
             "*No measured numbers yet: run `make bench-perf` on a ≥8-core "
             "host (or download the CI `BENCH_sweep`/`BENCH_reuse`/"
-            "`BENCH_policy` artifacts into `rust/`) and re-run "
-            "`python3 scripts/update_experiments_perf.py`.*"
+            "`BENCH_policy`/`BENCH_serve` artifacts into `rust/`) and "
+            "re-run `python3 scripts/update_experiments_perf.py`.*"
         )
         return lines
     if sweep is not None:
@@ -82,6 +82,36 @@ def render(sweep, reuse, policy):
             "| %d per-capacity what-ifs from cached curves | %.6f s |"
             % (policy["whatif_caps"], policy["whatif_s"])
         )
+    if serve is not None:
+        if lines:
+            lines.append("")
+        lines.append(
+            "Serving engine (`bench_coordinator`, %d requests, %d clients, "
+            "mixed 128/256/512 Poisson load; static windows vs continuous "
+            "batching):" % (serve["requests"], serve["clients"])
+        )
+        lines.append("")
+        lines.append(
+            "| offered load | mode | throughput | in-queue mean | in-queue p99 "
+            "| shed | tokens/batch |"
+        )
+        lines.append("|---|---|---|---|---|---|---|")
+        for pt in serve["points"]:
+            for mode in ("static", "continuous"):
+                m = pt[mode]
+                lines.append(
+                    "| %.0f req/s | %s | %.1f req/s | %.2f ms | %.2f ms "
+                    "| %.1f%% | %.0f |"
+                    % (
+                        pt["offered_rps"],
+                        mode,
+                        m["throughput_rps"],
+                        m["tiq_mean_ms"],
+                        m["tiq_p99_ms"],
+                        100.0 * m["shed_rate"],
+                        m["mean_tokens_per_batch"],
+                    )
+                )
     return lines
 
 
@@ -92,7 +122,12 @@ def main():
     head, rest = text.split(BEGIN, 1)
     _, tail = rest.split(END, 1)
     block = "\n".join(
-        render(load("BENCH_sweep.json"), load("BENCH_reuse.json"), load("BENCH_policy.json"))
+        render(
+            load("BENCH_sweep.json"),
+            load("BENCH_reuse.json"),
+            load("BENCH_policy.json"),
+            load("BENCH_serve.json"),
+        )
     )
     EXPERIMENTS.write_text(head + BEGIN + "\n" + block + "\n" + END + tail)
     print(f"updated {EXPERIMENTS}")
