@@ -12,6 +12,14 @@
 //! of an access is the number of distinct blocks touched since the previous
 //! access to the same block; the weighted variant sums sector weights
 //! instead of counting blocks.
+//!
+//! The multi-channel [`CapacityProfiler`] additionally keeps a bounded
+//! **front stack** — an MRU ring holding the most recently touched blocks —
+//! so that the near reuses the paper's synchronized wavefronts produce are
+//! resolved in O(1) with exact depths, and only front-stack evictions touch
+//! the Fenwick tree. Every result is bitwise identical to the plain
+//! Fenwick-only profiler (`with_front(0)`); engagement is tracked in
+//! [`FrontStackStats`].
 
 use rustc_hash::FxHashMap;
 
@@ -194,9 +202,15 @@ pub struct CapacityCurve {
     cold: [u64; CURVE_CHANNELS],
     total: [u64; CURVE_CHANNELS],
     max_weight: u32,
+    front_stats: FrontStackStats,
 }
 
 impl CapacityCurve {
+    /// Fast-path engagement counters recorded while profiling this curve.
+    pub fn front_stats(&self) -> FrontStackStats {
+        self.front_stats
+    }
+
     /// Per-channel predicted misses for an LRU of `capacity` weight units.
     pub fn channel_misses_at(&self, capacity: u64) -> [u64; CURVE_CHANNELS] {
         let i = self.depths.partition_point(|&(d, _)| d <= capacity);
@@ -247,6 +261,130 @@ impl CapacityCurve {
 /// Absent-position sentinel for the dense last-access map.
 const NO_POS: u32 = u32::MAX;
 
+/// Position sentinel marking a block resident in the bounded front stack.
+/// Its slot is found by walking the ring — bounded by the front capacity
+/// and, by the wavefront-synchrony argument, usually depth 0–2.
+const FRONT_POS: u32 = u32::MAX - 1;
+
+/// Default front-stack capacity: ~4× the GB10's 48 SMs, covering the
+/// cross-SM reuse window of one synchronized wavefront round with slack for
+/// jitter-induced drift. The engine overrides this per device spec.
+pub const DEFAULT_FRONT_CAPACITY: usize = 192;
+
+/// Occupancy depths below this bound go to a direct-indexed histogram
+/// instead of the hash map. Front-stack hits are bounded by the resident
+/// front weight, which sits far below this for every modelled shape, so the
+/// fast path never pays a hash on the histogram update either.
+const DENSE_HIST_MAX: u64 = 1 << 16;
+
+/// Fast-path engagement counters for the front-stack (profiler) and
+/// front-probe (LRU) optimisations. Deliberately kept out of
+/// `sim::CacheCounters`/`SimResult` — those are compared bitwise between
+/// the fast and slow paths, so telemetry must ride on the side.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FrontStackStats {
+    /// Warm accesses resolved inside the bounded front stack / probe window.
+    pub front_hits: u64,
+    /// Warm accesses that fell through to the Fenwick tree / key map.
+    pub deep_hits: u64,
+    /// First-touch accesses (for the LRU caches: misses of any kind).
+    pub cold: u64,
+    /// Front-stack evictions into the deep structure.
+    pub spills: u64,
+}
+
+impl FrontStackStats {
+    /// Fraction of warm accesses resolved by the fast path, in [0, 1].
+    pub fn engagement(&self) -> f64 {
+        let warm = self.front_hits + self.deep_hits;
+        if warm == 0 {
+            0.0
+        } else {
+            self.front_hits as f64 / warm as f64
+        }
+    }
+
+    /// Accumulate another counter block (sweep-executor aggregation).
+    pub fn merge(&mut self, other: &FrontStackStats) {
+        self.front_hits += other.front_hits;
+        self.deep_hits += other.deep_hits;
+        self.cold += other.cold;
+        self.spills += other.spills;
+    }
+}
+
+/// Bounded MRU ring buffer — the fast path's "front of the LRU stack".
+///
+/// Logical index 0 is the MRU entry. A ring makes both pushing a new MRU
+/// and spilling the LRU tail O(1); a flat Vec would memmove the whole
+/// buffer on every spill, which at ~10% deep-hit rates over 10⁷-access
+/// traces is gigabytes of copying. Promoting a hit at logical depth `j`
+/// costs O(j), and `j` is small by construction: a synchronized wavefront
+/// touches the same KV tile from every SM within one round, so re-touches
+/// land at the very top of the stack.
+struct FrontStack {
+    /// (block, weight) slots; indices `[head, head+len)` (mod cap) live.
+    buf: Vec<(u64, u32)>,
+    head: usize,
+    len: usize,
+    cap: usize,
+}
+
+impl FrontStack {
+    fn new(cap: usize) -> Self {
+        FrontStack { buf: vec![(0, 0); cap], head: 0, len: 0, cap }
+    }
+
+    /// Move resident `block` to the MRU slot; returns the summed weight of
+    /// the entries that were more recent than it (its depth minus its own
+    /// weight). The caller guarantees residency.
+    fn touch(&mut self, block: u64) -> u64 {
+        let mut above = 0u64;
+        let mut p = self.head;
+        let mut steps = 0usize;
+        loop {
+            let e = self.buf[p];
+            if e.0 == block {
+                // Shift [head, p) one slot toward the LRU end, then
+                // reinstall the touched entry at the head.
+                let mut q = p;
+                while q != self.head {
+                    let prev = if q == 0 { self.cap - 1 } else { q - 1 };
+                    self.buf[q] = self.buf[prev];
+                    q = prev;
+                }
+                self.buf[self.head] = e;
+                return above;
+            }
+            above += e.1 as u64;
+            p += 1;
+            if p == self.cap {
+                p = 0;
+            }
+            steps += 1;
+            debug_assert!(steps < self.len, "touch() on a non-resident block");
+        }
+    }
+
+    /// Overwrite the MRU entry's weight (front hit with a changed weight).
+    fn set_mru_weight(&mut self, weight: u32) {
+        self.buf[self.head].1 = weight;
+    }
+
+    /// Insert a new block at the MRU slot; when full, returns the evicted
+    /// LRU entry. The caller handles `cap == 0` (fast path disabled).
+    fn push_mru(&mut self, block: u64, weight: u32) -> Option<(u64, u32)> {
+        self.head = if self.head == 0 { self.cap - 1 } else { self.head - 1 };
+        if self.len < self.cap {
+            self.len += 1;
+            self.buf[self.head] = (block, weight);
+            None
+        } else {
+            Some(std::mem::replace(&mut self.buf[self.head], (block, weight)))
+        }
+    }
+}
+
 /// block → (position of most recent access, weight at that access).
 /// Hashed for sparse key spaces; a direct vector for dense ones (the
 /// wavefront engine's block keys are compact by construction — same
@@ -282,17 +420,20 @@ impl LastMap {
         }
     }
 
-    /// Every (pos, block, weight) marker — one per block ever accessed.
+    /// Every spilled (pos, block, weight) marker. Front-resident blocks
+    /// carry no Fenwick position and are skipped, so compaction renumbers
+    /// only the markers that actually live in the tree.
     fn live_entries(&self) -> Vec<(u32, u64, u32)> {
         match self {
             LastMap::Hash(m) => m
                 .iter()
+                .filter(|(_, &(pos, _))| pos != FRONT_POS)
                 .map(|(&block, &(pos, weight))| (pos, block, weight))
                 .collect(),
             LastMap::Dense(v) => v
                 .iter()
                 .enumerate()
-                .filter(|(_, e)| e.0 != NO_POS)
+                .filter(|(_, e)| e.0 != NO_POS && e.0 != FRONT_POS)
                 .map(|(block, e)| (e.0, block as u64, e.1))
                 .collect(),
         }
@@ -308,15 +449,28 @@ impl LastMap {
 /// every pending range sum). Memory is O(blocks), time O(N log blocks).
 /// A running live-weight total turns each distance query into a single
 /// prefix traversal (`distance = live_weight − prefix(prev)`).
+///
+/// The bounded [`FrontStack`] sits in front of the Fenwick tree: the most
+/// recently touched blocks live only in the ring (tagged [`FRONT_POS`] in
+/// the last-access map) and re-touches there resolve without any tree
+/// traversal. Spills out of the ring happen in last-access order, so
+/// Fenwick positions keep encoding recency for spilled markers and every
+/// depth — front or deep — is exactly the one the plain algorithm computes.
 pub struct CapacityProfiler {
     last: LastMap,
     fen: Fenwick,
     time: usize,
     /// Fenwick size; compaction triggers when `time` reaches it.
     limit: usize,
-    /// Sum of all live marker weights (== prefix over every position).
+    /// Sum of spilled live marker weights (the front stack excluded).
     live_weight: u64,
+    front: FrontStack,
+    /// Sum of the weights resident in the front stack.
+    front_weight: u64,
+    front_stats: FrontStackStats,
     hist: FxHashMap<u64, [u64; CURVE_CHANNELS]>,
+    /// Direct-indexed histogram for depths below [`DENSE_HIST_MAX`].
+    dense_hist: Vec<[u64; CURVE_CHANNELS]>,
     cold: [u64; CURVE_CHANNELS],
     total: [u64; CURVE_CHANNELS],
     max_weight: u32,
@@ -343,11 +497,32 @@ impl CapacityProfiler {
             time: 0,
             limit,
             live_weight: 0,
+            front: FrontStack::new(DEFAULT_FRONT_CAPACITY),
+            front_weight: 0,
+            front_stats: FrontStackStats::default(),
             hist: FxHashMap::default(),
+            dense_hist: Vec::new(),
             cold: [0; CURVE_CHANNELS],
             total: [0; CURVE_CHANNELS],
             max_weight: 0,
         }
+    }
+
+    /// Resize the front stack; `0` disables the fast path entirely (every
+    /// access goes straight to the Fenwick tree, reproducing the classic
+    /// algorithm step for step). Must be called before the first access.
+    pub fn with_front(mut self, capacity: usize) -> Self {
+        assert!(
+            self.front.len == 0 && self.time == 0,
+            "with_front must precede the first access"
+        );
+        self.front = FrontStack::new(capacity);
+        self
+    }
+
+    /// Fast-path engagement counters so far.
+    pub fn front_stats(&self) -> FrontStackStats {
+        self.front_stats
     }
 
     /// Renumber live most-recent markers to positions `0..live`, preserving
@@ -372,40 +547,107 @@ impl CapacityProfiler {
     pub fn access(&mut self, block: u64, weight: u32, channel: usize) -> Option<u64> {
         debug_assert!(channel < CURVE_CHANNELS);
         debug_assert!(weight > 0, "zero-weight accesses are not modelled");
-        if self.time == self.limit {
-            self.compact();
-        }
         self.max_weight = self.max_weight.max(weight);
         let w = weight as u64;
         self.total[channel] += w;
-        let depth = match self.last.get(block) {
+        match self.last.get(block) {
+            Some((FRONT_POS, prev_w)) => {
+                // Front hit: the block is among the most recently touched —
+                // its exact depth is the weight stacked above it in the
+                // ring plus its own. No Fenwick traversal, no hashing.
+                let d = self.front.touch(block) + w;
+                if weight != prev_w {
+                    self.front.set_mru_weight(weight);
+                    self.front_weight = self.front_weight + w - prev_w as u64;
+                    self.last.set(block, FRONT_POS, weight);
+                }
+                self.front_stats.front_hits += 1;
+                self.bump(d, channel, w);
+                Some(d)
+            }
             Some((prev, prev_w)) => {
-                // Weight of distinct blocks touched after `prev` (the
-                // block's own marker included in neither side), plus the
-                // block's own weight: its stack depth at re-touch.
+                // Deep hit: every front entry is more recent than any
+                // Fenwick marker (spills preserve recency order), so the
+                // depth stacks the whole front weight on top of the classic
+                // `live − prefix(prev)` term — plus the block's own weight:
+                // its stack depth at re-touch.
                 let below = self.fen.prefix(prev as usize) as u64;
-                let d = self.live_weight - below;
+                let d = self.live_weight - below + self.front_weight + w;
                 self.fen.add(prev as usize, -(prev_w as i64));
                 self.live_weight -= prev_w as u64;
-                Some(d + w)
+                // Tag as front-resident *before* any spill-triggered
+                // compaction could observe the stale Fenwick position.
+                self.last.set(block, FRONT_POS, weight);
+                self.front_stats.deep_hits += 1;
+                self.push_front(block, weight);
+                self.bump(d, channel, w);
+                Some(d)
             }
-            None => None,
-        };
-        self.fen.add(self.time, w as i64);
-        self.live_weight += w;
-        self.last.set(block, self.time as u32, weight);
-        match depth {
-            Some(o) => {
-                self.hist.entry(o).or_insert([0; CURVE_CHANNELS])[channel] += w;
+            None => {
+                self.front_stats.cold += 1;
+                self.last.set(block, FRONT_POS, weight);
+                self.push_front(block, weight);
+                self.cold[channel] += w;
+                None
             }
-            None => self.cold[channel] += w,
         }
+    }
+
+    /// Insert `block` at the front's MRU slot, spilling the displaced LRU
+    /// tail (if any) into the Fenwick region. Capacity 0 — the disabled
+    /// fast path — spills the block itself immediately, degenerating to
+    /// the classic one-marker-per-access profiler.
+    fn push_front(&mut self, block: u64, weight: u32) {
+        if self.front.cap == 0 {
+            self.spill(block, weight);
+            return;
+        }
+        self.front_weight += weight as u64;
+        if let Some((sp_block, sp_w)) = self.front.push_mru(block, weight) {
+            self.front_weight -= sp_w as u64;
+            self.spill(sp_block, sp_w);
+        }
+    }
+
+    /// Move one block out of the front stack into the Fenwick tree. Spill
+    /// order is monotone in last-access time (the ring preserves recency),
+    /// so Fenwick positions keep encoding recency across the two regions.
+    fn spill(&mut self, block: u64, weight: u32) {
+        if self.time == self.limit {
+            self.compact();
+        }
+        debug_assert!(self.time < FRONT_POS as usize);
+        self.fen.add(self.time, weight as i64);
+        self.live_weight += weight as u64;
+        self.last.set(block, self.time as u32, weight);
+        self.front_stats.spills += 1;
         self.time += 1;
-        depth
+    }
+
+    /// Histogram update: small depths (every front hit, and any comparably
+    /// shallow deep hit) go to the direct-indexed store, large ones to the
+    /// hash map. Routing is purely by depth value, so a given depth only
+    /// ever lives in one store.
+    #[inline]
+    fn bump(&mut self, depth: u64, channel: usize, w: u64) {
+        if depth < DENSE_HIST_MAX {
+            let d = depth as usize;
+            if d >= self.dense_hist.len() {
+                self.dense_hist.resize(d + 1, [0; CURVE_CHANNELS]);
+            }
+            self.dense_hist[d][channel] += w;
+        } else {
+            self.hist.entry(depth).or_insert([0; CURVE_CHANNELS])[channel] += w;
+        }
     }
 
     pub fn finish(self) -> CapacityCurve {
         let mut depths: Vec<(u64, [u64; CURVE_CHANNELS])> = self.hist.into_iter().collect();
+        for (d, counts) in self.dense_hist.into_iter().enumerate() {
+            if counts.iter().any(|&c| c != 0) {
+                depths.push((d as u64, counts));
+            }
+        }
         depths.sort_unstable();
         let mut suffix = vec![[0u64; CURVE_CHANNELS]; depths.len() + 1];
         for i in (0..depths.len()).rev() {
@@ -419,6 +661,7 @@ impl CapacityProfiler {
             cold: self.cold,
             total: self.total,
             max_weight: self.max_weight,
+            front_stats: self.front_stats,
         }
     }
 }
@@ -617,22 +860,90 @@ mod tests {
         });
     }
 
+    fn curve_of_front(trace: &[u64], expected_blocks: usize, front: usize) -> CapacityCurve {
+        let mut p = CapacityProfiler::new(expected_blocks).with_front(front);
+        for &b in trace {
+            p.access(b, 1, 0);
+        }
+        p.finish()
+    }
+
     #[test]
     fn compaction_is_transparent() {
         // A tiny expected-blocks hint forces many compactions; the curve
-        // must be identical to the uncompacted run.
+        // must be identical to the uncompacted run — with the front stack
+        // disabled (pure Fenwick), at its default size, and tiny (forcing
+        // spills to interleave with every compaction).
         let trace: Vec<u64> = (0..40u64)
             .chain((0..40).rev())
             .chain(0..40)
             .chain((5..25).rev())
             .collect();
-        let small = curve_of(&trace, 1);
-        let big = curve_of(&trace, 10_000);
-        for cap in 0..64u64 {
-            assert_eq!(small.misses_at(cap), big.misses_at(cap), "cap {cap}");
+        let big = curve_of_front(&trace, 10_000, 0);
+        for front in [0usize, 3, DEFAULT_FRONT_CAPACITY] {
+            let small = curve_of_front(&trace, 1, front);
+            for cap in 0..64u64 {
+                assert_eq!(small.misses_at(cap), big.misses_at(cap), "front {front} cap {cap}");
+            }
+            assert_eq!(small.channel_total(), big.channel_total());
+            assert_eq!(small.channel_cold(), big.channel_cold());
         }
-        assert_eq!(small.channel_total(), big.channel_total());
-        assert_eq!(small.channel_cold(), big.channel_cold());
+    }
+
+    #[test]
+    fn prop_front_stack_depths_are_bit_identical() {
+        // The fast path's core claim, per access: whatever the front size,
+        // map flavour, and compaction pressure, every reported occupancy
+        // depth (and the finished curve) equals the plain Fenwick run.
+        check("front-stack-vs-fenwick", 60, |g| {
+            let len = g.int(1, 300) as usize;
+            let alphabet = g.int(1, 40);
+            let front = g.int(0, 6) as usize;
+            let trace: Vec<u64> = (0..len).map(|_| g.int(0, alphabet)).collect();
+            let weight_of = |b: u64| (b % 9 + 1) as u32;
+            let mut fast = CapacityProfiler::new(1).with_front(front);
+            let mut dense = CapacityProfiler::new_dense(alphabet as usize + 1).with_front(front);
+            let mut slow = CapacityProfiler::new(10_000).with_front(0);
+            for &b in &trace {
+                let ch = (b % CURVE_CHANNELS as u64) as usize;
+                let d = slow.access(b, weight_of(b), ch);
+                let df = fast.access(b, weight_of(b), ch);
+                let dd = dense.access(b, weight_of(b), ch);
+                if df != d || dd != d {
+                    return Err(format!(
+                        "depth diverged at block {b}: slow {d:?} fast {df:?} dense {dd:?} \
+                         (front {front}, trace {trace:?})"
+                    ));
+                }
+            }
+            let (fast, dense, slow) = (fast.finish(), dense.finish(), slow.finish());
+            for cap in [0u64, 1, 5, 9, 17, 40, 200] {
+                let m = slow.misses_at(cap);
+                if fast.misses_at(cap) != m || dense.misses_at(cap) != m {
+                    return Err(format!("curve diverged at cap {cap} (front {front})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn front_stats_account_for_every_access() {
+        let trace: Vec<u64> = (0..20u64).chain((0..20).rev()).chain(0..20).collect();
+        let mut p = CapacityProfiler::new(64).with_front(4);
+        for &b in &trace {
+            p.access(b, 1, 0);
+        }
+        let s = p.front_stats();
+        assert_eq!(s.front_hits + s.deep_hits + s.cold, trace.len() as u64);
+        assert_eq!(s.cold, 20);
+        // Sawtooth reversal re-touches the latest blocks: the front must
+        // actually engage, and spills only ever follow non-front accesses.
+        assert!(s.front_hits > 0);
+        assert!(s.spills <= s.cold + s.deep_hits);
+        assert!((0.0..=1.0).contains(&s.engagement()));
+        let disabled = CapacityProfiler::new(64).with_front(0);
+        assert_eq!(disabled.front_stats(), FrontStackStats::default());
     }
 
     #[test]

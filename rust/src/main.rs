@@ -113,6 +113,9 @@ COMMON OPTIONS:
   --no-mattson           disable the reuse-distance fast path: simulate
                          every cache capacity separately instead of
                          profiling once (output is byte-identical)
+  --timing               (report / sweep-serve) print per-phase wall-clock
+                         and executor job/cache/fast-path counters to
+                         stderr; stdout is unchanged
   --requests N --clients N --max-batch N   (serve)
   --queue-mode MODE      (serve) intake mode: static (legacy windows) |
                          continuous (token-budget continuous batching;
@@ -136,7 +139,7 @@ fn parse_flags(args: &[String]) -> Result<(Vec<(String, String)>, Vec<String>)> 
         if let Some(name) = a.strip_prefix("--") {
             // Boolean flags take no value; everything else consumes one.
             const BOOLEANS: &[&str] =
-                &["causal", "exact", "quiet", "no-mattson", "chunks", "print-spec"];
+                &["causal", "exact", "quiet", "no-mattson", "chunks", "print-spec", "timing"];
             if BOOLEANS.contains(&name) {
                 flags.push((name.to_string(), "true".to_string()));
             } else {
@@ -207,9 +210,40 @@ fn cmd_report(args: &[String]) -> Result<()> {
     };
     let mattson = flag(&flags, "no-mattson").is_none();
     let exec = SweepExecutor::new(threads).with_mattson(mattson);
-    let out = report::run_with(exp, &exec)?;
+    let out = if flag(&flags, "timing").is_some() {
+        // Phase wall-clock goes to stderr only: stdout stays byte-identical
+        // to the untimed run (the report parity tests depend on it).
+        let out = report::run_phased(exp, &exec, &mut |phase, secs| {
+            eprintln!("timing: {phase:<12} {secs:9.3}s");
+        })?;
+        print_executor_timing(&exec);
+        out
+    } else {
+        report::run_with(exp, &exec)?
+    };
     print!("{out}");
     Ok(())
+}
+
+/// `--timing` epilogue (stderr): executed-job counts and wall-clock plus
+/// the executor's cache/profile gauges and merged fast-path engagement.
+fn print_executor_timing(exec: &SweepExecutor) {
+    let t = exec.timing();
+    eprintln!(
+        "timing: executor ran {} sim + {} profile jobs, busy {:.3}s (longest {:.3}s)",
+        t.sim_jobs, t.profile_jobs, t.busy_s, t.max_job_s
+    );
+    eprintln!(
+        "timing: cache {} configs, {} curves; fast path {:.1}% engaged \
+         ({} front / {} deep / {} cold, {} spills)",
+        exec.cached_len(),
+        exec.profiled_len(),
+        100.0 * t.fastpath.engagement(),
+        t.fastpath.front_hits,
+        t.fastpath.deep_hits,
+        t.fastpath.cold,
+        t.fastpath.spills
+    );
 }
 
 fn cmd_simulate(args: &[String]) -> Result<()> {
@@ -617,9 +651,15 @@ fn cmd_sweep_serve(args: &[String]) -> Result<()> {
                 .collect::<Result<Vec<_>>>()
         })?;
     let elapsed = t0.elapsed();
+    let timing = flag(&flags, "timing").is_some();
+    if timing {
+        eprintln!("timing: clients      {:9.3}s", elapsed.as_secs_f64());
+        print_executor_timing(service.executor());
+    }
 
     // Parity: every client must be byte-identical to a private sequential
     // executor resolving the same spec (the acceptance bar of the service).
+    let t_parity = std::time::Instant::now();
     let reference = SweepExecutor::new(1).with_mattson(mattson).run_spec(&spec);
     for (c, results) in all.iter().enumerate() {
         if results.len() != reference.len() {
@@ -632,6 +672,9 @@ fn cmd_sweep_serve(args: &[String]) -> Result<()> {
         }
     }
     println!("parity: {clients} clients byte-identical to sequential run_spec");
+    if timing {
+        eprintln!("timing: parity       {:9.3}s", t_parity.elapsed().as_secs_f64());
+    }
     let stats = service.shutdown();
     println!("{}", stats.summary());
     println!("wall: {elapsed:?} for {clients} overlapping submissions");

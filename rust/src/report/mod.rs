@@ -64,6 +64,73 @@ pub fn run_threaded(experiment: &str, threads: usize) -> Result<String> {
 /// Run one experiment against a caller-provided executor (shared executors
 /// memoize simulations across calls).
 pub fn run_with(experiment: &str, exec: &SweepExecutor) -> Result<String> {
+    run_phased(experiment, exec, &mut |_, _| {})
+}
+
+/// [`run_with`] plus per-phase instrumentation: `on_phase(name, seconds)`
+/// fires after each completed phase — the cache-warming union pass and
+/// every rendered experiment for "all", each ablation for "ablations", the
+/// experiment itself otherwise. The returned report is byte-identical to
+/// [`run_with`]; the callback is side-channel only (the CLI's `--timing`
+/// prints it to stderr, keeping stdout parity intact).
+pub fn run_phased(
+    experiment: &str,
+    exec: &SweepExecutor,
+    on_phase: &mut dyn FnMut(&str, f64),
+) -> Result<String> {
+    match experiment {
+        "ablations" => {
+            let mut out = String::new();
+            for e in ABLATIONS {
+                timed(e, &mut out, on_phase, &mut || render_one(e, exec))?;
+                out.push('\n');
+            }
+            Ok(out)
+        }
+        "all" => {
+            // Warm the cache with the union grid of every experiment in one
+            // parallel wave, then render each experiment from cache hits.
+            // This parallelizes across experiment boundaries, not just
+            // within one figure's sweep.
+            let mut union: Vec<SimConfig> = Vec::new();
+            for e in EXPERIMENTS {
+                union.extend(experiment_configs(e));
+            }
+            let t0 = std::time::Instant::now();
+            exec.run_all(&union);
+            on_phase("warm-union", t0.elapsed().as_secs_f64());
+            let mut out = String::new();
+            for e in EXPERIMENTS {
+                timed(e, &mut out, on_phase, &mut || render_one(e, exec))?;
+                out.push('\n');
+            }
+            Ok(out)
+        }
+        other => {
+            let mut out = String::new();
+            timed(other, &mut out, on_phase, &mut || render_one(other, exec))?;
+            Ok(out)
+        }
+    }
+}
+
+/// Render one phase, appending its output and reporting its wall-clock.
+fn timed(
+    name: &str,
+    out: &mut String,
+    on_phase: &mut dyn FnMut(&str, f64),
+    render: &mut dyn FnMut() -> Result<String>,
+) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let text = render()?;
+    on_phase(name, t0.elapsed().as_secs_f64());
+    out.push_str(&text);
+    Ok(())
+}
+
+/// Render a single experiment or ablation id (no "all"/"ablations" here —
+/// [`run_phased`] expands those so each member gets its own phase).
+fn render_one(experiment: &str, exec: &SweepExecutor) -> Result<String> {
     match experiment {
         "table1" => Ok(table_counters(SchedulerKind::Persistent, exec)),
         "table2" => Ok(table_counters(SchedulerKind::NonPersistent, exec)),
@@ -86,31 +153,6 @@ pub fn run_with(experiment: &str, exec: &SweepExecutor) -> Result<String> {
         "abl-jitter" => Ok(ablations::jitter_sweep(exec)),
         "abl-capacity" => Ok(ablations::capacity_sweep(exec)),
         "abl-reuse" => Ok(ablations::reuse_histogram()),
-        "ablations" => {
-            let mut out = String::new();
-            for e in ABLATIONS {
-                out.push_str(&run_with(e, exec)?);
-                out.push('\n');
-            }
-            Ok(out)
-        }
-        "all" => {
-            // Warm the cache with the union grid of every experiment in one
-            // parallel wave, then render each experiment from cache hits.
-            // This parallelizes across experiment boundaries, not just
-            // within one figure's sweep.
-            let mut union: Vec<SimConfig> = Vec::new();
-            for e in EXPERIMENTS {
-                union.extend(experiment_configs(e));
-            }
-            exec.run_all(&union);
-            let mut out = String::new();
-            for e in EXPERIMENTS {
-                out.push_str(&run_with(e, exec)?);
-                out.push('\n');
-            }
-            Ok(out)
-        }
         other => bail!(
             "unknown experiment '{other}' (try one of {EXPERIMENTS:?}, {ABLATIONS:?}, \
              'ablations' or 'all')"

@@ -14,8 +14,23 @@
 //! distance, §4) is explicitly an LRU-stack argument, and its 1 − 1/N_SM and
 //! sawtooth results are LRU phenomena; sectored GPU L2s are set-associative
 //! but behave LRU-like at this granularity.
+//!
+//! Both models share a **front probe** fast path: before the key-map
+//! lookup, the first few recency links are walked directly. Synchronized
+//! wavefronts re-touch what the previous SMs just streamed, so most warm
+//! accesses resolve within a handful of links of the MRU head — this
+//! generalizes the earlier hit-at-head short-circuit and is bit-identical
+//! to the plain path (engagement is tracked in
+//! [`FrontStackStats`](crate::l2model::reuse::FrontStackStats)).
 
+use crate::l2model::reuse::FrontStackStats;
 use rustc_hash::FxHashMap;
+
+/// Default front-probe depth. The probe must cover the couple of links a
+/// round-synchronized re-touch lands at, yet stay short enough that probe
+/// misses (cold accesses excepted — those pay it in full) cost a few
+/// pointer chases, not a scan.
+pub const DEFAULT_FRONT_PROBE: u32 = 8;
 
 /// Identity of a cacheable block: (tensor kind, batch·head, tile index).
 /// Packed into a u64 for fast hashing.
@@ -99,6 +114,9 @@ struct LruCoreG<M: KeyMap> {
     used_sectors: u64,
     cap_sectors: u64,
     live: usize,
+    /// Recency links walked before the key-map lookup (0 = disabled).
+    probe: u32,
+    front_stats: FrontStackStats,
 }
 
 type LruCore = LruCoreG<HashKeyMap>;
@@ -125,6 +143,8 @@ impl<M: KeyMap> LruCoreG<M> {
             used_sectors: 0,
             cap_sectors,
             live: 0,
+            probe: DEFAULT_FRONT_PROBE,
+            front_stats: FrontStackStats::default(),
         }
     }
 
@@ -176,10 +196,33 @@ impl<M: KeyMap> LruCoreG<M> {
     /// block is inserted and LRU entries evicted until within capacity.
     /// A weight-0 access is counted as a hit iff present (no insertion).
     fn access(&mut self, key: BlockKey, weight: u32) -> bool {
+        // Front probe: walk the first few recency links before touching the
+        // key map. Synchronized wavefronts re-touch the tiles the previous
+        // SMs just streamed, so most warm accesses sit within a couple of
+        // links of the head — found there, the access skips the map lookup
+        // (a DRAM-resident load on the big dense domains) and, at the head
+        // itself, any list surgery. Promotion leaves the map untouched, so
+        // hit/miss behaviour and LRU order are bit-identical.
+        let mut cursor = self.head;
+        let mut steps = self.probe;
+        while cursor != NIL && steps > 0 {
+            if self.keys[cursor as usize] == key {
+                self.front_stats.front_hits += 1;
+                if cursor != self.head {
+                    self.unlink(cursor);
+                    self.push_front(cursor);
+                }
+                return true;
+            }
+            cursor = self.next[cursor as usize];
+            steps -= 1;
+        }
         if let Some(idx) = self.map.get(key) {
+            self.front_stats.deep_hits += 1;
             // Hot-path short-circuit: a hit on the MRU entry needs no list
-            // surgery. Sawtooth reversals re-touch the just-streamed tile,
-            // so this branch is taken often (EXPERIMENTS.md §Perf).
+            // surgery. Only reachable here with the probe disabled, where
+            // sawtooth reversals re-touching the just-streamed tile take
+            // this branch often (EXPERIMENTS.md §Perf).
             if idx == self.head {
                 return true;
             }
@@ -189,6 +232,7 @@ impl<M: KeyMap> LruCoreG<M> {
             self.push_front(idx);
             return true;
         }
+        self.front_stats.cold += 1;
         if weight as u64 > self.cap_sectors {
             // Streaming block larger than the whole cache: bypass (never
             // resident). Counted as a miss.
@@ -207,6 +251,7 @@ impl<M: KeyMap> LruCoreG<M> {
             self.map.remove(self.keys[victim as usize]);
             self.live -= 1;
             self.used_sectors -= self.weights[victim as usize] as u64;
+            self.front_stats.spills += 1;
             self.free.push(victim);
         }
         false
@@ -235,6 +280,13 @@ impl DenseWeightedLru {
         }
     }
 
+    /// Like [`Self::new`] with an explicit front-probe depth (0 disables).
+    pub fn with_probe(cap_sectors: u64, key_domain: usize, probe: u32) -> Self {
+        let mut c = Self::new(cap_sectors, key_domain);
+        c.core.probe = probe;
+        c
+    }
+
     /// Access a block of `sectors` sectors; `key < key_domain`.
     #[inline]
     pub fn access(&mut self, key: BlockKey, sectors: u32) -> bool {
@@ -243,6 +295,11 @@ impl DenseWeightedLru {
 
     pub fn used_sectors(&self) -> u64 {
         self.core.used_sectors
+    }
+
+    /// Front-probe engagement counters (cold = misses of any kind).
+    pub fn front_stats(&self) -> FrontStackStats {
+        self.core.front_stats
     }
 }
 
@@ -288,6 +345,18 @@ pub struct ExactLru {
 impl ExactLru {
     pub fn new(cap_sectors: u64) -> Self {
         ExactLru { core: LruCore::new(cap_sectors) }
+    }
+
+    /// Like [`Self::new`] with an explicit front-probe depth (0 disables).
+    pub fn with_probe(cap_sectors: u64, probe: u32) -> Self {
+        let mut c = Self::new(cap_sectors);
+        c.core.probe = probe;
+        c
+    }
+
+    /// Front-probe engagement counters (cold = misses of any kind).
+    pub fn front_stats(&self) -> FrontStackStats {
+        self.core.front_stats
     }
 
     /// Access one sector; returns whether it hit.
@@ -457,6 +526,55 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_front_probe_is_bit_identical() {
+        // Any probe depth must leave hit/miss outcomes, LRU order, and
+        // occupancy bitwise identical to the probe-disabled map path —
+        // including oversized-block bypasses and evictions.
+        check("front-probe-vs-map", 100, |g| {
+            let cap = g.int(1, 80);
+            let probe = g.int(0, 12) as u32;
+            let mut fast = DenseWeightedLru::with_probe(cap, 41, probe);
+            let mut slow = DenseWeightedLru::with_probe(cap, 41, 0);
+            for _ in 0..400 {
+                let key = g.int(0, 40);
+                let w = (key % 11 + 1) as u32;
+                let hf = fast.access(key, w);
+                let hs = slow.access(key, w);
+                if hf != hs {
+                    return Err(format!("probe {probe} diverged on key {key}: {hf} vs {hs}"));
+                }
+            }
+            if fast.used_sectors() != slow.used_sectors() {
+                return Err(format!(
+                    "probe {probe} occupancy diverged: {} vs {}",
+                    fast.used_sectors(),
+                    slow.used_sectors()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn front_probe_stats_account_for_every_access() {
+        let mut c = ExactLru::new(16);
+        // Forward then backward: the reversal re-hits through the probe.
+        for s in 0..32u64 {
+            c.access_sector(s);
+        }
+        for s in (0..32u64).rev() {
+            c.access_sector(s);
+        }
+        let st = c.front_stats();
+        assert_eq!(st.front_hits + st.deep_hits + st.cold, 64);
+        assert!(st.front_hits > 0, "reversal must engage the probe");
+        assert_eq!(st.cold, 64 - st.front_hits - st.deep_hits);
+        assert!(st.spills > 0, "evictions are recorded as spills");
+        let disabled = ExactLru::with_probe(16, 0);
+        assert_eq!(disabled.front_stats(), FrontStackStats::default());
     }
 
     #[test]

@@ -11,10 +11,10 @@
 //! jitter grows the 1 − 1/N_SM hit-rate scaling decays.
 
 use crate::gb10::DeviceSpec;
-use crate::l2model::reuse::{CapacityCurve, CapacityProfiler};
+use crate::l2model::reuse::{CapacityCurve, CapacityProfiler, FrontStackStats};
 use crate::util::rng::Rng;
 
-use super::cache::{DenseWeightedLru, ExactLru};
+use super::cache::{DenseWeightedLru, ExactLru, DEFAULT_FRONT_PROBE};
 use super::counters::CacheCounters;
 use super::kernel_model::{
     step_accesses, ItemSteps, KernelVariant, Step, TileAccess, WorkItem,
@@ -190,11 +190,28 @@ fn sector_lut(w: &AttentionWorkload, sector_bytes: u32) -> Vec<u32> {
 
 /// Cache-hierarchy backend of the wavefront engine: turns one tile access
 /// into L1/L2 outcomes and records them. The streaming access generator
-/// ([`stream_accesses`]) is generic over this trait — the production
+/// ([`stream_rounds`]) is generic over this trait — the production
 /// weighted-block model, the exact per-sector validation model, and the
 /// Mattson capacity profilers all consume the identical access stream.
 trait CacheBackend {
     fn access(&mut self, sm: usize, a: &TileAccess, counters: &mut CacheCounters);
+
+    /// One engine round of accesses, in issue order. The default forwards
+    /// per access; the round slice is the natural batch boundary for
+    /// coalescing consumers. Note that neighbouring SMs' K/V tiles
+    /// *alternate* within a round (K_i, V_i, K_i, V_i, …), so same-key
+    /// run-length coalescing buys nothing here — the caches' front probe
+    /// and the profiler's front stack are the consumers that exploit the
+    /// round-local reuse this boundary exposes.
+    #[inline]
+    fn access_round(&mut self, round: &[RoundAccess], counters: &mut CacheCounters) {
+        for ra in round {
+            self.access(ra.sm as usize, &ra.access, counters);
+        }
+    }
+
+    /// Fast-path engagement counters of the shared L2-level structure.
+    fn fastpath_stats(&self) -> FrontStackStats;
 }
 
 /// Production backend: dense direct-indexed weighted-block LRUs.
@@ -208,16 +225,17 @@ struct WeightedBackend {
 }
 
 impl WeightedBackend {
-    fn new(cfg: &SimConfig) -> Self {
+    fn new(cfg: &SimConfig, fast_path: bool) -> Self {
         let w = &cfg.workload;
         let dev = &cfg.device;
         let n_sms = dev.num_sms as usize;
         let n_tiles = w.num_tiles();
         let domain = (w.batch_heads() as u64 * 4 * n_tiles) as usize;
+        let probe = if fast_path { DEFAULT_FRONT_PROBE } else { 0 };
         WeightedBackend {
-            l2: DenseWeightedLru::new(dev.l2_sectors(), domain),
+            l2: DenseWeightedLru::with_probe(dev.l2_sectors(), domain, probe),
             l1: (0..n_sms)
-                .map(|_| DenseWeightedLru::new(dev.l1_sectors(), domain))
+                .map(|_| DenseWeightedLru::with_probe(dev.l1_sectors(), domain, probe))
                 .collect(),
             sectors: sector_lut(w, dev.sector_bytes),
             n_tiles,
@@ -242,6 +260,10 @@ impl CacheBackend for WeightedBackend {
         let l2_hit = if l1_hit { false } else { self.l2.access(key, sectors) };
         counters.record(a.tensor, sectors, l1_hit, l2_hit, a.write);
     }
+
+    fn fastpath_stats(&self) -> FrontStackStats {
+        self.l2.front_stats()
+    }
 }
 
 /// Validation backend: exact per-sector LRUs (small workloads only; cost is
@@ -258,15 +280,18 @@ struct ExactBackend {
 }
 
 impl ExactBackend {
-    fn new(cfg: &SimConfig) -> Self {
+    fn new(cfg: &SimConfig, fast_path: bool) -> Self {
         let w = &cfg.workload;
         let dev = &cfg.device;
         let n_sms = dev.num_sms as usize;
         let tensor_sectors =
             (w.tensor_bytes() + dev.sector_bytes as u64 - 1) / dev.sector_bytes as u64;
+        let probe = if fast_path { DEFAULT_FRONT_PROBE } else { 0 };
         ExactBackend {
-            l2: ExactLru::new(dev.l2_sectors()),
-            l1: (0..n_sms).map(|_| ExactLru::new(dev.l1_sectors())).collect(),
+            l2: ExactLru::with_probe(dev.l2_sectors(), probe),
+            l1: (0..n_sms)
+                .map(|_| ExactLru::with_probe(dev.l1_sectors(), probe))
+                .collect(),
             sectors: sector_lut(w, dev.sector_bytes),
             tensor_sectors,
             row_sectors: w.rows_sectors(1, dev.sector_bytes) as u64,
@@ -293,6 +318,10 @@ impl CacheBackend for ExactBackend {
             counters.record(a.tensor, 1, l1_hit, l2_hit, a.write);
         }
     }
+
+    fn fastpath_stats(&self) -> FrontStackStats {
+        self.l2.front_stats()
+    }
 }
 
 /// Profiling backend behind [`Simulator::profile`]: identical per-SM L1
@@ -309,17 +338,21 @@ struct MattsonWeightedBackend {
 }
 
 impl MattsonWeightedBackend {
-    fn new(cfg: &SimConfig) -> Self {
+    fn new(cfg: &SimConfig, fast_path: bool) -> Self {
         let w = &cfg.workload;
         let dev = &cfg.device;
         let n_sms = dev.num_sms as usize;
         let n_tiles = w.num_tiles();
         let domain = (w.batch_heads() as u64 * 4 * n_tiles) as usize;
+        let probe = if fast_path { DEFAULT_FRONT_PROBE } else { 0 };
+        // Front sized to the cross-SM reuse window: each round touches at
+        // most 2 tiles per SM, so 4×N_SM covers a full round of drift.
+        let front = if fast_path { (4 * n_sms).max(8) } else { 0 };
         MattsonWeightedBackend {
             l1: (0..n_sms)
-                .map(|_| DenseWeightedLru::new(dev.l1_sectors(), domain))
+                .map(|_| DenseWeightedLru::with_probe(dev.l1_sectors(), domain, probe))
                 .collect(),
-            profiler: CapacityProfiler::new_dense(domain),
+            profiler: CapacityProfiler::new_dense(domain).with_front(front),
             sectors: sector_lut(w, dev.sector_bytes),
             n_tiles,
             model_l1: cfg.model_l1,
@@ -345,6 +378,10 @@ impl CacheBackend for MattsonWeightedBackend {
         }
         counters.record(a.tensor, sectors, l1_hit, false, a.write);
     }
+
+    fn fastpath_stats(&self) -> FrontStackStats {
+        self.profiler.front_stats()
+    }
 }
 
 /// Per-sector profiling backend behind [`Simulator::profile_exact`]:
@@ -362,18 +399,27 @@ struct MattsonExactBackend {
 }
 
 impl MattsonExactBackend {
-    fn new(cfg: &SimConfig) -> Self {
+    fn new(cfg: &SimConfig, fast_path: bool) -> Self {
         let w = &cfg.workload;
         let dev = &cfg.device;
         let n_sms = dev.num_sms as usize;
         let tensor_sectors =
             (w.tensor_bytes() + dev.sector_bytes as u64 - 1) / dev.sector_bytes as u64;
+        let probe = if fast_path { DEFAULT_FRONT_PROBE } else { 0 };
+        let sectors = sector_lut(w, dev.sector_bytes);
+        // Per-sector front: the tile-granularity window (4×N_SM tiles)
+        // times the largest tile's sector count.
+        let max_tile_sectors = sectors.iter().copied().max().unwrap_or(1) as usize;
+        let front = if fast_path { (4 * n_sms * max_tile_sectors).max(8) } else { 0 };
         MattsonExactBackend {
-            l1: (0..n_sms).map(|_| ExactLru::new(dev.l1_sectors())).collect(),
+            l1: (0..n_sms)
+                .map(|_| ExactLru::with_probe(dev.l1_sectors(), probe))
+                .collect(),
             profiler: CapacityProfiler::new_dense(
                 (4 * tensor_sectors * w.batch_heads() as u64) as usize,
-            ),
-            sectors: sector_lut(w, dev.sector_bytes),
+            )
+            .with_front(front),
+            sectors,
             tensor_sectors,
             row_sectors: w.rows_sectors(1, dev.sector_bytes) as u64,
             tile: w.tile as u64,
@@ -401,6 +447,10 @@ impl CacheBackend for MattsonExactBackend {
             counters.record(a.tensor, 1, l1_hit, false, a.write);
         }
     }
+
+    fn fastpath_stats(&self) -> FrontStackStats {
+        self.profiler.front_stats()
+    }
 }
 
 /// Per-SM execution state.
@@ -420,17 +470,24 @@ pub struct TraceStats {
     pub items: u64,
 }
 
-/// Streaming generator of the interleaved wavefront access trace: the
-/// round-robin CTA progression of the engine, decoupled from any cache
-/// model. Calls `sink(sm, access)` for every tile access, in exactly the
-/// order the cache hierarchy observes them; no trace vector is ever
-/// materialized. Both the LRU simulation backends and the Mattson capacity
-/// profilers consume this one stream, so their inputs are identical by
-/// construction.
-pub fn stream_accesses<F: FnMut(usize, &TileAccess)>(
-    cfg: &SimConfig,
-    mut sink: F,
-) -> TraceStats {
+/// One tile access of the interleaved trace, tagged with the issuing SM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoundAccess {
+    pub sm: u32,
+    pub access: TileAccess,
+}
+
+/// Streaming generator of the interleaved wavefront access trace, chunked
+/// by engine round: the round-robin CTA progression of the engine,
+/// decoupled from any cache model. Calls `sink(round)` once per non-empty
+/// round with that round's accesses in issue order; concatenated, the
+/// slices are exactly the per-access stream of [`stream_accesses`], and no
+/// full trace vector is ever materialized. Both the LRU simulation
+/// backends and the Mattson capacity profilers consume this one stream, so
+/// their inputs are identical by construction — and the round boundary
+/// gives batching consumers the natural coalescing unit (one synchronized
+/// wavefront tick, at most two accesses per SM).
+pub fn stream_rounds<F: FnMut(&[RoundAccess])>(cfg: &SimConfig, mut sink: F) -> TraceStats {
     let w = &cfg.workload;
     let dev = &cfg.device;
     let n_sms = dev.num_sms as usize;
@@ -447,6 +504,7 @@ pub fn stream_accesses<F: FnMut(usize, &TileAccess)>(
     let mut items = 0u64;
     let mut live = n_sms;
     let mut acc: [Option<TileAccess>; 2] = [None, None];
+    let mut round_buf: Vec<RoundAccess> = Vec::with_capacity(2 * n_sms);
 
     while live > 0 {
         rounds += 1;
@@ -483,15 +541,32 @@ pub fn stream_accesses<F: FnMut(usize, &TileAccess)>(
             let exhausted = matches!(step, Step::StoreO);
             step_accesses(w, &it_copy, step, &mut acc);
             for a in acc.iter().flatten() {
-                sink(sm, a);
+                round_buf.push(RoundAccess { sm: sm as u32, access: *a });
             }
             if exhausted {
                 sms[sm].item = None;
             }
         }
+        if !round_buf.is_empty() {
+            sink(&round_buf);
+            round_buf.clear();
+        }
     }
 
     TraceStats { kv_steps, rounds, items }
+}
+
+/// Per-access view of [`stream_rounds`]: calls `sink(sm, access)` for every
+/// tile access, in exactly the order the cache hierarchy observes them.
+pub fn stream_accesses<F: FnMut(usize, &TileAccess)>(
+    cfg: &SimConfig,
+    mut sink: F,
+) -> TraceStats {
+    stream_rounds(cfg, |round| {
+        for ra in round {
+            sink(ra.sm as usize, &ra.access);
+        }
+    })
 }
 
 /// Capacity-parametric simulation result: everything [`Simulator::run`]
@@ -522,6 +597,11 @@ impl CapacityProfile {
         l2_sectors >= self.curve.min_supported_capacity()
     }
 
+    /// Fast-path engagement counters recorded while profiling.
+    pub fn front_stats(&self) -> FrontStackStats {
+        self.curve.front_stats()
+    }
+
     /// The simulation result at an L2 capacity of `l2_sectors` sectors.
     pub fn result_at(&self, l2_sectors: u64) -> SimResult {
         assert!(
@@ -549,33 +629,61 @@ impl CapacityProfile {
 /// The simulator. Build with a [`SimConfig`], then [`Simulator::run`].
 pub struct Simulator {
     cfg: SimConfig,
+    fast_path: bool,
 }
 
 impl Simulator {
     pub fn new(cfg: SimConfig) -> Self {
-        Simulator { cfg }
+        Simulator { cfg, fast_path: true }
+    }
+
+    /// Toggle the near-reuse fast path (the profiler's front stack and the
+    /// LRU front probes). On by default; results are bitwise identical
+    /// either way — the toggle exists for benchmarking and the
+    /// bit-identity property tests. It deliberately lives here rather than
+    /// on [`SimConfig`] so it can never leak into sweep config keys.
+    pub fn with_fast_path(mut self, enabled: bool) -> Self {
+        self.fast_path = enabled;
+        self
     }
 
     /// Run with the production weighted-block LRU at both levels.
     pub fn run(&self) -> SimResult {
-        let mut backend = WeightedBackend::new(&self.cfg);
-        self.run_backend(&mut backend)
+        self.run_with_stats().0
+    }
+
+    /// Like [`Self::run`], also returning the shared L2 model's fast-path
+    /// engagement counters.
+    pub fn run_with_stats(&self) -> (SimResult, FrontStackStats) {
+        let mut backend = WeightedBackend::new(&self.cfg, self.fast_path);
+        let r = self.run_backend(&mut backend);
+        let stats = backend.fastpath_stats();
+        (r, stats)
     }
 
     /// Run with exact per-sector LRUs (validation mode — small workloads
     /// only; cost is O(total sectors)).
     pub fn run_exact(&self) -> SimResult {
-        let mut backend = ExactBackend::new(&self.cfg);
-        self.run_backend(&mut backend)
+        self.run_exact_with_stats().0
+    }
+
+    /// Like [`Self::run_exact`], also returning the shared L2 model's
+    /// fast-path engagement counters.
+    pub fn run_exact_with_stats(&self) -> (SimResult, FrontStackStats) {
+        let mut backend = ExactBackend::new(&self.cfg, self.fast_path);
+        let r = self.run_backend(&mut backend);
+        let stats = backend.fastpath_stats();
+        (r, stats)
     }
 
     /// Profile the launch once and return a capacity-parametric result:
     /// `profile().result_at(c)` equals `run()` with an L2 of `c` sectors,
     /// bit for bit, for every `c` the profile `supports` (>= the largest
     /// tile's sector count). The config's own `device.l2_bytes` is never
-    /// read — one profile serves a whole capacity sweep.
+    /// read — one profile serves a whole capacity sweep. Engagement
+    /// counters ride on [`CapacityProfile::front_stats`].
     pub fn profile(&self) -> CapacityProfile {
-        let mut backend = MattsonWeightedBackend::new(&self.cfg);
+        let mut backend = MattsonWeightedBackend::new(&self.cfg, self.fast_path);
         let base = self.run_backend(&mut backend);
         CapacityProfile { curve: backend.profiler.finish(), base }
     }
@@ -585,16 +693,17 @@ impl Simulator {
     /// `c >= 1`. Small workloads only (cost is O(total sectors), like
     /// `run_exact`).
     pub fn profile_exact(&self) -> CapacityProfile {
-        let mut backend = MattsonExactBackend::new(&self.cfg);
+        let mut backend = MattsonExactBackend::new(&self.cfg, self.fast_path);
         let base = self.run_backend(&mut backend);
         CapacityProfile { curve: backend.profiler.finish(), base }
     }
 
-    /// Drive one backend over the streamed access trace.
+    /// Drive one backend over the streamed access trace, one round slice
+    /// at a time.
     fn run_backend<B: CacheBackend>(&self, backend: &mut B) -> SimResult {
         let mut counters = CacheCounters::default();
-        let stats = stream_accesses(&self.cfg, |sm, a| {
-            backend.access(sm, a, &mut counters)
+        let stats = stream_rounds(&self.cfg, |round| {
+            backend.access_round(round, &mut counters)
         });
         counters.l2_sectors_other = (stats.kv_steps as f64
             * self.cfg.device.non_tex_sectors_per_step)
@@ -817,6 +926,43 @@ mod tests {
         assert_eq!(sa, sb);
         assert_eq!(a, b);
         assert_eq!(sa.items, cfg.workload.num_work_items());
+    }
+
+    #[test]
+    fn stream_rounds_concatenates_to_stream_accesses() {
+        // The chunked generator must emit the identical stream, merely
+        // sliced at round boundaries, with each slice bounded by 2 accesses
+        // per SM.
+        let cfg = small_cfg(256, true, TraversalRef::sawtooth()).with_jitter(0.3, 5);
+        let mut flat = Vec::new();
+        stream_accesses(&cfg, |sm, acc| flat.push((sm, *acc)));
+        let mut chunked = Vec::new();
+        let mut slices = 0u64;
+        let st = stream_rounds(&cfg, |round| {
+            assert!(!round.is_empty());
+            assert!(round.len() <= 2 * cfg.device.num_sms as usize);
+            slices += 1;
+            chunked.extend(round.iter().map(|ra| (ra.sm as usize, ra.access)));
+        });
+        assert_eq!(flat, chunked);
+        assert!(slices <= st.rounds);
+    }
+
+    #[test]
+    fn fast_path_engages_and_stays_bit_identical() {
+        let cfg = small_cfg(512, false, TraversalRef::cyclic());
+        let fast = Simulator::new(cfg.clone());
+        let slow = Simulator::new(cfg).with_fast_path(false);
+        let (rf, sf) = fast.run_with_stats();
+        let (rs, ss) = slow.run_with_stats();
+        assert_eq!(rf, rs);
+        // Synchronized wavefronts: cross-SM re-touches resolve in the probe.
+        assert!(sf.front_hits > 0);
+        assert!(sf.engagement() > 0.5, "engagement {}", sf.engagement());
+        assert_eq!(ss.front_hits, 0, "disabled path never probes");
+        assert_eq!(sf.front_hits + sf.deep_hits, ss.deep_hits, "same warm accesses");
+        let pf = fast.profile();
+        assert!(pf.front_stats().engagement() > 0.5);
     }
 
     #[test]

@@ -32,10 +32,13 @@ pub mod workload;
 
 pub use cache::{ExactLru, WeightedLru};
 pub use counters::CacheCounters;
-pub use engine::{stream_accesses, CapacityProfile, SimConfig, SimResult, Simulator, TraceStats};
+pub use engine::{
+    stream_accesses, stream_rounds, CapacityProfile, RoundAccess, SimConfig, SimResult,
+    Simulator, TraceStats,
+};
 pub use kernel_model::{KernelVariant, TensorKind, TileAccess};
 pub use scheduler::SchedulerKind;
-pub use sweep::{SweepExecutor, SweepGrid, SweepSpec};
+pub use sweep::{ExecutorTiming, SweepExecutor, SweepGrid, SweepSpec};
 pub use throughput::{PerfProfile, ThroughputReport};
 pub use traversal::{Traversal, TraversalCtx, TraversalRef, TraversalRegistry};
 pub use workload::AttentionWorkload;

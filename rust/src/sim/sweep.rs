@@ -8,8 +8,10 @@
 //! 1. **The launches are embarrassingly parallel.** Each `SimConfig` is
 //!    self-contained and deterministic, so a sweep fans out over a scoped
 //!    thread pool (`--threads N` on the CLI) with no synchronization beyond
-//!    work distribution. Result ordering is by input index, so output is
-//!    byte-identical to a sequential run at any thread count.
+//!    work distribution. Jobs are LPT-ordered (longest estimated trace
+//!    first) so a long-sequence config starts immediately instead of
+//!    straggling at the tail. Result ordering is by input index, so output
+//!    is byte-identical to a sequential run at any thread count.
 //! 2. **Experiments overlap heavily.** Table 3's seq sweep contains all of
 //!    Figures 3–4; Figure 6's SM sweep contains Table 1's SM=48 point;
 //!    Figure 5 shares its 8K-multiples with Table 3; and the coordinator's
@@ -32,8 +34,11 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use rustc_hash::FxHashMap;
+
+use crate::l2model::reuse::FrontStackStats;
 
 use super::engine::{CapacityProfile, SimConfig, SimResult, Simulator};
 use super::kernel_model::KernelVariant;
@@ -110,6 +115,39 @@ fn mattson_supported(cfg: &SimConfig) -> bool {
     }
     let max_weight = w.rows_sectors(w.tile_rows(0), cfg.device.sector_bytes) as u64;
     cfg.device.l2_sectors() >= max_weight
+}
+
+/// Trace-length proxy for LPT job ordering: the number of K/V tile touches a
+/// configuration generates, `batch_heads × 2 × (kv_tiles + n)` with
+/// `kv_tiles = n(n+1)/2` under causal masking and `n²` without (n = query
+/// tiles; the `+ n` counts each work item's own Q tile). Only the *ordering*
+/// of jobs depends on this, never their results, so the formula being a
+/// proxy (it ignores jitter and scheduler) is harmless.
+fn estimated_accesses(cfg: &SimConfig) -> u64 {
+    let w = &cfg.workload;
+    let n = w.num_tiles();
+    let kv_tiles = if w.causal { n * (n + 1) / 2 } else { n * n };
+    w.batch_heads() as u64 * 2 * (kv_tiles + n)
+}
+
+/// Aggregate executor instrumentation: job counts, busy wall-clock (summed
+/// across workers, so it can exceed elapsed time), the longest single job,
+/// and the merged fast-path engagement counters of every simulation and
+/// profile pass executed so far. Surfaced by the CLI's `--timing` flag;
+/// deliberately *not* part of any result type, so byte-parity of report
+/// output is untouched.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ExecutorTiming {
+    /// Plain simulations executed (cache hits excluded).
+    pub sim_jobs: u64,
+    /// Mattson profile passes executed (cache hits excluded).
+    pub profile_jobs: u64,
+    /// Total wall-clock spent inside jobs, summed over workers.
+    pub busy_s: f64,
+    /// Wall-clock of the single longest job — the LPT straggler bound.
+    pub max_job_s: f64,
+    /// Front-stack / front-probe engagement merged over every job.
+    pub fastpath: FrontStackStats,
 }
 
 /// One named experiment: an ordered list of simulator configurations.
@@ -277,6 +315,7 @@ pub struct SweepExecutor {
     mattson: bool,
     cache: Mutex<FxHashMap<ConfigKey, Arc<SimResult>>>,
     profiles: Mutex<FxHashMap<ProfileKey, Arc<CapacityProfile>>>,
+    timing: Mutex<ExecutorTiming>,
 }
 
 impl SweepExecutor {
@@ -288,6 +327,7 @@ impl SweepExecutor {
             mattson: true,
             cache: Mutex::new(FxHashMap::default()),
             profiles: Mutex::new(FxHashMap::default()),
+            timing: Mutex::new(ExecutorTiming::default()),
         }
     }
 
@@ -325,6 +365,42 @@ impl SweepExecutor {
         self.profiles.lock().unwrap().len()
     }
 
+    /// Snapshot of the accumulated job instrumentation (`--timing`).
+    pub fn timing(&self) -> ExecutorTiming {
+        *self.timing.lock().unwrap()
+    }
+
+    /// Record one executed job in the timing aggregate.
+    fn note_job(&self, profile: bool, secs: f64, stats: FrontStackStats) {
+        let mut t = self.timing.lock().unwrap();
+        if profile {
+            t.profile_jobs += 1;
+        } else {
+            t.sim_jobs += 1;
+        }
+        t.busy_s += secs;
+        t.max_job_s = t.max_job_s.max(secs);
+        t.fastpath.merge(&stats);
+    }
+
+    /// Execute one plain simulation, timing it and folding its fast-path
+    /// counters into [`Self::timing`]. The result is bit-identical to
+    /// `Simulator::new(cfg).run()` — instrumentation never reaches it.
+    fn execute_sim(&self, cfg: &SimConfig) -> SimResult {
+        let start = Instant::now();
+        let (result, stats) = Simulator::new(cfg.clone()).run_with_stats();
+        self.note_job(false, start.elapsed().as_secs_f64(), stats);
+        result
+    }
+
+    /// Execute one Mattson profile pass with the same instrumentation.
+    fn execute_profile(&self, cfg: &SimConfig) -> CapacityProfile {
+        let start = Instant::now();
+        let profile = Simulator::new(cfg.clone()).profile();
+        self.note_job(true, start.elapsed().as_secs_f64(), profile.front_stats());
+        profile
+    }
+
     /// Run (or recall) a single configuration. Consults the capacity-curve
     /// cache first: a config whose capacity-independent identity is already
     /// profiled derives its result without simulating.
@@ -335,7 +411,7 @@ impl SweepExecutor {
         }
         let result = self
             .cached_profile_result(cfg)
-            .unwrap_or_else(|| Arc::new(Simulator::new(cfg.clone()).run()));
+            .unwrap_or_else(|| Arc::new(self.execute_sim(cfg)));
         self.cache
             .lock()
             .unwrap()
@@ -352,7 +428,7 @@ impl SweepExecutor {
         if let Some(p) = self.profiles.lock().unwrap().get(&pkey) {
             return Arc::clone(p);
         }
-        let profile = Arc::new(Simulator::new(cfg.clone()).profile());
+        let profile = Arc::new(self.execute_profile(cfg));
         self.profiles
             .lock()
             .unwrap()
@@ -421,6 +497,11 @@ impl SweepExecutor {
                 todo.push(cfg.clone());
             }
         }
+        // LPT: longest trace first, so a long-S profile never starts last
+        // and straggles alone. Stable sort keeps first-appearance order
+        // among equal-cost jobs; results are keyed, so output order is
+        // untouched.
+        todo.sort_by_key(|cfg| std::cmp::Reverse(estimated_accesses(cfg)));
         let workers = self.threads.min(todo.len());
         if workers > 1 {
             let next = AtomicUsize::new(0);
@@ -569,12 +650,12 @@ impl SweepExecutor {
                 todo.iter().map(|_| Mutex::new(None)).collect();
             let run_job = |job: &Job| match job {
                 Job::Sim(i) => {
-                    let r = Simulator::new(todo[*i].1.clone()).run();
+                    let r = self.execute_sim(&todo[*i].1);
                     *results[*i].lock().unwrap() = Some(r);
                 }
                 Job::Profile(members) => {
                     let cfg0 = &todo[members[0]].1;
-                    let profile = Arc::new(Simulator::new(cfg0.clone()).profile());
+                    let profile = Arc::new(self.execute_profile(cfg0));
                     for &i in members {
                         let cap = todo[i].1.device.l2_sectors();
                         *results[i].lock().unwrap() = Some(profile.result_at(cap));
@@ -628,8 +709,13 @@ impl SweepExecutor {
     /// independent identity (and inside the fast path's validity bound)
     /// become one profile job when there are at least two of them — a
     /// K-capacity ablation collapses from K simulations to one O(N log N)
-    /// pass. Job order follows first appearance, so work distribution (and
-    /// therefore output) is deterministic at any thread count.
+    /// pass. Jobs are then LPT-ordered (longest estimated trace first, ties
+    /// by first appearance — a stable sort of the first-appearance list),
+    /// so at high `--threads` a long-sequence job starts immediately
+    /// instead of straggling at the tail. Results are written to
+    /// per-config slots and the output is assembled by key, so the job
+    /// order affects wall-clock only — output stays deterministic and
+    /// byte-identical at any thread count.
     fn plan_jobs(&self, todo: &[(ConfigKey, SimConfig)]) -> Vec<Job> {
         let mut group_of: Vec<Option<usize>> = vec![None; todo.len()];
         let mut groups: Vec<Vec<usize>> = Vec::new();
@@ -661,6 +747,13 @@ impl SweepExecutor {
                 _ => jobs.push(Job::Sim(i)),
             }
         }
+        let cost = |job: &Job| match job {
+            Job::Sim(i) => estimated_accesses(&todo[*i].1),
+            // One profile pass walks the shared trace once, whatever the
+            // group size; every member shares the capacity-erased shape.
+            Job::Profile(members) => estimated_accesses(&todo[members[0]].1),
+        };
+        jobs.sort_by_key(|job| std::cmp::Reverse(cost(job)));
         jobs
     }
 }
@@ -953,6 +1046,45 @@ mod tests {
         let b4 = small_cfg(256, TraversalRef::block_snake(4));
         let b4_again = small_cfg(256, "block-snake:4".parse().unwrap());
         assert_eq!(ConfigKey::of(&b4), ConfigKey::of(&b4_again));
+    }
+
+    #[test]
+    fn estimated_accesses_tracks_trace_length() {
+        let short = small_cfg(256, TraversalRef::cyclic());
+        let long = small_cfg(1024, TraversalRef::cyclic());
+        assert!(estimated_accesses(&long) > estimated_accesses(&short));
+        let mut causal = long.clone();
+        causal.workload.causal = true;
+        assert!(
+            estimated_accesses(&causal) < estimated_accesses(&long),
+            "the causal triangle must cost less than the full square"
+        );
+        // The exact formula: batch_heads × 2 × (kv_tiles + n).
+        let n = long.workload.num_tiles();
+        assert_eq!(
+            estimated_accesses(&long),
+            long.workload.batch_heads() as u64 * 2 * (n * n + n)
+        );
+    }
+
+    #[test]
+    fn timing_counts_jobs_and_fastpath_engagement() {
+        let exec = SweepExecutor::new(2);
+        assert_eq!(exec.timing(), ExecutorTiming::default());
+        // A capacity pair → one profile job; a lone seq → one sim job.
+        let base = small_cfg(256, TraversalRef::cyclic());
+        let mut cap2 = base.clone();
+        cap2.device.l2_bytes *= 2;
+        let lone = small_cfg(512, TraversalRef::sawtooth());
+        exec.run_all(&[base.clone(), cap2, lone]);
+        let t = exec.timing();
+        assert_eq!(t.profile_jobs, 1);
+        assert_eq!(t.sim_jobs, 1);
+        assert!(t.busy_s >= t.max_job_s && t.max_job_s >= 0.0);
+        assert!(t.fastpath.front_hits > 0, "default fast path must engage");
+        // Cache hits execute nothing: timing is unchanged.
+        exec.run_one(&base);
+        assert_eq!(exec.timing(), t);
     }
 
     #[test]

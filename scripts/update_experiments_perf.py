@@ -64,6 +64,30 @@ def render(sweep, reuse, policy, serve):
         lines.append("")
         lines.append("Results bit-identical across paths: `%s`." % reuse["results_identical"])
         lines.append("")
+        if "cutile_fast_s" in reuse:
+            lines.append(
+                "Front-stack fast path (§4.3 CuTile study shape, S=128K B=8, "
+                "Mattson profile):"
+            )
+            lines.append("")
+            lines.append("| path | wall-clock |")
+            lines.append("|---|---|")
+            lines.append("| front stack off (Fenwick per access) | %.3f s |" % reuse["cutile_slow_s"])
+            lines.append(
+                "| front stack on (default) | %.3f s (**%.2fx**) |"
+                % (reuse["cutile_fast_s"], reuse["cutile_speedup"])
+            )
+            lines.append("")
+            lines.append(
+                "Fast-path engagement: %.1f%% (CuTile S=128K), %.1f%% (CUDA "
+                "S=64K); curves bit-identical: `%s`."
+                % (
+                    100.0 * reuse["cutile_engagement"],
+                    100.0 * reuse["cuda_engagement"],
+                    reuse["cutile_curves_identical"],
+                )
+            )
+            lines.append("")
     if policy is not None:
         lines.append(
             "Policy engine (`bench_policy`, %d candidates, winner `%s`):"
