@@ -1,0 +1,116 @@
+//! Decode-shape benchmark: the workloads production serving is dominated
+//! by — short `q_len` over a long KV cache, paged placement, GQA head
+//! grouping — measured on the GB10 model and compared against the paper's
+//! square-prefill regime. Counter-based headline numbers (deterministic,
+//! never flaky on a slow runner): L2 miss sectors per traversal for decode
+//! vs prefill twins of the same 32K-token KV cache, the registry-wide best
+//! order for each, the MQA footprint collapse, and the exact-LRU
+//! paged-vs-contiguous invariance check. Emits `BENCH_decode.json` (in the
+//! crate directory), folded into EXPERIMENTS.md §Decode by
+//! `scripts/update_experiments_perf.py`.
+
+use std::time::Instant;
+
+use sawtooth_attn::sim::traversal::{TraversalRef, TraversalRegistry};
+use sawtooth_attn::sim::workload::AttentionWorkload;
+use sawtooth_attn::sim::{SimConfig, Simulator};
+
+/// 32K tokens × 8 query heads: KV = 64 MiB total, 2.7× the 24 MiB L2 —
+/// the pressured regime where traversal order matters (cf. Fig 5).
+const KV_LEN: u64 = 32 * 1024;
+
+fn shape(q_len: u64, kv_heads: u32) -> AttentionWorkload {
+    AttentionWorkload::square(1, 8, KV_LEN, 64, 64)
+        .with_causal(true)
+        .with_q_len(q_len)
+        .with_kv_heads(kv_heads)
+}
+
+fn misses(w: AttentionWorkload, order: TraversalRef) -> u64 {
+    Simulator::new(SimConfig::cuda_study(w).with_order(order))
+        .run()
+        .counters
+        .l2_miss_sectors
+}
+
+/// Registry-wide winner on ties-broken-by-name ordering (deterministic).
+fn best_of_registry(w: &AttentionWorkload) -> (String, u64) {
+    let mut rows: Vec<(u64, String)> = TraversalRegistry::global()
+        .instances()
+        .into_iter()
+        .map(|t| (misses(w.clone(), t.clone()), t.name().to_string()))
+        .collect();
+    rows.sort();
+    let (m, name) = rows.remove(0);
+    (name, m)
+}
+
+fn main() {
+    println!("== bench_decode: decode/paged/GQA shapes vs the prefill regime ==");
+
+    // Prefill twin (q_len == kv_len): the paper's regime, where sawtooth's
+    // reversal reuse pays.
+    let t0 = Instant::now();
+    let prefill = shape(KV_LEN, 8);
+    let prefill_cyclic = misses(prefill.clone(), TraversalRef::cyclic());
+    let prefill_sawtooth = misses(prefill.clone(), TraversalRef::sawtooth());
+    let (prefill_best_order, prefill_best) = best_of_registry(&prefill);
+    let prefill_s = t0.elapsed().as_secs_f64();
+    println!(
+        "bench decode/prefill 32K misses: cyclic {prefill_cyclic} sawtooth \
+         {prefill_sawtooth} best {prefill_best_order}={prefill_best}  ({prefill_s:.3}s)"
+    );
+
+    // Decode twin (q_len = 1): a single Q tile per head — one KV pass, no
+    // wavefront to reorder. Every traversal must degenerate to the same
+    // stream.
+    let t0 = Instant::now();
+    let decode = shape(1, 8);
+    let decode_cyclic = misses(decode.clone(), TraversalRef::cyclic());
+    let decode_sawtooth = misses(decode.clone(), TraversalRef::sawtooth());
+    let (decode_best_order, decode_best) = best_of_registry(&decode);
+    let decode_s = t0.elapsed().as_secs_f64();
+    println!(
+        "bench decode/decode q=1 misses: cyclic {decode_cyclic} sawtooth \
+         {decode_sawtooth} best {decode_best_order}={decode_best}  ({decode_s:.3}s)"
+    );
+    assert_eq!(
+        decode_cyclic, decode_sawtooth,
+        "single-Q-tile decode must be traversal-indifferent"
+    );
+
+    // MQA (kv_heads = 1): the KV footprint collapses 8x to 8 MiB — resident
+    // in L2 — so decode misses drop toward the cold floor.
+    let mqa_decode = misses(shape(1, 1), TraversalRef::sawtooth());
+    let gqa_ratio = decode_sawtooth as f64 / mqa_decode as f64;
+    println!(
+        "bench decode/mqa q=1 misses: {mqa_decode}  (ungrouped/MQA ratio {gqa_ratio:.2}x)"
+    );
+
+    // Paged placement under the exact per-sector LRU: an injective block
+    // table is a bijective sector renaming, so the counters must be
+    // bit-identical to contiguous (EXPERIMENTS.md §Decode). Checked on the
+    // q_len=4 speculative-decode shape where the exact model is cheap.
+    let t0 = Instant::now();
+    let contig = shape(4, 8);
+    let paged = contig.clone().with_paged_shuffled(256, 7);
+    let a = Simulator::new(SimConfig::cuda_study(contig)).run_exact();
+    let b = Simulator::new(SimConfig::cuda_study(paged)).run_exact();
+    let exact_paged_identical = a == b;
+    let exact_s = t0.elapsed().as_secs_f64();
+    println!(
+        "bench decode/exact paged-vs-contiguous identical: {exact_paged_identical}  \
+         ({exact_s:.3}s)"
+    );
+    assert!(exact_paged_identical, "paged KV broke LRU renaming invariance");
+
+    let json = format!(
+        "{{\n  \"bench\": \"decode\",\n  \"grid\": \"B=1 H=8 D=64 T=64 causal kv_len=32K on GB10 (KV 64 MiB vs 24 MiB L2)\",\n  \"prefill_cyclic_misses\": {prefill_cyclic},\n  \"prefill_sawtooth_misses\": {prefill_sawtooth},\n  \"prefill_best_order\": \"{prefill_best_order}\",\n  \"prefill_best_misses\": {prefill_best},\n  \"decode_cyclic_misses\": {decode_cyclic},\n  \"decode_sawtooth_misses\": {decode_sawtooth},\n  \"decode_best_order\": \"{decode_best_order}\",\n  \"decode_best_misses\": {decode_best},\n  \"mqa_decode_misses\": {mqa_decode},\n  \"gqa_miss_ratio\": {gqa_ratio:.3},\n  \"exact_paged_identical\": {exact_paged_identical},\n  \"prefill_s\": {prefill_s:.6},\n  \"decode_s\": {decode_s:.6},\n  \"exact_s\": {exact_s:.6}\n}}\n"
+    );
+    let path = "BENCH_decode.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    print!("{json}");
+}

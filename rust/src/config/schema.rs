@@ -59,18 +59,40 @@ impl SimRunConfig {
             .str("sim.variant", "cuda-wmma")
             .parse()
             .context("sim.variant")?;
-        let workload = AttentionWorkload {
+        // `sim.seq` keeps the square convention (sets both lengths);
+        // `sim.q_len` / `sim.kv_len` override one axis each. GQA grouping
+        // (`sim.kv_heads`) defaults to ungrouped, and a paged KV layout is
+        // declared with `sim.kv_block_tokens` (0 = contiguous) plus
+        // `sim.kv_block_seed` (>= 0 shuffles the table; absent/negative =
+        // identity placement).
+        let heads = c.int("sim.heads", d.workload.heads as i64) as u32;
+        let seq = c.int("sim.seq", d.workload.kv_len as i64) as u64;
+        let mut workload = AttentionWorkload {
             batch: c.int("sim.batch", d.workload.batch as i64) as u32,
-            heads: c.int("sim.heads", d.workload.heads as i64) as u32,
-            seq: c.int("sim.seq", d.workload.seq as i64) as u64,
+            heads,
+            q_len: c.int("sim.q_len", seq as i64) as u64,
+            kv_len: c.int("sim.kv_len", seq as i64) as u64,
             head_dim: c.int("sim.head_dim", d.workload.head_dim as i64) as u32,
             elem_bytes: c.int("sim.elem_bytes", d.workload.elem_bytes as i64) as u32,
             tile: c.int("sim.tile", d.workload.tile as i64) as u32,
             causal: c.bool("sim.causal", d.workload.causal),
+            kv_heads: c.int("sim.kv_heads", heads as i64) as u32,
+            kv_layout: crate::sim::workload::KvLayout::Contiguous,
         };
-        if workload.seq == 0 || workload.tile == 0 || workload.head_dim == 0 {
-            bail!("sim.seq / sim.tile / sim.head_dim must be positive");
+        let block_tokens = c.int("sim.kv_block_tokens", 0) as u32;
+        if block_tokens > 0 {
+            let seed = c.int("sim.kv_block_seed", -1);
+            workload = if seed >= 0 {
+                workload.with_paged_shuffled(block_tokens, seed as u64)
+            } else {
+                workload.with_paged_identity(block_tokens)
+            };
         }
+        if workload.q_len == 0 || workload.kv_len == 0 || workload.tile == 0 || workload.head_dim == 0
+        {
+            bail!("sim.seq / sim.q_len / sim.kv_len / sim.tile / sim.head_dim must be positive");
+        }
+        workload.validate()?;
         let num_sms = c.int("device.sms", 48) as u32;
         if num_sms == 0 {
             bail!("device.sms must be >= 1");
@@ -100,7 +122,7 @@ impl SimRunConfig {
     pub fn to_sim_config(&self) -> SimConfig {
         SimConfig {
             device: self.device(),
-            workload: self.workload,
+            workload: self.workload.clone(),
             scheduler: self.scheduler,
             order: self.order.clone(),
             variant: self.variant,
@@ -435,7 +457,10 @@ mod tests {
     fn sim_defaults_round_trip() {
         let c = Config::parse("").unwrap();
         let s = SimRunConfig::from_config(&c).unwrap();
-        assert_eq!(s.workload.seq, 32 * 1024);
+        assert_eq!(s.workload.q_len, 32 * 1024);
+        assert_eq!(s.workload.kv_len, 32 * 1024);
+        assert_eq!(s.workload.kv_heads, s.workload.heads);
+        assert!(!s.workload.kv_layout.is_paged());
         assert_eq!(s.num_sms, 48);
         assert_eq!(s.order, TraversalRef::cyclic());
         assert_eq!(s.device().l2_bytes, 24 * 1024 * 1024);
@@ -449,7 +474,8 @@ mod tests {
         )
         .unwrap();
         let s = SimRunConfig::from_config(&c).unwrap();
-        assert_eq!(s.workload.seq, 2048);
+        assert_eq!(s.workload.q_len, 2048);
+        assert_eq!(s.workload.kv_len, 2048);
         assert!(s.workload.causal);
         assert_eq!(s.order, TraversalRef::sawtooth());
         assert_eq!(s.variant, KernelVariant::CuTileTile);
@@ -493,7 +519,45 @@ mod tests {
     fn sim_rejects_zero_dims() {
         let c = Config::parse("[sim]\nseq = 0").unwrap();
         assert!(SimRunConfig::from_config(&c).is_err());
+        let c = Config::parse("[sim]\nq_len = 0").unwrap();
+        assert!(SimRunConfig::from_config(&c).is_err());
         let c = Config::parse("[device]\nsms = 0").unwrap();
+        assert!(SimRunConfig::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn sim_decode_axes_parse() {
+        let c = Config::parse(
+            "[sim]\nseq = 4096\nq_len = 1\nheads = 8\nkv_heads = 2\n\
+             kv_block_tokens = 256\nkv_block_seed = 5",
+        )
+        .unwrap();
+        let s = SimRunConfig::from_config(&c).unwrap();
+        assert_eq!(s.workload.q_len, 1);
+        assert_eq!(s.workload.kv_len, 4096);
+        assert_eq!(s.workload.kv_heads, 2);
+        match &s.workload.kv_layout {
+            crate::sim::workload::KvLayout::Paged { block_tokens, block_table } => {
+                assert_eq!(*block_tokens, 256);
+                assert_eq!(block_table.len(), 16);
+                let mut sorted: Vec<u32> = block_table.to_vec();
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..16).collect::<Vec<u32>>());
+            }
+            other => panic!("expected paged layout, got {other:?}"),
+        }
+        // Identity placement when no seed is given; contiguous when the
+        // block size is 0 (the default).
+        let c = Config::parse("[sim]\nseq = 1024\nkv_block_tokens = 512").unwrap();
+        let s = SimRunConfig::from_config(&c).unwrap();
+        match &s.workload.kv_layout {
+            crate::sim::workload::KvLayout::Paged { block_table, .. } => {
+                assert_eq!(block_table.as_ref(), &[0, 1]);
+            }
+            other => panic!("expected paged layout, got {other:?}"),
+        }
+        // Bad grouping is rejected through workload validation.
+        let c = Config::parse("[sim]\nheads = 8\nkv_heads = 3").unwrap();
         assert!(SimRunConfig::from_config(&c).is_err());
     }
 

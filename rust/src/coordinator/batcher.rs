@@ -4,6 +4,7 @@
 use std::collections::HashMap;
 
 use crate::runtime::Manifest;
+use crate::sim::workload::AttentionWorkload;
 
 use super::request::AttentionRequest;
 
@@ -87,7 +88,9 @@ impl Batcher {
         let max_artifact = *self.available_batches.last().unwrap();
         let chunk_limit = self.max_batch.min(max_artifact).max(1);
 
-        let mut groups: HashMap<(usize, usize, usize, bool), Vec<PlannedRequest>> =
+        // Keyed by the full workload shape (q/kv lengths, mask, GQA
+        // grouping, KV layout) — `AttentionWorkload` is `Eq + Hash + Ord`.
+        let mut groups: HashMap<AttentionWorkload, Vec<PlannedRequest>> =
             HashMap::new();
         for (slot, req) in reqs.into_iter().enumerate() {
             groups

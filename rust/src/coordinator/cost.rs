@@ -210,7 +210,7 @@ pub fn default_candidates() -> Vec<TraversalRef> {
 fn probe_config(w: &AttentionWorkload, dev: &DeviceSpec, order: TraversalRef) -> SimConfig {
     SimConfig {
         device: dev.clone(),
-        workload: *w,
+        workload: w.clone(),
         scheduler: SchedulerKind::Persistent,
         order,
         variant: KernelVariant::CuTileStatic,

@@ -503,18 +503,10 @@ fn run_plan(
     // admission-time policy decision AND artifact selection, so
     // `order = auto` resolves per-shape winners from one memoized
     // decision.
-    let w = {
-        let first = &plan.requests[0].req;
-        crate::sim::workload::AttentionWorkload {
-            batch: plan.batch_padded as u32,
-            heads: first.heads as u32,
-            seq: first.seq as u64,
-            head_dim: first.head_dim as u32,
-            elem_bytes: 2,
-            tile: 64,
-            causal: first.causal,
-        }
-    };
+    let w = plan.requests[0]
+        .req
+        .workload()
+        .with_batch(plan.batch_padded as u32);
     // Admission-time policy decision: what the paper's GB10 would
     // do for this dispatch shape under every candidate traversal.
     // Decisions are memoized per shape, so only the first dispatch
@@ -523,7 +515,7 @@ fn run_plan(
     // fixed-order policy would score the whole candidate set just
     // to fill a stats counter. Research-scale sequences are never
     // probed (they would block the pipeline thread for seconds).
-    let decision = if policy.is_auto() && w.seq <= policy::PROBE_MAX_SEQ {
+    let decision = if policy.is_auto() && w.kv_len <= policy::PROBE_MAX_SEQ {
         Some(policy.decide(&w))
     } else {
         None

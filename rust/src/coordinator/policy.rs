@@ -198,7 +198,7 @@ impl PolicyEngine {
     /// (shape, order) once, ever); every later call is a decision-cache
     /// hit (`PolicyDecision::cached`).
     pub fn decide_at(&self, w: &AttentionWorkload, l2_bytes: u64) -> PolicyDecision {
-        let key: DecisionKey = (*w, l2_bytes, self.objective.name());
+        let key: DecisionKey = (w.clone(), l2_bytes, self.objective.name());
         if let Some(d) = self.decisions.lock().unwrap().get(&key) {
             self.cache_hits.fetch_add(1, Ordering::Relaxed);
             let mut d = d.clone();
@@ -377,10 +377,14 @@ impl SchedulePolicy {
         decision: Option<&PolicyDecision>,
     ) -> Result<&'r ArtifactMeta> {
         let manifest = runtime.manifest();
+        // Shipped attention artifacts are square-prefill kernels: they only
+        // serve shapes whose q and kv extents agree (the artifact's `seq`).
+        let square = w.q_len == w.kv_len;
         let pick = |order: &str| {
             manifest.artifacts().iter().find(|a| {
                 a.kind == ArtifactKind::Attention
-                    && a.seq as u64 == w.seq
+                    && square
+                    && a.seq as u64 == w.q_len
                     && a.causal == w.causal
                     && a.batch == batch
                     && a.order == order
@@ -389,7 +393,7 @@ impl SchedulePolicy {
         let preferred = match (&self.mode, decision) {
             (OrderMode::Fixed(t), _) => Some(t.clone()),
             (OrderMode::Auto, Some(d)) => Some(d.winner.clone()),
-            (OrderMode::Auto, None) if w.seq <= PROBE_MAX_SEQ => {
+            (OrderMode::Auto, None) if w.kv_len <= PROBE_MAX_SEQ => {
                 Some(self.engine.decide(w).winner)
             }
             // Too big to probe: serve the baseline artifact if shipped.
@@ -402,9 +406,11 @@ impl SchedulePolicy {
         }
         // Degrade by score over what the manifest actually ships.
         let mut avail: Vec<&str> = Vec::new();
-        for order in manifest.attention_orders(w.seq as usize, w.causal, batch) {
-            if !avail.contains(&order) {
-                avail.push(order);
+        if square {
+            for order in manifest.attention_orders(w.q_len as usize, w.causal, batch) {
+                if !avail.contains(&order) {
+                    avail.push(order);
+                }
             }
         }
         let choice: Option<&str> = match avail.len() {
@@ -413,7 +419,7 @@ impl SchedulePolicy {
             _ => {
                 let parsed: Vec<TraversalRef> =
                     avail.iter().filter_map(|n| n.parse().ok()).collect();
-                if parsed.is_empty() || w.seq > PROBE_MAX_SEQ {
+                if parsed.is_empty() || w.kv_len > PROBE_MAX_SEQ {
                     // Un-scoreable (unregistered orders or research-scale
                     // shape): baseline if shipped, else manifest order.
                     Some(if avail.contains(&traversal::CYCLIC) {
@@ -434,8 +440,9 @@ impl SchedulePolicy {
         match choice {
             Some(order) => Ok(pick(order).expect("order taken from the manifest")),
             None => Err(anyhow!(
-                "no attention artifact for seq={} causal={} batch={batch} (have: {:?})",
-                w.seq,
+                "no attention artifact for q_len={} kv_len={} causal={} batch={batch} (have: {:?})",
+                w.q_len,
+                w.kv_len,
                 w.causal,
                 manifest
                     .attention_artifacts()

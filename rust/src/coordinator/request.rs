@@ -6,6 +6,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::sim::workload::AttentionWorkload;
 use crate::sim::{SimResult, SweepSpec};
 
 /// Unique request identifier.
@@ -58,22 +59,28 @@ pub struct SweepResponse {
 
 /// One attention request: Q/K/V for a single sequence, (H, S, D) flattened
 /// row-major. The engine batches compatible requests together.
+///
+/// The shape lives in an embedded [`AttentionWorkload`] with `batch = 1` —
+/// the same record the simulator, cost model, and policy engine consume.
+/// The coordinator used to duplicate seq/heads/head_dim/causal here and
+/// re-assemble a workload at dispatch time; unifying on the workload means
+/// batching keys, token accounting, and artifact selection all read one
+/// shape definition (and decode/paged/GQA axes ride along for free).
 #[derive(Clone, Debug)]
 pub struct AttentionRequest {
     pub id: RequestId,
-    /// Sequence length; must match an AOT artifact (128/256/512 by default).
-    pub seq: usize,
-    pub heads: usize,
-    pub head_dim: usize,
-    pub causal: bool,
+    /// Attention shape for this single sequence (`batch == 1`): q/kv
+    /// lengths, heads, head_dim, mask, GQA grouping, and KV layout.
+    /// `kv_len` must match an AOT artifact (128/256/512 by default).
+    pub shape: AttentionWorkload,
     pub q: Vec<f32>,
     pub k: Vec<f32>,
     pub v: Vec<f32>,
 }
 
 impl AttentionRequest {
-    /// Build a request with deterministic synthetic payload (used by the
-    /// examples and load generators).
+    /// Build a square (prefill) request with deterministic synthetic
+    /// payload (used by the examples and load generators).
     pub fn synthetic(
         id: u64,
         seq: usize,
@@ -82,32 +89,44 @@ impl AttentionRequest {
         causal: bool,
         rng: &mut crate::util::rng::Rng,
     ) -> Self {
+        // Tile 64 / fp16 matches the dispatch shape run_plan historically
+        // hardcoded when it rebuilt a workload from the scalar fields.
+        let shape = AttentionWorkload::square(1, heads as u32, seq as u64, head_dim as u32, 64)
+            .with_causal(causal);
         let n = heads * seq * head_dim;
         let mut gen = |_: usize| -> Vec<f32> {
             (0..n).map(|_| rng.next_gaussian() as f32 * 0.5).collect()
         };
         AttentionRequest {
             id: RequestId(id),
-            seq,
-            heads,
-            head_dim,
-            causal,
+            shape,
             q: gen(0),
             k: gen(1),
             v: gen(2),
         }
     }
 
-    /// Elements in each of q/k/v — also the request's token cost under
-    /// continuous batching's `queue.max_batch_total_tokens` admission
-    /// budget (see [`crate::config::QueueConfig`]).
-    pub fn elems(&self) -> usize {
-        self.heads * self.seq * self.head_dim
+    /// The request's shape as a simulator workload (`batch = 1`); dispatch
+    /// scales it with [`AttentionWorkload::with_batch`] to the padded
+    /// batch. This is the single source of truth the policy engine scores.
+    pub fn workload(&self) -> AttentionWorkload {
+        self.shape.clone()
     }
 
-    /// Batching compatibility key: requests sharing it can share a dispatch.
-    pub fn shape_key(&self) -> (usize, usize, usize, bool) {
-        (self.seq, self.heads, self.head_dim, self.causal)
+    /// Elements in each of q/k/v — also the request's token cost under
+    /// continuous batching's `queue.max_batch_total_tokens` admission
+    /// budget (see [`crate::config::QueueConfig`]). Counted over `kv_len`
+    /// (== `q_len` for square prefill requests): the KV extent is what a
+    /// dispatch slot must hold resident.
+    pub fn elems(&self) -> usize {
+        self.shape.heads as usize * self.shape.kv_len as usize * self.shape.head_dim as usize
+    }
+
+    /// Batching compatibility key: requests sharing it can share a
+    /// dispatch. The workload itself (`Eq + Hash`) is the key, so every
+    /// shape axis — lengths, mask, grouping, KV layout — participates.
+    pub fn shape_key(&self) -> AttentionWorkload {
+        self.shape.clone()
     }
 }
 
@@ -135,8 +154,24 @@ mod tests {
         assert_eq!(r.id, RequestId(7));
         assert_eq!(r.elems(), 4 * 128 * 64);
         assert_eq!(r.q.len(), r.elems());
-        assert!(r.causal);
+        assert!(r.shape.causal);
         assert_ne!(r.q, r.k, "payloads should differ");
+    }
+
+    #[test]
+    fn workload_matches_legacy_dispatch_literal() {
+        // run_plan used to rebuild this exact workload from scalar
+        // fields; the embedded shape must reproduce it bit for bit.
+        let mut rng = Rng::new(1);
+        let r = AttentionRequest::synthetic(0, 256, 8, 64, true, &mut rng);
+        let w = r.workload().with_batch(4);
+        assert_eq!(w.batch, 4);
+        assert_eq!(w.heads, 8);
+        assert_eq!((w.q_len, w.kv_len), (256, 256));
+        assert_eq!((w.head_dim, w.elem_bytes, w.tile), (64, 2, 64));
+        assert!(w.causal);
+        assert_eq!(w.kv_heads, 8);
+        assert!(!w.kv_layout.is_paged());
     }
 
     #[test]

@@ -41,7 +41,7 @@ use rustc_hash::FxHashMap;
 use crate::config::SweepServiceConfig;
 use crate::gb10::DeviceSpec;
 use crate::sim::sweep::SweepExecutor;
-use crate::sim::workload::AttentionWorkload;
+use crate::sim::workload::{AttentionWorkload, KvLayout};
 use crate::sim::{SimConfig, SweepSpec};
 
 use super::request::{ClientId, RequestId, SweepChunk, SweepRequest, SweepResponse};
@@ -425,6 +425,16 @@ fn serve_one_turn(
 // `variant=` parse via the types' `FromStr`, so all three report the
 // shared unknown-value message listing what is legal. `#` starts a comment
 // line; `end` is optional.
+//
+// Decode-era axes ride on optional keys: `seq=` keeps the square
+// convention (sets q and kv length together), `q_len=`/`kv_len=` override
+// one axis each (order-independent — overrides resolve after the whole
+// line parses), `kv_heads=` declares GQA grouping (defaults to `heads`),
+// and `kv_block_tokens=`/`kv_blocks=` (dash-joined physical block indices)
+// declare a paged KV layout — `kv_block_tokens=` alone means identity
+// placement. [`format_spec`] emits these only when off-default, so square
+// ungrouped contiguous sweeps serialize byte-identically to the legacy
+// protocol.
 
 /// Serialize a spec to the line protocol. Round-trips through
 /// [`parse_spec`] to configs with identical `ConfigKey` identity.
@@ -441,8 +451,8 @@ pub fn format_spec(spec: &SweepSpec) -> String {
             "config device={base} seq={} tile={} batch={} heads={} head_dim={} \
              elem_bytes={} causal={} order={} scheduler={} variant={} jitter={} \
              seed={} model_l1={} sms={} l2_bytes={} l1_bytes={} sector_bytes={} \
-             non_tex={}\n",
-            cfg.workload.seq,
+             non_tex={}",
+            cfg.workload.kv_len,
             cfg.workload.tile,
             cfg.workload.batch,
             cfg.workload.heads,
@@ -461,6 +471,24 @@ pub fn format_spec(spec: &SweepSpec) -> String {
             dev.sector_bytes,
             dev.non_tex_sectors_per_step,
         ));
+        // Decode-axis keys are emitted only when off-default, so square
+        // ungrouped contiguous configs serialize byte-identically to the
+        // legacy protocol.
+        if cfg.workload.q_len != cfg.workload.kv_len {
+            out.push_str(&format!(" q_len={}", cfg.workload.q_len));
+        }
+        if cfg.workload.kv_heads != cfg.workload.heads {
+            out.push_str(&format!(" kv_heads={}", cfg.workload.kv_heads));
+        }
+        if let KvLayout::Paged { block_tokens, block_table } = &cfg.workload.kv_layout {
+            let table: Vec<String> =
+                block_table.iter().map(|b| b.to_string()).collect();
+            out.push_str(&format!(
+                " kv_block_tokens={block_tokens} kv_blocks={}",
+                table.join("-")
+            ));
+        }
+        out.push('\n');
     }
     out.push_str("end\n");
     out
@@ -541,9 +569,34 @@ fn parse_config_line(rest: &str) -> Result<SimConfig> {
         "tiny" => DeviceSpec::tiny(),
         other => bail!("device must be gb10|tiny, got '{other}'"),
     };
+    // Decode-axis overrides resolve after the loop so key order on the
+    // line never matters: `seq=` sets both lengths (the square
+    // convention), then `q_len=`/`kv_len=` override one axis each;
+    // `kv_heads=` defaults to `heads` (ungrouped) however late `heads=`
+    // appears; `kv_blocks=` pairs with `kv_block_tokens=`.
+    let mut q_len: Option<u64> = None;
+    let mut kv_len: Option<u64> = None;
+    let mut kv_heads: Option<u32> = None;
+    let mut block_tokens: Option<u32> = None;
+    let mut blocks: Option<Vec<u32>> = None;
     for (k, v) in kvs {
         match k {
-            "seq" => cfg.workload.seq = parse_num(k, v)?,
+            "seq" => {
+                let n: u64 = parse_num(k, v)?;
+                cfg.workload.q_len = n;
+                cfg.workload.kv_len = n;
+            }
+            "q_len" => q_len = Some(parse_num(k, v)?),
+            "kv_len" => kv_len = Some(parse_num(k, v)?),
+            "kv_heads" => kv_heads = Some(parse_num(k, v)?),
+            "kv_block_tokens" => block_tokens = Some(parse_num(k, v)?),
+            "kv_blocks" => {
+                let table: Vec<u32> = v
+                    .split('-')
+                    .map(|t| parse_num(k, t))
+                    .collect::<Result<_>>()?;
+                blocks = Some(table);
+            }
             "tile" => cfg.workload.tile = parse_num(k, v)?,
             "batch" => cfg.workload.batch = parse_num(k, v)?,
             "heads" => cfg.workload.heads = parse_num(k, v)?,
@@ -565,9 +618,31 @@ fn parse_config_line(rest: &str) -> Result<SimConfig> {
             other => bail!("unknown config key '{other}'"),
         }
     }
-    if cfg.workload.seq == 0 || cfg.workload.tile == 0 || cfg.workload.head_dim == 0 {
-        bail!("seq, tile and head_dim must be positive");
+    if let Some(n) = q_len {
+        cfg.workload.q_len = n;
     }
+    if let Some(n) = kv_len {
+        cfg.workload.kv_len = n;
+    }
+    cfg.workload.kv_heads = kv_heads.unwrap_or(cfg.workload.heads);
+    match (block_tokens, blocks) {
+        (None, None) => {}
+        // A block size alone means identity placement over the kv extent.
+        (Some(bt), None) => cfg.workload = cfg.workload.with_paged_identity(bt),
+        (Some(bt), Some(table)) => {
+            cfg.workload.kv_layout =
+                KvLayout::Paged { block_tokens: bt, block_table: table.into() };
+        }
+        (None, Some(_)) => bail!("kv_blocks requires kv_block_tokens"),
+    }
+    if cfg.workload.q_len == 0
+        || cfg.workload.kv_len == 0
+        || cfg.workload.tile == 0
+        || cfg.workload.head_dim == 0
+    {
+        bail!("seq (q_len/kv_len), tile and head_dim must be positive");
+    }
+    cfg.workload.validate()?;
     if cfg.device.num_sms == 0 || cfg.device.sector_bytes == 0 {
         bail!("sms and sector_bytes must be positive");
     }
@@ -749,6 +824,75 @@ mod tests {
         let err =
             parse_spec("objective=fastest\nconfig device=tiny seq=512 tile=16\n").unwrap_err();
         assert!(format!("{err:#}").contains("unknown objective 'fastest'"), "{err:#}");
+    }
+
+    #[test]
+    fn protocol_round_trips_decode_axes() {
+        let mut cfg = SimConfig::cuda_study(
+            AttentionWorkload::square(1, 2, 512, 64, 16)
+                .with_q_len(1)
+                .with_kv_heads(1)
+                .with_paged_shuffled(64, 7),
+        );
+        cfg.device = DeviceSpec::tiny();
+        let spec = SweepSpec::new("decode", vec![cfg]);
+        let text = format_spec(&spec);
+        assert!(text.contains(" q_len=1"), "{text}");
+        assert!(text.contains(" kv_heads=1"), "{text}");
+        assert!(text.contains(" kv_block_tokens=64 kv_blocks="), "{text}");
+        let parsed = parse_spec(&text).unwrap();
+        assert_eq!(parsed.configs[0].workload, spec.configs[0].workload);
+        assert_eq!(ConfigKey::of(&parsed.configs[0]), ConfigKey::of(&spec.configs[0]));
+    }
+
+    #[test]
+    fn protocol_square_configs_serialize_without_decode_keys() {
+        // Legacy byte-compat: no decode keys appear for square ungrouped
+        // contiguous configs, and `seq=` round-trips both lengths.
+        let spec = tiny_spec("legacy", &[256]);
+        let text = format_spec(&spec);
+        assert!(!text.contains("q_len="), "{text}");
+        assert!(!text.contains("kv_heads="), "{text}");
+        assert!(!text.contains("kv_block"), "{text}");
+        let parsed = parse_spec(&text).unwrap();
+        assert_eq!(parsed.configs[0].workload.q_len, 256);
+        assert_eq!(parsed.configs[0].workload.kv_len, 256);
+    }
+
+    #[test]
+    fn protocol_decode_key_semantics() {
+        // Overrides are order-independent: q_len before seq still wins.
+        let spec =
+            parse_spec("config device=tiny q_len=4 seq=512 tile=16\n").unwrap();
+        assert_eq!(spec.configs[0].workload.q_len, 4);
+        assert_eq!(spec.configs[0].workload.kv_len, 512);
+        // kv_heads defaults to heads however late heads appears.
+        let spec =
+            parse_spec("config device=tiny seq=512 tile=16 heads=8\n").unwrap();
+        assert_eq!(spec.configs[0].workload.kv_heads, 8);
+        // kv_block_tokens alone → identity table over the kv extent.
+        let spec = parse_spec(
+            "config device=tiny seq=512 tile=16 kv_block_tokens=128\n",
+        )
+        .unwrap();
+        match &spec.configs[0].workload.kv_layout {
+            KvLayout::Paged { block_tokens, block_table } => {
+                assert_eq!(*block_tokens, 128);
+                assert_eq!(block_table.as_ref(), &[0, 1, 2, 3]);
+            }
+            other => panic!("expected paged layout, got {other:?}"),
+        }
+        // kv_blocks without a block size is rejected, as is a table of
+        // the wrong length (workload validation).
+        assert!(parse_spec("config device=tiny seq=512 tile=16 kv_blocks=0-1\n").is_err());
+        assert!(parse_spec(
+            "config device=tiny seq=512 tile=16 kv_block_tokens=128 kv_blocks=0-1\n"
+        )
+        .is_err());
+        // Grouping must divide the head count.
+        assert!(
+            parse_spec("config device=tiny seq=512 tile=16 heads=8 kv_heads=3\n").is_err()
+        );
     }
 
     #[test]

@@ -1,7 +1,16 @@
 //! The paper's closed-form L2 sector-access model (§3.2–3.3).
 //!
 //! Variables follow the paper: `S` sequence length, `C` sector size, `E`
-//! element size, `T` tile size, `D` head dimension, `M` sectors.
+//! element size, `T` tile size, `D` head dimension, `M` sectors — extended
+//! to rectangular decode shapes by carrying `q_len` (Q/O extent, and the
+//! count of Q tiles that each stream KV) and `kv_len` (K/V extent)
+//! separately. With `q_len == kv_len` every formula reduces to the paper's
+//! square form exactly.
+//!
+//! Note these are *traffic* (accessed-sector) models: GQA head grouping
+//! changes which entities the K/V accesses alias — and hence misses — but
+//! not the access count, so `kv_heads` does not appear here except in the
+//! cold-miss footprint.
 //!
 //! Exact (tile-floor) and approximate (direct-division) forms are both
 //! provided; Table 3's MAPE compares the approximations to the simulator.
@@ -15,32 +24,39 @@ pub fn tile_sectors(w: &AttentionWorkload, sector_bytes: u32) -> f64 {
     (w.tile as f64 * w.head_dim as f64 * w.elem_bytes as f64) / sector_bytes as f64
 }
 
-/// Approximate non-causal L2 sector accesses (paper §3.2):
-/// `M ≈ 2(SDE/C + S²DE/(TC))`, per (batch·head), then scaled.
+/// Approximate non-causal L2 sector accesses (paper §3.2), generalised:
+/// `M ≈ 2(Q·DE/C + Q·KV·DE/(TC))` per (batch·head), then scaled — Q and O
+/// touched once, K and V streamed once per Q tile. Square shapes recover
+/// the paper's `2(SDE/C + S²DE/(TC))`.
 pub fn sectors_non_causal(w: &AttentionWorkload, sector_bytes: u32) -> f64 {
-    let s = w.seq as f64;
+    let q = w.q_len as f64;
+    let kv = w.kv_len as f64;
     let d = w.head_dim as f64;
     let e = w.elem_bytes as f64;
     let c = sector_bytes as f64;
     let t = w.tile as f64;
-    let per_head = 2.0 * (s * d * e / c + s * s * d * e / (t * c));
+    let per_head = 2.0 * (q * d * e / c + q * kv * d * e / (t * c));
     per_head * w.batch_heads() as f64
 }
 
 /// Approximate causal L2 sector accesses (paper §3.2):
-/// `M ≈ 8S(S/2T + 1/2)` in the paper's D=64, E=2, C=32 instantiation;
-/// in general `2·(SDE/C)·(S/(2T) + 1/2) + 2·SDE/C` — Q/O unchanged, K/V
-/// halved (triangular).
+/// `M ≈ 8S(S/2T + 1/2)` in the paper's D=64, E=2, C=32 instantiation.
+/// Generalised with the bottom-right-aligned mask: Q tile i streams
+/// `(i+1)T + (KV − Q)` KV rows, summing to
+/// `Q²/(2T) + Q/2 + Q(KV − Q)/T` rows per tensor — which is the paper's
+/// `S²/2T + S/2` when square, and approaches the non-causal `Q·KV/T` as
+/// `Q → 1` (a decode row sees the whole cache).
 pub fn sectors_causal(w: &AttentionWorkload, sector_bytes: u32) -> f64 {
-    let s = w.seq as f64;
+    let q = w.q_len as f64;
+    let kv = w.kv_len as f64;
     let d = w.head_dim as f64;
     let e = w.elem_bytes as f64;
     let c = sector_bytes as f64;
     let t = w.tile as f64;
-    // Q + O once each; K + V triangular: S(S+T)/(2T) rows ≈ S²/2T + S/2.
-    let qo = 2.0 * s * d * e / c;
-    let kv = 2.0 * (s * s / (2.0 * t) + s / 2.0) * d * e / c;
-    (qo + kv) * w.batch_heads() as f64
+    let qo = 2.0 * q * d * e / c;
+    let kv_rows = q * q / (2.0 * t) + q / 2.0 + q * (kv - q) / t;
+    let kv_term = 2.0 * kv_rows * d * e / c;
+    (qo + kv_term) * w.batch_heads() as f64
 }
 
 /// Dispatch on the workload's mask.
@@ -53,19 +69,20 @@ pub fn sectors_model(w: &AttentionWorkload, sector_bytes: u32) -> f64 {
 }
 
 /// Exact tile-level count (what the simulator must produce): includes the
-/// trailing partial tile.
+/// trailing partial tile on both axes, and resolves the causal extent per
+/// Q tile through [`AttentionWorkload::kv_tiles_for`].
 pub fn sectors_exact(w: &AttentionWorkload, sector_bytes: u32) -> u64 {
-    let n = w.num_tiles();
-    let tile_sec = |idx: u64| w.rows_sectors(w.tile_rows(idx), sector_bytes) as u64;
+    let qn = w.num_q_tiles();
+    let q_sec = |idx: u64| w.rows_sectors(w.q_tile_rows(idx), sector_bytes) as u64;
+    let kv_sec = |idx: u64| w.rows_sectors(w.kv_tile_rows(idx), sector_bytes) as u64;
     let mut qo = 0u64;
-    for i in 0..n {
-        qo += 2 * tile_sec(i);
+    for i in 0..qn {
+        qo += 2 * q_sec(i);
     }
     let mut kv = 0u64;
-    for i in 0..n {
-        let kv_tiles = if w.causal { i + 1 } else { n };
-        for j in 0..kv_tiles {
-            kv += 2 * tile_sec(j);
+    for i in 0..qn {
+        for j in 0..w.kv_tiles_for(i) {
+            kv += 2 * kv_sec(j);
         }
     }
     (qo + kv) * w.batch_heads() as u64
@@ -77,14 +94,17 @@ pub fn sectors_non_causal_specialised(seq: f64, tile: f64) -> f64 {
     8.0 * seq * (1.0 + seq / tile)
 }
 
-/// Theoretical cold-miss sector count `4·SDE/C` (= 16S at D=64/E=2/C=32) —
-/// the dashed line of Fig 5.
+/// Theoretical cold-miss sector count: unique Q/O sectors per query entity
+/// plus unique K/V sectors per *KV* entity (GQA shrinks the K/V term).
+/// Square ungrouped shapes recover the paper's `4·SDE/C` (= 16S at
+/// D=64/E=2/C=32) — the dashed line of Fig 5.
 pub fn cold_miss_sectors(w: &AttentionWorkload, sector_bytes: u32) -> f64 {
-    let s = w.seq as f64;
     let d = w.head_dim as f64;
     let e = w.elem_bytes as f64;
     let c = sector_bytes as f64;
-    4.0 * s * d * e / c * w.batch_heads() as f64
+    let qo = 2.0 * w.q_len as f64 * d * e / c * w.batch_heads() as f64;
+    let kv = 2.0 * w.kv_len as f64 * d * e / c * w.batch_kv_heads() as f64;
+    qo + kv
 }
 
 /// Predicted L2 hit rate under synchronized wavefronts (§3.4): 1 − 1/N_SM.
@@ -104,22 +124,14 @@ mod tests {
     use super::*;
 
     fn wl(seq: u64, tile: u32, causal: bool) -> AttentionWorkload {
-        AttentionWorkload {
-            batch: 1,
-            heads: 1,
-            seq,
-            head_dim: 64,
-            elem_bytes: 2,
-            tile,
-            causal,
-        }
+        AttentionWorkload::square(1, 1, seq, 64, tile).with_causal(causal)
     }
 
     #[test]
     fn specialised_form_matches_general() {
         let w = wl(32 * 1024, 80, false);
         let g = sectors_non_causal(&w, 32);
-        let s = sectors_non_causal_specialised(w.seq as f64, w.tile as f64);
+        let s = sectors_non_causal_specialised(w.q_len as f64, w.tile as f64);
         assert!((g - s).abs() / s < 1e-12);
     }
 
@@ -130,6 +142,19 @@ mod tests {
         assert_eq!(sectors_exact(&w, 32) as f64, sectors_non_causal(&w, 32));
         let wc = wl(640, 80, true);
         assert_eq!(sectors_exact(&wc, 32) as f64, sectors_causal(&wc, 32));
+    }
+
+    #[test]
+    fn exact_matches_model_on_rectangles_when_divisible() {
+        // Divisible rectangular shapes: the generalised forms stay exact.
+        let w = wl(640, 80, false).with_kv_len(1600);
+        assert_eq!(sectors_exact(&w, 32) as f64, sectors_non_causal(&w, 32));
+        let wc = wl(640, 80, true).with_kv_len(1600);
+        assert_eq!(sectors_exact(&wc, 32) as f64, sectors_causal(&wc, 32));
+        // Decode: a tile-sized q over a long KV, causal — one Q tile
+        // streaming every KV tile.
+        let wd = wl(80, 80, true).with_kv_len(1600);
+        assert_eq!(sectors_exact(&wd, 32) as f64, sectors_causal(&wd, 32));
     }
 
     #[test]
@@ -155,9 +180,30 @@ mod tests {
     }
 
     #[test]
+    fn causal_approaches_non_causal_in_decode_limit() {
+        // q_len = 1: the mask hides (almost) nothing — the causal model
+        // must converge to the non-causal one.
+        let wc = wl(128 * 1024, 64, true).with_q_len(1);
+        let wn = wl(128 * 1024, 64, false).with_q_len(1);
+        let ratio = sectors_causal(&wc, 32) / sectors_non_causal(&wn, 32);
+        assert!((ratio - 1.0).abs() < 0.01, "ratio={ratio}");
+    }
+
+    #[test]
     fn cold_miss_is_16s_in_paper_config() {
         let w = wl(32 * 1024, 80, false);
         assert_eq!(cold_miss_sectors(&w, 32), 16.0 * 32.0 * 1024.0);
+    }
+
+    #[test]
+    fn cold_miss_shrinks_under_gqa() {
+        // 8 query heads sharing 2 KV heads: K/V footprint quarters.
+        let w = AttentionWorkload::square(1, 8, 4096, 64, 64);
+        let g = w.clone().with_kv_heads(2);
+        let full = cold_miss_sectors(&w, 32);
+        let grouped = cold_miss_sectors(&g, 32);
+        // qo half stays, kv half quarters: 0.5 + 0.5/4 = 0.625.
+        assert!((grouped / full - 0.625).abs() < 1e-12);
     }
 
     #[test]
@@ -191,7 +237,7 @@ mod tests {
     #[test]
     fn scales_linearly_in_batch_heads() {
         let w1 = wl(4096, 64, false);
-        let w8 = AttentionWorkload { batch: 8, ..w1 };
+        let w8 = AttentionWorkload { batch: 8, ..w1.clone() };
         assert_eq!(
             sectors_non_causal(&w8, 32),
             8.0 * sectors_non_causal(&w1, 32)

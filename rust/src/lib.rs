@@ -44,4 +44,4 @@ pub mod util;
 pub use gb10::DeviceSpec;
 pub use sim::sweep::{SweepExecutor, SweepSpec};
 pub use sim::traversal::{Traversal, TraversalRef, TraversalRegistry};
-pub use sim::workload::AttentionWorkload;
+pub use sim::workload::{AttentionWorkload, KvLayout};

@@ -100,6 +100,13 @@ COMMON OPTIONS:
                          [queue], [policy], [sweep_service])
   --set key=value        override one config key (repeatable)
   --seq N --tile T --batch B --heads H --causal
+  --q-len N --kv-len N   decode shapes: override one attention length
+                         (--seq sets both; q_len=1 is single-token decode)
+  --kv-heads N           GQA/MQA: KV heads shared by the query heads
+                         (must divide --heads; default: ungrouped)
+  --kv-block-tokens N    paged KV cache with N-token blocks (0=contiguous);
+                         --kv-block-seed S shuffles the block table
+                         (default: identity placement)
   --order NAME           KV traversal order: any registered name (see the
                          TRAVERSALS list at the end of this help)
   --objective NAME       policy scoring objective: min-misses | max-tflops |
@@ -178,6 +185,11 @@ fn build_config(flags: &[(String, String)]) -> Result<Config> {
                 continue;
             }
             "seq" => Some(("sim.seq", v.clone())),
+            "q-len" => Some(("sim.q_len", v.clone())),
+            "kv-len" => Some(("sim.kv_len", v.clone())),
+            "kv-heads" => Some(("sim.kv_heads", v.clone())),
+            "kv-block-tokens" => Some(("sim.kv_block_tokens", v.clone())),
+            "kv-block-seed" => Some(("sim.kv_block_seed", v.clone())),
             "tile" => Some(("sim.tile", v.clone())),
             "batch" => Some(("sim.batch", v.clone())),
             "heads" => Some(("sim.heads", v.clone())),
@@ -418,11 +430,11 @@ fn cmd_reuse(args: &[String]) -> Result<()> {
     // Single-CTA KV reference stream under every registered traversal:
     // §4's theory, measured (cyclic and sawtooth anchor the comparison).
     for order in TraversalRegistry::global().instances() {
-        let n = w.num_tiles();
-        let mut prof = ReuseProfiler::new((2 * n * n + 4 * n) as usize);
+        let (qn, kn) = (w.num_q_tiles(), w.num_kv_tiles());
+        let mut prof = ReuseProfiler::new((2 * qn * kn + 4 * qn) as usize);
         for item in single_cta_items(&w, &order) {
             for_each_kv_access(&w, &item, |a| {
-                let sec = w.rows_sectors(w.tile_rows(a.tile_idx), 32);
+                let sec = w.rows_sectors(w.kv_tile_rows(a.tile_idx), 32);
                 prof.access(block_key(a.tensor as u8, 0, a.tile_idx), sec);
             });
         }

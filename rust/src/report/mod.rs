@@ -46,8 +46,15 @@ pub const EXPERIMENTS: &[&str] = &[
 /// `abl-policy` runs the policy engine's co-design search: the winning
 /// registered traversal per KV:L2 ratio, from one Mattson profile pass per
 /// candidate.
-pub const ABLATIONS: &[&str] =
-    &["abl-order", "abl-policy", "abl-tile", "abl-jitter", "abl-capacity", "abl-reuse"];
+pub const ABLATIONS: &[&str] = &[
+    "abl-order",
+    "abl-policy",
+    "abl-tile",
+    "abl-jitter",
+    "abl-capacity",
+    "abl-reuse",
+    "abl-decode",
+];
 
 /// Run one experiment (or "all") sequentially and return the rendered
 /// report. Equivalent to [`run_threaded`] with one thread.
@@ -153,6 +160,7 @@ fn render_one(experiment: &str, exec: &SweepExecutor) -> Result<String> {
         "abl-jitter" => Ok(ablations::jitter_sweep(exec)),
         "abl-capacity" => Ok(ablations::capacity_sweep(exec)),
         "abl-reuse" => Ok(ablations::reuse_histogram()),
+        "abl-decode" => Ok(ablations::decode_sweep(exec)),
         other => bail!(
             "unknown experiment '{other}' (try one of {EXPERIMENTS:?}, {ABLATIONS:?}, \
              'ablations' or 'all')"
@@ -524,7 +532,7 @@ fn fig78_configs() -> Vec<SimConfig> {
     let mut configs = Vec::new();
     for &b in FIG78_BATCHES {
         let w = AttentionWorkload::cuda_study(128 * 1024).with_batch(b);
-        configs.push(SimConfig::cuda_study(w));
+        configs.push(SimConfig::cuda_study(w.clone()));
         configs.push(SimConfig::cuda_study(w).with_order(TraversalRef::sawtooth()));
     }
     configs
@@ -590,7 +598,7 @@ fn fig_cutile_configs(causal: bool) -> Vec<SimConfig> {
     let w = AttentionWorkload::cutile_study(8, causal);
     cutile_variants()
         .iter()
-        .map(|(_, variant, order)| SimConfig::cutile_study(w, *variant, order.clone()))
+        .map(|(_, variant, order)| SimConfig::cutile_study(w.clone(), *variant, order.clone()))
         .collect()
 }
 

@@ -17,7 +17,7 @@ use crate::util::rng::Rng;
 use super::cache::{DenseWeightedLru, ExactLru, DEFAULT_FRONT_PROBE};
 use super::counters::CacheCounters;
 use super::kernel_model::{
-    step_accesses, ItemSteps, KernelVariant, Step, TileAccess, WorkItem,
+    step_accesses, ItemSteps, KernelVariant, Step, TensorKind, TileAccess, WorkItem,
 };
 use super::scheduler::{Scheduler, SchedulerKind};
 use super::traversal::TraversalRef;
@@ -130,10 +130,16 @@ impl SimResult {
 }
 
 /// Unique-sector footprint of the four tensors (the theoretical cold-miss
-/// count, dashed line of Fig 5).
+/// count, dashed line of Fig 5): Q and O scale with `q_len` per query
+/// entity, K and V with `kv_len` per KV entity (GQA head sharing shrinks
+/// the KV footprint; paging permutes addresses injectively so the unique
+/// count is layout-independent). Reduces to the paper's 4·S·D·E/C per
+/// (batch·head) on square ungrouped shapes.
 pub fn cold_sectors(w: &AttentionWorkload, dev: &DeviceSpec) -> u64 {
-    let per_tensor = (w.tensor_bytes() + dev.sector_bytes as u64 - 1) / dev.sector_bytes as u64;
-    4 * per_tensor * w.batch_heads() as u64
+    let sb = dev.sector_bytes as u64;
+    let q = (w.q_tensor_bytes() + sb - 1) / sb;
+    let kv = (w.kv_tensor_bytes() + sb - 1) / sb;
+    2 * q * w.batch_heads() as u64 + 2 * kv * w.batch_kv_heads() as u64
 }
 
 /// Graded per-SM stall probabilities: SM i stalls with p = jitter·i/(n−1),
@@ -179,13 +185,159 @@ impl JitterState {
     }
 }
 
-/// Precomputed per-tile sector counts: `lut[tile_idx]` replaces the
+/// Precomputed per-tile sector counts, one table per tile axis (Q/O tiles
+/// span `q_len`, K/V tiles span `kv_len`): replaces the
 /// `rows_sectors(tile_rows(idx))` division chain previously evaluated on
 /// every access (EXPERIMENTS.md §Perf).
-fn sector_lut(w: &AttentionWorkload, sector_bytes: u32) -> Vec<u32> {
-    (0..w.num_tiles())
-        .map(|i| w.rows_sectors(w.tile_rows(i), sector_bytes))
-        .collect()
+struct SectorLut {
+    q: Vec<u32>,
+    kv: Vec<u32>,
+}
+
+impl SectorLut {
+    fn new(w: &AttentionWorkload, sector_bytes: u32) -> Self {
+        SectorLut {
+            q: (0..w.num_q_tiles())
+                .map(|i| w.rows_sectors(w.q_tile_rows(i), sector_bytes))
+                .collect(),
+            kv: (0..w.num_kv_tiles())
+                .map(|i| w.rows_sectors(w.kv_tile_rows(i), sector_bytes))
+                .collect(),
+        }
+    }
+
+    #[inline]
+    fn get(&self, a: &TileAccess) -> u32 {
+        match a.tensor {
+            TensorKind::Q | TensorKind::O => self.q[a.tile_idx as usize],
+            TensorKind::K | TensorKind::V => self.kv[a.tile_idx as usize],
+        }
+    }
+}
+
+/// Dense tile-key layout shared by the weighted backends: each query entity
+/// owns a `2·qn + 2·kn` slot stride laid out `[Q | K | V | O]`, with K/V
+/// indexed by the access's KV entity (< batch·kv_heads <= batch·heads, so
+/// GQA aliasing lands grouped heads on the same keys). On square ungrouped
+/// shapes the stride is `4n` and every key equals the retired
+/// `((bh·4)+tensor)·num_tiles + tile` formula bit for bit.
+#[derive(Clone, Copy)]
+struct TileKeys {
+    qn: u64,
+    kn: u64,
+    stride: u64,
+}
+
+impl TileKeys {
+    fn new(w: &AttentionWorkload) -> Self {
+        let qn = w.num_q_tiles();
+        let kn = w.num_kv_tiles();
+        TileKeys { qn, kn, stride: 2 * qn + 2 * kn }
+    }
+
+    fn domain(&self, w: &AttentionWorkload) -> usize {
+        (w.batch_heads() as u64 * self.stride) as usize
+    }
+
+    #[inline]
+    fn key(&self, a: &TileAccess) -> u64 {
+        let base = a.batch_head as u64 * self.stride;
+        match a.tensor {
+            TensorKind::Q => base + a.tile_idx,
+            TensorKind::K => base + self.qn + a.tile_idx,
+            TensorKind::V => base + self.qn + self.kn + a.tile_idx,
+            TensorKind::O => base + self.qn + 2 * self.kn + a.tile_idx,
+        }
+    }
+}
+
+/// Dense sector-address layout shared by the exact backends: per-entity
+/// spans `[Q | K | V | O]` where Q/O span `q_len` rows and K/V span the
+/// *physical* KV row space (paged tables may address a pool beyond
+/// `kv_len`). Logical KV rows map through the block table; Q/O and
+/// contiguous KV emit single runs identical to the retired
+/// `((bh·4)+tensor)·tensor_sectors` layout on square contiguous shapes.
+struct SectorAddrs {
+    q_span: u64,
+    kv_span: u64,
+    stride: u64,
+    row_sectors: u64,
+    tile: u64,
+}
+
+impl SectorAddrs {
+    fn new(w: &AttentionWorkload, sector_bytes: u32) -> Self {
+        let sb = sector_bytes as u64;
+        let q_span = (w.q_tensor_bytes() + sb - 1) / sb;
+        let kv_span =
+            (w.kv_physical_rows() * w.head_dim as u64 * w.elem_bytes as u64 + sb - 1) / sb;
+        SectorAddrs {
+            q_span,
+            kv_span,
+            stride: 2 * q_span + 2 * kv_span,
+            row_sectors: w.rows_sectors(1, sector_bytes) as u64,
+            tile: w.tile as u64,
+        }
+    }
+
+    fn domain(&self, w: &AttentionWorkload) -> usize {
+        (w.batch_heads() as u64 * self.stride) as usize
+    }
+
+    #[inline]
+    fn tensor_base(&self, a: &TileAccess) -> u64 {
+        let base = a.batch_head as u64 * self.stride;
+        match a.tensor {
+            TensorKind::Q => base,
+            TensorKind::K => base + self.q_span,
+            TensorKind::V => base + self.q_span + self.kv_span,
+            TensorKind::O => base + self.q_span + 2 * self.kv_span,
+        }
+    }
+
+    /// Emit the sector runs of one tile access as `(first, count)` pairs.
+    /// Q/O and contiguous K/V are a single run; paged K/V rows map through
+    /// the block table and merge into maximal physically-contiguous runs
+    /// (an identity table therefore emits the same single run as
+    /// `Contiguous`, bit for bit).
+    #[inline]
+    fn for_each_run(
+        &self,
+        w: &AttentionWorkload,
+        a: &TileAccess,
+        sectors: u32,
+        mut f: impl FnMut(u64, u64),
+    ) {
+        let base = self.tensor_base(a);
+        let is_kv = matches!(a.tensor, TensorKind::K | TensorKind::V);
+        if !is_kv || !w.kv_layout.is_paged() {
+            f(base + a.tile_idx * self.tile * self.row_sectors, sectors as u64);
+            return;
+        }
+        let start_row = a.tile_idx * self.tile;
+        let rows = w.kv_tile_rows(a.tile_idx) as u64;
+        let mut remaining = sectors as u64;
+        let mut run_start = 0u64;
+        let mut run_len = 0u64;
+        for i in 0..rows {
+            let phys = w.kv_physical_row(start_row + i);
+            if run_len > 0 && phys == run_start + run_len {
+                run_len += 1;
+            } else {
+                if run_len > 0 {
+                    let count = (run_len * self.row_sectors).min(remaining);
+                    remaining -= count;
+                    f(base + run_start * self.row_sectors, count);
+                }
+                run_start = phys;
+                run_len = 1;
+            }
+        }
+        if run_len > 0 {
+            let count = (run_len * self.row_sectors).min(remaining);
+            f(base + run_start * self.row_sectors, count);
+        }
+    }
 }
 
 /// Cache-hierarchy backend of the wavefront engine: turns one tile access
@@ -214,13 +366,17 @@ trait CacheBackend {
     fn fastpath_stats(&self) -> FrontStackStats;
 }
 
-/// Production backend: dense direct-indexed weighted-block LRUs.
-/// Key = ((bh·4)+tensor)·num_tiles + tile — compact by construction.
+/// Production backend: dense direct-indexed weighted-block LRUs over the
+/// [`TileKeys`] layout. Paged KV keeps its *logical* tile keys here: an
+/// injective physical remap cannot change fully-associative LRU miss
+/// counts, so tile-granularity models are layout-invariant by construction
+/// (see EXPERIMENTS.md §Decode); only the exact per-sector backends model
+/// the permuted addresses.
 struct WeightedBackend {
     l2: DenseWeightedLru,
     l1: Vec<DenseWeightedLru>,
-    sectors: Vec<u32>,
-    n_tiles: u64,
+    sectors: SectorLut,
+    keys: TileKeys,
     model_l1: bool,
 }
 
@@ -229,16 +385,16 @@ impl WeightedBackend {
         let w = &cfg.workload;
         let dev = &cfg.device;
         let n_sms = dev.num_sms as usize;
-        let n_tiles = w.num_tiles();
-        let domain = (w.batch_heads() as u64 * 4 * n_tiles) as usize;
+        let keys = TileKeys::new(w);
+        let domain = keys.domain(w);
         let probe = if fast_path { DEFAULT_FRONT_PROBE } else { 0 };
         WeightedBackend {
             l2: DenseWeightedLru::with_probe(dev.l2_sectors(), domain, probe),
             l1: (0..n_sms)
                 .map(|_| DenseWeightedLru::with_probe(dev.l1_sectors(), domain, probe))
                 .collect(),
-            sectors: sector_lut(w, dev.sector_bytes),
-            n_tiles,
+            sectors: SectorLut::new(w, dev.sector_bytes),
+            keys,
             model_l1: cfg.model_l1,
         }
     }
@@ -247,9 +403,8 @@ impl WeightedBackend {
 impl CacheBackend for WeightedBackend {
     #[inline]
     fn access(&mut self, sm: usize, a: &TileAccess, counters: &mut CacheCounters) {
-        let sectors = self.sectors[a.tile_idx as usize];
-        let key = (a.batch_head as u64 * 4 + a.tensor as u8 as u64) * self.n_tiles
-            + a.tile_idx;
+        let sectors = self.sectors.get(a);
+        let key = self.keys.key(a);
         let l1_hit = if self.model_l1 && !a.write {
             self.l1[sm].access(key, sectors)
         } else {
@@ -267,15 +422,14 @@ impl CacheBackend for WeightedBackend {
 }
 
 /// Validation backend: exact per-sector LRUs (small workloads only; cost is
-/// O(total sectors)). Address layout: each (tensor, bh) gets a disjoint
-/// sector region.
+/// O(total sectors)) over the [`SectorAddrs`] layout — the backend that
+/// physically models paged-KV address permutation.
 struct ExactBackend {
     l2: ExactLru,
     l1: Vec<ExactLru>,
-    sectors: Vec<u32>,
-    tensor_sectors: u64,
-    row_sectors: u64,
-    tile: u64,
+    w: AttentionWorkload,
+    sectors: SectorLut,
+    addrs: SectorAddrs,
     model_l1: bool,
 }
 
@@ -284,18 +438,15 @@ impl ExactBackend {
         let w = &cfg.workload;
         let dev = &cfg.device;
         let n_sms = dev.num_sms as usize;
-        let tensor_sectors =
-            (w.tensor_bytes() + dev.sector_bytes as u64 - 1) / dev.sector_bytes as u64;
         let probe = if fast_path { DEFAULT_FRONT_PROBE } else { 0 };
         ExactBackend {
             l2: ExactLru::with_probe(dev.l2_sectors(), probe),
             l1: (0..n_sms)
                 .map(|_| ExactLru::with_probe(dev.l1_sectors(), probe))
                 .collect(),
-            sectors: sector_lut(w, dev.sector_bytes),
-            tensor_sectors,
-            row_sectors: w.rows_sectors(1, dev.sector_bytes) as u64,
-            tile: w.tile as u64,
+            w: w.clone(),
+            sectors: SectorLut::new(w, dev.sector_bytes),
+            addrs: SectorAddrs::new(w, dev.sector_bytes),
             model_l1: cfg.model_l1,
         }
     }
@@ -304,19 +455,19 @@ impl ExactBackend {
 impl CacheBackend for ExactBackend {
     #[inline]
     fn access(&mut self, sm: usize, a: &TileAccess, counters: &mut CacheCounters) {
-        let sectors = self.sectors[a.tile_idx as usize];
-        let base =
-            (a.batch_head as u64 * 4 + a.tensor as u8 as u64) * self.tensor_sectors;
-        let first = base + a.tile_idx * self.tile * self.row_sectors;
-        for s in first..first + sectors as u64 {
-            let l1_hit = if self.model_l1 && !a.write {
-                self.l1[sm].access_sector(s)
-            } else {
-                false
-            };
-            let l2_hit = if l1_hit { false } else { self.l2.access_sector(s) };
-            counters.record(a.tensor, 1, l1_hit, l2_hit, a.write);
-        }
+        let sectors = self.sectors.get(a);
+        let (l1, l2, model_l1) = (&mut self.l1, &mut self.l2, self.model_l1);
+        self.addrs.for_each_run(&self.w, a, sectors, |first, count| {
+            for s in first..first + count {
+                let l1_hit = if model_l1 && !a.write {
+                    l1[sm].access_sector(s)
+                } else {
+                    false
+                };
+                let l2_hit = if l1_hit { false } else { l2.access_sector(s) };
+                counters.record(a.tensor, 1, l1_hit, l2_hit, a.write);
+            }
+        });
     }
 
     fn fastpath_stats(&self) -> FrontStackStats {
@@ -332,8 +483,8 @@ impl CacheBackend for ExactBackend {
 struct MattsonWeightedBackend {
     l1: Vec<DenseWeightedLru>,
     profiler: CapacityProfiler,
-    sectors: Vec<u32>,
-    n_tiles: u64,
+    sectors: SectorLut,
+    keys: TileKeys,
     model_l1: bool,
 }
 
@@ -342,8 +493,8 @@ impl MattsonWeightedBackend {
         let w = &cfg.workload;
         let dev = &cfg.device;
         let n_sms = dev.num_sms as usize;
-        let n_tiles = w.num_tiles();
-        let domain = (w.batch_heads() as u64 * 4 * n_tiles) as usize;
+        let keys = TileKeys::new(w);
+        let domain = keys.domain(w);
         let probe = if fast_path { DEFAULT_FRONT_PROBE } else { 0 };
         // Front sized to the cross-SM reuse window: each round touches at
         // most 2 tiles per SM, so 4×N_SM covers a full round of drift.
@@ -353,8 +504,8 @@ impl MattsonWeightedBackend {
                 .map(|_| DenseWeightedLru::with_probe(dev.l1_sectors(), domain, probe))
                 .collect(),
             profiler: CapacityProfiler::new_dense(domain).with_front(front),
-            sectors: sector_lut(w, dev.sector_bytes),
-            n_tiles,
+            sectors: SectorLut::new(w, dev.sector_bytes),
+            keys,
             model_l1: cfg.model_l1,
         }
     }
@@ -363,9 +514,8 @@ impl MattsonWeightedBackend {
 impl CacheBackend for MattsonWeightedBackend {
     #[inline]
     fn access(&mut self, sm: usize, a: &TileAccess, counters: &mut CacheCounters) {
-        let sectors = self.sectors[a.tile_idx as usize];
-        let key = (a.batch_head as u64 * 4 + a.tensor as u8 as u64) * self.n_tiles
-            + a.tile_idx;
+        let sectors = self.sectors.get(a);
+        let key = self.keys.key(a);
         let l1_hit = if self.model_l1 && !a.write {
             self.l1[sm].access(key, sectors)
         } else {
@@ -391,10 +541,9 @@ impl CacheBackend for MattsonWeightedBackend {
 struct MattsonExactBackend {
     l1: Vec<ExactLru>,
     profiler: CapacityProfiler,
-    sectors: Vec<u32>,
-    tensor_sectors: u64,
-    row_sectors: u64,
-    tile: u64,
+    w: AttentionWorkload,
+    sectors: SectorLut,
+    addrs: SectorAddrs,
     model_l1: bool,
 }
 
@@ -403,26 +552,27 @@ impl MattsonExactBackend {
         let w = &cfg.workload;
         let dev = &cfg.device;
         let n_sms = dev.num_sms as usize;
-        let tensor_sectors =
-            (w.tensor_bytes() + dev.sector_bytes as u64 - 1) / dev.sector_bytes as u64;
         let probe = if fast_path { DEFAULT_FRONT_PROBE } else { 0 };
-        let sectors = sector_lut(w, dev.sector_bytes);
+        let sectors = SectorLut::new(w, dev.sector_bytes);
+        let addrs = SectorAddrs::new(w, dev.sector_bytes);
         // Per-sector front: the tile-granularity window (4×N_SM tiles)
         // times the largest tile's sector count.
-        let max_tile_sectors = sectors.iter().copied().max().unwrap_or(1) as usize;
+        let max_tile_sectors = sectors
+            .q
+            .iter()
+            .chain(sectors.kv.iter())
+            .copied()
+            .max()
+            .unwrap_or(1) as usize;
         let front = if fast_path { (4 * n_sms * max_tile_sectors).max(8) } else { 0 };
         MattsonExactBackend {
             l1: (0..n_sms)
                 .map(|_| ExactLru::with_probe(dev.l1_sectors(), probe))
                 .collect(),
-            profiler: CapacityProfiler::new_dense(
-                (4 * tensor_sectors * w.batch_heads() as u64) as usize,
-            )
-            .with_front(front),
+            profiler: CapacityProfiler::new_dense(addrs.domain(w)).with_front(front),
+            w: w.clone(),
             sectors,
-            tensor_sectors,
-            row_sectors: w.rows_sectors(1, dev.sector_bytes) as u64,
-            tile: w.tile as u64,
+            addrs,
             model_l1: cfg.model_l1,
         }
     }
@@ -431,21 +581,21 @@ impl MattsonExactBackend {
 impl CacheBackend for MattsonExactBackend {
     #[inline]
     fn access(&mut self, sm: usize, a: &TileAccess, counters: &mut CacheCounters) {
-        let sectors = self.sectors[a.tile_idx as usize];
-        let base =
-            (a.batch_head as u64 * 4 + a.tensor as u8 as u64) * self.tensor_sectors;
-        let first = base + a.tile_idx * self.tile * self.row_sectors;
-        for s in first..first + sectors as u64 {
-            let l1_hit = if self.model_l1 && !a.write {
-                self.l1[sm].access_sector(s)
-            } else {
-                false
-            };
-            if !l1_hit {
-                self.profiler.access(s, 1, a.tensor as usize);
+        let sectors = self.sectors.get(a);
+        let (l1, profiler, model_l1) = (&mut self.l1, &mut self.profiler, self.model_l1);
+        self.addrs.for_each_run(&self.w, a, sectors, |first, count| {
+            for s in first..first + count {
+                let l1_hit = if model_l1 && !a.write {
+                    l1[sm].access_sector(s)
+                } else {
+                    false
+                };
+                if !l1_hit {
+                    profiler.access(s, 1, a.tensor as usize);
+                }
+                counters.record(a.tensor, 1, l1_hit, false, a.write);
             }
-            counters.record(a.tensor, 1, l1_hit, false, a.write);
-        }
+        });
     }
 
     fn fastpath_stats(&self) -> FrontStackStats {
@@ -723,15 +873,7 @@ mod tests {
     use crate::sim::kernel_model::TensorKind;
 
     fn small_cfg(seq: u64, causal: bool, order: TraversalRef) -> SimConfig {
-        let w = AttentionWorkload {
-            batch: 1,
-            heads: 1,
-            seq,
-            head_dim: 64,
-            elem_bytes: 2,
-            tile: 16,
-            causal,
-        };
+        let w = AttentionWorkload::square(1, 1, seq, 64, 16).with_causal(causal);
         SimConfig {
             device: DeviceSpec::tiny(),
             workload: w,
@@ -756,7 +898,7 @@ mod tests {
         // Non-causal: Q+O touched once, K+V once per Q tile.
         let cfg = small_cfg(256, false, TraversalRef::cyclic());
         let w = &cfg.workload;
-        let n = w.num_tiles();
+        let n = w.num_q_tiles();
         let tile_sec = w.tile_sectors(32) as u64;
         let expect = 2 * tile_sec * n + 2 * tile_sec * n * n;
         let r = Simulator::new(cfg.clone()).run();
@@ -770,7 +912,7 @@ mod tests {
     fn causal_access_counts_are_triangular() {
         let cfg = small_cfg(256, true, TraversalRef::cyclic());
         let w = &cfg.workload;
-        let n = w.num_tiles();
+        let n = w.num_q_tiles();
         let tile_sec = w.tile_sectors(32) as u64;
         let expect_kv = 2 * tile_sec * n * (n + 1) / 2;
         let r = Simulator::new(cfg).run();
@@ -963,6 +1105,121 @@ mod tests {
         assert_eq!(sf.front_hits + sf.deep_hits, ss.deep_hits, "same warm accesses");
         let pf = fast.profile();
         assert!(pf.front_stats().engagement() > 0.5);
+    }
+
+    #[test]
+    fn identity_paged_is_bit_identical_to_contiguous() {
+        // An identity block table emits the same sector runs (exact) and
+        // the same logical keys (weighted) as contiguous KV.
+        for causal in [false, true] {
+            let base = small_cfg(512, causal, TraversalRef::sawtooth());
+            let mut paged = base.clone();
+            paged.workload = paged.workload.with_paged_identity(16);
+            assert_eq!(
+                Simulator::new(base.clone()).run(),
+                Simulator::new(paged.clone()).run()
+            );
+            assert_eq!(
+                Simulator::new(base.clone()).run_exact(),
+                Simulator::new(paged.clone()).run_exact()
+            );
+        }
+    }
+
+    #[test]
+    fn shuffled_paging_preserves_traffic_and_lru_misses() {
+        // A shuffled block table permutes sector addresses injectively:
+        // traffic volume is untouched, and under the fully-associative LRU
+        // the miss count is invariant too — the §Decode invariance claim,
+        // checked end to end.
+        let base = small_cfg(512, false, TraversalRef::sawtooth());
+        let mut paged = base.clone();
+        paged.workload = paged.workload.with_paged_shuffled(16, 11);
+        let a = Simulator::new(base).run_exact();
+        let b = Simulator::new(paged).run_exact();
+        assert_eq!(a.counters.l2_sectors_from_tex, b.counters.l2_sectors_from_tex);
+        assert_eq!(a.counters.l2_miss_sectors, b.counters.l2_miss_sectors);
+    }
+
+    #[test]
+    fn gqa_shrinks_kv_footprint_and_misses() {
+        // 4 query heads sharing 1 KV head: KV cold footprint quarters, and
+        // on a KV-bound shape total misses drop well below the ungrouped
+        // run (grouped heads re-hit the shared K/V tiles in L2).
+        let mk = |kv_heads: u32| {
+            let mut cfg = small_cfg(512, false, TraversalRef::cyclic());
+            cfg.workload = AttentionWorkload::square(1, 4, 512, 64, 16)
+                .with_kv_heads(kv_heads);
+            cfg
+        };
+        let mha = mk(4);
+        let mqa = mk(1);
+        // 512 rows × 4 sectors/row = 2048 sectors per tensor per entity.
+        assert_eq!(
+            cold_sectors(&mha.workload, &mha.device),
+            2 * 2048 * 4 + 2 * 2048 * 4
+        );
+        assert_eq!(
+            cold_sectors(&mqa.workload, &mqa.device),
+            2 * 2048 * 4 + 2 * 2048
+        );
+        let r_mha = Simulator::new(mha).run();
+        let r_mqa = Simulator::new(mqa).run();
+        assert_eq!(
+            r_mha.counters.l2_sectors_from_tex,
+            r_mqa.counters.l2_sectors_from_tex,
+            "head grouping must not change issued traffic"
+        );
+        assert!(
+            r_mqa.counters.l2_miss_sectors < r_mha.counters.l2_miss_sectors,
+            "mqa {} vs mha {}",
+            r_mqa.counters.l2_miss_sectors,
+            r_mha.counters.l2_miss_sectors
+        );
+    }
+
+    #[test]
+    fn decode_shape_streams_whole_kv_once() {
+        // q_len = 1 over 512 KV rows: one work item, K+V streamed once,
+        // single Q and O tile each.
+        let mut cfg = small_cfg(512, true, TraversalRef::cyclic());
+        cfg.workload = cfg.workload.with_q_len(1);
+        let w = cfg.workload.clone();
+        let r = Simulator::new(cfg.clone()).run();
+        assert_eq!(r.items, 1);
+        assert_eq!(r.kv_steps, w.num_kv_tiles());
+        let kv = r.counters.tensor(TensorKind::K).sectors
+            + r.counters.tensor(TensorKind::V).sectors;
+        assert_eq!(kv, 2 * 512 * 4); // every KV row touched once, 4 sectors/row
+        let q = r.counters.tensor(TensorKind::Q).sectors;
+        assert_eq!(q, 4); // one 1-row Q tile
+        // Exact backend agrees on traffic.
+        let re = Simulator::new(cfg).run_exact();
+        assert_eq!(
+            r.counters.l2_sectors_from_tex,
+            re.counters.l2_sectors_from_tex
+        );
+    }
+
+    #[test]
+    fn profile_matches_run_on_decode_gqa_shapes() {
+        // The Mattson pass must stay bit-identical to run() on the new
+        // shapes, not just on square prefill.
+        for (q_len, kv_heads) in [(1u64, 4u32), (4, 2), (512, 1)] {
+            let mut cfg = small_cfg(512, true, TraversalRef::sawtooth());
+            cfg.workload = AttentionWorkload::square(1, 4, 512, 64, 16)
+                .with_causal(true)
+                .with_q_len(q_len)
+                .with_kv_heads(kv_heads);
+            let profile = Simulator::new(cfg.clone()).profile();
+            for l2_kib in [4u64, 64, 256] {
+                let mut at = cfg.clone();
+                at.device.l2_bytes = l2_kib * 1024;
+                let direct = Simulator::new(at.clone()).run();
+                let derived = profile.result_at(at.device.l2_sectors());
+                assert_eq!(derived, direct, "q={q_len} kvh={kv_heads} l2={l2_kib}KiB");
+            }
+        }
     }
 
     #[test]

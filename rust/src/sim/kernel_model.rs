@@ -32,6 +32,14 @@ impl TensorKind {
 }
 
 /// One tile-granularity memory access emitted by a CTA.
+///
+/// `batch_head` is the owning *entity* of the touched tensor: the flattened
+/// (batch·query-head) index for Q/O, the flattened (batch·kv-head) index
+/// for K/V. Under GQA (`kv_heads < heads`) grouped query heads emit K/V
+/// accesses carrying the *same* entity, so every cache backend — weighted,
+/// exact, and both Mattson profilers — sees the head-sharing aliasing
+/// without layout-specific logic. With `kv_heads == heads` the mapping is
+/// the identity and the stream is bit-identical to the pre-GQA model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TileAccess {
     pub tensor: TensorKind,
@@ -135,18 +143,18 @@ impl std::str::FromStr for KernelVariant {
 /// it.
 #[inline]
 pub fn decode_item(w: &AttentionWorkload, k: u64) -> (u32, u64) {
-    let n = w.num_tiles();
+    let n = w.num_q_tiles();
+    if n == 0 {
+        return (0, 0);
+    }
     ((k / n) as u32, k % n)
 }
 
 /// Number of KV tiles work item `q_tile` visits (causal masking skips
-/// fully-masked tiles — the paper's S(S-1)/2T access-count change).
+/// fully-masked tiles — the paper's S(S-1)/2T access-count change, now
+/// bottom-right aligned for rectangular `q_len != kv_len` shapes).
 pub fn kv_tiles_for(w: &AttentionWorkload, q_tile: u64) -> u64 {
-    if w.causal {
-        q_tile + 1
-    } else {
-        w.num_tiles()
-    }
+    w.kv_tiles_for(q_tile)
 }
 
 /// The j-th KV tile visited by `item` (0-based position in visit order).
@@ -225,15 +233,16 @@ pub fn step_accesses(
         }
         Step::KvStep(pos) => {
             let j = kv_tile_at(w, item, pos);
+            let kv_entity = w.kv_entity(item.batch_head);
             out[0] = Some(TileAccess {
                 tensor: TensorKind::K,
-                batch_head: item.batch_head,
+                batch_head: kv_entity,
                 tile_idx: j,
                 write: false,
             });
             out[1] = Some(TileAccess {
                 tensor: TensorKind::V,
-                batch_head: item.batch_head,
+                batch_head: kv_entity,
                 tile_idx: j,
                 write: false,
             });
@@ -260,13 +269,15 @@ pub fn single_cta_items<'a>(
     w: &'a AttentionWorkload,
     traversal: &'a TraversalRef,
 ) -> impl Iterator<Item = WorkItem> + 'a {
-    (0..w.num_tiles()).map(move |k| {
+    (0..w.num_q_tiles()).map(move |k| {
         let (batch_head, q_tile) = decode_item(w, k);
         let direction = traversal.direction(&TraversalCtx {
             variant: KernelVariant::CudaWmma,
             local_iter: k,
             q_tile,
             batch_head,
+            num_q_tiles: w.num_q_tiles(),
+            num_kv_tiles: w.num_kv_tiles(),
         });
         WorkItem { batch_head, q_tile, direction }
     })
@@ -412,6 +423,32 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("unknown kernel variant 'triton'"), "{msg}");
         assert!(msg.contains("cuda-wmma") && msg.contains("cutile-tile"), "{msg}");
+    }
+
+    #[test]
+    fn decode_shape_visits_whole_kv() {
+        // q_len = 1 over kv_len = 320 (4 KV tiles): the single work item
+        // streams all 4 tiles, causal or not (bottom-right alignment).
+        let w = wl().with_q_len(1).with_causal(true);
+        assert_eq!(w.num_work_items(), 1);
+        assert_eq!(visit_order(&w, &item(0, Direction::Forward)), vec![0, 1, 2, 3]);
+        assert_eq!(visit_order(&w, &item(0, Direction::Backward)), vec![3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn gqa_kv_accesses_carry_shared_entity() {
+        let w = AttentionWorkload::square(1, 4, 320, 64, 80).with_kv_heads(2);
+        // Query heads 2 and 3 share KV entity 1.
+        let it = WorkItem { batch_head: 3, q_tile: 0, direction: Direction::Forward };
+        let mut out = [None; 2];
+        step_accesses(&w, &it, Step::KvStep(0), &mut out);
+        assert_eq!(out[0].unwrap().batch_head, 1);
+        assert_eq!(out[1].unwrap().batch_head, 1);
+        // Q and O keep the query-head entity.
+        step_accesses(&w, &it, Step::LoadQ, &mut out);
+        assert_eq!(out[0].unwrap().batch_head, 3);
+        step_accesses(&w, &it, Step::StoreO, &mut out);
+        assert_eq!(out[0].unwrap().batch_head, 3);
     }
 
     #[test]

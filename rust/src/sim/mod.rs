@@ -41,4 +41,4 @@ pub use scheduler::SchedulerKind;
 pub use sweep::{ExecutorTiming, SweepExecutor, SweepGrid, SweepSpec};
 pub use throughput::{PerfProfile, ThroughputReport};
 pub use traversal::{Traversal, TraversalCtx, TraversalRef, TraversalRegistry};
-pub use workload::AttentionWorkload;
+pub use workload::{AttentionWorkload, KvLayout};

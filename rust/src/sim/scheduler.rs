@@ -82,6 +82,10 @@ pub struct Scheduler {
     traversal: TraversalRef,
     variant: KernelVariant,
     total_items: u64,
+    /// Tile extents of the launch, forwarded to traversals via
+    /// [`TraversalCtx`] (rectangular decode shapes split the two).
+    num_q_tiles: u64,
+    num_kv_tiles: u64,
     /// Persistent: stride G. Non-persistent: unused.
     grid: u64,
     ctas: Vec<CtaState>,
@@ -106,7 +110,17 @@ impl Scheduler {
         let ctas = (0..num_sms as u64)
             .map(|c| CtaState { next_k: c, remaining: 0, local_iter: 0 })
             .collect();
-        Scheduler { kind, traversal, variant, total_items, grid, ctas, next_block: 0 }
+        Scheduler {
+            kind,
+            traversal,
+            variant,
+            total_items,
+            num_q_tiles: w.num_q_tiles(),
+            num_kv_tiles: w.num_kv_tiles(),
+            grid,
+            ctas,
+            next_block: 0,
+        }
     }
 
     /// Total number of work items in the launch.
@@ -123,6 +137,8 @@ impl Scheduler {
             local_iter,
             q_tile,
             batch_head,
+            num_q_tiles: self.num_q_tiles,
+            num_kv_tiles: self.num_kv_tiles,
         })
     }
 

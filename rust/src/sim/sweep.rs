@@ -72,7 +72,7 @@ pub struct ConfigKey {
 impl ConfigKey {
     pub fn of(cfg: &SimConfig) -> Self {
         ConfigKey {
-            workload: cfg.workload,
+            workload: cfg.workload.clone(),
             scheduler: cfg.scheduler,
             order: cfg.order.clone(),
             variant: cfg.variant,
@@ -106,27 +106,30 @@ impl ProfileKey {
 /// Static bound of the weighted fast path: the capacity curve reproduces
 /// the weighted LRU exactly for capacities that can hold the largest block
 /// (below that the LRU's streaming bypass kicks in, which a stack
-/// algorithm cannot model). Tile 0 always has the most rows, so its sector
-/// count is the largest weight in the stream.
+/// algorithm cannot model). Tile 0 always has the most rows on each axis,
+/// so the larger of the first Q and first KV tile's sector counts is the
+/// largest weight in the stream.
 fn mattson_supported(cfg: &SimConfig) -> bool {
     let w = &cfg.workload;
-    if w.seq == 0 {
+    if w.q_len == 0 || w.kv_len == 0 {
         return false;
     }
-    let max_weight = w.rows_sectors(w.tile_rows(0), cfg.device.sector_bytes) as u64;
-    cfg.device.l2_sectors() >= max_weight
+    let q_weight = w.rows_sectors(w.q_tile_rows(0), cfg.device.sector_bytes) as u64;
+    let kv_weight = w.rows_sectors(w.kv_tile_rows(0), cfg.device.sector_bytes) as u64;
+    cfg.device.l2_sectors() >= q_weight.max(kv_weight)
 }
 
 /// Trace-length proxy for LPT job ordering: the number of K/V tile touches a
-/// configuration generates, `batch_heads × 2 × (kv_tiles + n)` with
-/// `kv_tiles = n(n+1)/2` under causal masking and `n²` without (n = query
-/// tiles; the `+ n` counts each work item's own Q tile). Only the *ordering*
-/// of jobs depends on this, never their results, so the formula being a
-/// proxy (it ignores jitter and scheduler) is harmless.
+/// configuration generates, `batch_heads × 2 × (Σ_i kv_tiles_for(i) + n)`
+/// (n = query tiles; the `+ n` counts each work item's own Q tile). On
+/// square shapes the sum is the familiar `n(n+1)/2` under causal masking
+/// and `n²` without. Only the *ordering* of jobs depends on this, never
+/// their results, so the formula being a proxy (it ignores jitter and
+/// scheduler) is harmless.
 fn estimated_accesses(cfg: &SimConfig) -> u64 {
     let w = &cfg.workload;
-    let n = w.num_tiles();
-    let kv_tiles = if w.causal { n * (n + 1) / 2 } else { n * n };
+    let n = w.num_q_tiles();
+    let kv_tiles: u64 = (0..n).map(|i| w.kv_tiles_for(i)).sum();
     w.batch_heads() as u64 * 2 * (kv_tiles + n)
 }
 
@@ -210,7 +213,7 @@ impl SweepGrid {
             l2_bytes: vec![base.device.l2_bytes],
             sms: vec![base.device.num_sms],
             batches: vec![base.workload.batch],
-            seqs: vec![base.workload.seq],
+            seqs: vec![base.workload.q_len],
             jitters: vec![base.jitter],
             base,
         }
@@ -274,7 +277,10 @@ impl SweepGrid {
                                         cfg.device.l2_bytes = l2;
                                         cfg.device.num_sms = sms;
                                         cfg.workload.batch = batch;
-                                        cfg.workload.seq = seq;
+                                        // The seq axis keeps the square
+                                        // convention: both lengths move.
+                                        cfg.workload.q_len = seq;
+                                        cfg.workload.kv_len = seq;
                                         cfg.jitter = jitter;
                                         configs.push(cfg);
                                     }
@@ -826,10 +832,11 @@ mod tests {
         assert_eq!(spec.len(), 4);
         // order is outermore than seq.
         assert_eq!(spec.configs[0].order, TraversalRef::cyclic());
-        assert_eq!(spec.configs[0].workload.seq, 128);
-        assert_eq!(spec.configs[1].workload.seq, 256);
+        assert_eq!(spec.configs[0].workload.q_len, 128);
+        assert_eq!(spec.configs[0].workload.kv_len, 128);
+        assert_eq!(spec.configs[1].workload.q_len, 256);
         assert_eq!(spec.configs[2].order, TraversalRef::sawtooth());
-        assert_eq!(spec.configs[2].workload.seq, 128);
+        assert_eq!(spec.configs[2].workload.q_len, 128);
     }
 
     #[test]
@@ -1059,11 +1066,25 @@ mod tests {
             estimated_accesses(&causal) < estimated_accesses(&long),
             "the causal triangle must cost less than the full square"
         );
-        // The exact formula: batch_heads × 2 × (kv_tiles + n).
-        let n = long.workload.num_tiles();
+        // The exact pre-refactor formula on square shapes:
+        // batch_heads × 2 × (kv_tiles + n) with kv_tiles = n² (non-causal)
+        // or n(n+1)/2 (causal).
+        let n = long.workload.num_q_tiles();
         assert_eq!(
             estimated_accesses(&long),
             long.workload.batch_heads() as u64 * 2 * (n * n + n)
+        );
+        assert_eq!(
+            estimated_accesses(&causal),
+            causal.workload.batch_heads() as u64 * 2 * (n * (n + 1) / 2 + n)
+        );
+        // Decode shapes: one q tile streaming the whole KV.
+        let mut decode = long.clone();
+        decode.workload = decode.workload.with_q_len(1);
+        let kn = decode.workload.num_kv_tiles();
+        assert_eq!(
+            estimated_accesses(&decode),
+            decode.workload.batch_heads() as u64 * 2 * (kn + 1)
         );
     }
 

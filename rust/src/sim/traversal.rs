@@ -102,6 +102,12 @@ pub struct TraversalCtx {
     pub q_tile: u64,
     /// Flattened (batch · head) index of the item.
     pub batch_head: u32,
+    /// Q-tile extent of the workload (rectangular decode shapes make this
+    /// differ from `num_kv_tiles`; both are provided so traversals stay
+    /// well-defined on non-square wavefronts).
+    pub num_q_tiles: u64,
+    /// KV-tile extent of the workload.
+    pub num_kv_tiles: u64,
 }
 
 impl TraversalCtx {
@@ -506,7 +512,14 @@ mod tests {
     use super::*;
 
     fn ctx(variant: KernelVariant, local_iter: u64, q_tile: u64, bh: u32) -> TraversalCtx {
-        TraversalCtx { variant, local_iter, q_tile, batch_head: bh }
+        TraversalCtx {
+            variant,
+            local_iter,
+            q_tile,
+            batch_head: bh,
+            num_q_tiles: 64,
+            num_kv_tiles: 64,
+        }
     }
 
     /// The retired `enum Order` semantics, verbatim: the parity source is

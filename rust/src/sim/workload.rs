@@ -1,52 +1,127 @@
 //! Attention workload description: shapes, tiling, and derived sector math.
 //!
 //! Matches the paper's variable naming (§3.2): `S` sequence length, `C`
-//! sector size, `E` element size, `T` tile size, `D` head dimension.
+//! sector size, `E` element size, `T` tile size, `D` head dimension — and
+//! generalises the paper's square-prefill record to the decode-shaped
+//! workloads production traffic is dominated by:
+//!
+//! * **Independent `q_len` / `kv_len`** — decode is `q_len = 1..4` over a
+//!   very long KV cache. `q_len == kv_len` reproduces the paper's study
+//!   exactly; the causal mask is bottom-right aligned on rectangles (the
+//!   FlashAttention convention: query row `i` attends to KV positions
+//!   `<= i + kv_len - q_len`), which reduces to the lower triangle when
+//!   square.
+//! * **[`KvLayout`]** — `Contiguous`, or `Paged` with a per-request block
+//!   table mapping logical KV blocks to physical blocks (vLLM-style paged
+//!   attention). The table permutes the *sector addresses* the exact trace
+//!   generator emits; tile-granular (weighted) cache models keep logical
+//!   keys, because an injective address remap is miss-count-invariant under
+//!   a fully-associative LRU (see EXPERIMENTS.md §Decode).
+//! * **GQA via `kv_heads <= heads`** — query heads share a KV head in
+//!   groups of `heads / kv_heads`, aliasing the same K/V sectors. Unlike
+//!   paging, this is a genuine reuse-distance change the Mattson profiler
+//!   sees: G query heads touching one KV head halve (quarter, …) the KV
+//!   footprint while multiplying its touch frequency.
+//!
+//! Edge behaviour is explicit rather than debug-asserted: `q_len == 0` (or
+//! `kv_len == 0`) yields zero tiles and zero work items, and
+//! `q_tile_rows`/`kv_tile_rows` saturate to 0 rows for out-of-range tile
+//! indices. Shape *errors* (zero tile, non-dividing `kv_heads`, malformed
+//! block tables) are rejected at parse boundaries via
+//! [`AttentionWorkload::validate`].
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Physical layout of the K/V cache.
+///
+/// `Ord` is derived (Contiguous < Paged, then field order) so workloads can
+/// serve as deterministic sort keys — e.g. the batcher's plan ordering.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum KvLayout {
+    /// K and V stored densely: logical row r is physical row r.
+    Contiguous,
+    /// Paged KV cache: rows live in fixed-size blocks of `block_tokens`
+    /// rows, placed by a per-request block table. Logical block `b` (rows
+    /// `b·block_tokens ..`) lives at physical block `block_table[b]`.
+    ///
+    /// The table must be injective (two logical blocks never share a
+    /// physical block); it need not be surjective onto a compact pool —
+    /// entries may point anywhere in a larger physical cache, as real
+    /// allocators do.
+    Paged {
+        /// Rows per block (tokens — the vLLM `block_size`).
+        block_tokens: u32,
+        /// Logical block index → physical block index.
+        block_table: Arc<[u32]>,
+    },
+}
+
+impl KvLayout {
+    /// True for the [`KvLayout::Paged`] variant.
+    pub fn is_paged(&self) -> bool {
+        matches!(self, KvLayout::Paged { .. })
+    }
+}
 
 /// One fused-multi-head-attention launch (forward pass).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct AttentionWorkload {
     pub batch: u32,
+    /// Query heads H.
     pub heads: u32,
-    /// Sequence length S (queries == keys/values, per the paper's study).
-    pub seq: u64,
+    /// Query length (rows of Q and O). The paper's S when square.
+    pub q_len: u64,
+    /// Key/value length (rows of K and V) — the KV-cache extent in decode.
+    pub kv_len: u64,
     /// Head dimension D (paper fixes D = 64).
     pub head_dim: u32,
     /// Element size E in bytes (fp16: 2).
     pub elem_bytes: u32,
     /// Square tile size T (B_r == B_c == T).
     pub tile: u32,
-    /// Causal (lower-triangular) masking.
+    /// Causal masking: bottom-right aligned on rectangles (lower-triangular
+    /// when `q_len == kv_len`).
     pub causal: bool,
+    /// KV heads (GQA/MQA). Must divide `heads`; `kv_heads == heads` is the
+    /// ungrouped (MHA) case, `kv_heads == 1` is MQA.
+    pub kv_heads: u32,
+    /// Physical K/V placement.
+    pub kv_layout: KvLayout,
 }
 
 impl AttentionWorkload {
+    /// A square-prefill shape with the given parameters — the base every
+    /// named study builds on (`kv_len == q_len == seq`, ungrouped heads,
+    /// contiguous KV).
+    pub fn square(batch: u32, heads: u32, seq: u64, head_dim: u32, tile: u32) -> Self {
+        AttentionWorkload {
+            batch,
+            heads,
+            q_len: seq,
+            kv_len: seq,
+            head_dim,
+            elem_bytes: 2,
+            tile,
+            causal: false,
+            kv_heads: heads,
+            kv_layout: KvLayout::Contiguous,
+        }
+    }
+
     /// The paper's CUDA study configuration (§3, Figs 1–6): B=1, H=1, D=64,
     /// T=80, fp16.
     pub fn cuda_study(seq: u64) -> Self {
-        AttentionWorkload {
-            batch: 1,
-            heads: 1,
-            seq,
-            head_dim: 64,
-            elem_bytes: 2,
-            tile: 80,
-            causal: false,
-        }
+        Self::square(1, 1, seq, 64, 80)
     }
 
     /// The paper's CuTile study configuration (§4.3): T=64, B=8, S=128K,
     /// D=64.
     pub fn cutile_study(batch: u32, causal: bool) -> Self {
-        AttentionWorkload {
-            batch,
-            heads: 1,
-            seq: 128 * 1024,
-            head_dim: 64,
-            elem_bytes: 2,
-            tile: 64,
-            causal,
-        }
+        Self::square(batch, 1, 128 * 1024, 64, 64).with_causal(causal)
     }
 
     pub fn with_causal(self, causal: bool) -> Self {
@@ -57,31 +132,175 @@ impl AttentionWorkload {
         AttentionWorkload { tile, ..self }
     }
 
+    /// Set both lengths (the square-prefill convention every `seq` knob —
+    /// CLI, config, line protocol — keeps).
     pub fn with_seq(self, seq: u64) -> Self {
-        AttentionWorkload { seq, ..self }
+        AttentionWorkload { q_len: seq, kv_len: seq, ..self }
+    }
+
+    pub fn with_q_len(self, q_len: u64) -> Self {
+        AttentionWorkload { q_len, ..self }
+    }
+
+    pub fn with_kv_len(self, kv_len: u64) -> Self {
+        AttentionWorkload { kv_len, ..self }
     }
 
     pub fn with_batch(self, batch: u32) -> Self {
         AttentionWorkload { batch, ..self }
     }
 
-    /// batch * heads — the paper's grid-Y extent.
+    pub fn with_kv_heads(self, kv_heads: u32) -> Self {
+        AttentionWorkload { kv_heads, ..self }
+    }
+
+    pub fn with_kv_layout(self, kv_layout: KvLayout) -> Self {
+        AttentionWorkload { kv_layout, ..self }
+    }
+
+    /// Page the KV cache with the identity block table: logical block `b`
+    /// at physical block `b`. Bit-identical to `Contiguous` at every layer
+    /// (pinned by tests/integration_workload.rs).
+    pub fn with_paged_identity(self, block_tokens: u32) -> Self {
+        let blocks = blocks_for(self.kv_len, block_tokens);
+        let table: Vec<u32> = (0..blocks as u32).collect();
+        self.with_kv_layout(KvLayout::Paged {
+            block_tokens,
+            block_table: table.into(),
+        })
+    }
+
+    /// Page the KV cache with a seeded Fisher–Yates permutation of the
+    /// block table — the fragmented-allocator case.
+    pub fn with_paged_shuffled(self, block_tokens: u32, seed: u64) -> Self {
+        let blocks = blocks_for(self.kv_len, block_tokens);
+        let mut table: Vec<u32> = (0..blocks as u32).collect();
+        Rng::new(seed).shuffle(&mut table);
+        self.with_kv_layout(KvLayout::Paged {
+            block_tokens,
+            block_table: table.into(),
+        })
+    }
+
+    /// Shape-sanity check for parse boundaries (CLI, config schema, line
+    /// protocol). The simulator itself tolerates degenerate shapes (zero
+    /// lengths mean zero work), but a shape that *cannot mean anything* —
+    /// zero tile, non-dividing `kv_heads`, a block table of the wrong
+    /// length or with duplicate entries — is rejected here with a message
+    /// naming the field.
+    pub fn validate(&self) -> Result<()> {
+        if self.tile == 0 {
+            bail!("tile must be >= 1");
+        }
+        if self.head_dim == 0 || self.elem_bytes == 0 {
+            bail!("head_dim and elem_bytes must be >= 1");
+        }
+        if self.kv_heads == 0 {
+            bail!("kv_heads must be >= 1");
+        }
+        if self.heads % self.kv_heads != 0 {
+            bail!(
+                "kv_heads ({}) must divide heads ({}) — GQA groups are uniform",
+                self.kv_heads,
+                self.heads
+            );
+        }
+        if let KvLayout::Paged { block_tokens, block_table } = &self.kv_layout {
+            if *block_tokens == 0 {
+                bail!("kv_block_tokens must be >= 1");
+            }
+            let need = blocks_for(self.kv_len, *block_tokens);
+            if block_table.len() as u64 != need {
+                bail!(
+                    "block table has {} entries, kv_len {} at {} tokens/block needs {}",
+                    block_table.len(),
+                    self.kv_len,
+                    block_tokens,
+                    need
+                );
+            }
+            let mut seen: Vec<u32> = block_table.to_vec();
+            seen.sort_unstable();
+            if seen.windows(2).any(|w| w[0] == w[1]) {
+                bail!("block table entries must be distinct (injective mapping)");
+            }
+        }
+        Ok(())
+    }
+
+    /// batch * heads — the paper's grid-Y extent (query-head entities).
     pub fn batch_heads(&self) -> u32 {
         self.batch * self.heads
     }
 
-    /// Number of full Q/KV tiles per sequence: floor(S / T), plus one
-    /// trailing partial tile if S % T != 0 (the paper's "trailing
-    /// incomplete tile").
-    pub fn num_tiles(&self) -> u64 {
-        (self.seq + self.tile as u64 - 1) / self.tile as u64
+    /// batch * kv_heads — distinct K/V entities under GQA.
+    pub fn batch_kv_heads(&self) -> u32 {
+        self.batch * self.kv_heads
     }
 
-    /// Rows in tile `idx` (the last tile may be partial).
-    pub fn tile_rows(&self, idx: u64) -> u32 {
-        let start = idx * self.tile as u64;
-        debug_assert!(start < self.seq);
-        ((self.seq - start).min(self.tile as u64)) as u32
+    /// Query heads per KV head (1 = ungrouped). Degenerate `kv_heads`
+    /// values saturate to 1 rather than dividing by zero; `validate`
+    /// rejects them at parse boundaries.
+    pub fn group_size(&self) -> u32 {
+        if self.kv_heads == 0 || self.kv_heads > self.heads {
+            return 1;
+        }
+        self.heads / self.kv_heads
+    }
+
+    /// The K/V entity a flattened (batch·head) work index aliases: query
+    /// heads of one batch share KV heads in groups of [`Self::group_size`].
+    /// Identity (`kv_entity == bh`) when `kv_heads == heads`.
+    pub fn kv_entity(&self, batch_head: u32) -> u32 {
+        let b = batch_head / self.heads;
+        let h = batch_head % self.heads;
+        b * self.kv_heads + h / self.group_size()
+    }
+
+    /// Number of Q tiles: ceil(q_len / T); 0 when `q_len == 0`.
+    pub fn num_q_tiles(&self) -> u64 {
+        tiles_for(self.q_len, self.tile)
+    }
+
+    /// Number of KV tiles: ceil(kv_len / T); 0 when `kv_len == 0`.
+    pub fn num_kv_tiles(&self) -> u64 {
+        tiles_for(self.kv_len, self.tile)
+    }
+
+    /// Rows in Q tile `idx` (the last tile may be partial). Out-of-range
+    /// indices saturate to 0 rows — explicitly, not by debug-assert + wrap.
+    pub fn q_tile_rows(&self, idx: u64) -> u32 {
+        rows_in_tile(self.q_len, self.tile, idx)
+    }
+
+    /// Rows in KV tile `idx`; saturates like [`Self::q_tile_rows`].
+    pub fn kv_tile_rows(&self, idx: u64) -> u32 {
+        rows_in_tile(self.kv_len, self.tile, idx)
+    }
+
+    /// KV tiles visible to Q tile `q_tile` under the mask: all of them
+    /// without causal masking; with it, the bottom-right-aligned prefix
+    /// `ceil((last_q_row + kv_len - q_len + 1) / T)` — which reduces to the
+    /// paper's `q_tile + 1` on square shapes. Clamped to `[0, num_kv_tiles]`
+    /// (a decode row deep inside a shorter KV sees nothing extra; a Q tile
+    /// past the end sees nothing).
+    pub fn kv_tiles_for(&self, q_tile: u64) -> u64 {
+        let n_kv = self.num_kv_tiles();
+        if !self.causal {
+            return n_kv;
+        }
+        if q_tile >= self.num_q_tiles() {
+            return 0;
+        }
+        let last_row = ((q_tile + 1) * self.tile as u64).min(self.q_len) - 1;
+        // Visible KV positions: <= last_row + (kv_len - q_len); count may be
+        // negative when kv_len < q_len and the tile sits above the band.
+        let visible = last_row as i128 + self.kv_len as i128 - self.q_len as i128 + 1;
+        if visible <= 0 {
+            return 0;
+        }
+        let tiles = (visible as u64 + self.tile as u64 - 1) / self.tile as u64;
+        tiles.min(n_kv)
     }
 
     /// Sectors occupied by `rows` rows of one tensor: rows * D * E / C,
@@ -96,41 +315,94 @@ impl AttentionWorkload {
         self.rows_sectors(self.tile, sector_bytes)
     }
 
-    /// Total bytes of one tensor (Q, K, V or O) for one (batch, head).
-    pub fn tensor_bytes(&self) -> u64 {
-        self.seq * self.head_dim as u64 * self.elem_bytes as u64
+    /// Total bytes of Q (or O) for one (batch, head).
+    pub fn q_tensor_bytes(&self) -> u64 {
+        self.q_len * self.head_dim as u64 * self.elem_bytes as u64
     }
 
-    /// KV working-set bytes per (batch, head): the quantity the paper
+    /// Total bytes of K (or V) for one (batch, kv-head), logical extent.
+    pub fn kv_tensor_bytes(&self) -> u64 {
+        self.kv_len * self.head_dim as u64 * self.elem_bytes as u64
+    }
+
+    /// KV working-set bytes per (batch, kv-head): the quantity the paper
     /// compares against the 24 MiB L2 (Fig 5: divergence at KV ≈ 20 MiB).
     pub fn kv_bytes(&self) -> u64 {
-        2 * self.tensor_bytes()
+        2 * self.kv_tensor_bytes()
     }
 
-    /// Total FLOPs of the forward pass: 4·S²·D per (batch, head) for the
-    /// two matmuls (2 FLOPs per MAC); the causal mask halves the area
-    /// (S(S+T)/2 tiles kept, ≈ S²/2 for S ≫ T).
+    /// Physical row a logical KV row maps to under the layout. Identity for
+    /// `Contiguous`; block-table indirection for `Paged`. Rows past the
+    /// table (possible only on un-validated shapes) fall back to identity.
+    pub fn kv_physical_row(&self, row: u64) -> u64 {
+        match &self.kv_layout {
+            KvLayout::Contiguous => row,
+            KvLayout::Paged { block_tokens, block_table } => {
+                let bt = *block_tokens as u64;
+                let block = (row / bt) as usize;
+                match block_table.get(block) {
+                    Some(&phys) => phys as u64 * bt + row % bt,
+                    None => row,
+                }
+            }
+        }
+    }
+
+    /// Extent of the physical KV row space: `kv_len` when contiguous, the
+    /// end of the farthest physical block when paged (tables may point into
+    /// a pool larger than the request's own blocks).
+    pub fn kv_physical_rows(&self) -> u64 {
+        match &self.kv_layout {
+            KvLayout::Contiguous => self.kv_len,
+            KvLayout::Paged { block_tokens, block_table } => {
+                let max_block = block_table.iter().copied().max().unwrap_or(0) as u64;
+                (max_block + 1) * *block_tokens as u64
+            }
+        }
+    }
+
+    /// Total FLOPs of the forward pass: 4·q·kv·D per (batch, head) for the
+    /// two matmuls (2 FLOPs per MAC); causal masking keeps only the visible
+    /// tile area (Σ_i kv_tiles_for(i) tiles ≈ half the square).
     pub fn flops(&self) -> f64 {
-        let s = self.seq as f64;
         let d = self.head_dim as f64;
-        let full = 4.0 * s * s * d;
         let per_head = if self.causal {
-            // Exact tile-level area: sum over q tiles of kv tiles kept.
             let t = self.tile as f64;
-            let n = self.num_tiles() as f64;
-            // Each q tile i attends to (i+1) kv tiles (diagonal included).
-            let tiles_kept = n * (n + 1.0) / 2.0;
-            4.0 * tiles_kept * t * t * d
+            let tiles_kept: u64 =
+                (0..self.num_q_tiles()).map(|i| self.kv_tiles_for(i)).sum();
+            4.0 * tiles_kept as f64 * t * t * d
         } else {
-            full
+            4.0 * self.q_len as f64 * self.kv_len as f64 * d
         };
         per_head * self.batch_heads() as f64
     }
 
     /// Total number of Q-tile work items across batch*heads.
     pub fn num_work_items(&self) -> u64 {
-        self.num_tiles() * self.batch_heads() as u64
+        self.num_q_tiles() * self.batch_heads() as u64
     }
+}
+
+/// ceil(len / tile); 0 when `len == 0`.
+fn tiles_for(len: u64, tile: u32) -> u64 {
+    if tile == 0 {
+        return 0;
+    }
+    (len + tile as u64 - 1) / tile as u64
+}
+
+/// Blocks needed to hold `kv_len` rows at `block_tokens` rows per block.
+fn blocks_for(kv_len: u64, block_tokens: u32) -> u64 {
+    tiles_for(kv_len, block_tokens)
+}
+
+/// Rows of tile `idx` over a `len`-row extent; 0 for out-of-range tiles.
+fn rows_in_tile(len: u64, tile: u32, idx: u64) -> u32 {
+    let start = idx * tile as u64;
+    if start >= len {
+        return 0;
+    }
+    (len - start).min(tile as u64) as u32
 }
 
 #[cfg(test)]
@@ -143,6 +415,11 @@ mod tests {
         assert_eq!((w.batch, w.heads, w.head_dim, w.tile), (1, 1, 64, 80));
         assert!(!w.causal);
         assert_eq!(w.elem_bytes, 2);
+        // Square-prefill defaults: equal lengths, ungrouped, contiguous.
+        assert_eq!(w.q_len, w.kv_len);
+        assert_eq!(w.kv_heads, w.heads);
+        assert_eq!(w.kv_layout, KvLayout::Contiguous);
+        assert!(w.validate().is_ok());
     }
 
     #[test]
@@ -157,9 +434,29 @@ mod tests {
     #[test]
     fn trailing_tile_handled() {
         let w = AttentionWorkload::cuda_study(100).with_tile(80);
-        assert_eq!(w.num_tiles(), 2);
-        assert_eq!(w.tile_rows(0), 80);
-        assert_eq!(w.tile_rows(1), 20);
+        assert_eq!(w.num_q_tiles(), 2);
+        assert_eq!(w.q_tile_rows(0), 80);
+        assert_eq!(w.q_tile_rows(1), 20);
+        assert_eq!(w.kv_tile_rows(1), 20);
+    }
+
+    #[test]
+    fn zero_and_out_of_range_saturate() {
+        // seq = 0: no tiles, no work items, no asserts.
+        let w = AttentionWorkload::cuda_study(0);
+        assert_eq!(w.num_q_tiles(), 0);
+        assert_eq!(w.num_kv_tiles(), 0);
+        assert_eq!(w.num_work_items(), 0);
+        assert_eq!(w.q_tile_rows(0), 0);
+        assert_eq!(w.kv_tiles_for(0), 0);
+        // Out-of-range tile indices yield 0 rows, documented saturation.
+        let w = AttentionWorkload::cuda_study(100).with_tile(80);
+        assert_eq!(w.q_tile_rows(2), 0);
+        assert_eq!(w.q_tile_rows(u64::MAX / 128), 0);
+        // Tile larger than the sequence: one partial tile.
+        let w = AttentionWorkload::cuda_study(10).with_tile(80);
+        assert_eq!(w.num_q_tiles(), 1);
+        assert_eq!(w.q_tile_rows(0), 10);
     }
 
     #[test]
@@ -174,12 +471,15 @@ mod tests {
         let w = AttentionWorkload::cuda_study(1024);
         let s = 1024f64;
         assert_eq!(w.flops(), 4.0 * s * s * 64.0);
+        // Rectangular: 4·q·kv·D.
+        let d = w.with_q_len(1);
+        assert_eq!(d.flops(), 4.0 * 1.0 * s * 64.0);
     }
 
     #[test]
     fn causal_flops_about_half_plus_diagonal() {
         let w = AttentionWorkload::cuda_study(64 * 80).with_causal(true);
-        let full = w.with_causal(false).flops();
+        let full = w.clone().with_causal(false).flops();
         let ratio = w.flops() / full;
         // (n+1)/(2n) with n = 64 tiles.
         assert!((ratio - 65.0 / 128.0).abs() < 1e-12, "ratio={ratio}");
@@ -188,7 +488,141 @@ mod tests {
     #[test]
     fn work_items_scale_with_batch_heads() {
         let w = AttentionWorkload::cutile_study(8, false);
-        assert_eq!(w.num_tiles(), 2048);
+        assert_eq!(w.num_q_tiles(), 2048);
         assert_eq!(w.num_work_items(), 2048 * 8);
+    }
+
+    #[test]
+    fn causal_extent_reproduces_legacy_square_rule() {
+        // The retired square-only rule, verbatim: q tile i sees i+1 KV
+        // tiles (diagonal included), including a trailing partial tile.
+        for seq in [64u64, 100, 640, 1000] {
+            for tile in [16u32, 64, 80] {
+                let w = AttentionWorkload::cuda_study(seq).with_tile(tile).with_causal(true);
+                for i in 0..w.num_q_tiles() {
+                    assert_eq!(
+                        w.kv_tiles_for(i),
+                        i + 1,
+                        "seq={seq} tile={tile} q_tile={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn causal_extent_bottom_right_aligned_on_rectangles() {
+        // Decode: q_len=1, kv_len=256, T=64 → the single q row is row
+        // kv_len-1 of the virtual square; it sees the whole KV.
+        let w = AttentionWorkload::cuda_study(256)
+            .with_tile(64)
+            .with_q_len(1)
+            .with_causal(true);
+        assert_eq!(w.num_q_tiles(), 1);
+        assert_eq!(w.kv_tiles_for(0), 4);
+        // q_len=4 over kv_len=250: last row attends 250 positions.
+        let w = AttentionWorkload::cuda_study(250)
+            .with_tile(64)
+            .with_q_len(4)
+            .with_causal(true);
+        assert_eq!(w.kv_tiles_for(0), 4);
+        // kv shorter than q: early q rows see nothing.
+        let w = AttentionWorkload::cuda_study(64)
+            .with_tile(16)
+            .with_q_len(64)
+            .with_kv_len(8)
+            .with_causal(true);
+        // q tile 0 last row = 15; visible = 15 + 8 - 64 + 1 = -40 → 0.
+        assert_eq!(w.kv_tiles_for(0), 0);
+        // q tile 3 last row = 63; visible = 8 → 1 tile (clamped to n_kv).
+        assert_eq!(w.kv_tiles_for(3), 1);
+    }
+
+    #[test]
+    fn gqa_entity_aliasing() {
+        let w = AttentionWorkload::square(2, 8, 128, 64, 64).with_kv_heads(2);
+        assert_eq!(w.group_size(), 4);
+        assert_eq!(w.batch_kv_heads(), 4);
+        // Batch 0: heads 0..4 → entity 0, heads 4..8 → entity 1.
+        assert_eq!(w.kv_entity(0), 0);
+        assert_eq!(w.kv_entity(3), 0);
+        assert_eq!(w.kv_entity(4), 1);
+        // Batch 1 offsets by kv_heads.
+        assert_eq!(w.kv_entity(8), 2);
+        assert_eq!(w.kv_entity(15), 3);
+        // Ungrouped: identity.
+        let u = AttentionWorkload::square(2, 8, 128, 64, 64);
+        for bh in 0..16 {
+            assert_eq!(u.kv_entity(bh), bh);
+        }
+    }
+
+    #[test]
+    fn paged_layout_maps_rows_through_block_table() {
+        let w = AttentionWorkload::cuda_study(256).with_tile(64).with_paged_identity(64);
+        assert!(w.validate().is_ok());
+        for r in [0u64, 63, 64, 255] {
+            assert_eq!(w.kv_physical_row(r), r, "identity table is a no-op");
+        }
+        assert_eq!(w.kv_physical_rows(), 256);
+        // Explicit reversed table: block b → block 3-b.
+        let table: Vec<u32> = vec![3, 2, 1, 0];
+        let w = AttentionWorkload::cuda_study(256)
+            .with_tile(64)
+            .with_kv_layout(KvLayout::Paged { block_tokens: 64, block_table: table.into() });
+        assert!(w.validate().is_ok());
+        assert_eq!(w.kv_physical_row(0), 3 * 64);
+        assert_eq!(w.kv_physical_row(65), 2 * 64 + 1);
+        assert_eq!(w.kv_physical_rows(), 256);
+        // Shuffled helper: a permutation (validate checks injectivity).
+        let w = AttentionWorkload::cuda_study(1024).with_paged_shuffled(16, 7);
+        assert!(w.validate().is_ok());
+        let mut rows: Vec<u64> = (0..1024).map(|r| w.kv_physical_row(r)).collect();
+        rows.sort_unstable();
+        assert_eq!(rows, (0..1024).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_shapes() {
+        let base = AttentionWorkload::square(1, 8, 128, 64, 64);
+        assert!(base.clone().with_kv_heads(0).validate().is_err());
+        assert!(base.clone().with_kv_heads(3).validate().is_err(), "3 does not divide 8");
+        assert!(base.clone().with_tile(0).validate().is_err());
+        // Wrong-length table.
+        let short: Vec<u32> = vec![0];
+        let w = base.clone().with_kv_layout(KvLayout::Paged {
+            block_tokens: 64,
+            block_table: short.into(),
+        });
+        assert!(w.validate().is_err());
+        // Duplicate entries.
+        let dup: Vec<u32> = vec![0, 0];
+        let w = base.with_kv_layout(KvLayout::Paged {
+            block_tokens: 64,
+            block_table: dup.into(),
+        });
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn layout_and_heads_participate_in_identity() {
+        // ConfigKey memoization hashes the workload: decode axes must split
+        // identities, and equal tables must compare equal.
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        let h = |w: &AttentionWorkload| {
+            let mut s = DefaultHasher::new();
+            w.hash(&mut s);
+            s.finish()
+        };
+        let base = AttentionWorkload::cuda_study(256).with_tile(64);
+        assert_ne!(base, base.clone().with_q_len(1));
+        assert_ne!(base, base.clone().with_kv_heads(1).with_kv_len(256));
+        assert_ne!(base, base.clone().with_paged_identity(64));
+        let a = base.clone().with_paged_shuffled(64, 9);
+        let b = base.clone().with_paged_shuffled(64, 9);
+        assert_eq!(a, b, "same seed, same table, same identity");
+        assert_eq!(h(&a), h(&b));
+        assert_ne!(a, base.clone().with_paged_shuffled(64, 10));
     }
 }

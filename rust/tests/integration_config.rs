@@ -9,7 +9,8 @@ use sawtooth_attn::sim::traversal::TraversalRef;
 fn cuda_study_config_parses() {
     let c = Config::load("configs/cuda_study.toml").unwrap();
     let s = SimRunConfig::from_config(&c).unwrap();
-    assert_eq!(s.workload.seq, 131072);
+    assert_eq!(s.workload.q_len, 131072);
+    assert_eq!(s.workload.kv_len, 131072);
     assert_eq!(s.workload.tile, 80);
     assert_eq!(s.variant, KernelVariant::CudaWmma);
     assert_eq!(s.device().num_sms, 48);

@@ -14,15 +14,7 @@ use sawtooth_attn::sim::{SimConfig, Simulator};
 use sawtooth_attn::util::proptest::check;
 
 fn tiny_cfg(seq: u64, order: TraversalRef, causal: bool, sched: SchedulerKind) -> SimConfig {
-    let w = AttentionWorkload {
-        batch: 1,
-        heads: 1,
-        seq,
-        head_dim: 64,
-        elem_bytes: 2,
-        tile: 16,
-        causal,
-    };
+    let w = AttentionWorkload::square(1, 1, seq, 64, 16).with_causal(causal);
     SimConfig {
         device: DeviceSpec::tiny(),
         workload: w,

@@ -105,15 +105,7 @@ fn tmp_artifacts_dir(tag: &str) -> std::path::PathBuf {
 }
 
 fn serving_workload(seq: u64, causal: bool) -> AttentionWorkload {
-    AttentionWorkload {
-        batch: 1,
-        heads: 4,
-        seq,
-        head_dim: 64,
-        elem_bytes: 2,
-        tile: 64,
-        causal,
-    }
+    AttentionWorkload::square(1, 4, seq, 64, 64).with_causal(causal)
 }
 
 /// Regression (ISSUE 5 satellite): a manifest that ships sawtooth-only

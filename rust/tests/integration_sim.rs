@@ -30,7 +30,7 @@ fn table1_32k_tex_sectors_match_paper() {
 #[test]
 fn scheduling_scheme_does_not_change_traffic() {
     let w = AttentionWorkload::cuda_study(32 * 1024);
-    let p = Simulator::new(SimConfig::cuda_study(w)).run();
+    let p = Simulator::new(SimConfig::cuda_study(w.clone())).run();
     let np = Simulator::new(
         SimConfig::cuda_study(w).with_scheduler(SchedulerKind::NonPersistent),
     )
@@ -45,7 +45,7 @@ fn scheduling_scheme_does_not_change_traffic() {
 fn l2_model_matches_simulation() {
     for causal in [false, true] {
         let w = AttentionWorkload::cuda_study(16 * 1024).with_causal(causal);
-        let r = Simulator::new(SimConfig::cuda_study(w)).run();
+        let r = Simulator::new(SimConfig::cuda_study(w.clone())).run();
         let m = l2model::sectors_model(&w, 32);
         let sim = r.counters.l2_sectors_from_tex as f64;
         assert!(
@@ -60,7 +60,7 @@ fn l2_model_matches_simulation() {
 fn below_capacity_only_cold_misses() {
     let dev = DeviceSpec::gb10();
     let w = AttentionWorkload::cuda_study(64 * 1024);
-    let r = Simulator::new(SimConfig::cuda_study(w)).run();
+    let r = Simulator::new(SimConfig::cuda_study(w.clone())).run();
     assert_eq!(r.counters.l2_miss_sectors, cold_sectors(&w, &dev));
 }
 
@@ -71,11 +71,11 @@ fn below_capacity_only_cold_misses() {
 fn capacity_threshold_between_88k_and_96k() {
     let dev = DeviceSpec::gb10();
     let w88 = AttentionWorkload::cuda_study(88 * 1024);
-    let r88 = Simulator::new(SimConfig::cuda_study(w88)).run();
+    let r88 = Simulator::new(SimConfig::cuda_study(w88.clone())).run();
     assert_eq!(r88.non_compulsory_misses(&w88, &dev), 0);
 
     let w96 = AttentionWorkload::cuda_study(96 * 1024);
-    let r96 = Simulator::new(SimConfig::cuda_study(w96)).run();
+    let r96 = Simulator::new(SimConfig::cuda_study(w96.clone())).run();
     assert!(
         r96.non_compulsory_misses(&w96, &dev) > 10 * cold_sectors(&w96, &dev),
         "expected sharp divergence at 96K"
@@ -102,8 +102,10 @@ fn hit_rate_tracks_wavefront_law() {
 fn cuda_study_throughput_anchors() {
     let dev = DeviceSpec::gb10();
     let w = AttentionWorkload::cuda_study(128 * 1024);
-    let cyc = Simulator::new(SimConfig::cuda_study(w)).run();
-    let saw = Simulator::new(SimConfig::cuda_study(w).with_order(TraversalRef::sawtooth())).run();
+    let cyc = Simulator::new(SimConfig::cuda_study(w.clone())).run();
+    let saw =
+        Simulator::new(SimConfig::cuda_study(w.clone()).with_order(TraversalRef::sawtooth()))
+            .run();
     assert!(
         saw.counters.l2_miss_sectors * 2 < cyc.counters.l2_miss_sectors,
         "sawtooth must cut misses by >50%: {} vs {}",
@@ -125,13 +127,13 @@ fn cutile_study_miss_anchors() {
     let dev = DeviceSpec::gb10();
     let profile = PerfProfile::cutile();
     let cyc = Simulator::new(SimConfig::cutile_study(
-        w,
+        w.clone(),
         KernelVariant::CuTileStatic,
         TraversalRef::cyclic(),
     ))
     .run();
     let saw = Simulator::new(SimConfig::cutile_study(
-        w,
+        w.clone(),
         KernelVariant::CuTileStatic,
         TraversalRef::sawtooth(),
     ))
@@ -154,7 +156,7 @@ fn cutile_study_miss_anchors() {
 fn cutile_causal_sawtooth_still_wins() {
     let w = AttentionWorkload::cutile_study(8, true);
     let cyc = Simulator::new(SimConfig::cutile_study(
-        w,
+        w.clone(),
         KernelVariant::CuTileStatic,
         TraversalRef::cyclic(),
     ))
@@ -180,21 +182,19 @@ fn cutile_causal_sawtooth_still_wins() {
 fn sawtooth_preserves_issued_traffic_volume() {
     for causal in [false, true] {
         for variant in [KernelVariant::CuTileStatic, KernelVariant::CuTileTile] {
-            let w = AttentionWorkload {
-                batch: 2,
-                heads: 1,
-                seq: 4096,
-                head_dim: 64,
-                elem_bytes: 2,
-                tile: 64,
-                causal,
-            };
-            let cyc =
-                Simulator::new(SimConfig::cutile_study(w, variant, TraversalRef::cyclic()))
-                    .run();
-            let saw =
-                Simulator::new(SimConfig::cutile_study(w, variant, TraversalRef::sawtooth()))
-                    .run();
+            let w = AttentionWorkload::square(2, 1, 4096, 64, 64).with_causal(causal);
+            let cyc = Simulator::new(SimConfig::cutile_study(
+                w.clone(),
+                variant,
+                TraversalRef::cyclic(),
+            ))
+            .run();
+            let saw = Simulator::new(SimConfig::cutile_study(
+                w.clone(),
+                variant,
+                TraversalRef::sawtooth(),
+            ))
+            .run();
             assert_eq!(
                 cyc.counters.l1_sectors, saw.counters.l1_sectors,
                 "variant={variant:?} causal={causal}"
@@ -248,15 +248,7 @@ fn tile_sweep_changes_absolute_traffic_not_reduction_sign() {
 /// workload (cross-validation of the production cache model).
 #[test]
 fn exact_vs_weighted_cross_validation() {
-    let w = AttentionWorkload {
-        batch: 1,
-        heads: 2,
-        seq: 2048,
-        head_dim: 64,
-        elem_bytes: 2,
-        tile: 64,
-        causal: false,
-    };
+    let w = AttentionWorkload::square(1, 2, 2048, 64, 64);
     let mut cfg = SimConfig::cuda_study(w);
     cfg.device = DeviceSpec::tiny();
     cfg.device.num_sms = 4;
@@ -271,7 +263,7 @@ fn exact_vs_weighted_cross_validation() {
 #[test]
 fn batch_heads_scale_linearly() {
     let w1 = AttentionWorkload::cuda_study(4096);
-    let w4 = w1.with_batch(4);
+    let w4 = w1.clone().with_batch(4);
     let r1 = Simulator::new(SimConfig::cuda_study(w1)).run();
     let r4 = Simulator::new(SimConfig::cuda_study(w4)).run();
     assert_eq!(4 * r1.counters.l2_sectors_from_tex, r4.counters.l2_sectors_from_tex);

@@ -16,15 +16,7 @@ use sawtooth_attn::sim::{SimConfig, Simulator};
 use sawtooth_attn::util::proptest::check;
 
 fn tiny_cfg(seq: u64, tile: u32) -> SimConfig {
-    let w = AttentionWorkload {
-        batch: 1,
-        heads: 1,
-        seq,
-        head_dim: 64,
-        elem_bytes: 2,
-        tile,
-        causal: false,
-    };
+    let w = AttentionWorkload::square(1, 1, seq, 64, tile);
     SimConfig {
         device: DeviceSpec::tiny(),
         workload: w,

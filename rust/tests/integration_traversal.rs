@@ -60,7 +60,7 @@ fn prop_every_traversal_covers_each_work_item_exactly_once() {
             .with_batch(batch);
         let mut expected: Vec<(u32, u64)> = Vec::new();
         for bh in 0..w.batch_heads() {
-            for q in 0..w.num_tiles() {
+            for q in 0..w.num_q_tiles() {
                 expected.push((bh, q));
             }
         }

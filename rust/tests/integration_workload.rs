@@ -1,0 +1,174 @@
+//! Integration tests of the decode-aware workload axes, end to end through
+//! the simulator: (a) an identity block table is bit-identical to
+//! `Contiguous` at every layer (weighted run, exact run, Mattson profile),
+//! (b) *any* injective block table is miss-count-invariant under the exact
+//! fully-associative LRU — the bijective-renaming argument EXPERIMENTS.md
+//! §Decode rests on, measured rather than assumed — and (c) explicitly
+//! ungrouped `kv_heads == heads` is byte-identical to the square-prefill
+//! default, i.e. the pre-refactor behaviour. All three hold across the full
+//! traversal registry, both schedulers, and both causal settings.
+
+use sawtooth_attn::gb10::DeviceSpec;
+use sawtooth_attn::sim::scheduler::SchedulerKind;
+use sawtooth_attn::sim::traversal::TraversalRegistry;
+use sawtooth_attn::sim::workload::AttentionWorkload;
+use sawtooth_attn::sim::{SimConfig, Simulator};
+use sawtooth_attn::util::proptest::check;
+
+fn tiny_cfg(w: AttentionWorkload) -> SimConfig {
+    let mut cfg = SimConfig::cuda_study(w);
+    cfg.device = DeviceSpec::tiny();
+    cfg
+}
+
+/// A small but non-degenerate decode-flavoured shape: rectangular lengths,
+/// GQA grouping, trailing partial tiles — everything the refactor added.
+fn gen_shape(g: &mut sawtooth_attn::util::proptest::Gen) -> AttentionWorkload {
+    let heads = *g.choose(&[1u32, 2, 4]);
+    let kv_heads = *g.choose(&[1u32, heads]);
+    let kv_len = *g.choose(&[256u64, 500, 512]);
+    let q_len = *g.choose(&[1u64, 4, kv_len]);
+    AttentionWorkload::square(1 + g.int(0, 1) as u32, heads, kv_len, 64, 16)
+        .with_q_len(q_len)
+        .with_kv_heads(kv_heads)
+        .with_causal(g.bool())
+}
+
+/// Satellite acceptance test: paging with the identity block table is a
+/// physical no-op, so every observable — weighted run, exact run, and the
+/// Mattson capacity profile evaluated at the device capacity — must be
+/// bit-identical to `Contiguous`, for every registered traversal under both
+/// schedulers.
+#[test]
+fn prop_identity_paged_is_bit_identical_to_contiguous() {
+    check("identity-paged-vs-contiguous", 6, |g| {
+        let base = gen_shape(g);
+        let block_tokens = *g.choose(&[16u32, 64, 128]);
+        let paged = base.clone().with_paged_identity(block_tokens);
+        paged.validate().map_err(|e| format!("invalid shape: {e:#}"))?;
+        for t in TraversalRegistry::global().instances() {
+            for kind in SchedulerKind::ALL {
+                let mk = |w: AttentionWorkload| {
+                    tiny_cfg(w).with_order(t.clone()).with_scheduler(kind)
+                };
+                let (ca, cb) = (mk(base.clone()), mk(paged.clone()));
+                if Simulator::new(ca.clone()).run() != Simulator::new(cb.clone()).run() {
+                    return Err(format!("weighted run diverged: {} {kind:?}", t.name()));
+                }
+                if Simulator::new(ca.clone()).run_exact()
+                    != Simulator::new(cb.clone()).run_exact()
+                {
+                    return Err(format!("exact run diverged: {} {kind:?}", t.name()));
+                }
+                let cap = ca.device.l2_sectors();
+                if Simulator::new(ca).profile().result_at(cap)
+                    != Simulator::new(cb).profile().result_at(cap)
+                {
+                    return Err(format!("profile diverged: {} {kind:?}", t.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The finding `report abl-decode` states: an *arbitrary* injective block
+/// table is a bijective renaming of sector addresses, and a fully
+/// associative LRU's hit/miss sequence is invariant under bijective
+/// renaming. The exact per-sector backend physically applies the table, so
+/// a shuffled layout must reproduce the contiguous counters exactly — not
+/// approximately.
+#[test]
+fn prop_shuffled_paging_is_miss_invariant_under_exact_lru() {
+    check("shuffled-paged-exact-invariance", 6, |g| {
+        let base = gen_shape(g);
+        let block_tokens = *g.choose(&[16u32, 64]);
+        let shuffled = base.clone().with_paged_shuffled(block_tokens, g.int(0, 1 << 30));
+        shuffled.validate().map_err(|e| format!("invalid shape: {e:#}"))?;
+        for t in TraversalRegistry::global().instances() {
+            for kind in SchedulerKind::ALL {
+                let a = Simulator::new(
+                    tiny_cfg(base.clone()).with_order(t.clone()).with_scheduler(kind),
+                )
+                .run_exact();
+                let b = Simulator::new(
+                    tiny_cfg(shuffled.clone()).with_order(t.clone()).with_scheduler(kind),
+                )
+                .run_exact();
+                if a != b {
+                    return Err(format!(
+                        "exact LRU not renaming-invariant under {} {kind:?}: \
+                         contiguous misses {} shuffled {}",
+                        t.name(),
+                        a.counters.l2_miss_sectors,
+                        b.counters.l2_miss_sectors
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Pre-refactor parity: `kv_heads == heads` (the only shape the retired
+/// record could express) set explicitly must be byte-identical to the
+/// square-prefill default — both as a value (the workload participates in
+/// memoization keys) and through every simulation backend.
+#[test]
+fn prop_explicit_ungrouped_kv_heads_is_the_identity() {
+    check("ungrouped-kv-heads-identity", 6, |g| {
+        let heads = 1 + g.int(0, 3) as u32;
+        let seq = *g.choose(&[256u64, 512]);
+        let base = AttentionWorkload::square(1 + g.int(0, 1) as u32, heads, seq, 64, 16)
+            .with_causal(g.bool());
+        let explicit = base.clone().with_kv_heads(heads);
+        if explicit != base {
+            return Err("explicit kv_heads == heads changed the value".into());
+        }
+        for t in TraversalRegistry::global().instances() {
+            for kind in SchedulerKind::ALL {
+                let a = tiny_cfg(base.clone()).with_order(t.clone()).with_scheduler(kind);
+                let b = tiny_cfg(explicit.clone())
+                    .with_order(t.clone())
+                    .with_scheduler(kind);
+                if Simulator::new(a.clone()).run() != Simulator::new(b.clone()).run()
+                    || Simulator::new(a).run_exact() != Simulator::new(b).run_exact()
+                {
+                    return Err(format!("ungrouped GQA diverged: {} {kind:?}", t.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// GQA is *not* a renaming: grouped heads alias the same KV sectors, so the
+/// cold (first-touch) footprint shrinks by exactly the group factor while
+/// issued traffic is unchanged. This pins that the aliasing actually
+/// reaches the cache models rather than being silently ignored.
+#[test]
+fn gqa_shrinks_cold_footprint_but_not_issued_traffic() {
+    // On GB10 the whole working set fits in L2, so exact-LRU misses are
+    // *exactly* the unique-sector footprint — a closed-form pin.
+    let mha = AttentionWorkload::square(1, 4, 512, 64, 16);
+    let mqa = mha.clone().with_kv_heads(1);
+    let a = Simulator::new(SimConfig::cuda_study(mha.clone())).run_exact();
+    let b = Simulator::new(SimConfig::cuda_study(mqa.clone())).run_exact();
+    assert_eq!(a.counters.l1_sectors, b.counters.l1_sectors, "issued traffic");
+    assert_eq!(a.items, b.items, "work items");
+    // Unique sectors: Q/O per query head, K/V per KV head. Per entity each
+    // tensor pair is 2·512·64·2/32 sectors; 4 heads → 1 shrinks the KV
+    // half of the footprint 4x.
+    let dev = DeviceSpec::gb10();
+    let pair = 2u64 * 512 * 64 * 2 / 32;
+    assert_eq!(sawtooth_attn::sim::engine::cold_sectors(&mha, &dev), 4 * pair + 4 * pair);
+    assert_eq!(sawtooth_attn::sim::engine::cold_sectors(&mqa, &dev), 4 * pair + pair);
+    assert_eq!(
+        a.counters.l2_miss_sectors,
+        sawtooth_attn::sim::engine::cold_sectors(&mha, &dev)
+    );
+    assert_eq!(
+        b.counters.l2_miss_sectors,
+        sawtooth_attn::sim::engine::cold_sectors(&mqa, &dev)
+    );
+}

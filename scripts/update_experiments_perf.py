@@ -1,9 +1,10 @@
 #!/usr/bin/env python3
 """Fill EXPERIMENTS.md's measured-numbers block from the bench JSON files.
 
-Reads rust/BENCH_sweep.json, rust/BENCH_reuse.json, rust/BENCH_policy.json
-and rust/BENCH_serve.json (produced by `cargo bench --bench bench_sweep` /
-`--bench bench_reuse` / `--bench bench_policy` / `--bench bench_coordinator`,
+Reads rust/BENCH_sweep.json, rust/BENCH_reuse.json, rust/BENCH_policy.json,
+rust/BENCH_serve.json and rust/BENCH_decode.json (produced by
+`cargo bench --bench bench_sweep` / `--bench bench_reuse` /
+`--bench bench_policy` / `--bench bench_coordinator` / `--bench bench_decode`,
 or downloaded from the CI artifacts) and rewrites the region between the
 `<!-- BENCH:begin -->` / `<!-- BENCH:end -->` markers in EXPERIMENTS.md.
 
@@ -29,14 +30,14 @@ def load(name):
         return json.load(f)
 
 
-def render(sweep, reuse, policy, serve):
+def render(sweep, reuse, policy, serve, decode):
     lines = []
-    if sweep is None and reuse is None and policy is None and serve is None:
+    if all(x is None for x in (sweep, reuse, policy, serve, decode)):
         lines.append(
             "*No measured numbers yet: run `make bench-perf` on a ≥8-core "
             "host (or download the CI `BENCH_sweep`/`BENCH_reuse`/"
-            "`BENCH_policy`/`BENCH_serve` artifacts into `rust/`) and "
-            "re-run `python3 scripts/update_experiments_perf.py`.*"
+            "`BENCH_policy`/`BENCH_serve`/`BENCH_decode` artifacts into "
+            "`rust/`) and re-run `python3 scripts/update_experiments_perf.py`.*"
         )
         return lines
     if sweep is not None:
@@ -136,6 +137,44 @@ def render(sweep, reuse, policy, serve):
                         m["mean_tokens_per_batch"],
                     )
                 )
+    if decode is not None:
+        if lines:
+            lines.append("")
+        lines.append(
+            "Decode shapes (`bench_decode`, %s; L2 miss sectors, weighted "
+            "model):" % decode["grid"]
+        )
+        lines.append("")
+        lines.append("| shape | cyclic | sawtooth | best (registry) |")
+        lines.append("|---|---|---|---|")
+        lines.append(
+            "| prefill q=32K | %d | %d | `%s` (%d) |"
+            % (
+                decode["prefill_cyclic_misses"],
+                decode["prefill_sawtooth_misses"],
+                decode["prefill_best_order"],
+                decode["prefill_best_misses"],
+            )
+        )
+        lines.append(
+            "| decode q=1 | %d | %d | `%s` (%d) |"
+            % (
+                decode["decode_cyclic_misses"],
+                decode["decode_sawtooth_misses"],
+                decode["decode_best_order"],
+                decode["decode_best_misses"],
+            )
+        )
+        lines.append("")
+        lines.append(
+            "MQA (kv_heads 8→1) decode misses: %d (%.2fx fewer than "
+            "ungrouped); exact-LRU paged ≡ contiguous: `%s`."
+            % (
+                decode["mqa_decode_misses"],
+                decode["gqa_miss_ratio"],
+                decode["exact_paged_identical"],
+            )
+        )
     return lines
 
 
@@ -151,6 +190,7 @@ def main():
             load("BENCH_reuse.json"),
             load("BENCH_policy.json"),
             load("BENCH_serve.json"),
+            load("BENCH_decode.json"),
         )
     )
     EXPERIMENTS.write_text(head + BEGIN + "\n" + block + "\n" + END + tail)
