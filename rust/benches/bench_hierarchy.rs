@@ -1,0 +1,91 @@
+//! Hierarchy-level benchmark: the per-SM sectored L1 + MSHR model on the
+//! §4.3 CuTile shape (S = 128K, T = 64, batch-1 slice so the on-run stays
+//! seconds, not minutes). Headline numbers: how many L2 sectors the L1
+//! filters out of the texture stream (on vs off), the MSHR merge count the
+//! synchronized wavefront produces (acceptance: > 0 on this shape), and the
+//! simulation wall-clock overhead of modeling the level at all. Emits
+//! `BENCH_hierarchy.json` (in the crate directory), folded into
+//! EXPERIMENTS.md §Hierarchy by `scripts/update_experiments_perf.py`.
+
+use std::time::Instant;
+
+use sawtooth_attn::sim::kernel_model::KernelVariant;
+use sawtooth_attn::sim::traversal::TraversalRef;
+use sawtooth_attn::sim::workload::AttentionWorkload;
+use sawtooth_attn::sim::{HierarchyConfig, SimConfig, Simulator};
+
+fn cfg(order: TraversalRef, hierarchy: bool) -> SimConfig {
+    let w = AttentionWorkload::cutile_study(1, false);
+    let mut c = SimConfig::cutile_study(w, KernelVariant::CuTileStatic, order);
+    if hierarchy {
+        // GB10 defaults: 64 KiB per-SM L1, 32 B sectors, 128 B lines,
+        // 32 MSHRs, 64 B/cycle fill port.
+        c.hierarchy = HierarchyConfig { enabled: true, ..HierarchyConfig::default() };
+    }
+    c
+}
+
+fn main() {
+    println!("== bench_hierarchy: per-SM L1/MSHR level on the §4.3 shape (B=1) ==");
+
+    let mut rows = Vec::new();
+    for order in [TraversalRef::cyclic(), TraversalRef::sawtooth()] {
+        let name = order.name().to_string();
+
+        let t0 = Instant::now();
+        let off = Simulator::new(cfg(order.clone(), false)).run();
+        let off_s = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let (on, h) = Simulator::new(cfg(order.clone(), true)).run_hierarchy();
+        let on_s = t0.elapsed().as_secs_f64();
+
+        assert!(h.mshr_merges > 0, "{name}: no MSHR merges on the §4.3 shape");
+        assert_eq!(h.l1_hits + h.l1_misses, h.accesses, "{name}: L1 accounting broke");
+
+        let filtered =
+            1.0 - on.counters.l2_sectors_from_tex as f64 / off.counters.l2_sectors_from_tex as f64;
+        let overhead = on_s / off_s;
+        println!(
+            "bench hierarchy/{name}: L2-from-tex off {} on {} (filtered {:.1}%)  \
+             sector-hit {:.1}%  merges {}  stalls {}  sim {:.3}s vs {:.3}s ({overhead:.2}x)",
+            off.counters.l2_sectors_from_tex,
+            on.counters.l2_sectors_from_tex,
+            filtered * 100.0,
+            h.l1_sector_hit_rate_pct(),
+            h.mshr_merges,
+            h.mshr_stalls,
+            on_s,
+            off_s,
+        );
+        rows.push((name, off, on, h, off_s, on_s, filtered, overhead));
+    }
+
+    let mut json = String::from(
+        "{\n  \"bench\": \"hierarchy\",\n  \"grid\": \"B=1 H=1 S=128K D=64 T=64 CuTileStatic on \
+         GB10 (64 KiB sectored L1, 32 MSHRs)\",\n",
+    );
+    for (i, (name, off, on, h, off_s, on_s, filtered, overhead)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "  \"{name}_off_l2_from_tex\": {},\n  \"{name}_on_l2_from_tex\": {},\n  \
+             \"{name}_l1_filter_rate\": {filtered:.4},\n  \
+             \"{name}_l1_sector_hit_pct\": {:.2},\n  \"{name}_mshr_merges\": {},\n  \
+             \"{name}_mshr_stalls\": {},\n  \"{name}_off_s\": {off_s:.6},\n  \
+             \"{name}_on_s\": {on_s:.6},\n  \"{name}_sim_overhead\": {overhead:.3}{}\n",
+            off.counters.l2_sectors_from_tex,
+            on.counters.l2_sectors_from_tex,
+            h.l1_sector_hit_rate_pct(),
+            h.mshr_merges,
+            h.mshr_stalls,
+            if i + 1 == rows.len() { "" } else { "," },
+        ));
+    }
+    json.push_str("}\n");
+
+    let path = "BENCH_hierarchy.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    print!("{json}");
+}

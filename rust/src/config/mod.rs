@@ -8,8 +8,8 @@
 pub mod schema;
 
 pub use schema::{
-    parse_candidate_list, PolicyConfig, PolicyOrder, QueueConfig, QueueMode, ServeConfig,
-    SimRunConfig, SweepServiceConfig,
+    hierarchy_from_config, parse_candidate_list, PolicyConfig, PolicyOrder, QueueConfig,
+    QueueMode, ServeConfig, SimRunConfig, SweepServiceConfig,
 };
 
 use std::collections::BTreeMap;

@@ -10,7 +10,7 @@ use crate::sim::kernel_model::KernelVariant;
 use crate::sim::scheduler::SchedulerKind;
 use crate::sim::traversal::TraversalRef;
 use crate::sim::workload::AttentionWorkload;
-use crate::sim::SimConfig;
+use crate::sim::{HierarchyConfig, SimConfig};
 
 use super::{Config, Value};
 
@@ -25,6 +25,9 @@ pub struct SimRunConfig {
     pub l2_mib: u64,
     pub jitter: f64,
     pub seed: u64,
+    /// Per-SM L1/MSHR/port level (`[hierarchy]` section; disabled by
+    /// default, which keeps the legacy L2-only model bit for bit).
+    pub hierarchy: HierarchyConfig,
 }
 
 impl Default for SimRunConfig {
@@ -38,8 +41,43 @@ impl Default for SimRunConfig {
             l2_mib: 24,
             jitter: 0.0,
             seed: 0,
+            hierarchy: HierarchyConfig::default(),
         }
     }
+}
+
+/// Read the `[hierarchy]` section into a [`HierarchyConfig`]. Every key is
+/// also accepted with a `sim.` prefix (`[sim.hierarchy]` sections and
+/// `--set sim.hierarchy.*` overrides), which takes precedence over the
+/// bare spelling. Geometry is validated against the device sector size.
+pub fn hierarchy_from_config(c: &Config, device_sector_bytes: u32) -> Result<HierarchyConfig> {
+    let d = HierarchyConfig::default();
+    let pick = |k: &str| -> String {
+        let sim = format!("sim.hierarchy.{k}");
+        if c.get(&sim).is_some() {
+            sim
+        } else {
+            format!("hierarchy.{k}")
+        }
+    };
+    let mut h = HierarchyConfig {
+        enabled: c.bool(&pick("enabled"), d.enabled),
+        l1_bytes: c.int(&pick("l1_bytes"), d.l1_bytes as i64) as u64,
+        sector_bytes: c.int(&pick("sector_bytes"), d.sector_bytes as i64) as u32,
+        line_sectors: c.int(&pick("line_sectors"), d.line_sectors as i64) as u32,
+        sectored: c.bool(&pick("sectored"), d.sectored),
+        mshr_entries: c.int(&pick("mshr_entries"), d.mshr_entries as i64) as u32,
+        fill_port_bytes_per_cycle: c
+            .float(&pick("fill_port_bytes_per_cycle"), d.fill_port_bytes_per_cycle),
+        bypass: d.bypass,
+    };
+    let bypass = c.str(&pick("bypass"), "");
+    if !bypass.is_empty() {
+        h.set_bypass_list(&bypass)
+            .map_err(|e| anyhow::anyhow!("hierarchy.bypass: {e}"))?;
+    }
+    h.validate(device_sector_bytes).map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(h)
 }
 
 impl SimRunConfig {
@@ -97,7 +135,7 @@ impl SimRunConfig {
         if num_sms == 0 {
             bail!("device.sms must be >= 1");
         }
-        Ok(SimRunConfig {
+        let cfg = SimRunConfig {
             workload,
             scheduler,
             order,
@@ -106,7 +144,10 @@ impl SimRunConfig {
             l2_mib: c.int("device.l2_mib", 24) as u64,
             jitter: c.float("sim.jitter", 0.0),
             seed: c.int("sim.seed", 0) as u64,
-        })
+            hierarchy: HierarchyConfig::default(),
+        };
+        let hierarchy = hierarchy_from_config(c, cfg.device().sector_bytes)?;
+        Ok(SimRunConfig { hierarchy, ..cfg })
     }
 
     pub fn device(&self) -> DeviceSpec {
@@ -129,6 +170,7 @@ impl SimRunConfig {
             jitter: self.jitter,
             seed: self.seed,
             model_l1: true,
+            hierarchy: self.hierarchy.clone(),
         }
     }
 }
@@ -559,6 +601,57 @@ mod tests {
         // Bad grouping is rejected through workload validation.
         let c = Config::parse("[sim]\nheads = 8\nkv_heads = 3").unwrap();
         assert!(SimRunConfig::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn hierarchy_section_parses_and_defaults_off() {
+        let c = Config::parse("").unwrap();
+        let s = SimRunConfig::from_config(&c).unwrap();
+        assert!(!s.hierarchy.enabled);
+        assert_eq!(s.to_sim_config().hierarchy, HierarchyConfig::default());
+
+        let c = Config::parse(
+            "[hierarchy]\nenabled = true\nl1_bytes = 32768\nsector_bytes = 64\n\
+             line_sectors = 2\nsectored = false\nmshr_entries = 8\n\
+             fill_port_bytes_per_cycle = 32.0\nbypass = \"q,o\"",
+        )
+        .unwrap();
+        let s = SimRunConfig::from_config(&c).unwrap();
+        let h = &s.hierarchy;
+        assert!(h.enabled);
+        assert!(!h.sectored);
+        assert_eq!(h.l1_bytes, 32 * 1024);
+        assert_eq!(h.sector_bytes, 64);
+        assert_eq!(h.line_sectors, 2);
+        assert_eq!(h.mshr_entries, 8);
+        assert!((h.fill_port_bytes_per_cycle - 32.0).abs() < 1e-12);
+        assert_eq!(h.bypass_list(), "q,o");
+        assert_eq!(s.to_sim_config().hierarchy, *h);
+    }
+
+    #[test]
+    fn hierarchy_sim_prefixed_keys_take_precedence() {
+        // `--set sim.hierarchy.*` overrides the bare `[hierarchy]` section.
+        let mut c = Config::parse("[hierarchy]\nenabled = true\nl1_bytes = 16384").unwrap();
+        c.set_override("sim.hierarchy.l1_bytes=65536").unwrap();
+        let s = SimRunConfig::from_config(&c).unwrap();
+        assert!(s.hierarchy.enabled);
+        assert_eq!(s.hierarchy.l1_bytes, 64 * 1024);
+        // A [sim.hierarchy] section spells the same keys.
+        let c = Config::parse("[sim.hierarchy]\nenabled = true\nmshr_entries = 4").unwrap();
+        let s = SimRunConfig::from_config(&c).unwrap();
+        assert!(s.hierarchy.enabled);
+        assert_eq!(s.hierarchy.mshr_entries, 4);
+    }
+
+    #[test]
+    fn hierarchy_rejects_bad_values() {
+        // 48 B sectors are not a multiple of the 32 B device sectors.
+        let c = Config::parse("[hierarchy]\nenabled = true\nsector_bytes = 48").unwrap();
+        assert!(SimRunConfig::from_config(&c).is_err());
+        let c = Config::parse("[hierarchy]\nbypass = \"q,w\"").unwrap();
+        let msg = format!("{:#}", SimRunConfig::from_config(&c).unwrap_err());
+        assert!(msg.contains("hierarchy.bypass"), "{msg}");
     }
 
     #[test]

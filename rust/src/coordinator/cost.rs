@@ -29,7 +29,7 @@ use crate::sim::sweep::SweepExecutor;
 use crate::sim::throughput::{estimate, PerfProfile};
 use crate::sim::traversal::{self, TraversalRef};
 use crate::sim::workload::AttentionWorkload;
-use crate::sim::SimConfig;
+use crate::sim::{HierarchyConfig, SimConfig};
 use crate::util::unknown_value;
 
 /// GB10 estimate of one traversal order for one workload shape, produced
@@ -217,6 +217,7 @@ fn probe_config(w: &AttentionWorkload, dev: &DeviceSpec, order: TraversalRef) ->
         jitter: 0.0,
         seed: 0,
         model_l1: true,
+        hierarchy: HierarchyConfig::default(),
     }
 }
 

@@ -435,6 +435,13 @@ fn serve_one_turn(
 // placement. [`format_spec`] emits these only when off-default, so square
 // ungrouped contiguous sweeps serialize byte-identically to the legacy
 // protocol.
+//
+// The per-SM hierarchy level rides on `hier*` keys with the same
+// off-default rule: `hier=true` switches it on, then `hier_l1_bytes=`,
+// `hier_sector_bytes=`, `hier_line_sectors=`, `hier_sectored=`,
+// `hier_mshr=`, `hier_fill_port=` and `hier_bypass=` (comma-joined tensor
+// letters, emitted only when any tensor bypasses) carry the geometry.
+// L2-only configs never emit them.
 
 /// Serialize a spec to the line protocol. Round-trips through
 /// [`parse_spec`] to configs with identical `ConfigKey` identity.
@@ -487,6 +494,26 @@ pub fn format_spec(spec: &SweepSpec) -> String {
                 " kv_block_tokens={block_tokens} kv_blocks={}",
                 table.join("-")
             ));
+        }
+        // Hierarchy keys only when the level is on: every legacy L2-only
+        // config keeps its exact byte representation.
+        let h = &cfg.hierarchy;
+        if h.enabled {
+            out.push_str(&format!(
+                " hier=true hier_l1_bytes={} hier_sector_bytes={} \
+                 hier_line_sectors={} hier_sectored={} hier_mshr={} \
+                 hier_fill_port={}",
+                h.l1_bytes,
+                h.sector_bytes,
+                h.line_sectors,
+                h.sectored,
+                h.mshr_entries,
+                h.fill_port_bytes_per_cycle,
+            ));
+            let bypass = h.bypass_list();
+            if !bypass.is_empty() {
+                out.push_str(&format!(" hier_bypass={bypass}"));
+            }
         }
         out.push('\n');
     }
@@ -615,6 +642,18 @@ fn parse_config_line(rest: &str) -> Result<SimConfig> {
             "l1_bytes" => cfg.device.l1_bytes = parse_num(k, v)?,
             "sector_bytes" => cfg.device.sector_bytes = parse_num(k, v)?,
             "non_tex" => cfg.device.non_tex_sectors_per_step = parse_num(k, v)?,
+            "hier" => cfg.hierarchy.enabled = parse_num(k, v)?,
+            "hier_l1_bytes" => cfg.hierarchy.l1_bytes = parse_num(k, v)?,
+            "hier_sector_bytes" => cfg.hierarchy.sector_bytes = parse_num(k, v)?,
+            "hier_line_sectors" => cfg.hierarchy.line_sectors = parse_num(k, v)?,
+            "hier_sectored" => cfg.hierarchy.sectored = parse_num(k, v)?,
+            "hier_mshr" => cfg.hierarchy.mshr_entries = parse_num(k, v)?,
+            "hier_fill_port" => {
+                cfg.hierarchy.fill_port_bytes_per_cycle = parse_num(k, v)?
+            }
+            "hier_bypass" => {
+                cfg.hierarchy.set_bypass_list(v).map_err(|e| anyhow!("key {k}: {e}"))?
+            }
             other => bail!("unknown config key '{other}'"),
         }
     }
@@ -646,6 +685,7 @@ fn parse_config_line(rest: &str) -> Result<SimConfig> {
     if cfg.device.num_sms == 0 || cfg.device.sector_bytes == 0 {
         bail!("sms and sector_bytes must be positive");
     }
+    cfg.hierarchy.validate(cfg.device.sector_bytes).map_err(|e| anyhow!(e))?;
     Ok(cfg)
 }
 
@@ -843,6 +883,34 @@ mod tests {
         let parsed = parse_spec(&text).unwrap();
         assert_eq!(parsed.configs[0].workload, spec.configs[0].workload);
         assert_eq!(ConfigKey::of(&parsed.configs[0]), ConfigKey::of(&spec.configs[0]));
+    }
+
+    #[test]
+    fn protocol_round_trips_hierarchy_keys() {
+        let mut cfg = SimConfig::cuda_study(AttentionWorkload::square(1, 2, 512, 64, 16));
+        cfg.device = DeviceSpec::tiny();
+        cfg.hierarchy.enabled = true;
+        cfg.hierarchy.l1_bytes = 8 * 1024;
+        cfg.hierarchy.sectored = false;
+        cfg.hierarchy.mshr_entries = 4;
+        cfg.hierarchy.set_bypass_list("q,o").unwrap();
+        let spec = SweepSpec::new("hier", vec![cfg]);
+        let text = format_spec(&spec);
+        assert!(text.contains(" hier=true"), "{text}");
+        assert!(text.contains(" hier_l1_bytes=8192"), "{text}");
+        assert!(text.contains(" hier_sectored=false"), "{text}");
+        assert!(text.contains(" hier_bypass=q,o"), "{text}");
+        let parsed = parse_spec(&text).unwrap();
+        assert_eq!(parsed.configs[0].hierarchy, spec.configs[0].hierarchy);
+        assert_eq!(ConfigKey::of(&parsed.configs[0]), ConfigKey::of(&spec.configs[0]));
+        // Disabled configs never emit hier keys — legacy byte-compat.
+        let legacy = tiny_spec("legacy", &[256]);
+        assert!(!format_spec(&legacy).contains("hier"), "{}", format_spec(&legacy));
+        // Bad geometry is rejected at parse time.
+        assert!(parse_spec(
+            "config device=tiny seq=512 tile=16 hier=true hier_sector_bytes=48\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -30,7 +30,7 @@ use sawtooth_attn::runtime::{default_artifacts_dir, Runtime};
 use sawtooth_attn::sim::cache::block_key;
 use sawtooth_attn::sim::kernel_model::{for_each_kv_access, single_cta_items};
 use sawtooth_attn::sim::sweep::{SweepExecutor, SweepGrid};
-use sawtooth_attn::sim::throughput::{estimate, PerfProfile};
+use sawtooth_attn::sim::throughput::{estimate, estimate_hierarchy, PerfProfile};
 use sawtooth_attn::sim::traversal::{TraversalRef, TraversalRegistry};
 use sawtooth_attn::sim::Simulator;
 use sawtooth_attn::util::rng::Rng;
@@ -114,6 +114,13 @@ COMMON OPTIONS:
   --l2 BYTES             what-if L2 capacity in bytes (policy explain;
                          default: GB10's 24 MiB)
   --sms N                active SM count (simulate/estimate)
+  --hierarchy            model the per-SM L1/MSHR level explicitly (simulate
+                         prints L1/MSHR counters and the two-level perf
+                         estimate; `report abl-hierarchy` sweeps it)
+  --l1 BYTES             per-SM L1 capacity for --hierarchy (0 = tag-store
+                         only, reproducing the L2-only model exactly); finer
+                         knobs via --set sim.hierarchy.* or a [hierarchy]
+                         config section (see configs/serve.toml)
   --threads N            sweep worker threads for report / sweep-serve
                          (default: host cores; output is byte-identical
                          at any N)
@@ -145,8 +152,10 @@ fn parse_flags(args: &[String]) -> Result<(Vec<(String, String)>, Vec<String>)> 
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
             // Boolean flags take no value; everything else consumes one.
-            const BOOLEANS: &[&str] =
-                &["causal", "exact", "quiet", "no-mattson", "chunks", "print-spec", "timing"];
+            const BOOLEANS: &[&str] = &[
+                "causal", "exact", "quiet", "no-mattson", "chunks", "print-spec", "timing",
+                "hierarchy",
+            ];
             if BOOLEANS.contains(&name) {
                 flags.push((name.to_string(), "true".to_string()));
             } else {
@@ -200,6 +209,8 @@ fn build_config(flags: &[(String, String)]) -> Result<Config> {
             "sms" => Some(("device.sms", v.clone())),
             "l2-mib" => Some(("device.l2_mib", v.clone())),
             "causal" => Some(("sim.causal", "true".to_string())),
+            "hierarchy" => Some(("hierarchy.enabled", "true".to_string())),
+            "l1" => Some(("hierarchy.l1_bytes", v.clone())),
             _ => None,
         };
         if let Some((key, val)) = mapped {
@@ -264,11 +275,22 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     let run = SimRunConfig::from_config(&cfg)?;
     let sim_cfg = run.to_sim_config();
     let t0 = std::time::Instant::now();
-    let r = Simulator::new(sim_cfg).run();
+    let sim = Simulator::new(sim_cfg);
+    // With the hierarchy level on, the run also yields L1/MSHR counters and
+    // the perf estimate switches to the two-level roofline.
+    let (r, hier) = if run.hierarchy.enabled {
+        let (r, h) = sim.run_hierarchy();
+        (r, Some(h))
+    } else {
+        (sim.run(), None)
+    };
     let elapsed = t0.elapsed();
     let dev = run.device();
     let profile = PerfProfile::for_variant(run.variant);
-    let perf = estimate(&run.workload, &dev, &r.counters, &profile);
+    let perf = match &hier {
+        Some(h) => estimate_hierarchy(&run.workload, &dev, &r.counters, h, &profile),
+        None => estimate(&run.workload, &dev, &r.counters, &profile),
+    };
 
     println!("workload: {:?}", run.workload);
     println!(
@@ -297,6 +319,20 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
             c.sectors,
             c.hits,
             c.misses
+        );
+    }
+    if let Some(h) = &hier {
+        println!("-- hierarchy level (per-SM sectored L1 + MSHRs) --");
+        println!(
+            "l1 accesses / hits / misses= {} / {} / {}",
+            h.accesses, h.l1_hits, h.l1_misses
+        );
+        println!("l1 sector hit rate         = {:.2}%", h.l1_sector_hit_rate_pct());
+        println!("mshr merges / stalls       = {} / {}", h.mshr_merges, h.mshr_stalls);
+        println!("l2 line fills              = {}", h.l2_fills);
+        println!(
+            "data / fill port cycles    = {} / {}",
+            h.data_port_cycles, h.fill_port_cycles
         );
     }
     println!("-- estimated GB10 performance ({}) --", profile.name);

@@ -22,6 +22,10 @@
 //!                    traversal registry across q_len ∈ {1, 4, full} ×
 //!                    paged/contiguous KV × GQA grouping, at decode-scale
 //!                    KV:L2 pressure.
+//! * `abl-hierarchy`— the per-SM L1/MSHR level ([`crate::sim::hierarchy`]):
+//!                    L1 size sweep × sectored-vs-full-line fills ×
+//!                    sawtooth-vs-cyclic, plus the multi-tenant shared-L2
+//!                    interference scenario (two streams, private L1s).
 
 use crate::gb10::DeviceSpec;
 use crate::l2model::reuse::ReuseProfiler;
@@ -452,6 +456,141 @@ pub fn decode_sweep(exec: &SweepExecutor) -> String {
     )
 }
 
+/// `abl-hierarchy` L1 sweep, bytes. 0 is the degenerate tag-store — the
+/// measured proof that a zero-capacity L1 reproduces the L2-only model —
+/// and 4096 is the tiny preset's native L1 size.
+const HIER_L1_BYTES: &[u64] = &[0, 1024, 2048, 4096, 16384];
+
+/// `abl-hierarchy`: the hierarchy-faithful cache level, on a tiny-device
+/// shape whose KV footprint (256 KiB) pressures the 64 KiB L2 4×. Three
+/// tables: the L1 size sweep (sectored fills), sectored vs full-line fills
+/// at the native L1 size, and shared-L2 interference between two tenant
+/// streams behind private L1s. Runs outside the [`SweepExecutor`] because
+/// the executor memoizes [`crate::sim::SimResult`]s only — the L1-level
+/// counters come from [`crate::sim::Simulator::run_hierarchy`] and
+/// [`run_shared_l2`](crate::sim::run_shared_l2) directly.
+pub fn hierarchy_sweep() -> String {
+    use crate::sim::{run_shared_l2, HierarchyConfig, Simulator};
+
+    let orders = [TraversalRef::cyclic(), TraversalRef::sawtooth()];
+    let base = |order: &TraversalRef, h: HierarchyConfig| {
+        let mut cfg =
+            SimConfig::cuda_study(AttentionWorkload::square(1, 2, 512, 64, 16));
+        cfg.device = DeviceSpec::tiny();
+        // No legacy tile-keyed L1: the L1-bytes = 0 row is then literally
+        // the L2-only stream, and the size sweep is monotone against it.
+        cfg.model_l1 = false;
+        cfg.hierarchy = h;
+        cfg.with_order(order.clone())
+    };
+    let enabled = |l1_bytes: u64, sectored: bool| HierarchyConfig {
+        enabled: true,
+        l1_bytes,
+        sectored,
+        ..HierarchyConfig::default()
+    };
+
+    // L1 size sweep, sectored fills.
+    let mut t = Table::new(vec![
+        "L1 bytes",
+        "order",
+        "L1 sector hit %",
+        "L2 from tex",
+        "L2 misses",
+        "MSHR merges",
+    ]);
+    for &l1 in HIER_L1_BYTES {
+        for order in &orders {
+            let (r, h) = Simulator::new(base(order, enabled(l1, true))).run_hierarchy();
+            t.row(vec![
+                l1.to_string(),
+                order.name().to_string(),
+                format!("{:.2}", h.l1_sector_hit_rate_pct()),
+                commas(r.counters.l2_sectors_from_tex),
+                commas(r.counters.l2_miss_sectors),
+                commas(h.mshr_merges),
+            ]);
+        }
+    }
+
+    // Sectored vs full-line fills at the native L1 size.
+    let mut ft = Table::new(vec![
+        "fill mode",
+        "order",
+        "L1 sector hit %",
+        "L2 from tex",
+        "L2 misses",
+    ]);
+    for &(mode, sectored) in &[("sectored", true), ("full-line", false)] {
+        for order in &orders {
+            let (r, h) = Simulator::new(base(order, enabled(4096, sectored))).run_hierarchy();
+            ft.row(vec![
+                mode.to_string(),
+                order.name().to_string(),
+                format!("{:.2}", h.l1_sector_hit_rate_pct()),
+                commas(r.counters.l2_sectors_from_tex),
+                commas(r.counters.l2_miss_sectors),
+            ]);
+        }
+    }
+
+    // Shared-L2 interference: two tenants, private L1s, one shared L2.
+    let mut it = Table::new(vec![
+        "tenant A",
+        "tenant B",
+        "A solo misses",
+        "A shared misses",
+        "inflation %",
+    ]);
+    let pairs = [
+        (TraversalRef::cyclic(), TraversalRef::cyclic()),
+        (TraversalRef::sawtooth(), TraversalRef::cyclic()),
+        (TraversalRef::sawtooth(), TraversalRef::sawtooth()),
+    ];
+    for (a_ord, b_ord) in &pairs {
+        let a = base(a_ord, enabled(4096, true));
+        let b = base(b_ord, enabled(4096, true));
+        let (solo, _) = Simulator::new(a.clone()).run_hierarchy();
+        let (ta, _tb) = run_shared_l2(&a, &b);
+        let solo_misses = solo.counters.l2_miss_sectors;
+        let shared_misses = ta.result.counters.l2_miss_sectors;
+        let infl = if solo_misses > 0 {
+            format!("{:+.1}", 100.0 * (shared_misses as f64 / solo_misses as f64 - 1.0))
+        } else {
+            "n/a".to_string()
+        };
+        it.row(vec![
+            a_ord.name().to_string(),
+            b_ord.name().to_string(),
+            commas(solo_misses),
+            commas(shared_misses),
+            infl,
+        ]);
+    }
+
+    format!(
+        "Ablation: per-SM L1/MSHR hierarchy level (tiny device: 4 SMs, 64 KiB L2;\n\
+         B=1, H=2, S=512, D=64, T=16 — KV 256 KiB, 4x the L2)\n{}\n\
+         Reading: L1 bytes = 0 is the degenerate tag-store and reproduces the\n\
+         L2-only model's traffic exactly (the bit-identity anchor, also pinned\n\
+         by tests). Growing the L1 filters sectors before the shared L2 —\n\
+         `L2 from tex` never exceeds the L1-less stream (the monotonicity\n\
+         property) — while MSHR merges absorb the synchronized wavefront's\n\
+         same-line misses.\n\n\
+         Sectored vs full-line fills at L1 = 4 KiB: full-line fills overfetch\n\
+         neighbouring sectors (ncu charges them to the requesting tensor, and\n\
+         so do we), which raises L2 traffic but can prefetch for the stride-1\n\
+         KV stream:\n{}\n\
+         Shared-L2 interference (two tenant streams, private L1s, one L2 —\n\
+         `run_shared_l2`): a co-tenant evicts the wavefront's reuse window,\n\
+         inflating misses over the solo run; sawtooth tenants suffer least\n\
+         because each keeps its reuse distances short:\n{}\n",
+        t.render(),
+        ft.render(),
+        it.render()
+    )
+}
+
 pub fn reuse_histogram() -> String {
     let w = AttentionWorkload::cuda_study(128 * 1024);
     let l2 = DeviceSpec::gb10().l2_sectors();
@@ -512,6 +651,47 @@ mod tests {
         assert!(s.contains("cyclic"));
         assert!(s.contains("sawtooth"));
         assert!(s.contains("predicted misses"));
+    }
+
+    #[test]
+    fn hierarchy_sweep_renders_and_holds_its_invariants() {
+        // Tiny device, S=512: cheap enough to run un-gated in debug.
+        let s = hierarchy_sweep();
+        assert!(s.contains("L1 bytes"));
+        assert!(s.contains("sawtooth"));
+        assert!(s.contains("inflation"));
+        // One row per (L1 size × order) in the first table.
+        let rows: Vec<&str> = s.lines().filter(|l| l.starts_with('|')).collect();
+        assert!(rows.len() >= HIER_L1_BYTES.len() * 2 + 2, "{s}");
+
+        // Re-derive the anchor claims the prose makes: the zero-byte L1
+        // reproduces the L2-only run, and growing the L1 never adds L2
+        // traffic (monotonicity).
+        use crate::sim::{HierarchyConfig, Simulator};
+        let cfg = |l1: u64, enabled: bool| {
+            let mut c =
+                SimConfig::cuda_study(AttentionWorkload::square(1, 2, 512, 64, 16));
+            c.device = DeviceSpec::tiny();
+            c.model_l1 = false;
+            c.hierarchy = HierarchyConfig {
+                enabled,
+                l1_bytes: l1,
+                ..HierarchyConfig::default()
+            };
+            c.with_order(TraversalRef::sawtooth())
+        };
+        let plain = Simulator::new(cfg(0, false)).run();
+        let (zero, _) = Simulator::new(cfg(0, true)).run_hierarchy();
+        assert_eq!(zero, plain, "zero-capacity L1 must replay the L2-only model");
+        let unfiltered = plain.counters.l2_sectors_from_tex;
+        for &l1 in HIER_L1_BYTES {
+            let (r, h) = Simulator::new(cfg(l1, true)).run_hierarchy();
+            assert!(
+                r.counters.l2_sectors_from_tex <= unfiltered,
+                "L1 of {l1} B grew L2 traffic past the unfiltered stream"
+            );
+            assert_eq!(h.l1_hits + h.l1_misses, h.accesses);
+        }
     }
 
     #[test]

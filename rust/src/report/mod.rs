@@ -54,6 +54,7 @@ pub const ABLATIONS: &[&str] = &[
     "abl-capacity",
     "abl-reuse",
     "abl-decode",
+    "abl-hierarchy",
 ];
 
 /// Run one experiment (or "all") sequentially and return the rendered
@@ -161,6 +162,7 @@ fn render_one(experiment: &str, exec: &SweepExecutor) -> Result<String> {
         "abl-capacity" => Ok(ablations::capacity_sweep(exec)),
         "abl-reuse" => Ok(ablations::reuse_histogram()),
         "abl-decode" => Ok(ablations::decode_sweep(exec)),
+        "abl-hierarchy" => Ok(ablations::hierarchy_sweep()),
         other => bail!(
             "unknown experiment '{other}' (try one of {EXPERIMENTS:?}, {ABLATIONS:?}, \
              'ablations' or 'all')"

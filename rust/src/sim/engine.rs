@@ -16,6 +16,7 @@ use crate::util::rng::Rng;
 
 use super::cache::{DenseWeightedLru, ExactLru, DEFAULT_FRONT_PROBE};
 use super::counters::CacheCounters;
+use super::hierarchy::{HierarchyBackend, HierarchyConfig, HierarchyCounters};
 use super::kernel_model::{
     step_accesses, ItemSteps, KernelVariant, Step, TensorKind, TileAccess, WorkItem,
 };
@@ -45,6 +46,11 @@ pub struct SimConfig {
     /// Model the per-SM L1 (true for the paper's Tables 1–2; the L1 is a
     /// pass-through for this workload either way).
     pub model_l1: bool,
+    /// The sectored L1/MSHR/port hierarchy level
+    /// ([`super::hierarchy`]). Disabled by default; when enabled it
+    /// replaces the legacy `model_l1` L1s on the `run` path and
+    /// `run_exact`/`profile` remain L2-only models.
+    pub hierarchy: HierarchyConfig,
 }
 
 impl SimConfig {
@@ -59,6 +65,7 @@ impl SimConfig {
             jitter: 0.0,
             seed: 0,
             model_l1: true,
+            hierarchy: HierarchyConfig::default(),
         }
     }
 
@@ -81,6 +88,7 @@ impl SimConfig {
             jitter: 0.0,
             seed: 0,
             model_l1: true,
+            hierarchy: HierarchyConfig::default(),
         }
     }
 
@@ -189,13 +197,13 @@ impl JitterState {
 /// span `q_len`, K/V tiles span `kv_len`): replaces the
 /// `rows_sectors(tile_rows(idx))` division chain previously evaluated on
 /// every access (EXPERIMENTS.md §Perf).
-struct SectorLut {
+pub(crate) struct SectorLut {
     q: Vec<u32>,
     kv: Vec<u32>,
 }
 
 impl SectorLut {
-    fn new(w: &AttentionWorkload, sector_bytes: u32) -> Self {
+    pub(crate) fn new(w: &AttentionWorkload, sector_bytes: u32) -> Self {
         SectorLut {
             q: (0..w.num_q_tiles())
                 .map(|i| w.rows_sectors(w.q_tile_rows(i), sector_bytes))
@@ -207,7 +215,7 @@ impl SectorLut {
     }
 
     #[inline]
-    fn get(&self, a: &TileAccess) -> u32 {
+    pub(crate) fn get(&self, a: &TileAccess) -> u32 {
         match a.tensor {
             TensorKind::Q | TensorKind::O => self.q[a.tile_idx as usize],
             TensorKind::K | TensorKind::V => self.kv[a.tile_idx as usize],
@@ -222,25 +230,25 @@ impl SectorLut {
 /// shapes the stride is `4n` and every key equals the retired
 /// `((bh·4)+tensor)·num_tiles + tile` formula bit for bit.
 #[derive(Clone, Copy)]
-struct TileKeys {
+pub(crate) struct TileKeys {
     qn: u64,
     kn: u64,
     stride: u64,
 }
 
 impl TileKeys {
-    fn new(w: &AttentionWorkload) -> Self {
+    pub(crate) fn new(w: &AttentionWorkload) -> Self {
         let qn = w.num_q_tiles();
         let kn = w.num_kv_tiles();
         TileKeys { qn, kn, stride: 2 * qn + 2 * kn }
     }
 
-    fn domain(&self, w: &AttentionWorkload) -> usize {
+    pub(crate) fn domain(&self, w: &AttentionWorkload) -> usize {
         (w.batch_heads() as u64 * self.stride) as usize
     }
 
     #[inline]
-    fn key(&self, a: &TileAccess) -> u64 {
+    pub(crate) fn key(&self, a: &TileAccess) -> u64 {
         let base = a.batch_head as u64 * self.stride;
         match a.tensor {
             TensorKind::Q => base + a.tile_idx,
@@ -257,7 +265,7 @@ impl TileKeys {
 /// `kv_len`). Logical KV rows map through the block table; Q/O and
 /// contiguous KV emit single runs identical to the retired
 /// `((bh·4)+tensor)·tensor_sectors` layout on square contiguous shapes.
-struct SectorAddrs {
+pub(crate) struct SectorAddrs {
     q_span: u64,
     kv_span: u64,
     stride: u64,
@@ -266,7 +274,7 @@ struct SectorAddrs {
 }
 
 impl SectorAddrs {
-    fn new(w: &AttentionWorkload, sector_bytes: u32) -> Self {
+    pub(crate) fn new(w: &AttentionWorkload, sector_bytes: u32) -> Self {
         let sb = sector_bytes as u64;
         let q_span = (w.q_tensor_bytes() + sb - 1) / sb;
         let kv_span =
@@ -280,7 +288,7 @@ impl SectorAddrs {
         }
     }
 
-    fn domain(&self, w: &AttentionWorkload) -> usize {
+    pub(crate) fn domain(&self, w: &AttentionWorkload) -> usize {
         (w.batch_heads() as u64 * self.stride) as usize
     }
 
@@ -301,7 +309,7 @@ impl SectorAddrs {
     /// (an identity table therefore emits the same single run as
     /// `Contiguous`, bit for bit).
     #[inline]
-    fn for_each_run(
+    pub(crate) fn for_each_run(
         &self,
         w: &AttentionWorkload,
         a: &TileAccess,
@@ -603,6 +611,28 @@ impl CacheBackend for MattsonExactBackend {
     }
 }
 
+/// The sectored-L1 hierarchy ([`super::hierarchy`]) plugged in behind the
+/// same trait: the round slice is its MSHR concurrency window (fills issued
+/// within one wavefront tick merge; the boundary retires them).
+impl CacheBackend for HierarchyBackend {
+    #[inline]
+    fn access(&mut self, sm: usize, a: &TileAccess, counters: &mut CacheCounters) {
+        self.access_tile(0, sm, a, counters);
+    }
+
+    #[inline]
+    fn access_round(&mut self, round: &[RoundAccess], counters: &mut CacheCounters) {
+        self.begin_round();
+        for ra in round {
+            self.access_tile(0, ra.sm as usize, &ra.access, counters);
+        }
+    }
+
+    fn fastpath_stats(&self) -> FrontStackStats {
+        self.front_stats()
+    }
+}
+
 /// Per-SM execution state.
 struct SmState {
     item: Option<(WorkItem, ItemSteps)>,
@@ -803,12 +833,31 @@ impl Simulator {
     }
 
     /// Like [`Self::run`], also returning the shared L2 model's fast-path
-    /// engagement counters.
+    /// engagement counters. When `cfg.hierarchy.enabled`, routes through
+    /// the sectored-L1 [`HierarchyBackend`] (the L1-level counters are
+    /// discarded here — use [`Self::run_hierarchy`] to keep them); the
+    /// sweep executor memoizes both worlds under distinct `ConfigKey`s.
     pub fn run_with_stats(&self) -> (SimResult, FrontStackStats) {
+        if self.cfg.hierarchy.enabled {
+            let mut backend = HierarchyBackend::new_single(&self.cfg, self.fast_path);
+            let r = self.run_backend(&mut backend);
+            let stats = backend.fastpath_stats();
+            return (r, stats);
+        }
         let mut backend = WeightedBackend::new(&self.cfg, self.fast_path);
         let r = self.run_backend(&mut backend);
         let stats = backend.fastpath_stats();
         (r, stats)
+    }
+
+    /// Run through the hierarchy backend regardless of the `enabled` flag
+    /// (a disabled config takes its degenerate legacy-identical path) and
+    /// return the L1-level [`HierarchyCounters`] alongside the result.
+    pub fn run_hierarchy(&self) -> (SimResult, HierarchyCounters) {
+        let mut backend = HierarchyBackend::new_single(&self.cfg, self.fast_path);
+        let r = self.run_backend(&mut backend);
+        let h = backend.tenant_counters(0);
+        (r, h)
     }
 
     /// Run with exact per-sector LRUs (validation mode — small workloads
@@ -883,6 +932,7 @@ mod tests {
             jitter: 0.0,
             seed: 0,
             model_l1: true,
+            hierarchy: HierarchyConfig::default(),
         }
     }
 

@@ -1,0 +1,101 @@
+//! Port-bandwidth accounting for the L1 level (gpucachesim's
+//! `BandwidthManager`, reduced to cycle counting).
+//!
+//! Two ports are charged independently, in SM cycles:
+//!
+//! * **data port** — every sector the SM reads or writes through the L1
+//!   crosses it, hit or miss (the LSU↔L1 interface);
+//! * **fill port** — every sector fetched from L2 crosses it (the L1↔L2
+//!   interface), including full-line overfetch and MSHR-stall duplicate
+//!   traffic.
+//!
+//! Each transaction is charged `ceil(bytes / port_bytes_per_cycle)` cycles
+//! — a transaction occupies the port for whole cycles, so many small fills
+//! cost more than one large one of the same volume. The accumulated cycle
+//! counts feed the port-contention term of
+//! [`estimate_hierarchy`](crate::sim::throughput::estimate_hierarchy).
+
+/// Width of the L1 data port (LSU interface), bytes per SM cycle. Fixed:
+/// only the fill-port width is a config axis
+/// ([`fill_port_bytes_per_cycle`](super::HierarchyConfig::fill_port_bytes_per_cycle)).
+pub const DATA_PORT_BYTES_PER_CYCLE: f64 = 128.0;
+
+/// Per-tenant port-cycle accumulator (see module docs).
+#[derive(Clone, Debug)]
+pub struct BandwidthManager {
+    data_bytes_per_cycle: f64,
+    fill_bytes_per_cycle: f64,
+    data_port_cycles: u64,
+    fill_port_cycles: u64,
+}
+
+impl BandwidthManager {
+    pub fn new(fill_bytes_per_cycle: f64) -> Self {
+        assert!(fill_bytes_per_cycle > 0.0, "fill port width must be positive");
+        BandwidthManager {
+            data_bytes_per_cycle: DATA_PORT_BYTES_PER_CYCLE,
+            fill_bytes_per_cycle,
+            data_port_cycles: 0,
+            fill_port_cycles: 0,
+        }
+    }
+
+    /// Charge one data-port transaction of `bytes`.
+    pub fn charge_data(&mut self, bytes: u64) {
+        self.data_port_cycles += cycles(bytes, self.data_bytes_per_cycle);
+    }
+
+    /// Charge one fill-port transaction of `bytes`.
+    pub fn charge_fill(&mut self, bytes: u64) {
+        self.fill_port_cycles += cycles(bytes, self.fill_bytes_per_cycle);
+    }
+
+    pub fn data_port_cycles(&self) -> u64 {
+        self.data_port_cycles
+    }
+
+    pub fn fill_port_cycles(&self) -> u64 {
+        self.fill_port_cycles
+    }
+}
+
+fn cycles(bytes: u64, bytes_per_cycle: f64) -> u64 {
+    if bytes == 0 {
+        return 0;
+    }
+    (bytes as f64 / bytes_per_cycle).ceil() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transactions_are_charged_in_whole_cycles() {
+        let mut bw = BandwidthManager::new(64.0);
+        bw.charge_fill(1); // sub-width transaction still occupies a cycle
+        bw.charge_fill(64);
+        bw.charge_fill(65);
+        assert_eq!(bw.fill_port_cycles(), 1 + 1 + 2);
+        assert_eq!(bw.data_port_cycles(), 0);
+    }
+
+    #[test]
+    fn many_small_fills_cost_more_than_one_large() {
+        let mut small = BandwidthManager::new(64.0);
+        for _ in 0..4 {
+            small.charge_fill(32);
+        }
+        let mut large = BandwidthManager::new(64.0);
+        large.charge_fill(128);
+        assert!(small.fill_port_cycles() > large.fill_port_cycles());
+    }
+
+    #[test]
+    fn zero_bytes_is_free() {
+        let mut bw = BandwidthManager::new(64.0);
+        bw.charge_data(0);
+        bw.charge_fill(0);
+        assert_eq!(bw.data_port_cycles() + bw.fill_port_cycles(), 0);
+    }
+}

@@ -1,0 +1,211 @@
+//! Per-SM sectored L1: a fully-associative LRU over cache *lines*, each
+//! line carrying a valid-sector bitmask (gpucachesim's `l1/base.rs` sectored
+//! blocks, reduced to what the wavefront engine needs).
+//!
+//! A line spans [`line_sectors`](super::HierarchyConfig::line_sectors)
+//! hierarchy sectors over the engine's dense global sector-address space, so
+//! lines may straddle tile boundaries — which is exactly what makes the
+//! sectored-vs-full-line ablation meaningful: a full-line fill drags in
+//! neighbouring sectors the access never asked for.
+//!
+//! Capacity is counted in lines (tag-store capacity), not valid sectors: a
+//! partially-filled line occupies a full way, as in hardware.
+
+use rustc_hash::FxHashMap;
+
+const NIL: u32 = u32::MAX;
+
+struct Slot {
+    line: u64,
+    valid: u64,
+    prev: u32,
+    next: u32,
+}
+
+/// Sectored LRU cache of lines (see module docs). `probe` returns the
+/// resident valid mask; `fill` allocates (evicting the LRU line) and marks
+/// sectors valid. Both promote the line to MRU.
+pub struct SectoredL1 {
+    cap_lines: usize,
+    map: FxHashMap<u64, u32>,
+    slots: Vec<Slot>,
+    head: u32,
+    tail: u32,
+    free: Vec<u32>,
+}
+
+impl SectoredL1 {
+    pub fn new(cap_lines: usize) -> Self {
+        SectoredL1 {
+            cap_lines,
+            map: FxHashMap::default(),
+            slots: Vec::with_capacity(cap_lines.min(1 << 16)),
+            head: NIL,
+            tail: NIL,
+            free: Vec::new(),
+        }
+    }
+
+    pub fn cap_lines(&self) -> usize {
+        self.cap_lines
+    }
+
+    /// Resident lines (filled, not yet evicted).
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up `line`: returns its valid-sector mask (0 when absent) and
+    /// promotes it to MRU — a probe is a use, whether or not the wanted
+    /// sectors turn out valid.
+    pub fn probe(&mut self, line: u64) -> u64 {
+        match self.map.get(&line) {
+            Some(&slot) => {
+                self.touch(slot);
+                self.slots[slot as usize].valid
+            }
+            None => 0,
+        }
+    }
+
+    /// Mark `mask` sectors of `line` valid, allocating the line (and
+    /// evicting the LRU victim at capacity) if absent. No-op on a
+    /// zero-capacity cache or an empty mask.
+    pub fn fill(&mut self, line: u64, mask: u64) {
+        if self.cap_lines == 0 || mask == 0 {
+            return;
+        }
+        if let Some(&slot) = self.map.get(&line) {
+            self.slots[slot as usize].valid |= mask;
+            self.touch(slot);
+            return;
+        }
+        if self.map.len() >= self.cap_lines {
+            self.evict_lru();
+        }
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slots[s as usize] = Slot { line, valid: mask, prev: NIL, next: NIL };
+                s
+            }
+            None => {
+                self.slots.push(Slot { line, valid: mask, prev: NIL, next: NIL });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.map.insert(line, slot);
+        self.push_front(slot);
+    }
+
+    fn evict_lru(&mut self) {
+        let victim = self.tail;
+        debug_assert_ne!(victim, NIL, "evict on empty cache");
+        self.detach(victim);
+        let line = self.slots[victim as usize].line;
+        self.map.remove(&line);
+        self.free.push(victim);
+    }
+
+    fn touch(&mut self, slot: u32) {
+        if self.head != slot {
+            self.detach(slot);
+            self.push_front(slot);
+        }
+    }
+
+    fn detach(&mut self, slot: u32) {
+        let (prev, next) = {
+            let s = &self.slots[slot as usize];
+            (s.prev, s.next)
+        };
+        if prev != NIL {
+            self.slots[prev as usize].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    fn push_front(&mut self, slot: u32) {
+        let old = self.head;
+        {
+            let s = &mut self.slots[slot as usize];
+            s.prev = NIL;
+            s.next = old;
+        }
+        if old != NIL {
+            self.slots[old as usize].prev = slot;
+        } else {
+            self.tail = slot;
+        }
+        self.head = slot;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_miss_then_fill_then_hit() {
+        let mut c = SectoredL1::new(4);
+        assert_eq!(c.probe(7), 0);
+        c.fill(7, 0b0011);
+        assert_eq!(c.probe(7), 0b0011);
+        // A later fill extends the valid mask of the same line.
+        c.fill(7, 0b1000);
+        assert_eq!(c.probe(7), 0b1011);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn capacity_is_in_lines_and_eviction_is_lru() {
+        let mut c = SectoredL1::new(2);
+        c.fill(1, 0b1);
+        c.fill(2, 0b1);
+        assert_eq!(c.probe(1), 0b1); // 1 is now MRU
+        c.fill(3, 0b1); // evicts 2 (LRU), not 1
+        assert_eq!(c.probe(2), 0);
+        assert_eq!(c.probe(1), 0b1);
+        assert_eq!(c.probe(3), 0b1);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn probe_promotes_even_on_sector_miss() {
+        // Probing a resident line for sectors it doesn't hold still marks
+        // it recently used: the tag was touched.
+        let mut c = SectoredL1::new(2);
+        c.fill(1, 0b01);
+        c.fill(2, 0b01);
+        assert_eq!(c.probe(1) & 0b10, 0); // wanted sector invalid, but touched
+        c.fill(3, 0b01); // must evict 2
+        assert_eq!(c.probe(1), 0b01);
+        assert_eq!(c.probe(2), 0);
+    }
+
+    #[test]
+    fn zero_capacity_never_stores() {
+        let mut c = SectoredL1::new(0);
+        c.fill(1, u64::MAX);
+        assert_eq!(c.probe(1), 0);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn evicted_line_refills_from_scratch() {
+        let mut c = SectoredL1::new(1);
+        c.fill(1, 0b1111);
+        c.fill(2, 0b0001); // evicts 1
+        c.fill(1, 0b0001); // evicts 2; line 1 must not remember old mask
+        assert_eq!(c.probe(1), 0b0001);
+    }
+}

@@ -1,0 +1,810 @@
+//! Hierarchy-faithful cache subsystem: a per-SM sectored L1 level in front
+//! of the shared L2 (ROADMAP "L1/SMEM + sectors + MSHR + port bandwidth";
+//! design reference: gpucachesim's `l1/base.rs`).
+//!
+//! The legacy model (`model_l1` tile-granularity L1s, pass-through for
+//! streaming attention) cannot distinguish an SMEM-resident tile loop from
+//! one that hammers L2. This subsystem replaces it, when
+//! [`HierarchyConfig::enabled`] is set, with:
+//!
+//! * [`l1::SectoredL1`] — per-SM line/sector caches over the engine's dense
+//!   global sector addresses (lines may straddle tile boundaries);
+//! * [`mshr::MshrTable`] — merges concurrent same-line misses within one
+//!   engine round into a single L2 fill, capacity-limited with counted
+//!   stalls;
+//! * [`bandwidth::BandwidthManager`] — charges data-port and fill-port
+//!   cycles per transaction, feeding the port-contention term of
+//!   [`estimate_hierarchy`](super::throughput::estimate_hierarchy).
+//!
+//! ## Model contract
+//!
+//! The backend consumes the identical `stream_rounds` access stream as the
+//! legacy backends and keeps the shared L2 *exactly* the legacy model: a
+//! tile-keyed weighted LRU, accessed once per tile access with the weight
+//! reduced to the sectors the L1 actually had to fetch. Consequences:
+//!
+//! * **Disabled ≡ legacy, bit for bit.** With `enabled = false` (or an L1
+//!   whose capacity rounds to zero lines) every access takes a direct path
+//!   that replays `WeightedBackend` verbatim — same keys, same weights,
+//!   same LRU calls — so every existing `run`/`run_exact`/`profile` result
+//!   is unchanged (pinned by `tests/integration_hierarchy.rs`).
+//! * **Filtering is monotone.** In sectored mode the forwarded weight never
+//!   exceeds the issued weight, so enabling the L1 can only shrink L2
+//!   traffic (property-tested). Full-line mode deliberately breaks this:
+//!   fills drag in neighbouring sectors (overfetch is charged to the
+//!   requesting tensor, ncu-style).
+//! * **Writes are write-through, no-allocate** (O never re-read); per-
+//!   tensor channels can bypass the L1 entirely via
+//!   [`HierarchyConfig::bypass`].
+//! * `run_exact`/`profile` stay L2-only models: enabling the hierarchy
+//!   routes `run`/`run_with_stats` (and the sweep executor) through this
+//!   backend, while capacity profiling falls back to per-capacity runs
+//!   (`mattson_supported` rejects hierarchy configs).
+//!
+//! [`run_shared_l2`] opens the first multi-tenant scenario: two workload
+//! streams, private L1s, one shared L2 — the interference axis of
+//! `report abl-hierarchy`.
+
+pub mod bandwidth;
+pub mod l1;
+pub mod mshr;
+
+use crate::l2model::reuse::FrontStackStats;
+
+use super::cache::{DenseWeightedLru, DEFAULT_FRONT_PROBE};
+use super::counters::CacheCounters;
+use super::engine::{stream_rounds, RoundAccess, SectorAddrs, SectorLut, SimConfig, SimResult, TileKeys};
+use super::kernel_model::{TensorKind, TileAccess};
+use super::workload::AttentionWorkload;
+
+use bandwidth::BandwidthManager;
+use l1::SectoredL1;
+use mshr::MshrTable;
+
+/// Configuration of the L1/MSHR/port level. `Default` is **disabled** with
+/// GB10-plausible hardware parameters, so `SimConfig` literals gain this
+/// field without changing any existing result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HierarchyConfig {
+    /// Master switch. Off (default): the engine is the legacy L2-only
+    /// model, bit for bit.
+    pub enabled: bool,
+    /// L1 capacity per SM, bytes (tag-store capacity in whole lines).
+    pub l1_bytes: u64,
+    /// Hierarchy sector size, bytes. Must be a positive multiple of the
+    /// device sector size (32 B on both presets).
+    pub sector_bytes: u32,
+    /// Sectors per cache line (1..=64). Default 4 → 128 B lines.
+    pub line_sectors: u32,
+    /// Sectored fills (default): a miss fetches only the missing sectors.
+    /// `false` = full-line fills, the overfetch ablation arm.
+    pub sectored: bool,
+    /// MSHR table capacity (0 = no merging, every miss stalls).
+    pub mshr_entries: u32,
+    /// Fill-port width, bytes per SM cycle (throughput-model-only: excluded
+    /// from sweep memoization keys like the device bandwidth fields).
+    pub fill_port_bytes_per_cycle: f64,
+    /// Per-tensor L1 bypass, indexed by `TensorKind as usize` (Q, K, V, O).
+    pub bypass: [bool; 4],
+}
+
+impl Default for HierarchyConfig {
+    fn default() -> Self {
+        HierarchyConfig {
+            enabled: false,
+            l1_bytes: 64 * 1024,
+            sector_bytes: 32,
+            line_sectors: 4,
+            sectored: true,
+            mshr_entries: 32,
+            fill_port_bytes_per_cycle: 64.0,
+            bypass: [false; 4],
+        }
+    }
+}
+
+impl HierarchyConfig {
+    pub fn line_bytes(&self) -> u64 {
+        self.sector_bytes as u64 * self.line_sectors as u64
+    }
+
+    /// Per-SM line capacity; 0 when disabled (degenerate/legacy path).
+    pub fn cap_lines(&self) -> usize {
+        if !self.enabled || self.line_bytes() == 0 {
+            0
+        } else {
+            (self.l1_bytes / self.line_bytes()) as usize
+        }
+    }
+
+    /// Check internal consistency and compatibility with a device sector
+    /// size. Returns a human-readable reason on failure (the config schema
+    /// and the protocol parser both surface it).
+    pub fn validate(&self, device_sector_bytes: u32) -> Result<(), String> {
+        if self.sector_bytes == 0 || self.sector_bytes % device_sector_bytes != 0 {
+            return Err(format!(
+                "hierarchy sector_bytes {} must be a positive multiple of the \
+                 device sector size {device_sector_bytes}",
+                self.sector_bytes
+            ));
+        }
+        if self.line_sectors == 0 || self.line_sectors > 64 {
+            return Err(format!(
+                "hierarchy line_sectors {} must be in 1..=64 (valid-mask width)",
+                self.line_sectors
+            ));
+        }
+        if !(self.fill_port_bytes_per_cycle > 0.0) || !self.fill_port_bytes_per_cycle.is_finite() {
+            return Err(format!(
+                "hierarchy fill_port_bytes_per_cycle {} must be a positive finite number",
+                self.fill_port_bytes_per_cycle
+            ));
+        }
+        Ok(())
+    }
+
+    /// The simulation-relevant fields as a hashable key fragment for sweep
+    /// memoization: `None` when disabled, so every pre-hierarchy config
+    /// keeps its exact pre-hierarchy key. `fill_port_bytes_per_cycle` is
+    /// deliberately excluded — it only affects the throughput model, like
+    /// the device bandwidth fields `ConfigKey` already ignores.
+    pub fn key_fields(&self) -> Option<HierarchyKey> {
+        if !self.enabled {
+            return None;
+        }
+        Some(HierarchyKey {
+            l1_bytes: self.l1_bytes,
+            sector_bytes: self.sector_bytes,
+            line_sectors: self.line_sectors,
+            sectored: self.sectored,
+            mshr_entries: self.mshr_entries,
+            bypass_mask: self.bypass_mask(),
+        })
+    }
+
+    /// Bypass flags packed Q=bit0 … O=bit3.
+    pub fn bypass_mask(&self) -> u8 {
+        self.bypass
+            .iter()
+            .enumerate()
+            .fold(0u8, |m, (i, &b)| if b { m | (1 << i) } else { m })
+    }
+
+    /// Parse a bypass list like `"q,o"` (empty or `"none"` clears it).
+    pub fn set_bypass_list(&mut self, list: &str) -> Result<(), String> {
+        let mut bypass = [false; 4];
+        let trimmed = list.trim();
+        if !trimmed.is_empty() && trimmed != "none" {
+            for part in trimmed.split(',') {
+                let idx = match part.trim() {
+                    "q" | "Q" => TensorKind::Q as usize,
+                    "k" | "K" => TensorKind::K as usize,
+                    "v" | "V" => TensorKind::V as usize,
+                    "o" | "O" => TensorKind::O as usize,
+                    other => return Err(format!("unknown bypass tensor '{other}' (want q/k/v/o)")),
+                };
+                bypass[idx] = true;
+            }
+        }
+        self.bypass = bypass;
+        Ok(())
+    }
+
+    /// Inverse of [`Self::set_bypass_list`]: `"q,o"` style, `""` when none.
+    pub fn bypass_list(&self) -> String {
+        let names = ["q", "k", "v", "o"];
+        let mut out = Vec::new();
+        for (i, &b) in self.bypass.iter().enumerate() {
+            if b {
+                out.push(names[i]);
+            }
+        }
+        out.join(",")
+    }
+}
+
+/// Hashable fragment of [`HierarchyConfig`] for `ConfigKey` (see
+/// [`HierarchyConfig::key_fields`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct HierarchyKey {
+    l1_bytes: u64,
+    sector_bytes: u32,
+    line_sectors: u32,
+    sectored: bool,
+    mshr_entries: u32,
+    bypass_mask: u8,
+}
+
+/// ncu-style counters of the L1 level, per tenant. Kept out of
+/// [`SimResult`] so its `Eq` surface (the bit-identity anchor of every
+/// parity suite) is untouched; retrieve them via
+/// [`Simulator::run_hierarchy`](super::Simulator::run_hierarchy) or
+/// [`run_shared_l2`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HierarchyCounters {
+    /// Tile accesses processed (reads + writes). Always equals
+    /// `l1_hits + l1_misses`.
+    pub accesses: u64,
+    /// Accesses fully satisfied without new L2 traffic (valid sectors or
+    /// in-flight MSHR merges).
+    pub l1_hits: u64,
+    /// Accesses that issued L2 traffic (including writes and bypasses).
+    pub l1_misses: u64,
+    /// Device sectors found valid in the L1.
+    pub l1_sector_hits: u64,
+    /// Device sectors requested but not valid (fetched or merged).
+    pub l1_sector_misses: u64,
+    /// Fill requests coalesced into an in-flight same-line fill.
+    pub mshr_merges: u64,
+    /// Misses that found the MSHR table full (fill issued unmerged).
+    pub mshr_stalls: u64,
+    /// Fill transactions issued to the L2.
+    pub l2_fills: u64,
+    /// Busy cycles of the L1 data port (LSU side), summed over SMs.
+    pub data_port_cycles: u64,
+    /// Busy cycles of the L1 fill port (L2 side), summed over SMs.
+    pub fill_port_cycles: u64,
+}
+
+impl HierarchyCounters {
+    /// Fraction of requested device sectors served from valid L1 sectors.
+    pub fn l1_sector_hit_rate_pct(&self) -> f64 {
+        let total = self.l1_sector_hits + self.l1_sector_misses;
+        if total == 0 {
+            0.0
+        } else {
+            100.0 * self.l1_sector_hits as f64 / total as f64
+        }
+    }
+}
+
+/// One tenant's address-space slice of a (possibly shared) backend.
+struct TenantState {
+    w: AttentionWorkload,
+    keys: TileKeys,
+    sectors: SectorLut,
+    addrs: SectorAddrs,
+    /// Offset into the shared L2 tile-key space.
+    key_offset: u64,
+    /// Offset into the global sector-address space, line-aligned so tenants
+    /// never share a cache line.
+    addr_offset: u64,
+    /// First SM index owned by this tenant.
+    sm_offset: usize,
+    /// Legacy `model_l1` flag, honoured only on the degenerate path.
+    model_l1: bool,
+    bw: BandwidthManager,
+    counters: HierarchyCounters,
+}
+
+/// The hierarchy cache backend (single- or multi-tenant). Constructed by
+/// the engine (single tenant, behind `CacheBackend`) and by
+/// [`run_shared_l2`]; crate-private because the `CacheBackend` trait it
+/// plugs into is private to `engine.rs`.
+pub(crate) struct HierarchyBackend {
+    cap_lines: usize,
+    sectored: bool,
+    /// Device sectors per hierarchy sector.
+    ratio: u64,
+    /// Hierarchy sectors per line.
+    line_sectors: u64,
+    /// Device sectors per line.
+    line_devs: u64,
+    /// All-sectors-of-a-line mask.
+    line_mask: u64,
+    dev_sector_bytes: u64,
+    bypass: [bool; 4],
+    tenants: Vec<TenantState>,
+    /// Sectored per-SM L1s (empty on the degenerate path).
+    sector_l1: Vec<SectoredL1>,
+    /// Legacy tile-keyed per-SM L1s (degenerate path only), replicating
+    /// `WeightedBackend` exactly.
+    legacy_l1: Vec<DenseWeightedLru>,
+    l2: DenseWeightedLru,
+    mshr: MshrTable,
+}
+
+impl HierarchyBackend {
+    pub(crate) fn new_single(cfg: &SimConfig, fast_path: bool) -> Self {
+        Self::new_shared(&[cfg], fast_path)
+    }
+
+    /// Build a backend over one shared L2 for `cfgs.len()` tenants. All
+    /// tenants must share the L2 capacity and device sector size; the
+    /// hierarchy parameters are taken from `cfgs[0]`.
+    pub(crate) fn new_shared(cfgs: &[&SimConfig], fast_path: bool) -> Self {
+        assert!(!cfgs.is_empty());
+        let base = cfgs[0];
+        let hcfg = &base.hierarchy;
+        let dev_sector_bytes = base.device.sector_bytes;
+        if let Err(e) = hcfg.validate(dev_sector_bytes) {
+            panic!("invalid hierarchy config: {e}");
+        }
+        let probe = if fast_path { DEFAULT_FRONT_PROBE } else { 0 };
+        let cap_lines = hcfg.cap_lines();
+        let ratio = (hcfg.sector_bytes / dev_sector_bytes) as u64;
+        let line_sectors = hcfg.line_sectors as u64;
+        let line_devs = ratio * line_sectors;
+        let line_mask = if line_sectors >= 64 { u64::MAX } else { (1u64 << line_sectors) - 1 };
+
+        let mut tenants = Vec::with_capacity(cfgs.len());
+        let mut key_off = 0u64;
+        let mut addr_off = 0u64;
+        let mut sm_off = 0usize;
+        for cfg in cfgs {
+            assert_eq!(
+                cfg.device.sector_bytes, dev_sector_bytes,
+                "shared-L2 tenants must agree on the device sector size"
+            );
+            assert_eq!(
+                cfg.device.l2_bytes, base.device.l2_bytes,
+                "shared-L2 tenants must agree on the L2 capacity"
+            );
+            let w = &cfg.workload;
+            let keys = TileKeys::new(w);
+            let addrs = SectorAddrs::new(w, dev_sector_bytes);
+            let key_domain = keys.domain(w) as u64;
+            let addr_domain = addrs.domain(w) as u64;
+            tenants.push(TenantState {
+                w: w.clone(),
+                keys,
+                sectors: SectorLut::new(w, dev_sector_bytes),
+                addrs,
+                key_offset: key_off,
+                addr_offset: addr_off,
+                sm_offset: sm_off,
+                model_l1: cfg.model_l1,
+                bw: BandwidthManager::new(hcfg.fill_port_bytes_per_cycle),
+                counters: HierarchyCounters::default(),
+            });
+            key_off += key_domain;
+            addr_off += (addr_domain + line_devs - 1) / line_devs * line_devs;
+            sm_off += cfg.device.num_sms as usize;
+        }
+        let domain = key_off as usize;
+
+        let (sector_l1, legacy_l1) = if cap_lines == 0 {
+            let mut legacy = Vec::with_capacity(sm_off);
+            for cfg in cfgs {
+                for _ in 0..cfg.device.num_sms {
+                    legacy.push(DenseWeightedLru::with_probe(
+                        cfg.device.l1_sectors(),
+                        domain,
+                        probe,
+                    ));
+                }
+            }
+            (Vec::new(), legacy)
+        } else {
+            ((0..sm_off).map(|_| SectoredL1::new(cap_lines)).collect(), Vec::new())
+        };
+
+        HierarchyBackend {
+            cap_lines,
+            sectored: hcfg.sectored,
+            ratio,
+            line_sectors,
+            line_devs,
+            line_mask,
+            dev_sector_bytes: dev_sector_bytes as u64,
+            bypass: hcfg.bypass,
+            tenants,
+            sector_l1,
+            legacy_l1,
+            l2: DenseWeightedLru::with_probe(base.device.l2_sectors(), domain, probe),
+            mshr: MshrTable::new(hcfg.mshr_entries as usize),
+        }
+    }
+
+    /// Retire in-flight MSHR fills: the engine (and the multi-tenant
+    /// driver) call this at every round boundary.
+    pub(crate) fn begin_round(&mut self) {
+        self.mshr.begin_round();
+    }
+
+    pub(crate) fn front_stats(&self) -> FrontStackStats {
+        self.l2.front_stats()
+    }
+
+    /// This tenant's L1-level counters (port cycles folded in).
+    pub(crate) fn tenant_counters(&self, tenant: usize) -> HierarchyCounters {
+        let t = &self.tenants[tenant];
+        let mut c = t.counters;
+        c.data_port_cycles = t.bw.data_port_cycles();
+        c.fill_port_cycles = t.bw.fill_port_cycles();
+        c
+    }
+
+    /// Process one tile access of `tenant` on its tenant-local SM `sm`.
+    pub(crate) fn access_tile(
+        &mut self,
+        tenant: usize,
+        sm: usize,
+        a: &TileAccess,
+        counters: &mut CacheCounters,
+    ) {
+        let sectors = self.tenants[tenant].sectors.get(a);
+        let key = self.tenants[tenant].key_offset + self.tenants[tenant].keys.key(a);
+        let sm_abs = self.tenants[tenant].sm_offset + sm;
+
+        if self.cap_lines == 0 {
+            // Degenerate path: WeightedBackend, verbatim (the L1-of-zero ≡
+            // disabled anchor). Same keys, same weights, same call order.
+            let t = &mut self.tenants[tenant];
+            let l1_hit = if t.model_l1 && !a.write {
+                self.legacy_l1[sm_abs].access(key, sectors)
+            } else {
+                false
+            };
+            let l2_hit = if l1_hit { false } else { self.l2.access(key, sectors) };
+            counters.record(a.tensor, sectors, l1_hit, l2_hit, a.write);
+            t.counters.accesses += 1;
+            if l1_hit {
+                t.counters.l1_hits += 1;
+                t.counters.l1_sector_hits += sectors as u64;
+            } else {
+                t.counters.l1_misses += 1;
+                t.counters.l1_sector_misses += sectors as u64;
+            }
+            t.bw.charge_data(sectors as u64 * self.dev_sector_bytes);
+            return;
+        }
+
+        if a.write || self.bypass[a.tensor as usize] {
+            // Write-through no-allocate (O) and per-tensor bypass: straight
+            // to L2 at full weight, no L1 state change.
+            let l2_hit = self.l2.access(key, sectors);
+            counters.record(a.tensor, sectors, false, l2_hit, a.write);
+            let t = &mut self.tenants[tenant];
+            t.counters.accesses += 1;
+            t.counters.l1_misses += 1;
+            t.counters.l1_sector_misses += sectors as u64;
+            t.bw.charge_data(sectors as u64 * self.dev_sector_bytes);
+            return;
+        }
+
+        if sectors == 0 {
+            return; // nothing moves; legacy weight-0 accesses touch no counter
+        }
+
+        // Sectored read path: walk the access's sector runs line by line.
+        let mut hit_dev = 0u64; // device sectors valid in L1
+        let mut merged_dev = 0u64; // satisfied by an in-flight MSHR fill
+        let mut fetch_dev = 0u64; // fetched from L2 (incl. overfetch)
+        let mut merges = 0u64;
+        let mut stalls = 0u64;
+        let mut fills = 0u64;
+        {
+            let (ratio, line_sectors, line_mask, sectored, sector_bytes) = (
+                self.ratio,
+                self.line_sectors,
+                self.line_mask,
+                self.sectored,
+                self.dev_sector_bytes,
+            );
+            let sector_l1 = &mut self.sector_l1;
+            let mshr = &mut self.mshr;
+            let t = &mut self.tenants[tenant];
+            let addr_offset = t.addr_offset;
+            let (addrs, w, bw) = (&t.addrs, &t.w, &mut t.bw);
+            addrs.for_each_run(w, a, sectors, |first, count| {
+                if count == 0 {
+                    return;
+                }
+                let d0 = addr_offset + first;
+                let d1 = d0 + count;
+                let h0 = d0 / ratio;
+                let h1 = (d1 + ratio - 1) / ratio; // hierarchy sectors [h0, h1)
+                let first_line = h0 / line_sectors;
+                let last_line = (h1 - 1) / line_sectors;
+                for line in first_line..=last_line {
+                    let base_h = line * line_sectors;
+                    let lo = h0.max(base_h) - base_h;
+                    let hi = h1.min(base_h + line_sectors) - base_h;
+                    let want = mask_range(lo, hi) & line_mask;
+                    let valid = sector_l1[sm_abs].probe(line);
+                    let hit = want & valid;
+                    let miss = want & !valid;
+                    hit_dev += dev_count(ratio, base_h, hit, d0, d1);
+                    if miss == 0 {
+                        continue;
+                    }
+                    // Full-line mode fetches everything not already valid.
+                    let req = if sectored { miss } else { line_mask & !valid };
+                    let out = mshr.request(line, req);
+                    if out.merged & miss != 0 {
+                        merges += 1;
+                    }
+                    merged_dev += dev_count(ratio, base_h, out.merged & miss, d0, d1);
+                    if out.stalled {
+                        stalls += 1;
+                    }
+                    if out.fetch != 0 {
+                        fills += 1;
+                        let fetched = dev_count(ratio, base_h, out.fetch, d0, d1);
+                        fetch_dev += fetched;
+                        bw.charge_fill(fetched * sector_bytes);
+                    }
+                    sector_l1[sm_abs].fill(line, req);
+                }
+            });
+        }
+
+        let satisfied = hit_dev + merged_dev;
+        if satisfied > 0 {
+            counters.record(a.tensor, satisfied as u32, true, false, false);
+        }
+        if fetch_dev > 0 {
+            let l2_hit = self.l2.access(key, fetch_dev as u32);
+            counters.record(a.tensor, fetch_dev as u32, false, l2_hit, false);
+        }
+
+        let t = &mut self.tenants[tenant];
+        let hc = &mut t.counters;
+        hc.accesses += 1;
+        if fetch_dev == 0 {
+            hc.l1_hits += 1;
+        } else {
+            hc.l1_misses += 1;
+        }
+        hc.l1_sector_hits += hit_dev;
+        hc.l1_sector_misses += sectors as u64 - hit_dev;
+        hc.mshr_merges += merges;
+        hc.mshr_stalls += stalls;
+        hc.l2_fills += fills;
+        t.bw.charge_data(sectors as u64 * self.dev_sector_bytes);
+    }
+}
+
+/// Contiguous bitmask covering bits `[lo, hi)` (hi ≤ 64).
+#[inline]
+fn mask_range(lo: u64, hi: u64) -> u64 {
+    debug_assert!(lo <= hi && hi <= 64);
+    let upper = if hi >= 64 { u64::MAX } else { (1u64 << hi) - 1 };
+    let lower = (1u64 << lo) - 1;
+    upper & !lower
+}
+
+/// Device sectors covered by `mask` bits of the line starting at hierarchy
+/// sector `base_h`, clipped to the requesting run `[d0, d1)`; overfetch
+/// bits outside the run count their full `ratio` device sectors.
+#[inline]
+fn dev_count(ratio: u64, base_h: u64, mask: u64, d0: u64, d1: u64) -> u64 {
+    let mut total = 0u64;
+    let mut m = mask;
+    while m != 0 {
+        let bit = m.trailing_zeros() as u64;
+        m &= m - 1;
+        let h = base_h + bit;
+        let lo = (h * ratio).max(d0);
+        let hi = ((h + 1) * ratio).min(d1);
+        total += if hi > lo { hi - lo } else { ratio };
+    }
+    total
+}
+
+/// One tenant's outcome of a shared-L2 run.
+#[derive(Clone, Debug)]
+pub struct TenantRun {
+    /// Per-tenant L2-level result, same shape as a solo
+    /// [`Simulator::run`](super::Simulator::run).
+    pub result: SimResult,
+    /// Per-tenant L1-level counters.
+    pub hierarchy: HierarchyCounters,
+}
+
+/// The multi-tenant scenario: interleave two workload streams round by
+/// round into one shared L2 behind private per-SM L1s (tenant B's SMs and
+/// address space are disjoint from A's). Hierarchy parameters come from
+/// `a.hierarchy` — the tenants share the hardware.
+///
+/// Both traces are materialized round-wise before replay, so this is for
+/// ablation-scale shapes, not the §4.3 128K study shape.
+pub fn run_shared_l2(a: &SimConfig, b: &SimConfig) -> (TenantRun, TenantRun) {
+    let mut rounds_a: Vec<Vec<RoundAccess>> = Vec::new();
+    let stats_a = stream_rounds(a, |r| rounds_a.push(r.to_vec()));
+    let mut rounds_b: Vec<Vec<RoundAccess>> = Vec::new();
+    let stats_b = stream_rounds(b, |r| rounds_b.push(r.to_vec()));
+
+    let mut backend = HierarchyBackend::new_shared(&[a, b], true);
+    let mut ca = CacheCounters::default();
+    let mut cb = CacheCounters::default();
+    for i in 0..rounds_a.len().max(rounds_b.len()) {
+        backend.begin_round();
+        if let Some(round) = rounds_a.get(i) {
+            for ra in round {
+                backend.access_tile(0, ra.sm as usize, &ra.access, &mut ca);
+            }
+        }
+        if let Some(round) = rounds_b.get(i) {
+            for ra in round {
+                backend.access_tile(1, ra.sm as usize, &ra.access, &mut cb);
+            }
+        }
+    }
+    ca.l2_sectors_other =
+        (stats_a.kv_steps as f64 * a.device.non_tex_sectors_per_step).round() as u64;
+    cb.l2_sectors_other =
+        (stats_b.kv_steps as f64 * b.device.non_tex_sectors_per_step).round() as u64;
+    let mk = |counters: CacheCounters, stats: super::engine::TraceStats, h| TenantRun {
+        result: SimResult {
+            counters,
+            kv_steps: stats.kv_steps,
+            rounds: stats.rounds,
+            items: stats.items,
+        },
+        hierarchy: h,
+    };
+    (
+        mk(ca, stats_a, backend.tenant_counters(0)),
+        mk(cb, stats_b, backend.tenant_counters(1)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scheduler::SchedulerKind;
+    use super::super::traversal::TraversalRef;
+    use super::super::Simulator;
+    use super::*;
+    use crate::gb10::DeviceSpec;
+    use crate::sim::kernel_model::KernelVariant;
+
+    fn cfg(seq: u64, order: TraversalRef, enabled: bool) -> SimConfig {
+        let w = AttentionWorkload::square(1, 1, seq, 64, 16);
+        SimConfig {
+            device: DeviceSpec::tiny(),
+            workload: w,
+            scheduler: SchedulerKind::Persistent,
+            order,
+            variant: KernelVariant::CudaWmma,
+            jitter: 0.0,
+            seed: 0,
+            model_l1: true,
+            hierarchy: HierarchyConfig { enabled, ..HierarchyConfig::default() },
+        }
+    }
+
+    #[test]
+    fn key_fields_none_when_disabled() {
+        let mut h = HierarchyConfig::default();
+        assert_eq!(h.key_fields(), None);
+        h.enabled = true;
+        let k1 = h.key_fields().expect("enabled config must key");
+        h.fill_port_bytes_per_cycle = 999.0;
+        assert_eq!(h.key_fields(), Some(k1), "fill port width is throughput-only");
+        h.l1_bytes = 128 * 1024;
+        assert_ne!(h.key_fields(), Some(k1));
+    }
+
+    #[test]
+    fn bypass_list_round_trips() {
+        let mut h = HierarchyConfig::default();
+        h.set_bypass_list("q,o").unwrap();
+        assert_eq!(h.bypass, [true, false, false, true]);
+        assert_eq!(h.bypass_list(), "q,o");
+        assert_eq!(h.bypass_mask(), 0b1001);
+        h.set_bypass_list("").unwrap();
+        assert_eq!(h.bypass_mask(), 0);
+        assert!(h.set_bypass_list("x").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_geometry() {
+        let mut h = HierarchyConfig::default();
+        assert!(h.validate(32).is_ok());
+        h.sector_bytes = 48;
+        assert!(h.validate(32).is_err());
+        h.sector_bytes = 64;
+        assert!(h.validate(32).is_ok());
+        h.line_sectors = 65;
+        assert!(h.validate(32).is_err());
+        h.line_sectors = 4;
+        h.fill_port_bytes_per_cycle = 0.0;
+        assert!(h.validate(32).is_err());
+    }
+
+    #[test]
+    fn mask_range_and_dev_count_helpers() {
+        assert_eq!(mask_range(0, 4), 0b1111);
+        assert_eq!(mask_range(2, 4), 0b1100);
+        assert_eq!(mask_range(0, 64), u64::MAX);
+        assert_eq!(mask_range(3, 3), 0);
+        // ratio 2, line at hierarchy sector 0, run covers devs [1, 4):
+        // sector 0 overlaps dev 1 only, sector 1 overlaps devs 2..4.
+        assert_eq!(dev_count(2, 0, 0b01, 1, 4), 1);
+        assert_eq!(dev_count(2, 0, 0b10, 1, 4), 2);
+        // overfetch bit fully outside the run counts its whole ratio.
+        assert_eq!(dev_count(2, 0, 0b100, 1, 4), 2);
+    }
+
+    #[test]
+    fn enabled_accounting_invariants_hold() {
+        let mut c = cfg(512, TraversalRef::cyclic(), true);
+        c.hierarchy.l1_bytes = 4 * 1024;
+        let (r, h) = Simulator::new(c).run_hierarchy();
+        assert_eq!(h.l1_hits + h.l1_misses, h.accesses);
+        assert_eq!(
+            h.l1_sector_hits + h.l1_sector_misses,
+            r.counters.l1_sectors,
+            "requested device sectors must split exactly into hit/miss"
+        );
+        // Sectored mode: issued = L1-satisfied + forwarded, exactly.
+        assert_eq!(
+            r.counters.l1_sectors,
+            r.counters.l1_hit_sectors + r.counters.l2_sectors_from_tex
+        );
+        assert_eq!(
+            r.counters.l2_hit_sectors + r.counters.l2_miss_sectors,
+            r.counters.l2_sectors_from_tex
+        );
+        assert!(h.data_port_cycles > 0 && h.l2_fills > 0);
+    }
+
+    #[test]
+    fn synchronized_wavefronts_merge_in_the_mshr() {
+        // 4 SMs in lockstep touch the same K/V tiles in the same round:
+        // with per-SM L1s those are concurrent same-line misses, the MSHR's
+        // whole reason to exist.
+        let (_, h) = Simulator::new(cfg(512, TraversalRef::cyclic(), true)).run_hierarchy();
+        assert!(h.mshr_merges > 0, "lockstep SMs must coalesce fills");
+        assert!(h.l1_sector_hits > 0, "intra-tile line reuse must hit");
+    }
+
+    #[test]
+    fn l1_never_increases_l2_traffic_sectored() {
+        for order in [TraversalRef::cyclic(), TraversalRef::sawtooth()] {
+            let off = Simulator::new(cfg(512, order.clone(), false)).run();
+            let on = Simulator::new(cfg(512, order, true)).run();
+            assert!(
+                on.counters.l2_sectors_from_tex <= off.counters.l2_sectors_from_tex,
+                "sectored L1 filtering must be monotone"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_capacity_l1_is_bit_identical_to_disabled() {
+        let mut zero = cfg(256, TraversalRef::sawtooth(), true);
+        zero.hierarchy.l1_bytes = 0;
+        let disabled = cfg(256, TraversalRef::sawtooth(), false);
+        assert_eq!(Simulator::new(zero).run(), Simulator::new(disabled).run());
+    }
+
+    #[test]
+    fn shared_l2_interference_raises_misses() {
+        // A tenant that fits L2 alone gets polluted by a co-tenant.
+        let a = cfg(256, TraversalRef::cyclic(), true);
+        let b = cfg(512, TraversalRef::cyclic(), true);
+        let solo = Simulator::new(a.clone()).run();
+        let (ta, tb) = run_shared_l2(&a, &b);
+        assert_eq!(
+            ta.result.counters.l2_sectors_from_tex, solo.counters.l2_sectors_from_tex,
+            "interference must not change tenant A's issued traffic"
+        );
+        assert!(
+            ta.result.counters.l2_miss_sectors >= solo.counters.l2_miss_sectors,
+            "shared-L2 pollution cannot reduce misses"
+        );
+        assert_eq!(ta.hierarchy.l1_hits + ta.hierarchy.l1_misses, ta.hierarchy.accesses);
+        assert_eq!(tb.hierarchy.l1_hits + tb.hierarchy.l1_misses, tb.hierarchy.accesses);
+    }
+
+    #[test]
+    fn full_line_mode_overfetches() {
+        let mut full = cfg(512, TraversalRef::cyclic(), true);
+        full.hierarchy.sectored = false;
+        full.hierarchy.line_sectors = 8;
+        let (rf, hf) = Simulator::new(full).run_hierarchy();
+        let (rs, _) = {
+            let mut c = cfg(512, TraversalRef::cyclic(), true);
+            c.hierarchy.line_sectors = 8;
+            Simulator::new(c).run_hierarchy()
+        };
+        assert!(
+            rf.counters.l2_sectors_from_tex >= rs.counters.l2_sectors_from_tex,
+            "full-line fills cannot forward fewer sectors than sectored fills"
+        );
+        assert_eq!(hf.l1_hits + hf.l1_misses, hf.accesses);
+    }
+}

@@ -23,6 +23,7 @@
 pub mod cache;
 pub mod counters;
 pub mod engine;
+pub mod hierarchy;
 pub mod kernel_model;
 pub mod scheduler;
 pub mod sweep;
@@ -36,6 +37,7 @@ pub use engine::{
     stream_accesses, stream_rounds, CapacityProfile, RoundAccess, SimConfig, SimResult,
     Simulator, TraceStats,
 };
+pub use hierarchy::{run_shared_l2, HierarchyConfig, HierarchyCounters, TenantRun};
 pub use kernel_model::{KernelVariant, TensorKind, TileAccess};
 pub use scheduler::SchedulerKind;
 pub use sweep::{ExecutorTiming, SweepExecutor, SweepGrid, SweepSpec};

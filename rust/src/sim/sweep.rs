@@ -41,6 +41,7 @@ use rustc_hash::FxHashMap;
 use crate::l2model::reuse::FrontStackStats;
 
 use super::engine::{CapacityProfile, SimConfig, SimResult, Simulator};
+use super::hierarchy::HierarchyKey;
 use super::kernel_model::KernelVariant;
 use super::scheduler::SchedulerKind;
 use super::traversal::TraversalRef;
@@ -67,6 +68,11 @@ pub struct ConfigKey {
     l1_bytes: u64,
     sector_bytes: u32,
     non_tex_bits: u64,
+    /// `None` when the hierarchy level is disabled, so every pre-hierarchy
+    /// config keeps its exact pre-hierarchy key (byte-stable memoization).
+    /// The fill-port width is excluded like the other throughput-only
+    /// fields (see [`HierarchyConfig::key_fields`](super::hierarchy::HierarchyConfig::key_fields)).
+    hierarchy: Option<HierarchyKey>,
 }
 
 impl ConfigKey {
@@ -84,6 +90,7 @@ impl ConfigKey {
             l1_bytes: cfg.device.l1_bytes,
             sector_bytes: cfg.device.sector_bytes,
             non_tex_bits: cfg.device.non_tex_sectors_per_step.to_bits(),
+            hierarchy: cfg.hierarchy.key_fields(),
         }
     }
 }
@@ -110,6 +117,13 @@ impl ProfileKey {
 /// so the larger of the first Q and first KV tile's sector counts is the
 /// largest weight in the stream.
 fn mattson_supported(cfg: &SimConfig) -> bool {
+    // The hierarchy backend's L1 filters the L2 reference stream
+    // capacity-*dependently* (which lines are valid depends on nothing L2
+    // does, but the forwarded weights are not the plain trace a stack
+    // algorithm can replay), so hierarchy configs take per-capacity runs.
+    if cfg.hierarchy.enabled {
+        return false;
+    }
     let w = &cfg.workload;
     if w.q_len == 0 || w.kv_len == 0 {
         return false;
@@ -1053,6 +1067,35 @@ mod tests {
         let b4 = small_cfg(256, TraversalRef::block_snake(4));
         let b4_again = small_cfg(256, "block-snake:4".parse().unwrap());
         assert_eq!(ConfigKey::of(&b4), ConfigKey::of(&b4_again));
+    }
+
+    #[test]
+    fn config_key_hierarchy_axis() {
+        let a = small_cfg(256, TraversalRef::cyclic());
+        // Disabled hierarchy params never perturb the key, so every
+        // pre-hierarchy spec keeps its exact pre-hierarchy identity.
+        let mut b = a.clone();
+        b.hierarchy.l1_bytes = 128 * 1024;
+        b.hierarchy.mshr_entries = 4;
+        assert_eq!(ConfigKey::of(&a), ConfigKey::of(&b));
+        // Enabling the level forks the key...
+        let mut on = a.clone();
+        on.hierarchy.enabled = true;
+        assert_ne!(ConfigKey::of(&a), ConfigKey::of(&on));
+        // ...sim-relevant geometry distinguishes within the enabled world...
+        let mut on_big = on.clone();
+        on_big.hierarchy.l1_bytes *= 2;
+        assert_ne!(ConfigKey::of(&on), ConfigKey::of(&on_big));
+        let mut on_full = on.clone();
+        on_full.hierarchy.sectored = false;
+        assert_ne!(ConfigKey::of(&on), ConfigKey::of(&on_full));
+        // ...while the throughput-only fill-port width does not.
+        let mut on_fill = on.clone();
+        on_fill.hierarchy.fill_port_bytes_per_cycle *= 2.0;
+        assert_eq!(ConfigKey::of(&on), ConfigKey::of(&on_fill));
+        // Hierarchy configs opt out of stack-distance capacity grouping.
+        assert!(mattson_supported(&a));
+        assert!(!mattson_supported(&on));
     }
 
     #[test]

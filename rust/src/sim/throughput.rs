@@ -17,20 +17,48 @@
 //! from the constants. Calibration (see EXPERIMENTS.md §Calibration):
 //!
 //! * `CudaWmma` — Fig 7: 1.3 TFLOPS cyclic → 2.4 TFLOPS sawtooth when
-//!   misses halve implies the exposed-miss term dominates (~92% of cyclic
-//!   time) and the compute-only throughput is ~15.6 TFLOPS. Per-miss
-//!   exposed latency ≈ 91 ns — a naive WMMA kernel with little memory-level
-//!   parallelism.
+//!   misses halve implies the exposed-miss term dominates cyclic time and
+//!   the compute-only throughput is ~4.0 TFLOPS. Per-miss exposed latency
+//!   ≈ 60.4 ns — a naive WMMA kernel with little memory-level parallelism
+//!   (constants in [`PerfProfile::cuda_wmma`]).
 //! * `CuTile` — Figs 9–10: 61 → 69 TFLOPS as misses drop 370 M → 120 M
 //!   gives 0.268 ns/miss (deep async pipelines hide most latency) and an
 //!   effective compute peak of ~73.6 TFLOPS (59% of the 125 TFLOPS dense
 //!   fp16 peak).
+//!
+//! With the per-SM hierarchy level on ([`estimate_hierarchy`]) two terms
+//! change:
+//!
+//! ```text
+//! t = max(t_compute, t_dram_bw, t_l2_bw, t_l1_port) + t_exposed_miss
+//!   t_l1_port      = max(data_port_cycles, fill_port_cycles)
+//!                    / (num_sms · SM_CLOCK_HZ)
+//!   t_exposed_miss = (l2_misses + L2_HIT_EXPOSURE · l2_hits)
+//!                    · exposed_miss_ns(variant)
+//! ```
+//!
+//! L1 hits are latency-free, L1 misses that hit in L2 still pay a fraction
+//! of the DRAM round trip, and the busier of the two per-SM L1 ports joins
+//! the roofline (`bound_by = "l1-port"` when it binds). With the level off,
+//! `l2_hits` counts nothing extra and both ports are idle, so
+//! [`estimate_hierarchy`] degenerates to [`estimate`].
 
 use crate::gb10::DeviceSpec;
 
 use super::counters::CacheCounters;
+use super::hierarchy::HierarchyCounters;
 use super::kernel_model::KernelVariant;
 use super::workload::AttentionWorkload;
+
+/// SM core clock used to convert L1 port cycles into seconds (GB10 runs
+/// its SMs near 1.8 GHz).
+pub const SM_CLOCK_HZ: f64 = 1.8e9;
+
+/// Exposed latency of an L2 *hit* relative to a full DRAM miss. Only
+/// meaningful with the hierarchy level on: reads that miss the per-SM L1
+/// but hit in L2 pay the L1↔L2 round trip, a small fraction of the DRAM
+/// path.
+pub const L2_HIT_EXPOSURE: f64 = 0.15;
 
 /// Per-implementation performance profile.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -75,7 +103,8 @@ pub struct ThroughputReport {
     pub t_exposed_s: f64,
     /// DRAM traffic implied by the misses, bytes.
     pub dram_bytes: f64,
-    /// Which term binds: "compute" | "dram-bw" | "l2-bw".
+    /// Which term binds: "compute" | "dram-bw" | "l2-bw", plus "l1-port"
+    /// from [`estimate_hierarchy`].
     pub bound_by: &'static str,
 }
 
@@ -112,6 +141,59 @@ pub fn estimate(
     } else {
         (t_l2, "l2-bw")
     };
+    let time = roof + t_exposed;
+
+    ThroughputReport {
+        time_s: time,
+        tflops: flops / time / 1e12,
+        t_compute_s: t_compute,
+        t_dram_bw_s: t_dram,
+        t_l2_bw_s: t_l2,
+        t_exposed_s: t_exposed,
+        dram_bytes,
+        bound_by,
+    }
+}
+
+/// Two-level variant of [`estimate`] for runs with the per-SM hierarchy
+/// level enabled (see the module docs for the formula). `counters` carries
+/// the L2 view exactly as in [`estimate`]; `h` contributes the L1 port
+/// cycles. Degenerates to [`estimate`] when `counters.l2_hit_sectors == 0`
+/// and both ports are idle.
+pub fn estimate_hierarchy(
+    w: &AttentionWorkload,
+    dev: &DeviceSpec,
+    counters: &CacheCounters,
+    h: &HierarchyCounters,
+    profile: &PerfProfile,
+) -> ThroughputReport {
+    let flops = w.flops();
+    let sector = dev.sector_bytes as f64;
+    let dram_bytes = counters.l2_miss_sectors as f64 * sector;
+    let l2_bytes = counters.l2_sectors_total() as f64 * sector;
+
+    let t_compute = flops / profile.peak_flops;
+    let t_dram = dram_bytes / dev.dram_bw;
+    let t_l2 = l2_bytes / dev.l2_bw;
+    // The two L1 ports serve the same SM concurrently; the busier one is
+    // the bottleneck. Cycles were accumulated across all per-SM L1s, so
+    // dividing by num_sms models them draining in parallel.
+    let t_port =
+        h.data_port_cycles.max(h.fill_port_cycles) as f64 / (dev.num_sms as f64 * SM_CLOCK_HZ);
+    let t_exposed = (counters.l2_miss_sectors as f64
+        + counters.l2_hit_sectors as f64 * L2_HIT_EXPOSURE)
+        * profile.exposed_miss_ns
+        * 1e-9;
+
+    // Same tie-breaking as `estimate`: earlier terms win ties.
+    let mut roof = t_compute;
+    let mut bound_by = "compute";
+    for (t, name) in [(t_dram, "dram-bw"), (t_l2, "l2-bw"), (t_port, "l1-port")] {
+        if t > roof {
+            roof = t;
+            bound_by = name;
+        }
+    }
     let time = roof + t_exposed;
 
     ThroughputReport {
@@ -201,5 +283,55 @@ mod tests {
     fn profile_for_variant() {
         assert_eq!(PerfProfile::for_variant(KernelVariant::CudaWmma).name, "cuda-wmma");
         assert_eq!(PerfProfile::for_variant(KernelVariant::CuTileTile).name, "cutile");
+    }
+
+    #[test]
+    fn hierarchy_estimate_degenerates_to_flat_estimate() {
+        // No L2 hits and idle ports: the two models must agree exactly.
+        let w = AttentionWorkload::cutile_study(8, false);
+        let dev = DeviceSpec::gb10();
+        let p = PerfProfile::cutile();
+        let c = counters(1_000_000, 1_000_000); // every sector misses
+        let h = HierarchyCounters::default();
+        let flat = estimate(&w, &dev, &c, &p);
+        let two = estimate_hierarchy(&w, &dev, &c, &h, &p);
+        assert_eq!(two.time_s, flat.time_s);
+        assert_eq!(two.t_exposed_s, flat.t_exposed_s);
+        assert_eq!(two.bound_by, flat.bound_by);
+    }
+
+    #[test]
+    fn l2_hits_cost_a_fraction_of_misses() {
+        let w = AttentionWorkload::cutile_study(8, false);
+        let dev = DeviceSpec::gb10();
+        let p = PerfProfile::cutile();
+        let h = HierarchyCounters::default();
+        let no_hits = estimate_hierarchy(&w, &dev, &counters(1_000_000, 1_000_000), &h, &p);
+        let hits = estimate_hierarchy(&w, &dev, &counters(1_000_000, 2_000_000), &h, &p);
+        let all_miss = estimate_hierarchy(&w, &dev, &counters(2_000_000, 2_000_000), &h, &p);
+        assert!(hits.t_exposed_s > no_hits.t_exposed_s, "hits expose some latency");
+        assert!(hits.t_exposed_s < all_miss.t_exposed_s, "but far less than misses");
+        let expected = no_hits.t_exposed_s * (1.0 + L2_HIT_EXPOSURE);
+        assert!((hits.t_exposed_s - expected).abs() < 1e-15);
+    }
+
+    #[test]
+    fn port_contention_joins_the_roofline() {
+        let w = AttentionWorkload::cutile_study(8, false);
+        let dev = DeviceSpec::gb10();
+        let p = PerfProfile::cutile();
+        let c = counters(0, 1_000_000);
+        let mut h = HierarchyCounters::default();
+        let idle = estimate_hierarchy(&w, &dev, &c, &h, &p);
+        // Enough fill-port cycles to dwarf every other roof term.
+        let want_s = 10.0 * idle.time_s;
+        h.fill_port_cycles = (want_s * dev.num_sms as f64 * SM_CLOCK_HZ) as u64;
+        let bound = estimate_hierarchy(&w, &dev, &c, &h, &p);
+        assert_eq!(bound.bound_by, "l1-port");
+        assert!(bound.time_s > idle.time_s);
+        // The busier port binds: matching data-port load changes nothing.
+        h.data_port_cycles = h.fill_port_cycles;
+        let same = estimate_hierarchy(&w, &dev, &c, &h, &p);
+        assert_eq!(same.time_s, bound.time_s);
     }
 }

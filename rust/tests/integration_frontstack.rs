@@ -11,7 +11,7 @@ use sawtooth_attn::sim::kernel_model::KernelVariant;
 use sawtooth_attn::sim::scheduler::SchedulerKind;
 use sawtooth_attn::sim::traversal::{TraversalRef, TraversalRegistry};
 use sawtooth_attn::sim::workload::AttentionWorkload;
-use sawtooth_attn::sim::{SimConfig, Simulator};
+use sawtooth_attn::sim::{HierarchyConfig, SimConfig, Simulator};
 
 fn tiny_cfg(seq: u64, order: TraversalRef, causal: bool, sched: SchedulerKind) -> SimConfig {
     let w = AttentionWorkload::square(1, 1, seq, 64, 16).with_causal(causal);
@@ -24,6 +24,7 @@ fn tiny_cfg(seq: u64, order: TraversalRef, causal: bool, sched: SchedulerKind) -
         jitter: 0.0,
         seed: 0,
         model_l1: true,
+        hierarchy: HierarchyConfig::default(),
     }
 }
 

@@ -1,0 +1,224 @@
+//! Acceptance tests for the hierarchy-faithful cache level (ISSUE 9): a
+//! zero-capacity L1 (and a disabled hierarchy) must replay the L2-only
+//! weighted model bitwise — across every registered traversal, both
+//! schedulers, causal and full masks, and decode-era shapes — the sectored
+//! L1 must never *increase* shared-L2 traffic, and the MSHRs must merge
+//! same-line misses on a synchronized-wavefront shape end to end.
+
+use sawtooth_attn::gb10::DeviceSpec;
+use sawtooth_attn::sim::kernel_model::KernelVariant;
+use sawtooth_attn::sim::scheduler::SchedulerKind;
+use sawtooth_attn::sim::traversal::{TraversalRef, TraversalRegistry};
+use sawtooth_attn::sim::workload::AttentionWorkload;
+use sawtooth_attn::sim::{run_shared_l2, HierarchyConfig, SimConfig, Simulator};
+
+fn tiny_cfg(w: AttentionWorkload, order: TraversalRef, sched: SchedulerKind) -> SimConfig {
+    SimConfig {
+        device: DeviceSpec::tiny(),
+        workload: w,
+        scheduler: sched,
+        order,
+        variant: KernelVariant::CudaWmma,
+        jitter: 0.0,
+        seed: 0,
+        model_l1: true,
+        hierarchy: HierarchyConfig::default(),
+    }
+}
+
+/// The shape grid the parity tests sweep: a prefill square, a causal
+/// square, a rectangular chunked-prefill shape, single-token decode with
+/// GQA grouping, and a paged + shuffled decode shape. Everything the
+/// decode-axis refactor added, at tiny-device scale.
+fn shapes() -> Vec<AttentionWorkload> {
+    vec![
+        AttentionWorkload::square(1, 1, 256, 64, 16),
+        AttentionWorkload::square(1, 2, 256, 64, 16).with_causal(true),
+        AttentionWorkload::square(2, 2, 256, 64, 16).with_q_len(64),
+        AttentionWorkload::square(1, 4, 256, 64, 16)
+            .with_q_len(1)
+            .with_kv_heads(2),
+        AttentionWorkload::square(1, 2, 256, 64, 16)
+            .with_q_len(4)
+            .with_kv_heads(1)
+            .with_paged_shuffled(32, 7),
+    ]
+}
+
+/// Tentpole acceptance (a) + (b): with the hierarchy level disabled — or
+/// enabled with a zero-byte L1, the degenerate tag-store — `run_hierarchy`
+/// returns exactly the plain weighted-model [`sawtooth_attn::sim::SimResult`],
+/// across the full traversal registry × schedulers × the decode shape grid.
+#[test]
+fn degenerate_l1_replays_the_weighted_model_across_the_registry() {
+    for order in TraversalRegistry::global().instances() {
+        for sched in [SchedulerKind::Persistent, SchedulerKind::NonPersistent] {
+            for w in shapes() {
+                let base = tiny_cfg(w, order.clone(), sched);
+                let plain = Simulator::new(base.clone()).run();
+                let ctx = format!("order={} sched={sched:?} w={:?}", order.name(), base.workload);
+
+                // (a) disabled: run_hierarchy degenerates to run().
+                let (off, off_h) = Simulator::new(base.clone()).run_hierarchy();
+                assert_eq!(off, plain, "disabled hierarchy diverged: {ctx}");
+
+                // (b) enabled with l1_bytes = 0: the tag-store replays the
+                // WeightedBackend verbatim — same keys, weights, call order.
+                let mut zero = base.clone();
+                zero.hierarchy = HierarchyConfig {
+                    enabled: true,
+                    l1_bytes: 0,
+                    ..HierarchyConfig::default()
+                };
+                let (on, on_h) = Simulator::new(zero).run_hierarchy();
+                assert_eq!(on, plain, "zero-byte L1 diverged: {ctx}");
+
+                for h in [off_h, on_h] {
+                    assert_eq!(h.l1_hits + h.l1_misses, h.accesses, "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+/// Property (d): the sectored L1 filters the stream reaching the shared L2
+/// — it must never *increase* `l2_sectors_from_tex` (and hence L2 work)
+/// over the hierarchy-off run, at any L1 size, for any registered
+/// traversal or shape. Also pins the sector accounting identities.
+#[test]
+fn sectored_l1_never_increases_l2_traffic() {
+    for order in TraversalRegistry::global().instances() {
+        for w in shapes() {
+            let mut base = tiny_cfg(w, order.clone(), SchedulerKind::Persistent);
+            // The monotonicity claim is against the *unfiltered* L2 stream:
+            // the sectored path replaces the legacy tile-keyed L1, so the
+            // fair baseline is the pure-L2 run, not the legacy-filtered one.
+            base.model_l1 = false;
+            let plain = Simulator::new(base.clone()).run();
+            for l1_bytes in [1024u64, 4096, 65536] {
+                let mut cfg = base.clone();
+                cfg.hierarchy = HierarchyConfig {
+                    enabled: true,
+                    l1_bytes,
+                    ..HierarchyConfig::default()
+                };
+                let (r, h) = Simulator::new(cfg).run_hierarchy();
+                let ctx =
+                    format!("order={} l1={l1_bytes} w={:?}", order.name(), base.workload);
+                assert!(
+                    r.counters.l2_sectors_from_tex <= plain.counters.l2_sectors_from_tex,
+                    "L1 increased L2 traffic ({} > {}): {ctx}",
+                    r.counters.l2_sectors_from_tex,
+                    plain.counters.l2_sectors_from_tex,
+                );
+                // Accounting identities: accesses split into hits+misses,
+                // and in sectored mode every issued sector is either valid
+                // in L1 or charged as an L1 sector miss — which is exactly
+                // the stream `counters.record` saw.
+                assert_eq!(h.l1_hits + h.l1_misses, h.accesses, "{ctx}");
+                assert_eq!(
+                    h.l1_sector_hits + h.l1_sector_misses,
+                    r.counters.l1_sectors,
+                    "{ctx}"
+                );
+            }
+        }
+    }
+}
+
+/// Acceptance (c): on a synchronized-wavefront shape (persistent scheduler,
+/// cyclic order, 4 SMs marching the same KV tiles) the MSHRs must merge
+/// concurrent same-line misses end to end, and the L1 must engage.
+#[test]
+fn mshr_merges_engage_on_a_synchronized_wavefront() {
+    let mut cfg = tiny_cfg(
+        AttentionWorkload::square(1, 2, 512, 64, 16),
+        TraversalRef::cyclic(),
+        SchedulerKind::Persistent,
+    );
+    cfg.hierarchy = HierarchyConfig { enabled: true, ..HierarchyConfig::default() };
+    let (r, h) = Simulator::new(cfg).run_hierarchy();
+    assert!(h.mshr_merges > 0, "no MSHR merges on a synchronized wavefront: {h:?}");
+    assert!(h.l1_sector_hits > 0, "L1 never hit: {h:?}");
+    assert!(h.l2_fills > 0, "no L2 fills recorded: {h:?}");
+    assert!(h.data_port_cycles > 0 && h.fill_port_cycles > 0, "ports idle: {h:?}");
+    assert!(r.counters.l2_sectors_from_tex > 0);
+}
+
+/// Per-tensor bypass routes a tensor's reads around the L1 at full weight:
+/// bypassing everything must reproduce the L2 traffic of a zero-byte L1
+/// (nothing is filtered), while still counting L1-level accesses.
+#[test]
+fn bypassing_every_tensor_reproduces_the_unfiltered_stream() {
+    let base = tiny_cfg(
+        AttentionWorkload::square(1, 2, 256, 64, 16),
+        TraversalRef::sawtooth(),
+        SchedulerKind::Persistent,
+    );
+    let mut all = base.clone();
+    all.hierarchy = HierarchyConfig { enabled: true, ..HierarchyConfig::default() };
+    all.hierarchy.set_bypass_list("q,k,v,o").unwrap();
+    let mut zero = base.clone();
+    zero.hierarchy = HierarchyConfig {
+        enabled: true,
+        l1_bytes: 0,
+        ..HierarchyConfig::default()
+    };
+    // Disable the legacy per-SM L1 model so the zero-capacity reference is
+    // the pure L2 stream, like the bypass path (which skips L1 entirely).
+    let mut all_cfg = all;
+    all_cfg.model_l1 = false;
+    let mut zero_cfg = zero;
+    zero_cfg.model_l1 = false;
+    let (with_bypass, h) = Simulator::new(all_cfg).run_hierarchy();
+    let (unfiltered, _) = Simulator::new(zero_cfg).run_hierarchy();
+    assert_eq!(
+        with_bypass.counters.l2_sectors_from_tex,
+        unfiltered.counters.l2_sectors_from_tex
+    );
+    assert_eq!(h.l1_hits, 0, "bypassed accesses must not hit the L1: {h:?}");
+}
+
+/// The multi-tenant scenario behind `report abl-hierarchy`: two streams
+/// with private L1s sharing one L2. A co-tenant can only evict — each
+/// tenant's shared-run misses are at least its solo-run misses — and both
+/// tenants' counters stay internally consistent.
+#[test]
+fn shared_l2_interference_only_inflates_misses() {
+    let mk = |order: TraversalRef| {
+        let mut c = tiny_cfg(
+            AttentionWorkload::square(1, 2, 512, 64, 16),
+            order,
+            SchedulerKind::Persistent,
+        );
+        // A table big enough to never stall: with stalls out of the
+        // picture each tenant's L2 request stream is identical solo and
+        // shared (tenant lines are disjoint, so co-tenants only consume
+        // capacity), and weighted-LRU inclusion makes interference purely
+        // evictive — the inequality below is then exact, not statistical.
+        c.hierarchy = HierarchyConfig {
+            enabled: true,
+            mshr_entries: 4096,
+            ..HierarchyConfig::default()
+        };
+        c
+    };
+    let a = mk(TraversalRef::sawtooth());
+    let b = mk(TraversalRef::cyclic());
+    let (solo_a, _) = Simulator::new(a.clone()).run_hierarchy();
+    let (solo_b, _) = Simulator::new(b.clone()).run_hierarchy();
+    let (ta, tb) = run_shared_l2(&a, &b);
+    assert!(
+        ta.result.counters.l2_miss_sectors >= solo_a.counters.l2_miss_sectors,
+        "tenant A misses shrank under contention"
+    );
+    assert!(
+        tb.result.counters.l2_miss_sectors >= solo_b.counters.l2_miss_sectors,
+        "tenant B misses shrank under contention"
+    );
+    for t in [&ta, &tb] {
+        let h = &t.hierarchy;
+        assert_eq!(h.l1_hits + h.l1_misses, h.accesses);
+        assert!(h.accesses > 0);
+    }
+}

@@ -10,7 +10,7 @@ use sawtooth_attn::sim::scheduler::SchedulerKind;
 use sawtooth_attn::sim::sweep::{SweepExecutor, SweepGrid};
 use sawtooth_attn::sim::traversal::TraversalRef;
 use sawtooth_attn::sim::workload::AttentionWorkload;
-use sawtooth_attn::sim::{SimConfig, Simulator};
+use sawtooth_attn::sim::{HierarchyConfig, SimConfig, Simulator};
 use sawtooth_attn::util::proptest::check;
 
 fn tiny_cfg(seq: u64, order: TraversalRef, causal: bool, sched: SchedulerKind) -> SimConfig {
@@ -24,6 +24,7 @@ fn tiny_cfg(seq: u64, order: TraversalRef, causal: bool, sched: SchedulerKind) -
         jitter: 0.0,
         seed: 0,
         model_l1: true,
+        hierarchy: HierarchyConfig::default(),
     }
 }
 

@@ -2,11 +2,12 @@
 """Fill EXPERIMENTS.md's measured-numbers block from the bench JSON files.
 
 Reads rust/BENCH_sweep.json, rust/BENCH_reuse.json, rust/BENCH_policy.json,
-rust/BENCH_serve.json and rust/BENCH_decode.json (produced by
-`cargo bench --bench bench_sweep` / `--bench bench_reuse` /
-`--bench bench_policy` / `--bench bench_coordinator` / `--bench bench_decode`,
-or downloaded from the CI artifacts) and rewrites the region between the
-`<!-- BENCH:begin -->` / `<!-- BENCH:end -->` markers in EXPERIMENTS.md.
+rust/BENCH_serve.json, rust/BENCH_decode.json and rust/BENCH_hierarchy.json
+(produced by `cargo bench --bench bench_sweep` / `--bench bench_reuse` /
+`--bench bench_policy` / `--bench bench_coordinator` / `--bench bench_decode`
+/ `--bench bench_hierarchy`, or downloaded from the CI artifacts) and
+rewrites the region between the `<!-- BENCH:begin -->` / `<!-- BENCH:end -->`
+markers in EXPERIMENTS.md.
 
 Usage: python3 scripts/update_experiments_perf.py   (from the repo root,
 or anywhere — paths are resolved relative to this file).
@@ -30,14 +31,15 @@ def load(name):
         return json.load(f)
 
 
-def render(sweep, reuse, policy, serve, decode):
+def render(sweep, reuse, policy, serve, decode, hierarchy):
     lines = []
-    if all(x is None for x in (sweep, reuse, policy, serve, decode)):
+    if all(x is None for x in (sweep, reuse, policy, serve, decode, hierarchy)):
         lines.append(
             "*No measured numbers yet: run `make bench-perf` on a ≥8-core "
             "host (or download the CI `BENCH_sweep`/`BENCH_reuse`/"
-            "`BENCH_policy`/`BENCH_serve`/`BENCH_decode` artifacts into "
-            "`rust/`) and re-run `python3 scripts/update_experiments_perf.py`.*"
+            "`BENCH_policy`/`BENCH_serve`/`BENCH_decode`/`BENCH_hierarchy` "
+            "artifacts into `rust/`) and re-run "
+            "`python3 scripts/update_experiments_perf.py`.*"
         )
         return lines
     if sweep is not None:
@@ -175,6 +177,34 @@ def render(sweep, reuse, policy, serve, decode):
                 decode["exact_paged_identical"],
             )
         )
+    if hierarchy is not None:
+        if lines:
+            lines.append("")
+        lines.append(
+            "Hierarchy level (`bench_hierarchy`, %s; L2-from-tex sectors "
+            "with the per-SM L1/MSHR model on vs off):" % hierarchy["grid"]
+        )
+        lines.append("")
+        lines.append(
+            "| order | L2 from tex (off) | L2 from tex (on) | L1 filtered "
+            "| sector hit % | MSHR merges | sim overhead |"
+        )
+        lines.append("|---|---|---|---|---|---|---|")
+        for order in ("cyclic", "sawtooth"):
+            if f"{order}_off_l2_from_tex" not in hierarchy:
+                continue
+            lines.append(
+                "| %s | %d | %d | %.1f%% | %.1f%% | %d | %.2fx |"
+                % (
+                    order,
+                    hierarchy[f"{order}_off_l2_from_tex"],
+                    hierarchy[f"{order}_on_l2_from_tex"],
+                    100.0 * hierarchy[f"{order}_l1_filter_rate"],
+                    hierarchy[f"{order}_l1_sector_hit_pct"],
+                    hierarchy[f"{order}_mshr_merges"],
+                    hierarchy[f"{order}_sim_overhead"],
+                )
+            )
     return lines
 
 
@@ -191,6 +221,7 @@ def main():
             load("BENCH_policy.json"),
             load("BENCH_serve.json"),
             load("BENCH_decode.json"),
+            load("BENCH_hierarchy.json"),
         )
     )
     EXPERIMENTS.write_text(head + BEGIN + "\n" + block + "\n" + END + tail)
