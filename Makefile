@@ -18,7 +18,8 @@ bench:
 bench-perf:
 	cd rust && cargo bench --bench bench_sweep && cargo bench --bench bench_reuse \
 		&& cargo bench --bench bench_policy && cargo bench --bench bench_coordinator \
-		&& cargo bench --bench bench_decode && cargo bench --bench bench_hierarchy
+		&& cargo bench --bench bench_decode && cargo bench --bench bench_hierarchy \
+		&& cargo bench --bench bench_shard
 	python3 scripts/update_experiments_perf.py
 
 # Lower the Pallas/JAX attention variants to HLO text + manifest.tsv.

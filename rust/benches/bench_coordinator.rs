@@ -12,6 +12,7 @@ use std::time::{Duration, Instant};
 use sawtooth_attn::config::{PolicyConfig, QueueConfig, QueueMode, ServeConfig};
 use sawtooth_attn::coordinator::{AttentionRequest, Engine, EngineStats};
 use sawtooth_attn::runtime::default_artifacts_dir;
+use sawtooth_attn::sim::shard::ShardConfig;
 use sawtooth_attn::sim::traversal::TraversalRef;
 use sawtooth_attn::util::rng::Rng;
 
@@ -47,6 +48,7 @@ fn serve_cfg(mode: QueueMode) -> ServeConfig {
             max_batch_total_tokens: 4 * 131_072, // four seq-512 requests
             ..QueueConfig::default()
         },
+        shard: ShardConfig::default(),
     }
 }
 

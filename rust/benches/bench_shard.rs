@@ -1,0 +1,131 @@
+//! Shard-planner benchmark: the multi-GPU scale-out subsystem on the
+//! abl-shard scaling shape (B=1, H=8, S=32K, D=64, T=64 — 64 MiB of KV
+//! against each chip's 24 MiB L2). For 2/4/8 shards along both pure axes
+//! it reports the straggler chip's miss count, the collective volume, and
+//! the modeled end-to-end time (straggler + collective — the same
+//! reduction the policy engine scores), plus the axis-flip check on the
+//! 4-way MQA shape over cx7. Emits `BENCH_shard.json` (in the crate
+//! directory), folded into EXPERIMENTS.md §Sharding by
+//! `scripts/update_experiments_perf.py`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use sawtooth_attn::gb10::{DeviceSpec, FabricModel};
+use sawtooth_attn::sim::shard::{ShardAxis, ShardConfig, ShardExecutor, ShardReport};
+use sawtooth_attn::sim::sweep::SweepExecutor;
+use sawtooth_attn::sim::throughput::{estimate, PerfProfile};
+use sawtooth_attn::sim::SimConfig;
+use sawtooth_attn::AttentionWorkload;
+
+fn main() {
+    println!("== bench_shard: multi-GPU planner (B=1 H=8 S=32K D=64 T=64, KV 64 MiB) ==");
+
+    let exec = Arc::new(SweepExecutor::host_sized());
+    let shexec = ShardExecutor::new(exec);
+    let dev = DeviceSpec::gb10();
+    let profile = PerfProfile::cutile();
+
+    let run = |w: &AttentionWorkload, shard: ShardConfig| -> ShardReport {
+        let mut cfg = SimConfig::cuda_study(w.clone());
+        cfg.shard = shard;
+        shexec.run(&cfg).expect("bench plans are valid")
+    };
+    // Straggler chip wall-clock plus the collective term.
+    let end_to_end = |r: &ShardReport| -> f64 {
+        let straggler = r
+            .shard_workloads
+            .iter()
+            .zip(&r.per_shard)
+            .map(|(w, s)| estimate(w, &dev, &s.counters, &profile).time_s)
+            .fold(0.0f64, f64::max);
+        straggler + r.collective.time_s
+    };
+
+    let w = AttentionWorkload::square(1, 8, 32 * 1024, 64, 64);
+    let base = run(&w, ShardConfig::default());
+    let base_t = end_to_end(&base);
+    println!(
+        "bench shard/1x-: misses {} time {:.6}s (single chip baseline)",
+        base.reduced.counters.l2_miss_sectors, base_t
+    );
+
+    let mut entries: Vec<String> = vec![
+        "\"bench\": \"shard\"".to_string(),
+        "\"grid\": \"B=1 H=8 S=32K D=64 T=64 MHA on GB10 x N (nvlink-c2c)\"".to_string(),
+        format!("\"unsharded_misses\": {}", base.reduced.counters.l2_miss_sectors),
+        format!("\"unsharded_time_s\": {base_t:.9}"),
+    ];
+    for axis in [ShardAxis::Head, ShardAxis::Seq] {
+        for shards in [2u32, 4, 8] {
+            let t0 = Instant::now();
+            let r = run(&w, ShardConfig::ways(shards, axis));
+            let sim_s = t0.elapsed().as_secs_f64();
+            let time = end_to_end(&r);
+            let speedup = base_t / time;
+            assert!(r.collective.bytes > 0, "{shards}x{axis}: free collective");
+            println!(
+                "bench shard/{shards}x{axis}: straggler misses {} collective {} B ({}) \
+                 time {:.6}s speedup {speedup:.2}x  sim {sim_s:.3}s",
+                r.max_shard_misses(),
+                r.collective.bytes,
+                r.collective.kind,
+                time,
+            );
+            entries.push(format!(
+                "\"{axis}_{shards}_straggler_misses\": {}",
+                r.max_shard_misses()
+            ));
+            entries.push(format!(
+                "\"{axis}_{shards}_collective_bytes\": {}",
+                r.collective.bytes
+            ));
+            entries.push(format!("\"{axis}_{shards}_time_s\": {time:.9}"));
+            entries.push(format!("\"{axis}_{shards}_speedup\": {speedup:.3}"));
+        }
+    }
+    // Widening the split must beat the single chip on this L2-exceeding
+    // shape: the collective stays in the microseconds on nvlink-c2c.
+    let head8 = entries
+        .iter()
+        .find(|e| e.starts_with("\"head_8_speedup\""))
+        .unwrap();
+    let head8_speedup: f64 = head8.split(':').nth(1).unwrap().trim().parse().unwrap();
+    assert!(head8_speedup > 1.0, "8-way head split slower than one chip");
+
+    // Axis flip on the 4-way MQA shape over cx7 (see `report abl-shard`):
+    // head-wise wins the short KV cache, sequence-wise the long one.
+    let fabric = FabricModel::cx7();
+    let mut winners = Vec::new();
+    for kv in [2u64 * 1024, 128 * 1024] {
+        let mqa = AttentionWorkload::square(1, 8, 2048, 64, 64)
+            .with_kv_heads(1)
+            .with_kv_len(kv);
+        let mk = |axis| {
+            let mut shard = ShardConfig::ways(4, axis);
+            shard.fabric = fabric.clone();
+            end_to_end(&run(&mqa, shard))
+        };
+        let (th, ts) = (mk(ShardAxis::Head), mk(ShardAxis::Seq));
+        let winner = if th <= ts { "head" } else { "seq" };
+        println!(
+            "bench shard/flip kv={}K: head {:.6}s seq {:.6}s -> {winner}",
+            kv / 1024,
+            th,
+            ts
+        );
+        winners.push((kv, winner));
+    }
+    assert_eq!(winners[0].1, "head", "short KV must favor the head split");
+    assert_eq!(winners[1].1, "seq", "long KV must favor the seq split");
+    entries.push(format!("\"flip_short_kv_winner\": \"{}\"", winners[0].1));
+    entries.push(format!("\"flip_long_kv_winner\": \"{}\"", winners[1].1));
+
+    let json = format!("{{\n  {}\n}}\n", entries.join(",\n  "));
+    let path = "BENCH_shard.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    print!("{json}");
+}

@@ -5,12 +5,14 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::cost::{parse_objective, MinMisses, Objective};
-use crate::gb10::DeviceSpec;
+use crate::gb10::{DeviceSpec, FabricModel};
 use crate::sim::kernel_model::KernelVariant;
 use crate::sim::scheduler::SchedulerKind;
+use crate::sim::shard::{ShardAxis, ShardConfig};
 use crate::sim::traversal::TraversalRef;
 use crate::sim::workload::AttentionWorkload;
 use crate::sim::{HierarchyConfig, SimConfig};
+use crate::util::unknown_value;
 
 use super::{Config, Value};
 
@@ -28,6 +30,9 @@ pub struct SimRunConfig {
     /// Per-SM L1/MSHR/port level (`[hierarchy]` section; disabled by
     /// default, which keeps the legacy L2-only model bit for bit).
     pub hierarchy: HierarchyConfig,
+    /// Multi-GPU sharding (`[shard]` section; one shard by default, which
+    /// keeps the single-chip model bit for bit).
+    pub shard: ShardConfig,
 }
 
 impl Default for SimRunConfig {
@@ -42,8 +47,43 @@ impl Default for SimRunConfig {
             jitter: 0.0,
             seed: 0,
             hierarchy: HierarchyConfig::default(),
+            shard: ShardConfig::default(),
         }
     }
+}
+
+/// Read the `[shard]` section into a [`ShardConfig`]. Like
+/// [`hierarchy_from_config`], every key is also accepted with a `sim.`
+/// prefix (`[sim.shard]` sections and `--set sim.shard.*` overrides),
+/// which takes precedence over the bare spelling. Whether the config can
+/// actually partition a workload is checked separately with
+/// [`ShardConfig::validate_for`] once the workload is known.
+pub fn shard_from_config(c: &Config) -> Result<ShardConfig> {
+    let d = ShardConfig::default();
+    let pick = |k: &str| -> String {
+        let sim = format!("sim.shard.{k}");
+        if c.get(&sim).is_some() {
+            sim
+        } else {
+            format!("shard.{k}")
+        }
+    };
+    let shards = c.int(&pick("shards"), d.shards as i64);
+    if shards < 1 {
+        bail!("shard.shards must be >= 1");
+    }
+    let axis_str = c.str(&pick("axis"), "head");
+    let axis: ShardAxis =
+        axis_str.parse().map_err(|e| anyhow::anyhow!("shard.axis: {e}"))?;
+    let fabric = match c.str(&pick("fabric"), d.fabric.name).as_str() {
+        "nvlink-c2c" => FabricModel::nvlink_c2c(),
+        "cx7" => FabricModel::cx7(),
+        other => {
+            return Err(unknown_value("fabric", other, ["nvlink-c2c", "cx7"]))
+                .context("shard.fabric")
+        }
+    };
+    Ok(ShardConfig { shards: shards as u32, axis, fabric })
 }
 
 /// Read the `[hierarchy]` section into a [`HierarchyConfig`]. Every key is
@@ -145,9 +185,14 @@ impl SimRunConfig {
             jitter: c.float("sim.jitter", 0.0),
             seed: c.int("sim.seed", 0) as u64,
             hierarchy: HierarchyConfig::default(),
+            shard: ShardConfig::default(),
         };
         let hierarchy = hierarchy_from_config(c, cfg.device().sector_bytes)?;
-        Ok(SimRunConfig { hierarchy, ..cfg })
+        let shard = shard_from_config(c)?;
+        shard
+            .validate_for(&cfg.workload)
+            .map_err(|e| anyhow::anyhow!("shard: {e}"))?;
+        Ok(SimRunConfig { hierarchy, shard, ..cfg })
     }
 
     pub fn device(&self) -> DeviceSpec {
@@ -171,6 +216,7 @@ impl SimRunConfig {
             seed: self.seed,
             model_l1: true,
             hierarchy: self.hierarchy.clone(),
+            shard: self.shard.clone(),
         }
     }
 }
@@ -395,6 +441,10 @@ pub struct ServeConfig {
     /// Intake-queue knobs (`[queue]` section): mode, admission limits,
     /// dispatch heuristic.
     pub queue: QueueConfig,
+    /// Multi-GPU shard plan the policy engine scores alongside the
+    /// single-chip plan (`[shard]` section; disabled — one shard — by
+    /// default, which keeps every serving decision byte-identical).
+    pub shard: ShardConfig,
 }
 
 impl Default for ServeConfig {
@@ -409,6 +459,7 @@ impl Default for ServeConfig {
             warmup: false,
             policy: PolicyConfig::default(),
             queue: QueueConfig::default(),
+            shard: ShardConfig::default(),
         }
     }
 }
@@ -428,6 +479,7 @@ impl ServeConfig {
             warmup: c.bool("serve.warmup", d.warmup),
             policy: PolicyConfig::from_config(c)?,
             queue: QueueConfig::from_config(c)?,
+            shard: shard_from_config(c)?,
         };
         if cfg.max_batch == 0 || cfg.queue_depth == 0 {
             bail!("serve.max_batch and serve.queue_depth must be >= 1");
@@ -652,6 +704,65 @@ mod tests {
         let c = Config::parse("[hierarchy]\nbypass = \"q,w\"").unwrap();
         let msg = format!("{:#}", SimRunConfig::from_config(&c).unwrap_err());
         assert!(msg.contains("hierarchy.bypass"), "{msg}");
+    }
+
+    #[test]
+    fn shard_section_parses_and_defaults_off() {
+        // Absent section: one shard, and the SimConfig is byte-identical
+        // to one built before the field existed (Default everywhere).
+        let c = Config::parse("").unwrap();
+        let s = SimRunConfig::from_config(&c).unwrap();
+        assert_eq!(s.shard, ShardConfig::default());
+        assert!(!s.shard.enabled());
+        assert_eq!(s.to_sim_config().shard.key_fields(), None);
+
+        let c = Config::parse("[sim]\nheads = 8\n[shard]\nshards = 4\naxis = seq\nfabric = cx7")
+            .unwrap();
+        let s = SimRunConfig::from_config(&c).unwrap();
+        assert_eq!(s.shard.shards, 4);
+        assert_eq!(s.shard.axis, ShardAxis::Seq);
+        assert_eq!(s.shard.fabric, FabricModel::cx7());
+        assert_eq!(s.to_sim_config().shard, s.shard);
+
+        // Hybrid axis spelling, and `sim.shard.*` overrides win.
+        let mut c = Config::parse("[sim]\nheads = 8\n[shard]\nshards = 4\naxis = \"hybrid:2x2\"")
+            .unwrap();
+        assert_eq!(
+            SimRunConfig::from_config(&c).unwrap().shard.axis,
+            ShardAxis::Hybrid { head_ways: 2, seq_ways: 2 }
+        );
+        c.set_override("sim.shard.axis=head").unwrap();
+        assert_eq!(SimRunConfig::from_config(&c).unwrap().shard.axis, ShardAxis::Head);
+    }
+
+    #[test]
+    fn shard_section_rejects_bad_values() {
+        let c = Config::parse("[shard]\nshards = 0").unwrap();
+        assert!(SimRunConfig::from_config(&c).is_err());
+        let c = Config::parse("[shard]\nshards = 2\naxis = spiral").unwrap();
+        let msg = format!("{:#}", SimRunConfig::from_config(&c).unwrap_err());
+        assert!(msg.contains("shard.axis"), "{msg}");
+        assert!(msg.contains("unknown shard axis 'spiral'"), "{msg}");
+        let c = Config::parse("[shard]\nshards = 2\nfabric = carrier-pigeon").unwrap();
+        let msg = format!("{:#}", SimRunConfig::from_config(&c).unwrap_err());
+        assert!(msg.contains("shard.fabric"), "{msg}");
+        assert!(msg.contains("nvlink-c2c"), "must list valid fabrics: {msg}");
+        // A config that cannot partition the workload is caught at parse
+        // time with the shard validator's message.
+        let c = Config::parse("[sim]\nheads = 2\n[shard]\nshards = 4\naxis = head").unwrap();
+        let msg = format!("{:#}", SimRunConfig::from_config(&c).unwrap_err());
+        assert!(msg.contains("head_ways 4 must divide heads (2)"), "{msg}");
+    }
+
+    #[test]
+    fn serve_config_carries_shard_section() {
+        let c = Config::parse("[sim]\nheads = 4\n[shard]\nshards = 2\naxis = head").unwrap();
+        let s = ServeConfig::from_config(&c).unwrap();
+        assert!(s.shard.enabled());
+        assert_eq!(s.shard.shards, 2);
+        // No [shard] section: single-chip serving, byte for byte.
+        let s = ServeConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(s.shard, ShardConfig::default());
     }
 
     #[test]

@@ -25,6 +25,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::gb10::DeviceSpec;
 use crate::sim::kernel_model::KernelVariant;
 use crate::sim::scheduler::SchedulerKind;
+use crate::sim::shard::{ShardAxis, ShardConfig, ShardPlan};
 use crate::sim::sweep::SweepExecutor;
 use crate::sim::throughput::{estimate, PerfProfile};
 use crate::sim::traversal::{self, TraversalRef};
@@ -32,8 +33,10 @@ use crate::sim::workload::AttentionWorkload;
 use crate::sim::{HierarchyConfig, SimConfig};
 use crate::util::unknown_value;
 
-/// GB10 estimate of one traversal order for one workload shape, produced
-/// by the simulator + calibrated throughput model.
+/// GB10 estimate of one `(traversal, shard plan)` for one workload shape,
+/// produced by the simulator + calibrated throughput model. Unsharded
+/// estimates carry `shards = 1`, `shard_axis = None`, and zero collective
+/// terms — exactly what [`compute_cost_report`] produces.
 #[derive(Clone, Debug)]
 pub struct TraversalEstimate {
     pub order: TraversalRef,
@@ -43,6 +46,24 @@ pub struct TraversalEstimate {
     /// `baseline.time_s / self.time_s` — > 1 when this traversal is
     /// estimated faster than the cyclic baseline.
     pub speedup_vs_baseline: f64,
+    /// Shard count of the plan this estimate assumes (1 = unsharded).
+    pub shards: u32,
+    /// Partition axis when sharded; `None` for the unsharded estimate.
+    pub shard_axis: Option<ShardAxis>,
+    /// Aggregate fabric bytes of the plan's collective (0 unsharded).
+    pub collective_bytes: u64,
+    /// Modeled collective wall-clock folded into `time_s` (0 unsharded).
+    pub collective_s: f64,
+}
+
+impl TraversalEstimate {
+    /// `"4xseq"`-style plan label; `"1"` for the unsharded estimate.
+    pub fn shard_label(&self) -> String {
+        match self.shard_axis {
+            Some(axis) if self.shards > 1 => format!("{}x{axis}", self.shards),
+            _ => "1".to_string(),
+        }
+    }
 }
 
 /// The full cost picture for one (shape, L2 capacity): the cyclic baseline
@@ -218,6 +239,7 @@ fn probe_config(w: &AttentionWorkload, dev: &DeviceSpec, order: TraversalRef) ->
         seed: 0,
         model_l1: true,
         hierarchy: HierarchyConfig::default(),
+        shard: ShardConfig::default(),
     }
 }
 
@@ -254,6 +276,10 @@ pub fn compute_cost_report(
         time_s: reports[i].time_s,
         l2_miss_sectors: results[i].counters.l2_miss_sectors,
         speedup_vs_baseline: reports[i].speedup_over(&reports[bi]),
+        shards: 1,
+        shard_axis: None,
+        collective_bytes: 0,
+        collective_s: 0.0,
     };
     CostReport {
         baseline: mk(bi, TraversalRef::cyclic()),
@@ -263,6 +289,73 @@ pub fn compute_cost_report(
             .map(|(i, o)| mk(i, o.clone()))
             .collect(),
     }
+}
+
+/// Joint `(traversal, shard plan)` cost report: the cross product of
+/// `candidates` with `shard_specs`, spec-major (every traversal under spec
+/// 0, then spec 1, …). A default (unsharded) spec contributes exactly the
+/// [`compute_cost_report`] candidates — byte-identical estimates — so a
+/// spec list of `[ShardConfig::default()]` reproduces the unsharded report
+/// with its tie-break order intact. The baseline stays single-chip cyclic.
+///
+/// A sharded estimate simulates every shard of the plan independently
+/// (through the same capacity-curve cache — identical head shards collapse
+/// to one probe), takes the straggler shard's time, and adds the plan's
+/// analytic collective term; its miss count is the sum over shards. Specs
+/// that cannot partition `w` are skipped.
+pub fn compute_cost_report_sharded(
+    exec: &SweepExecutor,
+    w: &AttentionWorkload,
+    candidates: &[TraversalRef],
+    shard_specs: &[ShardConfig],
+    l2_bytes: u64,
+) -> CostReport {
+    let base = compute_cost_report(exec, w, candidates, l2_bytes);
+    if shard_specs.iter().all(|s| !s.enabled()) {
+        return base;
+    }
+    let dev = DeviceSpec::gb10_with_l2(l2_bytes);
+    let profile = PerfProfile::cutile();
+    let mut all: Vec<TraversalEstimate> = Vec::new();
+    for spec in shard_specs {
+        if !spec.enabled() {
+            all.extend(base.candidates.iter().cloned());
+            continue;
+        }
+        let plan = match ShardPlan::new(w, spec) {
+            Ok(p) => p,
+            Err(_) => continue,
+        };
+        let collective = plan.collective(w, &spec.fabric);
+        for order in candidates {
+            let cfgs: Vec<SimConfig> = plan
+                .shards
+                .iter()
+                .map(|sw| probe_config(sw, &dev, order.clone()))
+                .collect();
+            let results = exec.run_at_capacity_all(&cfgs);
+            let mut straggler_s = 0.0f64;
+            let mut misses = 0u64;
+            for (sw, r) in plan.shards.iter().zip(&results) {
+                let rep = estimate(sw, &dev, &r.counters, &profile);
+                straggler_s = straggler_s.max(rep.time_s);
+                misses += r.counters.l2_miss_sectors;
+            }
+            let time_s = straggler_s + collective.time_s;
+            all.push(TraversalEstimate {
+                order: order.clone(),
+                tflops: w.flops() / time_s / 1e12,
+                time_s,
+                l2_miss_sectors: misses,
+                speedup_vs_baseline: base.baseline.time_s / time_s,
+                shards: plan.shards.len() as u32,
+                shard_axis: Some(plan.axis),
+                collective_bytes: collective.bytes,
+                collective_s: collective.time_s,
+            });
+        }
+    }
+    CostReport { baseline: base.baseline, candidates: all }
 }
 
 #[cfg(test)]
@@ -280,6 +373,10 @@ mod tests {
             time_s,
             l2_miss_sectors: misses,
             speedup_vs_baseline: 1.0,
+            shards: 1,
+            shard_axis: None,
+            collective_bytes: 0,
+            collective_s: 0.0,
         }
     }
 
@@ -378,5 +475,54 @@ mod tests {
         assert_eq!(r.candidates.len(), 1);
         assert_eq!(r.baseline.order, TraversalRef::cyclic());
         assert!(r.baseline.l2_miss_sectors > 0);
+    }
+
+    #[test]
+    fn sharded_report_defaults_to_the_plain_report() {
+        let exec = SweepExecutor::new(1);
+        let w = AttentionWorkload::square(1, 4, 4096, 64, 64);
+        let cands = vec![TraversalRef::cyclic(), TraversalRef::sawtooth()];
+        let plain = compute_cost_report(&exec, &w, &cands, 1 << 20);
+        let sharded =
+            compute_cost_report_sharded(&exec, &w, &cands, &[ShardConfig::default()], 1 << 20);
+        assert_eq!(sharded.candidates.len(), plain.candidates.len());
+        for (a, b) in plain.candidates.iter().zip(&sharded.candidates) {
+            assert_eq!(a.order, b.order);
+            assert_eq!(a.time_s.to_bits(), b.time_s.to_bits());
+            assert_eq!(a.l2_miss_sectors, b.l2_miss_sectors);
+            assert_eq!(b.shards, 1);
+            assert_eq!(b.shard_axis, None);
+            assert_eq!(b.collective_bytes, 0);
+        }
+    }
+
+    #[test]
+    fn sharded_report_joins_plans_with_traversals() {
+        let exec = SweepExecutor::new(1);
+        let w = AttentionWorkload::square(1, 4, 4096, 64, 64);
+        let cands = vec![TraversalRef::cyclic(), TraversalRef::sawtooth()];
+        let specs = vec![
+            ShardConfig::default(),
+            ShardConfig::ways(2, ShardAxis::Head),
+            ShardConfig::ways(2, ShardAxis::Seq),
+        ];
+        let r = compute_cost_report_sharded(&exec, &w, &cands, &specs, 1 << 20);
+        // Spec-major cross product: 3 specs x 2 traversals.
+        assert_eq!(r.candidates.len(), 6);
+        assert_eq!(r.baseline.shards, 1);
+        let head = &r.candidates[2];
+        assert_eq!(head.shards, 2);
+        assert_eq!(head.shard_axis, Some(ShardAxis::Head));
+        let seq = &r.candidates[4];
+        assert_eq!(seq.shard_axis, Some(ShardAxis::Seq));
+        // Both split plans move data over the fabric and fold the cost into
+        // the end-to-end time.
+        assert!(seq.collective_bytes > 0);
+        assert!(seq.collective_s > 0.0);
+        assert!(seq.time_s > seq.collective_s);
+        // A head split of a uniform MHA shape is embarrassingly parallel:
+        // each shard sees a quarter-size problem, so even with the gather
+        // term it beats the single-chip estimate of the same traversal.
+        assert!(head.time_s < r.candidates[0].time_s);
     }
 }

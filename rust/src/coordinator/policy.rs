@@ -29,12 +29,14 @@ use rustc_hash::FxHashMap;
 use crate::config::{PolicyConfig, PolicyOrder, ServeConfig};
 use crate::gb10::DeviceSpec;
 use crate::runtime::{ArtifactKind, ArtifactMeta, Runtime};
+use crate::sim::shard::ShardConfig;
 use crate::sim::sweep::SweepExecutor;
 use crate::sim::traversal::{self, TraversalRef};
 use crate::sim::workload::AttentionWorkload;
 
 use super::cost::{
-    compute_cost_report, default_candidates, CostReport, MinMisses, Objective, TraversalEstimate,
+    compute_cost_report, compute_cost_report_sharded, default_candidates, CostReport, MinMisses,
+    Objective, TraversalEstimate,
 };
 
 /// Largest sequence length the serving path will probe-simulate for a
@@ -89,6 +91,10 @@ type DecisionKey = (AttentionWorkload, u64, String);
 pub struct PolicyEngine {
     exec: Arc<SweepExecutor>,
     candidates: Vec<TraversalRef>,
+    /// Shard plans scored against every candidate traversal. The default
+    /// single-element all-default list keeps the engine byte-identical to
+    /// the pre-shard one (see [`compute_cost_report_sharded`]).
+    shard_specs: Vec<ShardConfig>,
     objective: Arc<dyn Objective>,
     decisions: Mutex<FxHashMap<DecisionKey, PolicyDecision>>,
     computed: AtomicU64,
@@ -137,11 +143,23 @@ impl PolicyEngine {
         PolicyEngine {
             exec,
             candidates,
+            shard_specs: vec![ShardConfig::default()],
             objective,
             decisions: Mutex::new(FxHashMap::default()),
             computed: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
         }
+    }
+
+    /// Rank `(traversal, shard plan)` pairs jointly: every candidate
+    /// traversal is scored once per spec, and decisions pick the winning
+    /// pair. Empty or all-default lists are the unsharded engine — same
+    /// reports, rankings, and explanations, byte for byte.
+    pub fn with_shard_specs(mut self, specs: Vec<ShardConfig>) -> Self {
+        if !specs.is_empty() {
+            self.shard_specs = specs;
+        }
+        self
     }
 
     /// Engine configured from a `[policy]` config section.
@@ -159,6 +177,11 @@ impl PolicyEngine {
 
     pub fn candidates(&self) -> &[TraversalRef] {
         &self.candidates
+    }
+
+    /// Shard plans this engine scores jointly with its candidates.
+    pub fn shard_specs(&self) -> &[ShardConfig] {
+        &self.shard_specs
     }
 
     pub fn executor(&self) -> &Arc<SweepExecutor> {
@@ -184,7 +207,7 @@ impl PolicyEngine {
     /// (no decision memo — the underlying simulations are still memoized
     /// and curve-cached by the probe executor).
     pub fn cost_report_at(&self, w: &AttentionWorkload, l2_bytes: u64) -> CostReport {
-        compute_cost_report(&self.exec, w, &self.candidates, l2_bytes)
+        compute_cost_report_sharded(&self.exec, w, &self.candidates, &self.shard_specs, l2_bytes)
     }
 
     /// [`Self::decide_at`] at GB10's 24 MiB L2.
@@ -219,21 +242,33 @@ impl PolicyEngine {
             l2_bytes >> 20,
             report.baseline.l2_miss_sectors,
         )];
+        // Sharded candidates carry an `@{shards}x{axis}` plan tag; the
+        // unsharded lines keep the exact pre-shard byte format.
+        let tag = |e: &TraversalEstimate| {
+            if e.shards > 1 {
+                format!(" @{}", e.shard_label())
+            } else {
+                String::new()
+            }
+        };
         for (rank, (i, score)) in ranking.iter().enumerate() {
             let e = &report.candidates[*i];
             explanation.push(format!(
-                "#{} {}: {} misses, {:.2} TFLOPS, {:.6} s, {:.2}x vs baseline (score {score})",
+                "#{} {}{}: {} misses, {:.2} TFLOPS, {:.6} s, {:.2}x vs baseline (score {score})",
                 rank + 1,
                 e.order,
+                tag(e),
                 e.l2_miss_sectors,
                 e.tflops,
                 e.time_s,
                 e.speedup_vs_baseline,
             ));
         }
+        let best = &report.candidates[ranking[0].0];
         explanation.push(format!(
-            "winner: {winner} ({:.2}x vs cyclic under {objective})",
-            report.candidates[ranking[0].0].speedup_vs_baseline,
+            "winner: {winner}{} ({:.2}x vs cyclic under {objective})",
+            tag(best),
+            best.speedup_vs_baseline,
         ));
         let decision = PolicyDecision {
             winner,
@@ -308,7 +343,14 @@ impl SchedulePolicy {
     /// `serve.order` fixed behaviour), and the engine takes the `[policy]`
     /// objective/candidates/probe_threads knobs.
     pub fn from_serve_config(cfg: &ServeConfig) -> Self {
-        let engine = Arc::new(PolicyEngine::from_policy_config(&cfg.policy));
+        let mut engine = PolicyEngine::from_policy_config(&cfg.policy);
+        if cfg.shard.enabled() {
+            // Score the configured shard plan jointly with single-chip —
+            // the unsharded spec first, so ties keep the legacy winner.
+            engine = engine
+                .with_shard_specs(vec![ShardConfig::default(), cfg.shard.clone()]);
+        }
+        let engine = Arc::new(engine);
         let mode = match &cfg.policy.order {
             PolicyOrder::Auto => OrderMode::Auto,
             PolicyOrder::Fixed(t) => OrderMode::Fixed(t.clone()),
@@ -624,6 +666,61 @@ mod tests {
         assert_eq!(d.winner, TraversalRef::cyclic());
         assert_eq!(d.winner_estimate().l2_miss_sectors, d.report.baseline.l2_miss_sectors);
         assert!((d.winner_speedup() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn default_shard_specs_leave_decisions_byte_identical() {
+        let w = AttentionWorkload::cuda_study(16 * 1024).with_tile(64);
+        let plain = PolicyEngine::with_executor(
+            Arc::new(MinMisses),
+            pair(),
+            Arc::new(SweepExecutor::new(1)),
+        );
+        let defaulted = PolicyEngine::with_executor(
+            Arc::new(MinMisses),
+            pair(),
+            Arc::new(SweepExecutor::new(1)),
+        )
+        .with_shard_specs(vec![ShardConfig::default()]);
+        let a = plain.decide(&w);
+        let b = defaulted.decide(&w);
+        assert_eq!(a.explanation, b.explanation);
+        assert_eq!(a.ranking, b.ranking);
+        assert_eq!(a.winner, b.winner);
+    }
+
+    #[test]
+    fn engine_ranks_traversal_and_shard_plan_jointly() {
+        use super::super::cost::MaxTflops;
+        use crate::sim::shard::ShardAxis;
+        let engine = PolicyEngine::with_executor(
+            Arc::new(MaxTflops),
+            pair(),
+            Arc::new(SweepExecutor::new(1)),
+        )
+        .with_shard_specs(vec![
+            ShardConfig::default(),
+            ShardConfig::ways(2, ShardAxis::Head),
+            ShardConfig::ways(2, ShardAxis::Seq),
+        ]);
+        assert_eq!(engine.shard_specs().len(), 3);
+        let w = AttentionWorkload::square(1, 4, 4096, 64, 64);
+        let d = engine.decide(&w);
+        // 3 specs x 2 traversals, every pair ranked and explained.
+        assert_eq!(d.ranking.len(), 6);
+        assert_eq!(d.explanation.len(), 6 + 2);
+        assert!(
+            d.explanation.iter().any(|l| l.contains("@2xhead")),
+            "sharded candidates must carry their plan tag: {:#?}",
+            d.explanation
+        );
+        assert!(d.explanation.iter().any(|l| l.contains("@2xseq")));
+        // Each shard sees half the problem, so the straggler finishes in
+        // roughly half the time and the collective term is tiny on
+        // NVLink-C2C: under max-tflops a sharded plan must win.
+        assert!(d.winner_estimate().shards > 1);
+        assert!(d.winner_estimate().collective_bytes > 0);
+        assert!(d.explanation.last().unwrap().contains('@'), "winner line carries the plan tag");
     }
 
     #[test]

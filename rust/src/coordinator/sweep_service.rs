@@ -39,7 +39,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use rustc_hash::FxHashMap;
 
 use crate::config::SweepServiceConfig;
-use crate::gb10::DeviceSpec;
+use crate::gb10::{DeviceSpec, FabricModel};
 use crate::sim::sweep::SweepExecutor;
 use crate::sim::workload::{AttentionWorkload, KvLayout};
 use crate::sim::{SimConfig, SweepSpec};
@@ -442,6 +442,17 @@ fn serve_one_turn(
 // `hier_mshr=`, `hier_fill_port=` and `hier_bypass=` (comma-joined tensor
 // letters, emitted only when any tensor bypasses) carry the geometry.
 // L2-only configs never emit them.
+//
+// Multi-GPU sharding rides on `shard*` keys, again only off-default:
+// `shards=N` (> 1) turns it on, `shard_axis=` takes any
+// [`ShardAxis`](crate::sim::shard::ShardAxis) spelling
+// (`head | seq | hybrid:<h>x<s>`), and `shard_fabric=` (`nvlink-c2c` |
+// `cx7`) is emitted only when off the NVLink-C2C default — it is excluded
+// from `ConfigKey` anyway, like the device bandwidth fields. A config the
+// shard spec cannot partition is rejected at parse time with
+// [`ShardConfig::validate_for`](crate::sim::shard::ShardConfig::validate_for)'s
+// message. Unsharded configs never emit shard keys, so every pre-shard
+// submission keeps its exact byte representation.
 
 /// Serialize a spec to the line protocol. Round-trips through
 /// [`parse_spec`] to configs with identical `ConfigKey` identity.
@@ -513,6 +524,14 @@ pub fn format_spec(spec: &SweepSpec) -> String {
             let bypass = h.bypass_list();
             if !bypass.is_empty() {
                 out.push_str(&format!(" hier_bypass={bypass}"));
+            }
+        }
+        // Shard keys only when sharding is on — same byte-compat rule.
+        let sh = &cfg.shard;
+        if sh.enabled() {
+            out.push_str(&format!(" shards={} shard_axis={}", sh.shards, sh.axis));
+            if sh.fabric != FabricModel::nvlink_c2c() {
+                out.push_str(&format!(" shard_fabric={}", sh.fabric.name));
             }
         }
         out.push('\n');
@@ -654,6 +673,19 @@ fn parse_config_line(rest: &str) -> Result<SimConfig> {
             "hier_bypass" => {
                 cfg.hierarchy.set_bypass_list(v).map_err(|e| anyhow!("key {k}: {e}"))?
             }
+            "shards" => cfg.shard.shards = parse_num(k, v)?,
+            "shard_axis" => {
+                cfg.shard.axis = v.parse().map_err(|e| anyhow!("key {k}: {e}"))?
+            }
+            "shard_fabric" => {
+                cfg.shard.fabric = match v {
+                    "nvlink-c2c" => FabricModel::nvlink_c2c(),
+                    "cx7" => FabricModel::cx7(),
+                    other => bail!(
+                        "key {k}: unknown fabric '{other}' (valid: nvlink-c2c, cx7)"
+                    ),
+                }
+            }
             other => bail!("unknown config key '{other}'"),
         }
     }
@@ -686,6 +718,9 @@ fn parse_config_line(rest: &str) -> Result<SimConfig> {
         bail!("sms and sector_bytes must be positive");
     }
     cfg.hierarchy.validate(cfg.device.sector_bytes).map_err(|e| anyhow!(e))?;
+    cfg.shard
+        .validate_for(&cfg.workload)
+        .map_err(|e| anyhow!("shard: {e}"))?;
     Ok(cfg)
 }
 
@@ -911,6 +946,50 @@ mod tests {
             "config device=tiny seq=512 tile=16 hier=true hier_sector_bytes=48\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn protocol_round_trips_shard_keys() {
+        use crate::sim::shard::{ShardAxis, ShardConfig};
+        let mut cfg = SimConfig::cuda_study(AttentionWorkload::square(1, 4, 512, 64, 16));
+        cfg.device = DeviceSpec::tiny();
+        cfg.shard = ShardConfig {
+            shards: 4,
+            axis: ShardAxis::Hybrid { head_ways: 2, seq_ways: 2 },
+            fabric: FabricModel::cx7(),
+        };
+        let spec = SweepSpec::new("shard", vec![cfg]);
+        let text = format_spec(&spec);
+        assert!(text.contains(" shards=4 shard_axis=hybrid:2x2"), "{text}");
+        assert!(text.contains(" shard_fabric=cx7"), "{text}");
+        let parsed = parse_spec(&text).unwrap();
+        assert_eq!(parsed.configs[0].shard, spec.configs[0].shard);
+        assert_eq!(ConfigKey::of(&parsed.configs[0]), ConfigKey::of(&spec.configs[0]));
+        // The default fabric is implied, not emitted.
+        let mut cfg = SimConfig::cuda_study(AttentionWorkload::square(1, 4, 512, 64, 16));
+        cfg.device = DeviceSpec::tiny();
+        cfg.shard = ShardConfig::ways(2, ShardAxis::Seq);
+        let text = format_spec(&SweepSpec::new("shard2", vec![cfg.clone()]));
+        assert!(text.contains(" shards=2 shard_axis=seq"), "{text}");
+        assert!(!text.contains("shard_fabric"), "{text}");
+        assert_eq!(parse_spec(&text).unwrap().configs[0].shard, cfg.shard);
+        // Unsharded submissions keep their exact pre-shard bytes.
+        let legacy = tiny_spec("legacy", &[256]);
+        assert!(!format_spec(&legacy).contains("shard"), "{}", format_spec(&legacy));
+        // Bad axes and unpartitionable specs are rejected at parse time.
+        let err = parse_spec("config device=tiny seq=512 tile=16 shard_axis=spiral\n")
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown shard axis 'spiral'"), "{err:#}");
+        let err = parse_spec(
+            "config device=tiny seq=512 tile=16 heads=2 shards=4 shard_axis=head\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("head_ways 4 must divide heads (2)"), "{err:#}");
+        let err = parse_spec(
+            "config device=tiny seq=512 tile=16 shard_fabric=smoke-signal\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown fabric 'smoke-signal'"), "{err:#}");
     }
 
     #[test]

@@ -88,6 +88,41 @@ impl DeviceSpec {
     }
 }
 
+/// Analytic model of the inter-chip fabric connecting shards in a
+/// multi-GPU deployment (`sim/shard/`). Collectives are costed with the
+/// standard ring/tree terms: a per-hop latency plus the serialized bytes
+/// over the per-direction link bandwidth.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FabricModel {
+    pub name: &'static str,
+    /// Per-direction, per-link bandwidth in bytes/s.
+    pub link_bw: f64,
+    /// Per-hop (per collective step) latency in seconds.
+    pub link_latency_s: f64,
+}
+
+impl FabricModel {
+    /// NVLink-C2C-class chip-to-chip fabric (GB10 pairs two dies at
+    /// ~600 GB/s aggregate; per-direction ~300 GB/s, sub-microsecond hop).
+    pub const fn nvlink_c2c() -> Self {
+        FabricModel { name: "nvlink-c2c", link_bw: 300.0e9, link_latency_s: 0.5e-6 }
+    }
+
+    /// ConnectX-7-class RDMA fabric for scale-out past one chassis
+    /// (200 Gb/s ≈ 25 GB/s per direction, ~3 µs hop).
+    pub const fn cx7() -> Self {
+        FabricModel { name: "cx7", link_bw: 25.0e9, link_latency_s: 3.0e-6 }
+    }
+
+    /// Seconds to move `bytes` through `steps` serialized fabric hops.
+    pub fn transfer_s(&self, bytes: u64, steps: u32) -> f64 {
+        if bytes == 0 && steps == 0 {
+            return 0.0;
+        }
+        bytes as f64 / self.link_bw + steps as f64 * self.link_latency_s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,5 +152,15 @@ mod tests {
     #[test]
     fn l2_override() {
         assert_eq!(DeviceSpec::gb10_with_l2(1 << 20).l2_bytes, 1 << 20);
+    }
+
+    #[test]
+    fn fabric_transfer_is_latency_plus_serialization() {
+        let f = FabricModel::nvlink_c2c();
+        assert_eq!(f.transfer_s(0, 0), 0.0);
+        let t = f.transfer_s(300_000_000_000, 2);
+        // 300 GB over 300 GB/s = 1 s, plus two 0.5 µs hops.
+        assert!((t - (1.0 + 2.0 * 0.5e-6)).abs() < 1e-12);
+        assert!(FabricModel::cx7().link_bw < f.link_bw);
     }
 }

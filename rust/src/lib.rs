@@ -15,6 +15,11 @@
 //!   CLI, config files, sweeps and the serving policy.
 //! * [`l2model`] — the paper's closed-form L2 sector-access model plus a
 //!   Mattson reuse-distance (LRU stack) profiler.
+//! * [`sim::shard`] — multi-GPU scale-out planning: head/sequence/hybrid
+//!   partitions of a workload ([`ShardPlan`]), per-shard simulation fan-out
+//!   ([`ShardExecutor`]), and an analytic collective cost model over a
+//!   [`FabricModel`]; the policy engine ranks `(traversal, shard plan)`
+//!   pairs jointly.
 //! * [`runtime`] — loads the AOT artifact manifest produced by
 //!   `python/compile/aot.py` and executes artifacts through a host
 //!   reference backend (hermetic: synthesizes the serving grid when no
@@ -41,7 +46,8 @@ pub mod runtime;
 pub mod sim;
 pub mod util;
 
-pub use gb10::DeviceSpec;
+pub use gb10::{DeviceSpec, FabricModel};
+pub use sim::shard::{ShardAxis, ShardConfig, ShardExecutor, ShardPlan, ShardReport};
 pub use sim::sweep::{SweepExecutor, SweepSpec};
 pub use sim::traversal::{Traversal, TraversalRef, TraversalRegistry};
 pub use sim::workload::{AttentionWorkload, KvLayout};

@@ -121,6 +121,14 @@ COMMON OPTIONS:
                          only, reproducing the L2-only model exactly); finer
                          knobs via --set sim.hierarchy.* or a [hierarchy]
                          config section (see configs/serve.toml)
+  --shards N             multi-GPU shard count (default 1 = single chip;
+                         simulate reduces over the per-shard runs, and
+                         policy explain ranks the N-way plan jointly with
+                         single-chip; `report abl-shard` sweeps it)
+  --shard-axis AXIS      partition axis: head | seq | hybrid:<h>x<s>
+  --shard-fabric NAME    inter-shard fabric model: nvlink-c2c | cx7; finer
+                         knobs via --set sim.shard.* or a [shard] config
+                         section (see configs/serve.toml)
   --threads N            sweep worker threads for report / sweep-serve
                          (default: host cores; output is byte-identical
                          at any N)
@@ -211,6 +219,9 @@ fn build_config(flags: &[(String, String)]) -> Result<Config> {
             "causal" => Some(("sim.causal", "true".to_string())),
             "hierarchy" => Some(("hierarchy.enabled", "true".to_string())),
             "l1" => Some(("hierarchy.l1_bytes", v.clone())),
+            "shards" => Some(("shard.shards", v.clone())),
+            "shard-axis" => Some(("shard.axis", v.clone())),
+            "shard-fabric" => Some(("shard.fabric", v.clone())),
             _ => None,
         };
         if let Some((key, val)) = mapped {
@@ -274,6 +285,9 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     let cfg = build_config(&flags)?;
     let run = SimRunConfig::from_config(&cfg)?;
     let sim_cfg = run.to_sim_config();
+    if sim_cfg.shard.enabled() {
+        return simulate_sharded(&run, &sim_cfg);
+    }
     let t0 = std::time::Instant::now();
     let sim = Simulator::new(sim_cfg);
     // With the hierarchy level on, the run also yields L1/MSHR counters and
@@ -344,6 +358,56 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `sawtooth simulate --shards N [--shard-axis AXIS]`: fan the per-shard
+/// simulations out, print the per-shard table, the reduced counters and
+/// the analytic collective term.
+fn simulate_sharded(run: &SimRunConfig, sim_cfg: &sawtooth_attn::sim::SimConfig) -> Result<()> {
+    use sawtooth_attn::ShardExecutor;
+    let t0 = std::time::Instant::now();
+    let exec = std::sync::Arc::new(SweepExecutor::new(1));
+    let report = ShardExecutor::new(exec).run(sim_cfg).map_err(|e| anyhow!("shard: {e}"))?;
+    let elapsed = t0.elapsed();
+    println!("workload: {:?}", run.workload);
+    println!(
+        "shard plan: {} x {} over {} ({} GB/s links)",
+        report.shards(),
+        report.axis,
+        sim_cfg.shard.fabric.name,
+        sim_cfg.shard.fabric.link_bw / 1e9,
+    );
+    let mut t = sawtooth_attn::util::table::Table::new(vec![
+        "shard",
+        "heads",
+        "kv len",
+        "L2 sectors",
+        "L2 misses",
+        "hit rate",
+    ]);
+    for (i, (w, r)) in report.shard_workloads.iter().zip(&report.per_shard).enumerate() {
+        t.row(vec![
+            i.to_string(),
+            w.heads.to_string(),
+            w.kv_len.to_string(),
+            sawtooth_attn::util::table::commas(r.counters.l2_sectors_total()),
+            sawtooth_attn::util::table::commas(r.counters.l2_miss_sectors),
+            format!("{:.2}%", r.counters.l2_hit_rate_pct()),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("-- reduced (all shards) --");
+    println!("l2 miss sectors            = {}", report.reduced.counters.l2_miss_sectors);
+    println!("straggler shard misses     = {}", report.max_shard_misses());
+    if report.replicated_kv_bytes > 0 {
+        println!("replicated KV bytes        = {}", report.replicated_kv_bytes);
+    }
+    println!(
+        "collective: {} bytes in {} steps, {:.6}s modeled",
+        report.collective.bytes, report.collective.steps, report.collective.time_s
+    );
+    println!("sim wall time: {elapsed:?} ({} kv steps)", report.reduced.kv_steps);
+    Ok(())
+}
+
 fn cmd_estimate(args: &[String]) -> Result<()> {
     let (flags, _) = parse_flags(args)?;
     let cfg = build_config(&flags)?;
@@ -411,7 +475,15 @@ fn cmd_policy(args: &[String]) -> Result<()> {
             .context("--probe-threads expects an integer")?
             .unwrap_or(1),
     };
-    let engine = PolicyEngine::from_policy_config(&policy_cfg);
+    let mut engine = PolicyEngine::from_policy_config(&policy_cfg);
+    if run.shard.enabled() {
+        // Joint ranking: the single-chip plan stays first so tied scores
+        // keep the legacy winner; the requested plan rides alongside.
+        engine = engine.with_shard_specs(vec![
+            sawtooth_attn::ShardConfig::default(),
+            run.shard.clone(),
+        ]);
+    }
     let decision = engine.decide_at(&run.workload, l2_bytes);
 
     println!("workload: {:?}", run.workload);
@@ -425,6 +497,7 @@ fn cmd_policy(args: &[String]) -> Result<()> {
     let mut t = sawtooth_attn::util::table::Table::new(vec![
         "rank",
         "traversal",
+        "plan",
         "L2 misses",
         "TFLOPS",
         "time (s)",
@@ -436,6 +509,7 @@ fn cmd_policy(args: &[String]) -> Result<()> {
         t.row(vec![
             (rank + 1).to_string(),
             e.order.name().to_string(),
+            e.shard_label(),
             sawtooth_attn::util::table::commas(e.l2_miss_sectors),
             format!("{:.2}", e.tflops),
             format!("{:.6}", e.time_s),

@@ -26,6 +26,10 @@
 //!                    L1 size sweep × sectored-vs-full-line fills ×
 //!                    sawtooth-vs-cyclic, plus the multi-tenant shared-L2
 //!                    interference scenario (two streams, private L1s).
+//! * `abl-shard`    — the multi-GPU scale-out planner
+//!                    ([`crate::sim::shard`]): shard-count scaling along
+//!                    both pure axes, and the head↔seq axis flip as the
+//!                    collective term grows with the KV cache.
 
 use crate::gb10::DeviceSpec;
 use crate::l2model::reuse::ReuseProfiler;
@@ -591,6 +595,157 @@ pub fn hierarchy_sweep() -> String {
     )
 }
 
+/// `abl-shard` scaling shape: MHA prefill, B=1, H=8, S=32K, D=64, T=64 —
+/// 64 MiB of KV against 24 MiB of L2, so widening the split shrinks the
+/// per-shard footprint back toward residency. Shard counts sweep both pure
+/// axes.
+const SHARD_SCALE_COUNTS: &[u32] = &[1, 2, 4, 8];
+
+/// `abl-shard` flip sweep: kv_len points for the 4-way MQA shape. The head
+/// split replicates the (single-KV-head) cache to every shard — a
+/// collective that grows with kv_len — while the sequence split's O
+/// all-reduce is kv_len-independent, so the winning axis flips inside this
+/// span.
+const SHARD_FLIP_KV_LENS: &[u64] = &[2 * 1024, 8 * 1024, 32 * 1024, 128 * 1024];
+
+/// `abl-shard`: the multi-GPU planner end to end. Two tables:
+///
+/// 1. Shard-count scaling (MHA, both axes): straggler and aggregate
+///    misses, the implied collective, and the modeled end-to-end time
+///    (straggler chip + collective — the same reduction the policy engine
+///    scores).
+/// 2. The axis flip: a 4-way MQA shape over a cx7 fabric, kv_len swept.
+///    Head-wise wins while the replicated KV broadcast is smaller than the
+///    O all-reduce; sequence-wise wins once the KV cache outgrows it — the
+///    FlatAttention-style dataflow/collective co-design, measured.
+pub fn shard_sweep(exec: &SweepExecutor) -> String {
+    use crate::gb10::FabricModel;
+    use crate::sim::shard::{ShardAxis, ShardConfig, ShardExecutor, ShardReport};
+    use crate::sim::throughput::{estimate, PerfProfile};
+    use std::sync::Arc;
+
+    // A private executor sized like the caller's (same rationale as
+    // `policy_sweep`): identical shard shapes deduplicate through its
+    // memoizer, and output is byte-identical at any thread count.
+    let probe =
+        Arc::new(SweepExecutor::new(exec.threads()).with_mattson(exec.mattson_enabled()));
+    let shexec = ShardExecutor::new(probe);
+    let dev = DeviceSpec::gb10();
+    let profile = PerfProfile::cutile();
+    // Straggler chip wall-clock plus the collective term — the end-to-end
+    // time `coordinator::cost` scores for joint (traversal, plan) ranking.
+    let end_to_end = |r: &ShardReport| -> f64 {
+        let straggler = r
+            .shard_workloads
+            .iter()
+            .zip(&r.per_shard)
+            .map(|(w, s)| estimate(w, &dev, &s.counters, &profile).time_s)
+            .fold(0.0f64, f64::max);
+        straggler + r.collective.time_s
+    };
+    let run = |w: &AttentionWorkload, shard: ShardConfig| -> ShardReport {
+        let mut cfg = SimConfig::cuda_study(w.clone());
+        cfg.shard = shard;
+        shexec.run(&cfg).expect("plans validated by construction")
+    };
+    let mib = |bytes: u64| format!("{:.1}", bytes as f64 / (1024.0 * 1024.0));
+
+    // Table 1: shard-count scaling on the MHA shape, both pure axes.
+    let w_scale = AttentionWorkload::square(1, 8, 32 * 1024, 64, 64);
+    let base = run(&w_scale, ShardConfig::default());
+    let base_t = end_to_end(&base);
+    let mut t = Table::new(vec![
+        "shards",
+        "axis",
+        "shard KV MiB",
+        "straggler misses",
+        "sum misses",
+        "collective",
+        "coll MiB",
+        "time (ms)",
+        "vs 1 chip",
+    ]);
+    for &n in SHARD_SCALE_COUNTS {
+        for axis in [ShardAxis::Head, ShardAxis::Seq] {
+            if n == 1 && axis == ShardAxis::Seq {
+                continue; // one shard has no axis
+            }
+            let r = if n == 1 {
+                base.clone()
+            } else {
+                run(&w_scale, ShardConfig::ways(n, axis))
+            };
+            let time = end_to_end(&r);
+            let sw = &r.shard_workloads[0];
+            t.row(vec![
+                n.to_string(),
+                if n == 1 { "-".to_string() } else { axis.to_string() },
+                ((sw.kv_bytes() * sw.batch_kv_heads() as u64) >> 20).to_string(),
+                commas(r.max_shard_misses()),
+                commas(r.reduced.counters.l2_miss_sectors),
+                r.collective.kind.to_string(),
+                mib(r.collective.bytes),
+                format!("{:.3}", time * 1e3),
+                format!("{:.2}x", base_t / time),
+            ]);
+        }
+    }
+
+    // Table 2: the axis flip. 4-way MQA over cx7 (the slower fabric makes
+    // the collective term visible next to the kernel time).
+    let fabric = FabricModel::cx7();
+    let mut ft = Table::new(vec![
+        "kv_len",
+        "KV MiB",
+        "head coll MiB",
+        "seq coll MiB",
+        "head ms",
+        "seq ms",
+        "winner axis",
+    ]);
+    for &kv in SHARD_FLIP_KV_LENS {
+        let w = AttentionWorkload::square(1, 8, 2048, 64, 64)
+            .with_kv_heads(1)
+            .with_kv_len(kv);
+        let mk = |axis| {
+            let mut shard = ShardConfig::ways(4, axis);
+            shard.fabric = fabric.clone();
+            run(&w, shard)
+        };
+        let head = mk(ShardAxis::Head);
+        let seq = mk(ShardAxis::Seq);
+        let (th, ts) = (end_to_end(&head), end_to_end(&seq));
+        ft.row(vec![
+            format!("{}K", kv / 1024),
+            ((w.kv_bytes() * w.batch_kv_heads() as u64) >> 20).to_string(),
+            mib(head.collective.bytes),
+            mib(seq.collective.bytes),
+            format!("{:.3}", th * 1e3),
+            format!("{:.3}", ts * 1e3),
+            if th <= ts { "head" } else { "seq" }.to_string(),
+        ]);
+    }
+
+    format!(
+        "Ablation: sharded scale-out planner (sim::shard + the collective model)\n\
+         Shard-count scaling (MHA, B=1, H=8, S=32K, D=64, T=64 — KV 64 MiB vs\n\
+         24 MiB L2; nvlink-c2c fabric; time = straggler chip + collective):\n{}\n\
+         Reading: both axes cut the straggler's footprint, so misses drop\n\
+         super-linearly while the KV exceeds L2 and the collective stays in the\n\
+         microseconds on nvlink-c2c. The head gather moves less than the seq\n\
+         all-reduce here because kv_heads = heads (no replication).\n\n\
+         Axis flip (MQA: H=8, kv_heads=1, q_len=2048, 4 shards, cx7 fabric;\n\
+         kv_len swept — head-split replication grows with the KV cache, the\n\
+         seq-split O all-reduce does not):\n{}\n\
+         Reading: the winning axis flips head -> seq as the collective term\n\
+         grows — the plan choice is workload-dependent, which is why the policy\n\
+         engine ranks (traversal, shard plan) pairs jointly\n\
+         (`sawtooth policy explain --shards N --shard-axis ...`).\n",
+        t.render(),
+        ft.render()
+    )
+}
+
 pub fn reuse_histogram() -> String {
     let w = AttentionWorkload::cuda_study(128 * 1024);
     let l2 = DeviceSpec::gb10().l2_sectors();
@@ -761,6 +916,40 @@ mod tests {
             .expect("missing full-length cell");
         let winner = full.split('|').nth(8).unwrap().trim();
         assert_ne!(winner, "cyclic", "pressured prefill won by the baseline:\n{s}");
+    }
+
+    #[test]
+    fn shard_sweep_flips_the_winning_axis() {
+        if cfg!(debug_assertions) {
+            return; // S=32K × shard grid: run in release
+        }
+        let s = shard_sweep(&SweepExecutor::host_sized());
+        assert!(s.contains("vs 1 chip"));
+        // Flip-table data rows: 7 columns (9 split parts), kv_len cell like
+        // "2K". The winner column must move head -> seq across the sweep.
+        let winners: Vec<String> = s
+            .lines()
+            .filter(|l| l.starts_with('|'))
+            .filter_map(|l| {
+                let c: Vec<&str> = l.split('|').collect();
+                if c.len() == 9 && c[1].trim().ends_with('K') {
+                    Some(c[7].trim().to_string())
+                } else {
+                    None
+                }
+            })
+            .collect();
+        assert_eq!(winners.len(), SHARD_FLIP_KV_LENS.len(), "{s}");
+        assert_eq!(
+            winners.first().map(String::as_str),
+            Some("head"),
+            "short KV must favor the head split:\n{s}"
+        );
+        assert_eq!(
+            winners.last().map(String::as_str),
+            Some("seq"),
+            "long KV must favor the seq split:\n{s}"
+        );
     }
 
     #[test]

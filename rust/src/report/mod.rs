@@ -55,6 +55,7 @@ pub const ABLATIONS: &[&str] = &[
     "abl-reuse",
     "abl-decode",
     "abl-hierarchy",
+    "abl-shard",
 ];
 
 /// Run one experiment (or "all") sequentially and return the rendered
@@ -163,6 +164,7 @@ fn render_one(experiment: &str, exec: &SweepExecutor) -> Result<String> {
         "abl-reuse" => Ok(ablations::reuse_histogram()),
         "abl-decode" => Ok(ablations::decode_sweep(exec)),
         "abl-hierarchy" => Ok(ablations::hierarchy_sweep()),
+        "abl-shard" => Ok(ablations::shard_sweep(exec)),
         other => bail!(
             "unknown experiment '{other}' (try one of {EXPERIMENTS:?}, {ABLATIONS:?}, \
              'ablations' or 'all')"

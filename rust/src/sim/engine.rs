@@ -21,6 +21,7 @@ use super::kernel_model::{
     step_accesses, ItemSteps, KernelVariant, Step, TensorKind, TileAccess, WorkItem,
 };
 use super::scheduler::{Scheduler, SchedulerKind};
+use super::shard::ShardConfig;
 use super::traversal::TraversalRef;
 use super::workload::AttentionWorkload;
 
@@ -51,6 +52,11 @@ pub struct SimConfig {
     /// replaces the legacy `model_l1` L1s on the `run` path and
     /// `run_exact`/`profile` remain L2-only models.
     pub hierarchy: HierarchyConfig,
+    /// Multi-GPU sharding ([`super::shard`]). Default is one shard — the
+    /// unsharded model, bit for bit. The [`Simulator`] itself is
+    /// shard-ignorant; the sweep executor routes enabled configs through
+    /// the shard reduction.
+    pub shard: ShardConfig,
 }
 
 impl SimConfig {
@@ -66,6 +72,7 @@ impl SimConfig {
             seed: 0,
             model_l1: true,
             hierarchy: HierarchyConfig::default(),
+            shard: ShardConfig::default(),
         }
     }
 
@@ -89,6 +96,7 @@ impl SimConfig {
             seed: 0,
             model_l1: true,
             hierarchy: HierarchyConfig::default(),
+            shard: ShardConfig::default(),
         }
     }
 
@@ -933,6 +941,7 @@ mod tests {
             seed: 0,
             model_l1: true,
             hierarchy: HierarchyConfig::default(),
+            shard: ShardConfig::default(),
         }
     }
 

@@ -593,52 +593,67 @@ pub struct TenantRun {
     pub hierarchy: HierarchyCounters,
 }
 
-/// The multi-tenant scenario: interleave two workload streams round by
-/// round into one shared L2 behind private per-SM L1s (tenant B's SMs and
-/// address space are disjoint from A's). Hierarchy parameters come from
-/// `a.hierarchy` — the tenants share the hardware.
+/// The multi-tenant scenario: interleave N workload streams round by round
+/// into one shared L2 behind private per-SM L1s (each tenant's SMs and
+/// address space are disjoint from every other's). Hierarchy parameters
+/// come from `cfgs[0].hierarchy` — the tenants share the hardware. Within
+/// each round, tenants issue in slice order, so the two-tenant wrapper
+/// [`run_shared_l2`] replays the original A-then-B interleaving bit for
+/// bit; co-resident shards (`sim/shard/`) fan any shard count through the
+/// same driver.
 ///
-/// Both traces are materialized round-wise before replay, so this is for
+/// All traces are materialized round-wise before replay, so this is for
 /// ablation-scale shapes, not the §4.3 128K study shape.
-pub fn run_shared_l2(a: &SimConfig, b: &SimConfig) -> (TenantRun, TenantRun) {
-    let mut rounds_a: Vec<Vec<RoundAccess>> = Vec::new();
-    let stats_a = stream_rounds(a, |r| rounds_a.push(r.to_vec()));
-    let mut rounds_b: Vec<Vec<RoundAccess>> = Vec::new();
-    let stats_b = stream_rounds(b, |r| rounds_b.push(r.to_vec()));
+pub fn run_shared_l2_n(cfgs: &[&SimConfig]) -> Vec<TenantRun> {
+    assert!(!cfgs.is_empty(), "run_shared_l2_n wants at least one tenant");
+    let mut rounds: Vec<Vec<Vec<RoundAccess>>> = Vec::with_capacity(cfgs.len());
+    let mut stats = Vec::with_capacity(cfgs.len());
+    for cfg in cfgs {
+        let mut r: Vec<Vec<RoundAccess>> = Vec::new();
+        stats.push(stream_rounds(cfg, |round| r.push(round.to_vec())));
+        rounds.push(r);
+    }
 
-    let mut backend = HierarchyBackend::new_shared(&[a, b], true);
-    let mut ca = CacheCounters::default();
-    let mut cb = CacheCounters::default();
-    for i in 0..rounds_a.len().max(rounds_b.len()) {
+    let mut backend = HierarchyBackend::new_shared(cfgs, true);
+    let mut counters = vec![CacheCounters::default(); cfgs.len()];
+    let max_rounds = rounds.iter().map(Vec::len).max().unwrap_or(0);
+    for i in 0..max_rounds {
         backend.begin_round();
-        if let Some(round) = rounds_a.get(i) {
-            for ra in round {
-                backend.access_tile(0, ra.sm as usize, &ra.access, &mut ca);
-            }
-        }
-        if let Some(round) = rounds_b.get(i) {
-            for ra in round {
-                backend.access_tile(1, ra.sm as usize, &ra.access, &mut cb);
+        for (tenant, tenant_rounds) in rounds.iter().enumerate() {
+            if let Some(round) = tenant_rounds.get(i) {
+                for ra in round {
+                    backend.access_tile(tenant, ra.sm as usize, &ra.access, &mut counters[tenant]);
+                }
             }
         }
     }
-    ca.l2_sectors_other =
-        (stats_a.kv_steps as f64 * a.device.non_tex_sectors_per_step).round() as u64;
-    cb.l2_sectors_other =
-        (stats_b.kv_steps as f64 * b.device.non_tex_sectors_per_step).round() as u64;
-    let mk = |counters: CacheCounters, stats: super::engine::TraceStats, h| TenantRun {
-        result: SimResult {
-            counters,
-            kv_steps: stats.kv_steps,
-            rounds: stats.rounds,
-            items: stats.items,
-        },
-        hierarchy: h,
-    };
-    (
-        mk(ca, stats_a, backend.tenant_counters(0)),
-        mk(cb, stats_b, backend.tenant_counters(1)),
-    )
+    counters
+        .into_iter()
+        .enumerate()
+        .map(|(tenant, mut c)| {
+            let st = stats[tenant];
+            c.l2_sectors_other =
+                (st.kv_steps as f64 * cfgs[tenant].device.non_tex_sectors_per_step).round() as u64;
+            TenantRun {
+                result: SimResult {
+                    counters: c,
+                    kv_steps: st.kv_steps,
+                    rounds: st.rounds,
+                    items: st.items,
+                },
+                hierarchy: backend.tenant_counters(tenant),
+            }
+        })
+        .collect()
+}
+
+/// Two-tenant shared-L2 run (see [`run_shared_l2_n`] for the semantics —
+/// this wrapper keeps the original API and its byte-exact results).
+pub fn run_shared_l2(a: &SimConfig, b: &SimConfig) -> (TenantRun, TenantRun) {
+    let mut runs = run_shared_l2_n(&[a, b]);
+    let tb = runs.pop().expect("two tenants in, two runs out");
+    let ta = runs.pop().expect("two tenants in, two runs out");
+    (ta, tb)
 }
 
 #[cfg(test)]
@@ -662,6 +677,7 @@ mod tests {
             seed: 0,
             model_l1: true,
             hierarchy: HierarchyConfig { enabled, ..HierarchyConfig::default() },
+            shard: super::super::shard::ShardConfig::default(),
         }
     }
 
@@ -788,6 +804,35 @@ mod tests {
         );
         assert_eq!(ta.hierarchy.l1_hits + ta.hierarchy.l1_misses, ta.hierarchy.accesses);
         assert_eq!(tb.hierarchy.l1_hits + tb.hierarchy.l1_misses, tb.hierarchy.accesses);
+    }
+
+    #[test]
+    fn n_tenant_driver_replays_two_tenant_run_bitwise() {
+        // The two-tenant API is now a wrapper over the N-tenant driver;
+        // both must agree bit for bit, and a third tenant must only add
+        // pressure (pollution is monotone in co-tenant count).
+        let a = cfg(256, TraversalRef::cyclic(), true);
+        let b = cfg(512, TraversalRef::sawtooth(), true);
+        let c = cfg(384, TraversalRef::cyclic(), true);
+        let (ta, tb) = run_shared_l2(&a, &b);
+        let pair = run_shared_l2_n(&[&a, &b]);
+        assert_eq!(pair.len(), 2);
+        assert_eq!(pair[0].result, ta.result);
+        assert_eq!(pair[0].hierarchy, ta.hierarchy);
+        assert_eq!(pair[1].result, tb.result);
+        assert_eq!(pair[1].hierarchy, tb.hierarchy);
+        let trio = run_shared_l2_n(&[&a, &b, &c]);
+        assert_eq!(trio.len(), 3);
+        assert_eq!(
+            trio[0].result.counters.l2_sectors_from_tex,
+            ta.result.counters.l2_sectors_from_tex,
+            "a third tenant must not change tenant A's issued traffic"
+        );
+        assert!(
+            trio[0].result.counters.l2_miss_sectors
+                >= pair[0].result.counters.l2_miss_sectors,
+            "more co-tenants cannot reduce misses"
+        );
     }
 
     #[test]

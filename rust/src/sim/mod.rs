@@ -26,6 +26,7 @@ pub mod engine;
 pub mod hierarchy;
 pub mod kernel_model;
 pub mod scheduler;
+pub mod shard;
 pub mod sweep;
 pub mod throughput;
 pub mod traversal;
@@ -37,9 +38,15 @@ pub use engine::{
     stream_accesses, stream_rounds, CapacityProfile, RoundAccess, SimConfig, SimResult,
     Simulator, TraceStats,
 };
-pub use hierarchy::{run_shared_l2, HierarchyConfig, HierarchyCounters, TenantRun};
+pub use hierarchy::{
+    run_shared_l2, run_shared_l2_n, HierarchyConfig, HierarchyCounters, TenantRun,
+};
 pub use kernel_model::{KernelVariant, TensorKind, TileAccess};
 pub use scheduler::SchedulerKind;
+pub use shard::{
+    collective_cost, CollectiveCost, ShardAxis, ShardConfig, ShardExecutor, ShardKey,
+    ShardPlan, ShardReport,
+};
 pub use sweep::{ExecutorTiming, SweepExecutor, SweepGrid, SweepSpec};
 pub use throughput::{PerfProfile, ThroughputReport};
 pub use traversal::{Traversal, TraversalCtx, TraversalRef, TraversalRegistry};

@@ -1,0 +1,212 @@
+//! Analytic collective cost model for sharded attention.
+//!
+//! Each shard axis implies a different fabric collective once the per-shard
+//! kernels finish (FlatAttention's co-design observation — the dataflow
+//! choice and the collective volume are one decision):
+//!
+//! * **Sequence/KV split** — every shard holds an *O partial* (plus running
+//!   softmax statistics) over the full query extent; combining them is a
+//!   ring all-reduce whose aggregate volume is `2·(s−1)·o_bytes`,
+//!   independent of `kv_len`.
+//! * **Head split** — O slices are disjoint (a gather, not a reduce), but
+//!   when the split is finer than the KV heads (`head_ways > kv_heads`,
+//!   the GQA/MQA regime) each KV head's cache must be replicated to every
+//!   shard sharing it — a broadcast whose volume grows with `kv_len`.
+//! * **Hybrid** — the head-axis terms plus a per-head-group sequence
+//!   all-reduce; the phases are serialized.
+//!
+//! The crossover between the two pure axes is exactly the "collective term
+//! grows" flip `report abl-shard` demonstrates: head-wise wins while the
+//! replicated KV is smaller than the O all-reduce, sequence-wise wins once
+//! the KV cache outgrows it.
+
+use crate::gb10::FabricModel;
+
+use super::super::workload::AttentionWorkload;
+use super::ShardAxis;
+
+/// Cost of the inter-shard collective implied by one `(workload, axis,
+/// shards)` choice: aggregate fabric bytes, serialized hop count, and the
+/// modeled wall-clock under a [`FabricModel`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct CollectiveCost {
+    /// Which collective the axis implies (`none`, `allgather-o`,
+    /// `gather-o`, `bcast-kv+gather-o`, `hybrid`).
+    pub kind: &'static str,
+    /// Aggregate bytes moved over the fabric, summed across links.
+    pub bytes: u64,
+    /// Serialized fabric hops on the critical path.
+    pub steps: u32,
+    /// Modeled wall-clock: per-link serialized bytes over the link
+    /// bandwidth plus the hop latencies (`ways` links move concurrently).
+    pub time_s: f64,
+}
+
+impl CollectiveCost {
+    /// The free collective (one shard, or a split with nothing to move).
+    pub fn zero() -> Self {
+        CollectiveCost { kind: "none", bytes: 0, steps: 0, time_s: 0.0 }
+    }
+}
+
+/// Bytes of one full O tensor plus its running softmax statistics (per-row
+/// max and normalizer, f32 each) — the payload a sequence split must
+/// all-reduce.
+pub fn o_partial_bytes(w: &AttentionWorkload) -> u64 {
+    let row = w.head_dim as u64 * w.elem_bytes as u64 + 8;
+    w.batch_heads() as u64 * w.q_len * row
+}
+
+/// KV-cache bytes replicated beyond the unsharded footprint by a head
+/// split: zero while `head_ways <= kv_heads` (KV heads partition cleanly),
+/// `kv_bytes · batch · (head_ways − kv_heads)` once query-head groups are
+/// split finer than the KV heads they share.
+pub fn replicated_kv_bytes(w: &AttentionWorkload, head_ways: u32) -> u64 {
+    if head_ways <= w.kv_heads {
+        return 0;
+    }
+    w.kv_bytes() * w.batch as u64 * (head_ways - w.kv_heads) as u64
+}
+
+/// Serialized hop count of a binomial-tree broadcast/gather over `ways`
+/// ranks.
+fn tree_steps(ways: u32) -> u32 {
+    32 - ways.max(1).leading_zeros() - u32::from(ways.is_power_of_two())
+}
+
+fn combine(fabric: &FabricModel, kind: &'static str, bytes: u64, steps: u32, ways: u32) -> CollectiveCost {
+    let per_link = bytes / ways.max(1) as u64;
+    CollectiveCost { kind, bytes, steps, time_s: fabric.transfer_s(per_link, steps) }
+}
+
+/// The collective cost of partitioning `w` into `shards` along `axis`,
+/// under `fabric`. `shards == 1` is free by construction.
+pub fn collective_cost(
+    w: &AttentionWorkload,
+    axis: ShardAxis,
+    shards: u32,
+    fabric: &FabricModel,
+) -> CollectiveCost {
+    if shards <= 1 {
+        return CollectiveCost::zero();
+    }
+    let (head_ways, seq_ways) = axis.ways(shards);
+    match axis {
+        ShardAxis::Seq => seq_cost(w, seq_ways, fabric),
+        ShardAxis::Head => head_cost(w, head_ways, fabric),
+        ShardAxis::Hybrid { .. } => {
+            let head = head_cost(w, head_ways, fabric);
+            // The sequence all-reduce runs within each head group, over
+            // that group's O slice, concurrently across groups.
+            let per_group_o = o_partial_bytes(w) / head_ways.max(1) as u64;
+            let seq_steps = 2 * (seq_ways - 1);
+            let seq_bytes = 2 * (seq_ways as u64 - 1) * per_group_o * head_ways as u64;
+            let seq = combine(fabric, "allgather-o", seq_bytes, seq_steps, shards);
+            CollectiveCost {
+                kind: "hybrid",
+                bytes: head.bytes + seq.bytes,
+                steps: head.steps + seq.steps,
+                time_s: head.time_s + seq.time_s,
+            }
+        }
+    }
+}
+
+/// Ring all-reduce of the O partials: aggregate `2·(s−1)·o_bytes`, with
+/// `2·(s−1)` serialized hops.
+fn seq_cost(w: &AttentionWorkload, ways: u32, fabric: &FabricModel) -> CollectiveCost {
+    let o = o_partial_bytes(w);
+    combine(fabric, "allgather-o", 2 * (ways as u64 - 1) * o, 2 * (ways - 1), ways)
+}
+
+/// Head split: gather the disjoint O slices (each non-root rank sends its
+/// `1/ways` slice), plus the KV replication broadcast when the split is
+/// finer than the KV heads.
+fn head_cost(w: &AttentionWorkload, ways: u32, fabric: &FabricModel) -> CollectiveCost {
+    let o = o_partial_bytes(w);
+    let gather_bytes = o - o / ways as u64;
+    let repl = replicated_kv_bytes(w, ways);
+    let steps = tree_steps(ways) + if repl > 0 { tree_steps(ways) } else { 0 };
+    let kind = if repl > 0 { "bcast-kv+gather-o" } else { "gather-o" };
+    combine(fabric, kind, gather_bytes + repl, steps, ways)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(heads: u32, kv_heads: u32, q_len: u64, kv_len: u64) -> AttentionWorkload {
+        AttentionWorkload::square(1, heads, q_len, 64, 64)
+            .with_kv_heads(kv_heads)
+            .with_kv_len(kv_len)
+    }
+
+    #[test]
+    fn one_shard_is_free() {
+        let c = collective_cost(&w(4, 4, 512, 512), ShardAxis::Head, 1, &FabricModel::nvlink_c2c());
+        assert_eq!(c, CollectiveCost::zero());
+    }
+
+    #[test]
+    fn seq_volume_scales_with_q_not_kv() {
+        let f = FabricModel::nvlink_c2c();
+        let short = collective_cost(&w(4, 4, 512, 1024), ShardAxis::Seq, 4, &f);
+        let long = collective_cost(&w(4, 4, 512, 64 * 1024), ShardAxis::Seq, 4, &f);
+        assert_eq!(short.bytes, long.bytes, "O all-reduce is kv_len-independent");
+        assert_eq!(short.bytes, 2 * 3 * o_partial_bytes(&w(4, 4, 512, 1024)));
+        assert_eq!(short.steps, 6);
+    }
+
+    #[test]
+    fn head_split_replicates_only_past_kv_heads() {
+        let f = FabricModel::nvlink_c2c();
+        // MHA, ways <= kv_heads: no replication, just the O gather.
+        let mha = collective_cost(&w(8, 8, 512, 4096), ShardAxis::Head, 4, &f);
+        assert_eq!(mha.kind, "gather-o");
+        assert_eq!(replicated_kv_bytes(&w(8, 8, 512, 4096), 4), 0);
+        // MQA, ways > kv_heads: every extra shard carries a KV copy.
+        let shape = w(8, 1, 512, 4096);
+        let mqa = collective_cost(&shape, ShardAxis::Head, 4, &f);
+        assert_eq!(mqa.kind, "bcast-kv+gather-o");
+        assert_eq!(replicated_kv_bytes(&shape, 4), shape.kv_bytes() * 3);
+        assert!(mqa.bytes > mha.bytes);
+    }
+
+    #[test]
+    fn axis_crossover_as_kv_grows() {
+        // MQA at fixed q_len: head-wise is cheaper on a short KV cache,
+        // sequence-wise wins once the replicated KV outgrows the O
+        // all-reduce — the abl-shard flip, at the model level.
+        let f = FabricModel::nvlink_c2c();
+        let short = w(8, 1, 512, 256);
+        let long = w(8, 1, 512, 64 * 1024);
+        assert!(
+            collective_cost(&short, ShardAxis::Head, 4, &f).time_s
+                < collective_cost(&short, ShardAxis::Seq, 4, &f).time_s
+        );
+        assert!(
+            collective_cost(&long, ShardAxis::Head, 4, &f).time_s
+                > collective_cost(&long, ShardAxis::Seq, 4, &f).time_s
+        );
+    }
+
+    #[test]
+    fn hybrid_sums_both_phases() {
+        let f = FabricModel::nvlink_c2c();
+        let shape = w(8, 8, 512, 4096);
+        let hy = collective_cost(&shape, ShardAxis::Hybrid { head_ways: 2, seq_ways: 2 }, 4, &f);
+        assert_eq!(hy.kind, "hybrid");
+        let head = collective_cost(&shape, ShardAxis::Head, 2, &f);
+        assert!(hy.bytes > head.bytes);
+        assert!(hy.time_s > head.time_s);
+    }
+
+    #[test]
+    fn tree_steps_is_ceil_log2() {
+        assert_eq!(tree_steps(1), 0);
+        assert_eq!(tree_steps(2), 1);
+        assert_eq!(tree_steps(3), 2);
+        assert_eq!(tree_steps(4), 2);
+        assert_eq!(tree_steps(8), 3);
+    }
+}

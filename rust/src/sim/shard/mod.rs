@@ -1,0 +1,662 @@
+//! Sharded scale-out subsystem: multi-GPU attention planning.
+//!
+//! A [`ShardPlan`] partitions one [`AttentionWorkload`] across `shards`
+//! model-identical GB10s along a [`ShardAxis`]:
+//!
+//! * **Head-wise** — query heads split evenly; KV heads partition with them
+//!   while `ways <= kv_heads`, and replicate (the GQA/MQA regime) once the
+//!   split is finer. Block tables are shared unchanged — every shard sees
+//!   the same physical KV placement for the heads it owns.
+//! * **Sequence/KV-wise** — the KV extent splits into contiguous chunks
+//!   (block-table-aligned when paged: each shard receives exactly the slice
+//!   of the parent table covering its rows, so paged shards re-validate).
+//!   Queries replicate; each shard produces an O partial. Causal masking is
+//!   kept on the final chunk (which holds the diagonal band) and dropped on
+//!   earlier, fully-visible chunks — an analytic approximation documented
+//!   in EXPERIMENTS.md §Sharding.
+//! * **Hybrid `heads×seq`** — head split first, then each head group splits
+//!   its KV extent.
+//!
+//! A [`ShardExecutor`] fans each shard's independent L2 (or hierarchy)
+//! simulation across an existing [`SweepExecutor`]'s threads — identical
+//! shard shapes deduplicate through its memoizer — and reduces the
+//! per-shard [`SimResult`]s plus the analytic [`collective`] term into a
+//! [`ShardReport`].
+//!
+//! **The critical contract:** `shards = 1` replays the unsharded model bit
+//! for bit. [`ShardConfig::key_fields`] returns `None` when off (so every
+//! memo key stays byte-stable), [`ShardPlan::new`] returns the workload
+//! unchanged, and `tests/integration_shard.rs` pins the equivalence across
+//! the traversal registry.
+
+pub mod collective;
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::Arc;
+
+use crate::gb10::FabricModel;
+
+use super::engine::{cold_sectors, SimConfig, SimResult, Simulator};
+use super::hierarchy::{run_shared_l2_n, TenantRun};
+use super::sweep::SweepExecutor;
+use super::workload::{AttentionWorkload, KvLayout};
+
+pub use collective::{collective_cost, o_partial_bytes, replicated_kv_bytes, CollectiveCost};
+
+/// Partition axis of a [`ShardPlan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShardAxis {
+    /// Split query (and KV) heads across shards.
+    Head,
+    /// Split the KV extent across shards; queries replicate.
+    Seq,
+    /// Head split of `head_ways`, then a KV split of `seq_ways` within each
+    /// head group (`head_ways · seq_ways` must equal the shard count).
+    Hybrid { head_ways: u32, seq_ways: u32 },
+}
+
+impl ShardAxis {
+    /// `(head_ways, seq_ways)` for a `shards`-way split along this axis.
+    pub fn ways(&self, shards: u32) -> (u32, u32) {
+        match *self {
+            ShardAxis::Head => (shards, 1),
+            ShardAxis::Seq => (1, shards),
+            ShardAxis::Hybrid { head_ways, seq_ways } => (head_ways, seq_ways),
+        }
+    }
+}
+
+impl fmt::Display for ShardAxis {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            ShardAxis::Head => write!(f, "head"),
+            ShardAxis::Seq => write!(f, "seq"),
+            ShardAxis::Hybrid { head_ways, seq_ways } => {
+                write!(f, "hybrid:{head_ways}x{seq_ways}")
+            }
+        }
+    }
+}
+
+impl FromStr for ShardAxis {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "head" => return Ok(ShardAxis::Head),
+            "seq" => return Ok(ShardAxis::Seq),
+            _ => {}
+        }
+        if let Some(spec) = s.strip_prefix("hybrid:") {
+            if let Some((h, q)) = spec.split_once('x') {
+                let head_ways: u32 =
+                    h.parse().map_err(|e| format!("hybrid head_ways '{h}': {e}"))?;
+                let seq_ways: u32 =
+                    q.parse().map_err(|e| format!("hybrid seq_ways '{q}': {e}"))?;
+                if head_ways == 0 || seq_ways == 0 {
+                    return Err("hybrid ways must be >= 1".to_string());
+                }
+                return Ok(ShardAxis::Hybrid { head_ways, seq_ways });
+            }
+            return Err(format!("hybrid axis '{s}' wants hybrid:<head>x<seq>"));
+        }
+        Err(format!("unknown shard axis '{s}' (want head | seq | hybrid:<h>x<s>)"))
+    }
+}
+
+/// Sharding configuration carried on [`SimConfig`]. `Default` is **one
+/// shard** — the unsharded model, bit for bit — so existing `SimConfig`
+/// literals gain this field without changing any result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardConfig {
+    /// Shard count; 1 (default) = unsharded.
+    pub shards: u32,
+    /// Partition axis; irrelevant while `shards == 1`.
+    pub axis: ShardAxis,
+    /// Inter-shard fabric (throughput-model-only: excluded from sweep
+    /// memoization keys like the device bandwidth fields).
+    pub fabric: FabricModel,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig { shards: 1, axis: ShardAxis::Head, fabric: FabricModel::nvlink_c2c() }
+    }
+}
+
+impl ShardConfig {
+    /// A `shards`-way config along `axis` over the default fabric.
+    pub fn ways(shards: u32, axis: ShardAxis) -> Self {
+        ShardConfig { shards, axis, ..ShardConfig::default() }
+    }
+
+    /// True when this config actually shards (`shards > 1`).
+    pub fn enabled(&self) -> bool {
+        self.shards > 1
+    }
+
+    /// The simulation-relevant fields as a hashable key fragment for sweep
+    /// memoization: `None` when unsharded, so every pre-shard config keeps
+    /// its exact pre-shard key. The fabric is deliberately excluded — it
+    /// only affects the collective time term, like the device bandwidth
+    /// fields `ConfigKey` already ignores.
+    pub fn key_fields(&self) -> Option<ShardKey> {
+        if !self.enabled() {
+            return None;
+        }
+        Some(ShardKey { shards: self.shards, axis: self.axis })
+    }
+
+    /// Check that this config can partition `w`, with a human-readable
+    /// reason on failure (surfaced by the config schema and the line
+    /// protocol).
+    pub fn validate_for(&self, w: &AttentionWorkload) -> Result<(), String> {
+        if self.shards == 0 {
+            return Err("shards must be >= 1".to_string());
+        }
+        if !self.enabled() {
+            return Ok(());
+        }
+        let (head_ways, seq_ways) = self.axis.ways(self.shards);
+        if head_ways == 0 || seq_ways == 0 || head_ways * seq_ways != self.shards {
+            return Err(format!(
+                "shard axis {} wants {}x{} ways, which does not factor shards = {}",
+                self.axis, head_ways, seq_ways, self.shards
+            ));
+        }
+        if head_ways > 1 {
+            if w.heads % head_ways != 0 {
+                return Err(format!(
+                    "head_ways {head_ways} must divide heads ({})",
+                    w.heads
+                ));
+            }
+            if head_ways > w.kv_heads {
+                if head_ways % w.kv_heads != 0 {
+                    return Err(format!(
+                        "head_ways {head_ways} past kv_heads ({}) must be a multiple of it \
+                         (uniform KV replication)",
+                        w.kv_heads
+                    ));
+                }
+            } else if w.kv_heads % head_ways != 0 {
+                return Err(format!(
+                    "head_ways {head_ways} must divide kv_heads ({})",
+                    w.kv_heads
+                ));
+            }
+        }
+        if seq_ways > 1 {
+            let units = match &w.kv_layout {
+                KvLayout::Contiguous => w.kv_len,
+                KvLayout::Paged { block_tokens, .. } => {
+                    (w.kv_len + *block_tokens as u64 - 1) / *block_tokens as u64
+                }
+            };
+            if (seq_ways as u64) > units {
+                return Err(format!(
+                    "seq_ways {seq_ways} exceeds the {units} divisible KV unit(s) \
+                     (rows when contiguous, blocks when paged)"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Hashable fragment of [`ShardConfig`] for `ConfigKey` (see
+/// [`ShardConfig::key_fields`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ShardKey {
+    shards: u32,
+    axis: ShardAxis,
+}
+
+/// A concrete partition of one workload: the per-shard workloads (index
+/// `head_group · seq_ways + chunk`), plus the replication bookkeeping the
+/// cost model and the cold-sector invariant build on.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub axis: ShardAxis,
+    pub shards: Vec<AttentionWorkload>,
+    /// KV bytes stored beyond the unsharded footprint (head splits finer
+    /// than the KV heads replicate caches; 0 otherwise).
+    pub replicated_kv_bytes: u64,
+}
+
+impl ShardPlan {
+    /// Partition `w` per `cfg`. `shards = 1` returns the workload
+    /// unchanged (the bit-identity anchor); invalid combinations fail with
+    /// [`ShardConfig::validate_for`]'s reason.
+    pub fn new(w: &AttentionWorkload, cfg: &ShardConfig) -> Result<ShardPlan, String> {
+        cfg.validate_for(w)?;
+        if !cfg.enabled() {
+            return Ok(ShardPlan {
+                axis: cfg.axis,
+                shards: vec![w.clone()],
+                replicated_kv_bytes: 0,
+            });
+        }
+        let (head_ways, seq_ways) = cfg.axis.ways(cfg.shards);
+        let heads_split = split_heads(w, head_ways);
+        let mut shards = Vec::with_capacity(cfg.shards as usize);
+        for hw in &heads_split {
+            shards.extend(split_seq(hw, seq_ways));
+        }
+        debug_assert_eq!(shards.len(), cfg.shards as usize);
+        Ok(ShardPlan {
+            axis: cfg.axis,
+            shards,
+            replicated_kv_bytes: replicated_kv_bytes(w, head_ways),
+        })
+    }
+
+    /// The collective cost of recombining this plan's shards.
+    pub fn collective(&self, w: &AttentionWorkload, fabric: &FabricModel) -> CollectiveCost {
+        collective_cost(w, self.axis, self.shards.len() as u32, fabric)
+    }
+
+    /// Sum of the per-shard cold (first-touch) sector footprints — ≥ the
+    /// unsharded footprint by construction (replication never undercounts;
+    /// pinned by `tests/integration_shard.rs`).
+    pub fn total_cold_sectors(&self, dev: &crate::gb10::DeviceSpec) -> u64 {
+        self.shards.iter().map(|s| cold_sectors(s, dev)).sum()
+    }
+}
+
+/// Head-axis split: `ways` workloads, each with `heads/ways` query heads
+/// and either its share of the KV heads or (past `kv_heads`) one
+/// replicated KV head. All shards are shape-identical, so the executor's
+/// memoizer collapses the fan-out to one simulation.
+fn split_heads(w: &AttentionWorkload, ways: u32) -> Vec<AttentionWorkload> {
+    if ways <= 1 {
+        return vec![w.clone()];
+    }
+    let heads_per = w.heads / ways;
+    let kv_per = if ways <= w.kv_heads { w.kv_heads / ways } else { 1 };
+    let mut shard = w.clone();
+    shard.heads = heads_per;
+    shard.kv_heads = kv_per;
+    vec![shard; ways as usize]
+}
+
+/// Sequence-axis split: `ways` contiguous KV chunks (balanced in rows, or
+/// in whole blocks when paged, each shard taking its slice of the block
+/// table). Queries replicate; causal masking survives only on the final,
+/// diagonal-holding chunk.
+fn split_seq(w: &AttentionWorkload, ways: u32) -> Vec<AttentionWorkload> {
+    if ways <= 1 {
+        return vec![w.clone()];
+    }
+    let mut out = Vec::with_capacity(ways as usize);
+    match &w.kv_layout {
+        KvLayout::Contiguous => {
+            let base = w.kv_len / ways as u64;
+            let rem = w.kv_len % ways as u64;
+            for i in 0..ways as u64 {
+                let len = base + u64::from(i < rem);
+                let mut shard = w.clone().with_kv_len(len);
+                shard.causal = w.causal && i == ways as u64 - 1;
+                out.push(shard);
+            }
+        }
+        KvLayout::Paged { block_tokens, block_table } => {
+            let bt = *block_tokens as u64;
+            let nblocks = block_table.len() as u64;
+            let base = nblocks / ways as u64;
+            let rem = nblocks % ways as u64;
+            let mut b0 = 0u64;
+            for i in 0..ways as u64 {
+                let nb = base + u64::from(i < rem);
+                let b1 = b0 + nb;
+                let row0 = b0 * bt;
+                let row1 = (b1 * bt).min(w.kv_len);
+                let table: Vec<u32> = block_table[b0 as usize..b1 as usize].to_vec();
+                let mut shard = w.clone().with_kv_len(row1.saturating_sub(row0));
+                shard.kv_layout =
+                    KvLayout::Paged { block_tokens: *block_tokens, block_table: table.into() };
+                shard.causal = w.causal && i == ways as u64 - 1;
+                out.push(shard);
+                b0 = b1;
+            }
+        }
+    }
+    out
+}
+
+/// Reduced view of a sharded execution: per-shard results, the aggregate
+/// counter reduction, and the collective term.
+#[derive(Clone, Debug)]
+pub struct ShardReport {
+    pub axis: ShardAxis,
+    pub shard_workloads: Vec<AttentionWorkload>,
+    pub per_shard: Vec<Arc<SimResult>>,
+    /// Counters summed across shards; `rounds` is the max (shards run
+    /// concurrently), `kv_steps`/`items` are sums.
+    pub reduced: SimResult,
+    pub collective: CollectiveCost,
+    pub replicated_kv_bytes: u64,
+}
+
+impl ShardReport {
+    pub fn shards(&self) -> u32 {
+        self.per_shard.len() as u32
+    }
+
+    /// Max per-shard L2 miss sectors — the straggler chip's DRAM traffic.
+    pub fn max_shard_misses(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.counters.l2_miss_sectors).max().unwrap_or(0)
+    }
+}
+
+/// Fans a [`ShardPlan`]'s per-shard simulations across a shared
+/// [`SweepExecutor`] (memoized, parallel, byte-identical at any thread
+/// count) and reduces them into a [`ShardReport`].
+pub struct ShardExecutor {
+    exec: Arc<SweepExecutor>,
+}
+
+impl ShardExecutor {
+    pub fn new(exec: Arc<SweepExecutor>) -> Self {
+        ShardExecutor { exec }
+    }
+
+    /// Simulate `cfg.workload` under `cfg.shard`. Each shard runs the
+    /// unsharded model on its own chip (own L2, or hierarchy when
+    /// `cfg.hierarchy.enabled`); `shards = 1` reproduces the plain
+    /// simulation bit for bit.
+    pub fn run(&self, cfg: &SimConfig) -> Result<ShardReport, String> {
+        let plan = ShardPlan::new(&cfg.workload, &cfg.shard)?;
+        let cfgs: Vec<SimConfig> = plan
+            .shards
+            .iter()
+            .map(|w| SimConfig {
+                workload: w.clone(),
+                shard: ShardConfig::default(),
+                ..cfg.clone()
+            })
+            .collect();
+        let per_shard = self.exec.run_all(&cfgs);
+        let reduced = reduce_results(per_shard.iter().map(Arc::as_ref));
+        Ok(ShardReport {
+            axis: plan.axis,
+            collective: plan.collective(&cfg.workload, &cfg.shard.fabric),
+            replicated_kv_bytes: plan.replicated_kv_bytes,
+            shard_workloads: plan.shards,
+            per_shard,
+            reduced,
+        })
+    }
+
+    /// Co-resident variant: all shards share ONE chip's L2 (private L1s)
+    /// through the N-tenant [`run_shared_l2_n`] driver — the consolidation
+    /// ablation arm. Requires an enabled hierarchy config; ablation-scale
+    /// shapes only (traces are materialized).
+    pub fn run_co_resident(&self, cfg: &SimConfig) -> Result<Vec<TenantRun>, String> {
+        let plan = ShardPlan::new(&cfg.workload, &cfg.shard)?;
+        let cfgs: Vec<SimConfig> = plan
+            .shards
+            .iter()
+            .map(|w| SimConfig {
+                workload: w.clone(),
+                shard: ShardConfig::default(),
+                ..cfg.clone()
+            })
+            .collect();
+        let refs: Vec<&SimConfig> = cfgs.iter().collect();
+        Ok(run_shared_l2_n(&refs))
+    }
+}
+
+/// Sum per-shard results into one aggregate: counters merge, `kv_steps`
+/// and `items` add, `rounds` takes the max (shards run concurrently).
+pub fn reduce_results<'a>(results: impl Iterator<Item = &'a SimResult>) -> SimResult {
+    let mut reduced = SimResult {
+        counters: Default::default(),
+        kv_steps: 0,
+        rounds: 0,
+        items: 0,
+    };
+    for r in results {
+        reduced.counters.merge(&r.counters);
+        reduced.kv_steps += r.kv_steps;
+        reduced.items += r.items;
+        reduced.rounds = reduced.rounds.max(r.rounds);
+    }
+    reduced
+}
+
+/// Sequential shard reduction for the sweep executor's execute path: a
+/// shard-enabled config submitted through `run_one`/`run_all` (e.g. via
+/// the line protocol's `shards=` keys) simulates each shard directly and
+/// returns the aggregate. Panics on an unplannable config — parse
+/// boundaries validate with [`ShardConfig::validate_for`] first, mirroring
+/// the hierarchy backend's contract.
+pub(crate) fn run_reduced(cfg: &SimConfig) -> SimResult {
+    let plan = match ShardPlan::new(&cfg.workload, &cfg.shard) {
+        Ok(p) => p,
+        Err(e) => panic!("invalid shard config: {e}"),
+    };
+    let results: Vec<SimResult> = plan
+        .shards
+        .iter()
+        .map(|w| {
+            let shard_cfg = SimConfig {
+                workload: w.clone(),
+                shard: ShardConfig::default(),
+                ..cfg.clone()
+            };
+            Simulator::new(shard_cfg).run()
+        })
+        .collect();
+    reduce_results(results.iter())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::traversal::TraversalRef;
+    use super::*;
+    use crate::gb10::DeviceSpec;
+
+    fn tiny_cfg(w: AttentionWorkload, shard: ShardConfig) -> SimConfig {
+        let mut cfg = SimConfig::cuda_study(w);
+        cfg.device = DeviceSpec::tiny();
+        cfg.shard = shard;
+        cfg
+    }
+
+    #[test]
+    fn axis_parses_and_round_trips() {
+        for s in ["head", "seq", "hybrid:2x4"] {
+            let axis: ShardAxis = s.parse().unwrap();
+            assert_eq!(axis.to_string(), s);
+        }
+        assert_eq!("head".parse::<ShardAxis>().unwrap().ways(4), (4, 1));
+        assert_eq!("seq".parse::<ShardAxis>().unwrap().ways(4), (1, 4));
+        assert_eq!("hybrid:2x4".parse::<ShardAxis>().unwrap().ways(8), (2, 4));
+        assert!("diag".parse::<ShardAxis>().is_err());
+        assert!("hybrid:0x2".parse::<ShardAxis>().is_err());
+        assert!("hybrid:2".parse::<ShardAxis>().is_err());
+    }
+
+    #[test]
+    fn key_fields_none_when_unsharded() {
+        let mut s = ShardConfig::default();
+        assert_eq!(s.key_fields(), None);
+        s.shards = 4;
+        let k = s.key_fields().expect("enabled config must key");
+        s.fabric = FabricModel::cx7();
+        assert_eq!(s.key_fields(), Some(k), "fabric is throughput-only");
+        s.axis = ShardAxis::Seq;
+        assert_ne!(s.key_fields(), Some(k));
+    }
+
+    #[test]
+    fn validate_rejects_bad_factorizations() {
+        let w = AttentionWorkload::square(1, 8, 512, 64, 16).with_kv_heads(2);
+        let ok = |s: ShardConfig| s.validate_for(&w).is_ok();
+        assert!(ok(ShardConfig::default()));
+        assert!(ok(ShardConfig::ways(2, ShardAxis::Head)));
+        assert!(ok(ShardConfig::ways(4, ShardAxis::Head)), "4 > kv_heads=2, 2 | 4");
+        assert!(!ok(ShardConfig::ways(3, ShardAxis::Head)), "3 does not divide 8");
+        assert!(ok(ShardConfig::ways(4, ShardAxis::Seq)));
+        assert!(!ok(ShardConfig::ways(0, ShardAxis::Head)));
+        assert!(
+            !ok(ShardConfig::ways(4, ShardAxis::Hybrid { head_ways: 2, seq_ways: 4 })),
+            "2x4 != 4"
+        );
+        assert!(ok(ShardConfig::ways(4, ShardAxis::Hybrid { head_ways: 2, seq_ways: 2 })));
+        // Seq ways past the KV extent.
+        let short = AttentionWorkload::square(1, 1, 2, 64, 16);
+        assert!(ShardConfig::ways(4, ShardAxis::Seq).validate_for(&short).is_err());
+    }
+
+    #[test]
+    fn one_shard_plan_is_the_identity() {
+        let w = AttentionWorkload::square(2, 8, 512, 64, 16).with_kv_heads(2);
+        let plan = ShardPlan::new(&w, &ShardConfig::default()).unwrap();
+        assert_eq!(plan.shards, vec![w]);
+        assert_eq!(plan.replicated_kv_bytes, 0);
+    }
+
+    #[test]
+    fn head_split_partitions_then_replicates() {
+        let w = AttentionWorkload::square(1, 8, 512, 64, 16).with_kv_heads(2);
+        // 2-way: clean partition, 4 heads + 1 kv head each.
+        let p2 = ShardPlan::new(&w, &ShardConfig::ways(2, ShardAxis::Head)).unwrap();
+        assert_eq!(p2.shards.len(), 2);
+        assert!(p2.shards.iter().all(|s| s.heads == 4 && s.kv_heads == 1));
+        assert_eq!(p2.replicated_kv_bytes, 0);
+        // 4-way: finer than kv_heads=2 → each kv head lives on 2 shards.
+        let p4 = ShardPlan::new(&w, &ShardConfig::ways(4, ShardAxis::Head)).unwrap();
+        assert!(p4.shards.iter().all(|s| s.heads == 2 && s.kv_heads == 1));
+        assert_eq!(p4.replicated_kv_bytes, w.kv_bytes() * 2);
+        for s in &p4.shards {
+            assert!(s.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn seq_split_chunks_kv_and_keeps_causal_on_the_tail() {
+        let w = AttentionWorkload::square(1, 1, 1000, 64, 16).with_causal(true);
+        let p = ShardPlan::new(&w, &ShardConfig::ways(4, ShardAxis::Seq)).unwrap();
+        let lens: Vec<u64> = p.shards.iter().map(|s| s.kv_len).collect();
+        assert_eq!(lens, vec![250, 250, 250, 250]);
+        assert_eq!(lens.iter().sum::<u64>(), w.kv_len);
+        assert!(p.shards.iter().all(|s| s.q_len == w.q_len), "queries replicate");
+        let causal: Vec<bool> = p.shards.iter().map(|s| s.causal).collect();
+        assert_eq!(causal, vec![false, false, false, true]);
+        // Uneven split balances within one row.
+        let p3 = ShardPlan::new(&w, &ShardConfig::ways(3, ShardAxis::Seq)).unwrap();
+        let lens: Vec<u64> = p3.shards.iter().map(|s| s.kv_len).collect();
+        assert_eq!(lens, vec![334, 333, 333]);
+    }
+
+    #[test]
+    fn paged_seq_split_slices_block_tables() {
+        let w = AttentionWorkload::square(1, 1, 1024, 64, 16).with_paged_shuffled(64, 7);
+        let p = ShardPlan::new(&w, &ShardConfig::ways(4, ShardAxis::Seq)).unwrap();
+        assert_eq!(p.shards.len(), 4);
+        let mut all_blocks = Vec::new();
+        for s in &p.shards {
+            assert_eq!(s.kv_len, 256, "16 blocks split 4 ways, 4 blocks each");
+            assert!(s.validate().is_ok(), "each shard's table must re-validate");
+            match &s.kv_layout {
+                KvLayout::Paged { block_table, .. } => all_blocks.extend(block_table.iter()),
+                _ => panic!("shards must stay paged"),
+            }
+        }
+        // The slices reassemble the parent table exactly, in order.
+        match &w.kv_layout {
+            KvLayout::Paged { block_table, .. } => {
+                assert_eq!(all_blocks, block_table.to_vec());
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn hybrid_split_composes_both_axes() {
+        let w = AttentionWorkload::square(1, 4, 512, 64, 16);
+        let p = ShardPlan::new(
+            &w,
+            &ShardConfig::ways(4, ShardAxis::Hybrid { head_ways: 2, seq_ways: 2 }),
+        )
+        .unwrap();
+        assert_eq!(p.shards.len(), 4);
+        assert!(p.shards.iter().all(|s| s.heads == 2 && s.kv_len == 256));
+    }
+
+    #[test]
+    fn cold_sectors_never_undercount() {
+        let dev = DeviceSpec::tiny();
+        let w = AttentionWorkload::square(1, 8, 512, 64, 16).with_kv_heads(2);
+        let base = cold_sectors(&w, &dev);
+        for cfg in [
+            ShardConfig::default(),
+            ShardConfig::ways(2, ShardAxis::Head),
+            ShardConfig::ways(8, ShardAxis::Head),
+            ShardConfig::ways(4, ShardAxis::Seq),
+            ShardConfig::ways(4, ShardAxis::Hybrid { head_ways: 2, seq_ways: 2 }),
+        ] {
+            let plan = ShardPlan::new(&w, &cfg).unwrap();
+            assert!(
+                plan.total_cold_sectors(&dev) >= base,
+                "{:?} undercounts",
+                cfg.axis
+            );
+        }
+    }
+
+    #[test]
+    fn executor_one_shard_is_bit_identical() {
+        let w = AttentionWorkload::square(1, 2, 512, 64, 16);
+        let plain = Simulator::new(tiny_cfg(w.clone(), ShardConfig::default())).run();
+        let exec = ShardExecutor::new(Arc::new(SweepExecutor::new(1)));
+        let report = exec.run(&tiny_cfg(w, ShardConfig::default())).unwrap();
+        assert_eq!(report.shards(), 1);
+        assert_eq!(report.reduced, plain);
+        assert_eq!(*report.per_shard[0], plain);
+        assert_eq!(report.collective, CollectiveCost::zero());
+    }
+
+    #[test]
+    fn executor_reduces_and_costs_a_real_split() {
+        let w = AttentionWorkload::square(1, 4, 512, 64, 16);
+        let exec = ShardExecutor::new(Arc::new(SweepExecutor::new(2)));
+        let cfg = tiny_cfg(w.clone(), ShardConfig::ways(4, ShardAxis::Head));
+        let report = exec.run(&cfg).unwrap();
+        assert_eq!(report.shards(), 4);
+        // Head shards are shape-identical → identical per-shard results.
+        assert_eq!(report.per_shard[0], report.per_shard[1]);
+        assert_eq!(
+            report.reduced.items,
+            report.per_shard.iter().map(|r| r.items).sum::<u64>()
+        );
+        assert_eq!(
+            report.reduced.counters.l2_miss_sectors,
+            4 * report.per_shard[0].counters.l2_miss_sectors
+        );
+        assert!(report.collective.bytes > 0);
+        // The run_reduced (sequential execute-path) reduction agrees.
+        assert_eq!(run_reduced(&cfg), report.reduced);
+    }
+
+    #[test]
+    fn run_reduced_with_order_variants() {
+        // The reduction must respect the config's traversal, not reset it.
+        let w = AttentionWorkload::square(1, 2, 512, 64, 16);
+        let mk = |order: TraversalRef| {
+            let mut cfg = tiny_cfg(w.clone(), ShardConfig::ways(2, ShardAxis::Seq));
+            cfg.order = order;
+            cfg
+        };
+        let cyc = run_reduced(&mk(TraversalRef::cyclic()));
+        let saw = run_reduced(&mk(TraversalRef::sawtooth()));
+        assert_eq!(
+            cyc.counters.l2_sectors_from_tex, saw.counters.l2_sectors_from_tex,
+            "reordering must not change aggregate traffic"
+        );
+    }
+}

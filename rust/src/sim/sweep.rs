@@ -44,6 +44,7 @@ use super::engine::{CapacityProfile, SimConfig, SimResult, Simulator};
 use super::hierarchy::HierarchyKey;
 use super::kernel_model::KernelVariant;
 use super::scheduler::SchedulerKind;
+use super::shard::ShardKey;
 use super::traversal::TraversalRef;
 use super::workload::AttentionWorkload;
 
@@ -73,6 +74,11 @@ pub struct ConfigKey {
     /// The fill-port width is excluded like the other throughput-only
     /// fields (see [`HierarchyConfig::key_fields`](super::hierarchy::HierarchyConfig::key_fields)).
     hierarchy: Option<HierarchyKey>,
+    /// `None` when unsharded (`shards == 1`), so every pre-shard config
+    /// keeps its exact pre-shard key. The fabric model is excluded — it
+    /// only affects the collective time term (see
+    /// [`ShardConfig::key_fields`](super::shard::ShardConfig::key_fields)).
+    shard: Option<ShardKey>,
 }
 
 impl ConfigKey {
@@ -91,6 +97,7 @@ impl ConfigKey {
             sector_bytes: cfg.device.sector_bytes,
             non_tex_bits: cfg.device.non_tex_sectors_per_step.to_bits(),
             hierarchy: cfg.hierarchy.key_fields(),
+            shard: cfg.shard.key_fields(),
         }
     }
 }
@@ -122,6 +129,11 @@ fn mattson_supported(cfg: &SimConfig) -> bool {
     // does, but the forwarded weights are not the plain trace a stack
     // algorithm can replay), so hierarchy configs take per-capacity runs.
     if cfg.hierarchy.enabled {
+        return false;
+    }
+    // A sharded config's result is a reduction over several sub-traces,
+    // not one replayable trace — no single stack profile describes it.
+    if cfg.shard.enabled() {
         return false;
     }
     let w = &cfg.workload;
@@ -406,9 +418,19 @@ impl SweepExecutor {
     /// Execute one plain simulation, timing it and folding its fast-path
     /// counters into [`Self::timing`]. The result is bit-identical to
     /// `Simulator::new(cfg).run()` — instrumentation never reaches it.
+    /// Shard-enabled configs (e.g. submitted through the sweep-service
+    /// `shards=` keys) route through the sequential per-shard reduction of
+    /// [`super::shard::run_reduced`]; the aggregate is memoized under the
+    /// config's shard-annotated key like any other result. The parallel,
+    /// per-shard-memoized path is
+    /// [`ShardExecutor`](super::shard::ShardExecutor).
     fn execute_sim(&self, cfg: &SimConfig) -> SimResult {
         let start = Instant::now();
-        let (result, stats) = Simulator::new(cfg.clone()).run_with_stats();
+        let (result, stats) = if cfg.shard.enabled() {
+            (super::shard::run_reduced(cfg), FrontStackStats::default())
+        } else {
+            Simulator::new(cfg.clone()).run_with_stats()
+        };
         self.note_job(false, start.elapsed().as_secs_f64(), stats);
         result
     }
@@ -1096,6 +1118,55 @@ mod tests {
         // Hierarchy configs opt out of stack-distance capacity grouping.
         assert!(mattson_supported(&a));
         assert!(!mattson_supported(&on));
+    }
+
+    #[test]
+    fn config_key_shard_axis() {
+        use super::super::shard::{ShardAxis, ShardConfig};
+        let a = small_cfg(256, TraversalRef::cyclic());
+        // Unsharded shard params never perturb the key, so every pre-shard
+        // spec keeps its exact pre-shard identity.
+        let mut b = a.clone();
+        b.shard.axis = ShardAxis::Seq;
+        b.shard.fabric = crate::gb10::FabricModel::cx7();
+        assert_eq!(ConfigKey::of(&a), ConfigKey::of(&b));
+        // Enabling sharding forks the key...
+        let mut on = a.clone();
+        on.shard = ShardConfig::ways(2, ShardAxis::Head);
+        assert_ne!(ConfigKey::of(&a), ConfigKey::of(&on));
+        // ...count and axis distinguish within the sharded world...
+        let mut on4 = on.clone();
+        on4.shard.shards = 4;
+        assert_ne!(ConfigKey::of(&on), ConfigKey::of(&on4));
+        let mut on_seq = on.clone();
+        on_seq.shard.axis = ShardAxis::Seq;
+        assert_ne!(ConfigKey::of(&on), ConfigKey::of(&on_seq));
+        // ...while the throughput-only fabric model does not.
+        let mut on_fab = on.clone();
+        on_fab.shard.fabric = crate::gb10::FabricModel::cx7();
+        assert_eq!(ConfigKey::of(&on), ConfigKey::of(&on_fab));
+        // Sharded configs opt out of stack-distance capacity grouping.
+        assert!(mattson_supported(&a));
+        assert!(!mattson_supported(&on));
+    }
+
+    #[test]
+    fn sharded_config_runs_through_the_executor() {
+        use super::super::shard::{run_reduced, ShardAxis, ShardConfig};
+        let mut cfg = small_cfg(512, TraversalRef::cyclic());
+        cfg.workload = AttentionWorkload::square(1, 2, 512, 64, 16);
+        cfg.shard = ShardConfig::ways(2, ShardAxis::Seq);
+        let exec = SweepExecutor::new(2);
+        let r = exec.run_one(&cfg);
+        assert_eq!(*r, run_reduced(&cfg), "executor must apply the shard reduction");
+        // The aggregate memoizes under the shard-annotated key.
+        let again = exec.run_one(&cfg);
+        assert!(Arc::ptr_eq(&r, &again));
+        // run_at_capacity falls back to the same path (no stack profile
+        // exists for a reduction over several traces).
+        let via_cap = exec.run_at_capacity(&cfg);
+        assert!(Arc::ptr_eq(&r, &via_cap));
+        assert_eq!(exec.profiled_len(), 0);
     }
 
     #[test]

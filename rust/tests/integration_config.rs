@@ -46,6 +46,10 @@ fn serve_config_parses() {
     assert_eq!(s.queue.max_batch_total_tokens, 1 << 20);
     assert!((s.queue.waiting_served_ratio - 1.2).abs() < 1e-12);
     assert_eq!(s.queue.max_concurrent_clients, 0);
+    // The shipped [shard] section documents the knobs but ships with the
+    // planner off: single-chip serving, byte for byte.
+    assert_eq!(s.shard, sawtooth_attn::sim::shard::ShardConfig::default());
+    assert!(!s.shard.enabled());
 }
 
 #[test]

@@ -4,6 +4,7 @@
 use sawtooth_attn::config::{PolicyConfig, QueueConfig, ServeConfig};
 use sawtooth_attn::coordinator::{AttentionRequest, Engine};
 use sawtooth_attn::runtime::{attention_host_ref, default_artifacts_dir};
+use sawtooth_attn::sim::shard::ShardConfig;
 use sawtooth_attn::sim::traversal::TraversalRef;
 use sawtooth_attn::util::rng::Rng;
 
@@ -18,6 +19,7 @@ fn cfg() -> ServeConfig {
         warmup: false,
         policy: PolicyConfig::default(),
         queue: QueueConfig::default(),
+        shard: ShardConfig::default(),
     }
 }
 

@@ -25,6 +25,7 @@ fn tiny_cfg(seq: u64, order: TraversalRef, causal: bool, sched: SchedulerKind) -
         seed: 0,
         model_l1: true,
         hierarchy: HierarchyConfig::default(),
+        shard: sawtooth_attn::sim::shard::ShardConfig::default(),
     }
 }
 

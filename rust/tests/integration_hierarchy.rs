@@ -23,6 +23,7 @@ fn tiny_cfg(w: AttentionWorkload, order: TraversalRef, sched: SchedulerKind) -> 
         seed: 0,
         model_l1: true,
         hierarchy: HierarchyConfig::default(),
+        shard: sawtooth_attn::sim::shard::ShardConfig::default(),
     }
 }
 

@@ -178,6 +178,7 @@ fn auto_mode_serves_from_decision_cache() {
         warmup: false,
         policy: PolicyConfig { order: PolicyOrder::Auto, ..PolicyConfig::default() },
         queue: QueueConfig::default(),
+        shard: sawtooth_attn::sim::shard::ShardConfig::default(),
     };
     let engine = Engine::start(cfg).unwrap();
     let mut rng = Rng::new(31);

@@ -9,6 +9,7 @@ use std::sync::Mutex;
 use sawtooth_attn::config::{PolicyConfig, QueueConfig, QueueMode, ServeConfig};
 use sawtooth_attn::coordinator::{AttentionRequest, Engine, EngineError};
 use sawtooth_attn::runtime::{attention_host_ref, default_artifacts_dir};
+use sawtooth_attn::sim::shard::ShardConfig;
 use sawtooth_attn::sim::traversal::TraversalRef;
 use sawtooth_attn::util::proptest::check;
 use sawtooth_attn::util::rng::Rng;
@@ -24,6 +25,7 @@ fn cfg(mode: QueueMode) -> ServeConfig {
         warmup: false,
         policy: PolicyConfig::default(),
         queue: QueueConfig { mode, ..QueueConfig::default() },
+        shard: ShardConfig::default(),
     }
 }
 

@@ -1,0 +1,182 @@
+//! Integration tests of the sharded scale-out subsystem (ISSUE 10).
+//!
+//! The critical contract first: `shards = 1` (and an absent `[shard]`
+//! section — both spell [`ShardConfig::default`]) replays the unsharded
+//! model bit for bit, across the whole traversal registry × both
+//! schedulers × the decode-era shape grid, through every execution path
+//! (direct [`Simulator`], [`ShardExecutor`], and the memoizing
+//! [`SweepExecutor`]). Then the conservation invariant (the per-shard cold
+//! footprints of any valid plan sum to at least the unsharded footprint)
+//! and the sweep-key stability rules (default shard configs key exactly
+//! like pre-shard configs; the fabric never keys).
+
+use std::sync::Arc;
+
+use sawtooth_attn::gb10::{DeviceSpec, FabricModel};
+use sawtooth_attn::sim::scheduler::SchedulerKind;
+use sawtooth_attn::sim::shard::{ShardAxis, ShardConfig, ShardExecutor, ShardPlan};
+use sawtooth_attn::sim::sweep::SweepExecutor;
+use sawtooth_attn::sim::traversal::TraversalRegistry;
+use sawtooth_attn::sim::{SimConfig, Simulator};
+use sawtooth_attn::AttentionWorkload;
+
+fn tiny_cfg(w: AttentionWorkload) -> SimConfig {
+    let mut cfg = SimConfig::cuda_study(w);
+    cfg.device = DeviceSpec::tiny();
+    cfg
+}
+
+/// The decode-era shape grid: prefill square, causal square, single-token
+/// decode with MQA grouping, and a paged + shuffled KV cache.
+fn shapes() -> Vec<AttentionWorkload> {
+    vec![
+        AttentionWorkload::square(1, 4, 512, 64, 16),
+        AttentionWorkload::square(1, 4, 512, 64, 16).with_causal(true),
+        AttentionWorkload::square(1, 4, 512, 64, 16)
+            .with_q_len(1)
+            .with_kv_heads(1),
+        AttentionWorkload::square(1, 4, 1024, 64, 16).with_paged_shuffled(64, 7),
+    ]
+}
+
+/// Tentpole acceptance: `shards = 1` is bitwise identical to the unsharded
+/// simulation for every registered traversal × scheduler × shape, on every
+/// execution path.
+#[test]
+fn one_shard_replays_the_unsharded_model_across_the_registry() {
+    let sweep = Arc::new(SweepExecutor::new(2));
+    let shexec = ShardExecutor::new(sweep.clone());
+    for w in shapes() {
+        for sched in [SchedulerKind::Persistent, SchedulerKind::NonPersistent] {
+            for order in TraversalRegistry::global().instances() {
+                let cfg = tiny_cfg(w.clone()).with_scheduler(sched).with_order(order.clone());
+                let plain = Simulator::new(cfg.clone()).run();
+                // ShardExecutor path.
+                let report = shexec.run(&cfg).expect("default shard config always plans");
+                assert_eq!(report.shards(), 1, "{} on {:?}", order.name(), w);
+                assert_eq!(report.reduced, plain, "{} reduced diverged", order.name());
+                assert_eq!(*report.per_shard[0], plain);
+                assert_eq!(report.collective.bytes, 0);
+                assert_eq!(report.replicated_kv_bytes, 0);
+                // SweepExecutor path (the serving/report path).
+                assert_eq!(*sweep.run_one(&cfg), plain, "{} memo path diverged", order.name());
+            }
+        }
+    }
+}
+
+/// Conservation: any valid plan's per-shard cold (first-touch) footprints
+/// sum to at least the unsharded footprint — splitting never hides bytes,
+/// replication only adds them. Swept over the shape grid × every axis that
+/// factors it.
+#[test]
+fn shard_cold_sectors_never_undercount_the_unsharded_footprint() {
+    let dev = DeviceSpec::tiny();
+    let plans = [
+        ShardConfig::ways(2, ShardAxis::Head),
+        ShardConfig::ways(4, ShardAxis::Head),
+        ShardConfig::ways(2, ShardAxis::Seq),
+        ShardConfig::ways(4, ShardAxis::Seq),
+        ShardConfig::ways(4, ShardAxis::Hybrid { head_ways: 2, seq_ways: 2 }),
+    ];
+    for w in shapes() {
+        let base = ShardPlan::new(&w, &ShardConfig::default())
+            .unwrap()
+            .total_cold_sectors(&dev);
+        for cfg in &plans {
+            if cfg.validate_for(&w).is_err() {
+                continue; // axis does not factor this shape
+            }
+            let plan = ShardPlan::new(&w, cfg).unwrap();
+            assert!(
+                plan.total_cold_sectors(&dev) >= base,
+                "{} on {:?} undercounts the unsharded footprint",
+                cfg.axis,
+                w
+            );
+        }
+    }
+}
+
+/// Sweep-key stability: a default shard config keys exactly like the
+/// pre-shard config (cache hit), the fabric never keys (throughput-model
+/// only), and an enabled config gets its own entry whose memoized result
+/// equals the shard reduction.
+#[test]
+fn sweep_keys_ignore_default_shards_and_the_fabric() {
+    let exec = SweepExecutor::new(1);
+    let base = tiny_cfg(AttentionWorkload::square(1, 4, 512, 64, 16));
+    let a = exec.run_one(&base);
+    let n = exec.cached_len();
+    // Explicit default shard config: same key, same Arc.
+    let mut dflt = base.clone();
+    dflt.shard = ShardConfig::default();
+    let b = exec.run_one(&dflt);
+    assert!(Arc::ptr_eq(&a, &b), "default shard config must be a cache hit");
+    assert_eq!(exec.cached_len(), n);
+    // Fabric differs, still unsharded: same key.
+    let mut fab = base.clone();
+    fab.shard.fabric = FabricModel::cx7();
+    assert!(Arc::ptr_eq(&a, &exec.run_one(&fab)));
+    assert_eq!(exec.cached_len(), n);
+    // Enabled: a new key, and the memoized result is the shard reduction.
+    let mut sharded = base.clone();
+    sharded.shard = ShardConfig::ways(2, ShardAxis::Seq);
+    let r = exec.run_one(&sharded);
+    assert!(exec.cached_len() > n, "sharded config must key separately");
+    let shexec = ShardExecutor::new(Arc::new(SweepExecutor::new(1)));
+    assert_eq!(*r, shexec.run(&sharded).unwrap().reduced);
+    // A different fabric on the sharded config: cache hit (fabric is
+    // throughput-only even when sharding).
+    let hits = exec.cached_len();
+    let mut sharded_cx7 = sharded.clone();
+    sharded_cx7.shard.fabric = FabricModel::cx7();
+    assert!(Arc::ptr_eq(&r, &exec.run_one(&sharded_cx7)));
+    assert_eq!(exec.cached_len(), hits);
+}
+
+/// Head shards of an MHA shape are shape-identical, so the fan-out
+/// deduplicates to ONE simulation through the shared executor — the
+/// memoizer is the scale-out subsystem's perf story.
+#[test]
+fn identical_head_shards_deduplicate_through_the_memoizer() {
+    let sweep = Arc::new(SweepExecutor::new(2));
+    let shexec = ShardExecutor::new(sweep.clone());
+    let mut cfg = tiny_cfg(AttentionWorkload::square(1, 4, 512, 64, 16));
+    cfg.shard = ShardConfig::ways(4, ShardAxis::Head);
+    let report = shexec.run(&cfg).unwrap();
+    assert_eq!(report.shards(), 4);
+    assert_eq!(sweep.cached_len(), 1, "4 identical shards must simulate once");
+    for s in &report.per_shard[1..] {
+        assert!(Arc::ptr_eq(&report.per_shard[0], s));
+    }
+}
+
+/// Traffic accounting on a non-causal MHA shape: a head split that factors
+/// the KV heads is a clean partition — aggregate tex traffic is conserved
+/// exactly — while a seq split replicates the queries, so its aggregate
+/// can only grow. (Causal shapes are excluded from the exact claim: the
+/// diagonal-band approximation documented in EXPERIMENTS.md §Sharding
+/// deliberately changes per-shard masking.)
+#[test]
+fn split_traffic_accounting_on_noncausal_shapes() {
+    let shexec = ShardExecutor::new(Arc::new(SweepExecutor::new(1)));
+    let w = AttentionWorkload::square(1, 4, 512, 64, 16);
+    let plain = Simulator::new(tiny_cfg(w.clone())).run();
+    for ways in [2u32, 4] {
+        let mut head = tiny_cfg(w.clone());
+        head.shard = ShardConfig::ways(ways, ShardAxis::Head);
+        let hr = shexec.run(&head).unwrap();
+        assert_eq!(
+            hr.reduced.counters.l2_sectors_from_tex, plain.counters.l2_sectors_from_tex,
+            "{ways}-way head split changed aggregate tex traffic"
+        );
+        let mut seq = tiny_cfg(w.clone());
+        seq.shard = ShardConfig::ways(ways, ShardAxis::Seq);
+        let sr = shexec.run(&seq).unwrap();
+        assert!(
+            sr.reduced.counters.l2_sectors_from_tex >= plain.counters.l2_sectors_from_tex,
+            "{ways}-way seq split lost aggregate tex traffic"
+        );
+    }
+}

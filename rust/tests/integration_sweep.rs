@@ -27,6 +27,7 @@ fn tiny_cfg(seq: u64, tile: u32) -> SimConfig {
         seed: 0,
         model_l1: true,
         hierarchy: HierarchyConfig::default(),
+        shard: sawtooth_attn::sim::shard::ShardConfig::default(),
     }
 }
 

@@ -12,6 +12,7 @@ use sawtooth_attn::config::{PolicyConfig, QueueConfig, ServeConfig, SweepService
 use sawtooth_attn::coordinator::{AttentionRequest, ClientId, Engine, SweepService};
 use sawtooth_attn::gb10::DeviceSpec;
 use sawtooth_attn::runtime::default_artifacts_dir;
+use sawtooth_attn::sim::shard::ShardConfig;
 use sawtooth_attn::sim::sweep::{SweepExecutor, SweepGrid};
 use sawtooth_attn::sim::traversal::TraversalRef;
 use sawtooth_attn::sim::{SimConfig, SimResult};
@@ -211,6 +212,7 @@ fn serve_cfg() -> ServeConfig {
         warmup: false,
         policy: PolicyConfig::default(),
         queue: QueueConfig::default(),
+        shard: ShardConfig::default(),
     }
 }
 

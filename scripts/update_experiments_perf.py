@@ -2,12 +2,15 @@
 """Fill EXPERIMENTS.md's measured-numbers block from the bench JSON files.
 
 Reads rust/BENCH_sweep.json, rust/BENCH_reuse.json, rust/BENCH_policy.json,
-rust/BENCH_serve.json, rust/BENCH_decode.json and rust/BENCH_hierarchy.json
-(produced by `cargo bench --bench bench_sweep` / `--bench bench_reuse` /
-`--bench bench_policy` / `--bench bench_coordinator` / `--bench bench_decode`
-/ `--bench bench_hierarchy`, or downloaded from the CI artifacts) and
-rewrites the region between the `<!-- BENCH:begin -->` / `<!-- BENCH:end -->`
-markers in EXPERIMENTS.md.
+rust/BENCH_serve.json, rust/BENCH_decode.json, rust/BENCH_hierarchy.json and
+rust/BENCH_shard.json (produced by `make bench-perf`, or downloaded from the
+CI artifacts) and rewrites the region between the `<!-- BENCH:begin -->` /
+`<!-- BENCH:end -->` markers in EXPERIMENTS.md.
+
+Missing or partial bench files are skipped with a warning on stderr instead
+of failing the whole fold — a host that only ran some of the benches (or a
+CI run whose artifact set is incomplete) still gets every section it has
+numbers for.
 
 Usage: python3 scripts/update_experiments_perf.py   (from the repo root,
 or anywhere — paths are resolved relative to this file).
@@ -22,189 +25,289 @@ EXPERIMENTS = ROOT / "EXPERIMENTS.md"
 BEGIN = "<!-- BENCH:begin -->"
 END = "<!-- BENCH:end -->"
 
+BENCH_FILES = (
+    "BENCH_sweep.json",
+    "BENCH_reuse.json",
+    "BENCH_policy.json",
+    "BENCH_serve.json",
+    "BENCH_decode.json",
+    "BENCH_hierarchy.json",
+    "BENCH_shard.json",
+)
+
+
+def warn(msg):
+    print(f"warning: {msg}", file=sys.stderr)
+
 
 def load(name):
     path = ROOT / "rust" / name
     if not path.exists():
+        warn(f"{name} not found — skipping its section")
         return None
-    with open(path) as f:
-        return json.load(f)
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except ValueError as e:
+        warn(f"{name} is not valid JSON ({e}) — skipping its section")
+        return None
 
 
-def render(sweep, reuse, policy, serve, decode, hierarchy):
+def render_sweep(sweep):
     lines = []
-    if all(x is None for x in (sweep, reuse, policy, serve, decode, hierarchy)):
+    lines.append("Sweep executor (`bench_sweep`, %d configs, %d threads):" % (sweep["configs"], sweep["threads"]))
+    lines.append("")
+    lines.append("| path | wall-clock |")
+    lines.append("|---|---|")
+    lines.append("| sequential | %.3f s |" % sweep["sequential_s"])
+    lines.append(
+        "| parallel ×%d | %.3f s (**%.2fx**) |" % (sweep["threads"], sweep["parallel_s"], sweep["speedup"])
+    )
+    lines.append("| memoized re-run | %.6f s |" % sweep["memoized_rerun_s"])
+    lines.append("")
+    return lines
+
+
+def render_reuse(reuse):
+    lines = []
+    lines.append(
+        "Reuse-distance fast path (`bench_reuse`, %d configs = %d capacities × 2 orders):"
+        % (reuse["configs"], reuse["capacities"])
+    )
+    lines.append("")
+    lines.append("| path | wall-clock |")
+    lines.append("|---|---|")
+    lines.append("| per-capacity simulation (`--no-mattson`) | %.3f s |" % reuse["ungrouped_s"])
+    lines.append("| grouped Mattson profile | %.3f s (**%.2fx**) |" % (reuse["grouped_s"], reuse["speedup"]))
+    lines.append("| 64 what-if capacities from cached curve | %.6f s |" % reuse["whatif_64caps_s"])
+    lines.append("")
+    lines.append("Results bit-identical across paths: `%s`." % reuse["results_identical"])
+    lines.append("")
+    if "cutile_fast_s" in reuse:
         lines.append(
-            "*No measured numbers yet: run `make bench-perf` on a ≥8-core "
-            "host (or download the CI `BENCH_sweep`/`BENCH_reuse`/"
-            "`BENCH_policy`/`BENCH_serve`/`BENCH_decode`/`BENCH_hierarchy` "
-            "artifacts into `rust/`) and re-run "
-            "`python3 scripts/update_experiments_perf.py`.*"
+            "Front-stack fast path (§4.3 CuTile study shape, S=128K B=8, "
+            "Mattson profile):"
         )
-        return lines
-    if sweep is not None:
-        lines.append("Sweep executor (`bench_sweep`, %d configs, %d threads):" % (sweep["configs"], sweep["threads"]))
         lines.append("")
         lines.append("| path | wall-clock |")
         lines.append("|---|---|")
-        lines.append("| sequential | %.3f s |" % sweep["sequential_s"])
+        lines.append("| front stack off (Fenwick per access) | %.3f s |" % reuse["cutile_slow_s"])
         lines.append(
-            "| parallel ×%d | %.3f s (**%.2fx**) |" % (sweep["threads"], sweep["parallel_s"], sweep["speedup"])
-        )
-        lines.append("| memoized re-run | %.6f s |" % sweep["memoized_rerun_s"])
-        lines.append("")
-    if reuse is not None:
-        lines.append(
-            "Reuse-distance fast path (`bench_reuse`, %d configs = %d capacities × 2 orders):"
-            % (reuse["configs"], reuse["capacities"])
+            "| front stack on (default) | %.3f s (**%.2fx**) |"
+            % (reuse["cutile_fast_s"], reuse["cutile_speedup"])
         )
         lines.append("")
-        lines.append("| path | wall-clock |")
-        lines.append("|---|---|")
-        lines.append("| per-capacity simulation (`--no-mattson`) | %.3f s |" % reuse["ungrouped_s"])
-        lines.append("| grouped Mattson profile | %.3f s (**%.2fx**) |" % (reuse["grouped_s"], reuse["speedup"]))
-        lines.append("| 64 what-if capacities from cached curve | %.6f s |" % reuse["whatif_64caps_s"])
-        lines.append("")
-        lines.append("Results bit-identical across paths: `%s`." % reuse["results_identical"])
-        lines.append("")
-        if "cutile_fast_s" in reuse:
-            lines.append(
-                "Front-stack fast path (§4.3 CuTile study shape, S=128K B=8, "
-                "Mattson profile):"
+        lines.append(
+            "Fast-path engagement: %.1f%% (CuTile S=128K), %.1f%% (CUDA "
+            "S=64K); curves bit-identical: `%s`."
+            % (
+                100.0 * reuse["cutile_engagement"],
+                100.0 * reuse["cuda_engagement"],
+                reuse["cutile_curves_identical"],
             )
-            lines.append("")
-            lines.append("| path | wall-clock |")
-            lines.append("|---|---|")
-            lines.append("| front stack off (Fenwick per access) | %.3f s |" % reuse["cutile_slow_s"])
+        )
+        lines.append("")
+    return lines
+
+
+def render_policy(policy):
+    lines = []
+    lines.append(
+        "Policy engine (`bench_policy`, %d candidates, winner `%s`):"
+        % (policy["candidates"], policy["winner"])
+    )
+    lines.append("")
+    lines.append("| path | wall-clock |")
+    lines.append("|---|---|")
+    lines.append("| cold decide, 1 probe thread | %.3f s |" % policy["cold_decide_1t_s"])
+    lines.append(
+        "| cold decide, %d probe threads | %.3f s (**%.2fx**) |"
+        % (policy["threads"], policy["cold_decide_nt_s"], policy["fanout_speedup"])
+    )
+    lines.append("| cached decide (per call) | %.9f s |" % policy["cached_decide_s"])
+    lines.append(
+        "| %d per-capacity what-ifs from cached curves | %.6f s |"
+        % (policy["whatif_caps"], policy["whatif_s"])
+    )
+    return lines
+
+
+def render_serve(serve):
+    lines = []
+    lines.append(
+        "Serving engine (`bench_coordinator`, %d requests, %d clients, "
+        "mixed 128/256/512 Poisson load; static windows vs continuous "
+        "batching):" % (serve["requests"], serve["clients"])
+    )
+    lines.append("")
+    lines.append(
+        "| offered load | mode | throughput | in-queue mean | in-queue p99 "
+        "| shed | tokens/batch |"
+    )
+    lines.append("|---|---|---|---|---|---|---|")
+    for pt in serve["points"]:
+        for mode in ("static", "continuous"):
+            m = pt[mode]
             lines.append(
-                "| front stack on (default) | %.3f s (**%.2fx**) |"
-                % (reuse["cutile_fast_s"], reuse["cutile_speedup"])
-            )
-            lines.append("")
-            lines.append(
-                "Fast-path engagement: %.1f%% (CuTile S=128K), %.1f%% (CUDA "
-                "S=64K); curves bit-identical: `%s`."
+                "| %.0f req/s | %s | %.1f req/s | %.2f ms | %.2f ms "
+                "| %.1f%% | %.0f |"
                 % (
-                    100.0 * reuse["cutile_engagement"],
-                    100.0 * reuse["cuda_engagement"],
-                    reuse["cutile_curves_identical"],
+                    pt["offered_rps"],
+                    mode,
+                    m["throughput_rps"],
+                    m["tiq_mean_ms"],
+                    m["tiq_p99_ms"],
+                    100.0 * m["shed_rate"],
+                    m["mean_tokens_per_batch"],
                 )
             )
-            lines.append("")
-    if policy is not None:
-        lines.append(
-            "Policy engine (`bench_policy`, %d candidates, winner `%s`):"
-            % (policy["candidates"], policy["winner"])
+    return lines
+
+
+def render_decode(decode):
+    lines = []
+    lines.append(
+        "Decode shapes (`bench_decode`, %s; L2 miss sectors, weighted "
+        "model):" % decode["grid"]
+    )
+    lines.append("")
+    lines.append("| shape | cyclic | sawtooth | best (registry) |")
+    lines.append("|---|---|---|---|")
+    lines.append(
+        "| prefill q=32K | %d | %d | `%s` (%d) |"
+        % (
+            decode["prefill_cyclic_misses"],
+            decode["prefill_sawtooth_misses"],
+            decode["prefill_best_order"],
+            decode["prefill_best_misses"],
         )
-        lines.append("")
-        lines.append("| path | wall-clock |")
-        lines.append("|---|---|")
-        lines.append("| cold decide, 1 probe thread | %.3f s |" % policy["cold_decide_1t_s"])
-        lines.append(
-            "| cold decide, %d probe threads | %.3f s (**%.2fx**) |"
-            % (policy["threads"], policy["cold_decide_nt_s"], policy["fanout_speedup"])
+    )
+    lines.append(
+        "| decode q=1 | %d | %d | `%s` (%d) |"
+        % (
+            decode["decode_cyclic_misses"],
+            decode["decode_sawtooth_misses"],
+            decode["decode_best_order"],
+            decode["decode_best_misses"],
         )
-        lines.append("| cached decide (per call) | %.9f s |" % policy["cached_decide_s"])
-        lines.append(
-            "| %d per-capacity what-ifs from cached curves | %.6f s |"
-            % (policy["whatif_caps"], policy["whatif_s"])
+    )
+    lines.append("")
+    lines.append(
+        "MQA (kv_heads 8→1) decode misses: %d (%.2fx fewer than "
+        "ungrouped); exact-LRU paged ≡ contiguous: `%s`."
+        % (
+            decode["mqa_decode_misses"],
+            decode["gqa_miss_ratio"],
+            decode["exact_paged_identical"],
         )
-    if serve is not None:
-        if lines:
-            lines.append("")
+    )
+    return lines
+
+
+def render_hierarchy(hierarchy):
+    lines = []
+    lines.append(
+        "Hierarchy level (`bench_hierarchy`, %s; L2-from-tex sectors "
+        "with the per-SM L1/MSHR model on vs off):" % hierarchy["grid"]
+    )
+    lines.append("")
+    lines.append(
+        "| order | L2 from tex (off) | L2 from tex (on) | L1 filtered "
+        "| sector hit % | MSHR merges | sim overhead |"
+    )
+    lines.append("|---|---|---|---|---|---|---|")
+    for order in ("cyclic", "sawtooth"):
+        if f"{order}_off_l2_from_tex" not in hierarchy:
+            continue
         lines.append(
-            "Serving engine (`bench_coordinator`, %d requests, %d clients, "
-            "mixed 128/256/512 Poisson load; static windows vs continuous "
-            "batching):" % (serve["requests"], serve["clients"])
-        )
-        lines.append("")
-        lines.append(
-            "| offered load | mode | throughput | in-queue mean | in-queue p99 "
-            "| shed | tokens/batch |"
-        )
-        lines.append("|---|---|---|---|---|---|---|")
-        for pt in serve["points"]:
-            for mode in ("static", "continuous"):
-                m = pt[mode]
-                lines.append(
-                    "| %.0f req/s | %s | %.1f req/s | %.2f ms | %.2f ms "
-                    "| %.1f%% | %.0f |"
-                    % (
-                        pt["offered_rps"],
-                        mode,
-                        m["throughput_rps"],
-                        m["tiq_mean_ms"],
-                        m["tiq_p99_ms"],
-                        100.0 * m["shed_rate"],
-                        m["mean_tokens_per_batch"],
-                    )
-                )
-    if decode is not None:
-        if lines:
-            lines.append("")
-        lines.append(
-            "Decode shapes (`bench_decode`, %s; L2 miss sectors, weighted "
-            "model):" % decode["grid"]
-        )
-        lines.append("")
-        lines.append("| shape | cyclic | sawtooth | best (registry) |")
-        lines.append("|---|---|---|---|")
-        lines.append(
-            "| prefill q=32K | %d | %d | `%s` (%d) |"
+            "| %s | %d | %d | %.1f%% | %.1f%% | %d | %.2fx |"
             % (
-                decode["prefill_cyclic_misses"],
-                decode["prefill_sawtooth_misses"],
-                decode["prefill_best_order"],
-                decode["prefill_best_misses"],
+                order,
+                hierarchy[f"{order}_off_l2_from_tex"],
+                hierarchy[f"{order}_on_l2_from_tex"],
+                100.0 * hierarchy[f"{order}_l1_filter_rate"],
+                hierarchy[f"{order}_l1_sector_hit_pct"],
+                hierarchy[f"{order}_mshr_merges"],
+                hierarchy[f"{order}_sim_overhead"],
             )
         )
-        lines.append(
-            "| decode q=1 | %d | %d | `%s` (%d) |"
-            % (
-                decode["decode_cyclic_misses"],
-                decode["decode_sawtooth_misses"],
-                decode["decode_best_order"],
-                decode["decode_best_misses"],
-            )
-        )
-        lines.append("")
-        lines.append(
-            "MQA (kv_heads 8→1) decode misses: %d (%.2fx fewer than "
-            "ungrouped); exact-LRU paged ≡ contiguous: `%s`."
-            % (
-                decode["mqa_decode_misses"],
-                decode["gqa_miss_ratio"],
-                decode["exact_paged_identical"],
-            )
-        )
-    if hierarchy is not None:
-        if lines:
-            lines.append("")
-        lines.append(
-            "Hierarchy level (`bench_hierarchy`, %s; L2-from-tex sectors "
-            "with the per-SM L1/MSHR model on vs off):" % hierarchy["grid"]
-        )
-        lines.append("")
-        lines.append(
-            "| order | L2 from tex (off) | L2 from tex (on) | L1 filtered "
-            "| sector hit % | MSHR merges | sim overhead |"
-        )
-        lines.append("|---|---|---|---|---|---|---|")
-        for order in ("cyclic", "sawtooth"):
-            if f"{order}_off_l2_from_tex" not in hierarchy:
+    return lines
+
+
+def render_shard(shard):
+    lines = []
+    lines.append(
+        "Shard planner (`bench_shard`, %s; end-to-end = straggler chip + "
+        "collective):" % shard["grid"]
+    )
+    lines.append("")
+    lines.append("| shards | axis | straggler misses | collective MiB | time | vs 1 chip |")
+    lines.append("|---|---|---|---|---|---|")
+    lines.append(
+        "| 1 | - | %d | 0 | %.3f ms | 1.00x |"
+        % (shard["unsharded_misses"], 1e3 * shard["unsharded_time_s"])
+    )
+    for axis in ("head", "seq"):
+        for n in (2, 4, 8):
+            if f"{axis}_{n}_time_s" not in shard:
                 continue
             lines.append(
-                "| %s | %d | %d | %.1f%% | %.1f%% | %d | %.2fx |"
+                "| %d | %s | %d | %.1f | %.3f ms | %.2fx |"
                 % (
-                    order,
-                    hierarchy[f"{order}_off_l2_from_tex"],
-                    hierarchy[f"{order}_on_l2_from_tex"],
-                    100.0 * hierarchy[f"{order}_l1_filter_rate"],
-                    hierarchy[f"{order}_l1_sector_hit_pct"],
-                    hierarchy[f"{order}_mshr_merges"],
-                    hierarchy[f"{order}_sim_overhead"],
+                    n,
+                    axis,
+                    shard[f"{axis}_{n}_straggler_misses"],
+                    shard[f"{axis}_{n}_collective_bytes"] / (1024.0 * 1024.0),
+                    1e3 * shard[f"{axis}_{n}_time_s"],
+                    shard[f"{axis}_{n}_speedup"],
                 )
             )
+    lines.append("")
+    lines.append(
+        "Axis flip (4-way MQA over cx7): short KV winner `%s`, long KV "
+        "winner `%s` — asserted inline by the bench."
+        % (shard["flip_short_kv_winner"], shard["flip_long_kv_winner"])
+    )
+    return lines
+
+
+SECTIONS = (
+    ("BENCH_sweep.json", render_sweep),
+    ("BENCH_reuse.json", render_reuse),
+    ("BENCH_policy.json", render_policy),
+    ("BENCH_serve.json", render_serve),
+    ("BENCH_decode.json", render_decode),
+    ("BENCH_hierarchy.json", render_hierarchy),
+    ("BENCH_shard.json", render_shard),
+)
+
+
+def render():
+    sections = []
+    for name, fn in SECTIONS:
+        data = load(name)
+        if data is None:
+            continue
+        try:
+            sections.append(fn(data))
+        except KeyError as e:
+            warn(f"{name} is missing key {e} (partial bench run?) — skipping its section")
+    if not sections:
+        return [
+            "*No measured numbers yet: run `make bench-perf` on a ≥8-core "
+            "host (or download the CI `BENCH_sweep`/`BENCH_reuse`/"
+            "`BENCH_policy`/`BENCH_serve`/`BENCH_decode`/`BENCH_hierarchy`/"
+            "`BENCH_shard` artifacts into `rust/`) and re-run "
+            "`python3 scripts/update_experiments_perf.py`.*"
+        ]
+    lines = []
+    for i, section in enumerate(sections):
+        if i > 0 and lines and lines[-1] != "":
+            lines.append("")
+        lines.extend(section)
+    # Normalize: no trailing blank line inside the block.
+    while lines and lines[-1] == "":
+        lines.pop()
     return lines
 
 
@@ -214,16 +317,7 @@ def main():
         sys.exit(f"markers {BEGIN} / {END} not found in {EXPERIMENTS}")
     head, rest = text.split(BEGIN, 1)
     _, tail = rest.split(END, 1)
-    block = "\n".join(
-        render(
-            load("BENCH_sweep.json"),
-            load("BENCH_reuse.json"),
-            load("BENCH_policy.json"),
-            load("BENCH_serve.json"),
-            load("BENCH_decode.json"),
-            load("BENCH_hierarchy.json"),
-        )
-    )
+    block = "\n".join(render())
     EXPERIMENTS.write_text(head + BEGIN + "\n" + block + "\n" + END + tail)
     print(f"updated {EXPERIMENTS}")
 
